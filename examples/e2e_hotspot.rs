@@ -1,0 +1,85 @@
+//! End-to-end driver (DESIGN.md §6): the full system on a real workload.
+//!
+//! Hotspot-style thermal simulation of a 1024×1024 die for 96 time steps:
+//! the grid is streamed through the AOT Pallas compute unit in overlapped
+//! spatial blocks with temporal blocking T=4, exactly the accelerator
+//! architecture of Ch. 5 with Rodinia's Hotspot physics (Ch. 4).
+//!
+//! Proves all layers compose:
+//!   L1  pallas hotspot2d kernel (fused steps, clamp-boundary restore)
+//!   L2  jax lowering -> artifacts/hotspot2d.hlo.txt
+//!   L3  rust coordinator: halo extraction, pipelined marshalling, PJRT
+//!       execution, write-back — Python nowhere at run time.
+//!
+//! Reports: verification vs the native oracle, wallclock throughput of
+//! the real execution, coordinator overhead, and the simulated timings
+//! for the same workload on the thesis's FPGAs.  Results are recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `cargo run --release --example e2e_hotspot`
+
+use fpga_hpc::coordinator::grid::Grid2D;
+use fpga_hpc::coordinator::{reference, stencil_runner};
+use fpga_hpc::device::{arria_10, stratix_v};
+use fpga_hpc::runtime::Runtime;
+use fpga_hpc::stencil::config::{hotspot2d_shape, Workload};
+use fpga_hpc::stencil::tuner::tune;
+use fpga_hpc::testutil::{max_abs_diff, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let n = 1024usize;
+    let steps = 96u64;
+    println!("=== e2e: Hotspot thermal simulation, {n}x{n} die, {steps} steps ===");
+
+    let rt = Runtime::open("artifacts")?;
+    let mut rng = Rng::new(2024);
+    // initial temperature field ~70-90C with a hot region, uniform power
+    let temp = Grid2D::from_fn(n, n, |y, x| {
+        let base = 70.0 + 10.0 * ((y as f32 / n as f32) * 3.14).sin();
+        base + if (300..600).contains(&y) && (300..600).contains(&x) { 8.0 } else { 0.0 }
+    });
+    let power = Grid2D { ny: n, nx: n, data: rng.vec_f32(n * n, 0.0, 0.8) };
+
+    // --- real execution through the three-layer stack ---
+    let t0 = std::time::Instant::now();
+    let (out, metrics) =
+        stencil_runner::run_stencil2d(&rt, "hotspot2d", temp.clone(), Some(&power), steps)?;
+    let wall = t0.elapsed();
+    println!("\n[execution]");
+    println!("  {}", metrics.summary());
+    println!("  wallclock {:.3}s  coordinator overhead {:.1}%",
+        wall.as_secs_f64(), 100.0 * metrics.overhead_frac());
+    let stats = rt.stats();
+    println!("  runtime: {} executions, compile {:.0}ms, execute {:.0}ms, marshal {:.0}ms",
+        stats.executions, stats.compile_ms, stats.execute_ms, stats.marshal_ms);
+
+    // --- verification ---
+    println!("\n[verification]");
+    let t0 = std::time::Instant::now();
+    let want = reference::hotspot2d(temp, &power, reference::HotspotParams::default(), steps as usize);
+    let ref_wall = t0.elapsed();
+    let err = max_abs_diff(&out.data, &want.data);
+    println!("  native single-thread reference: {:.3}s", ref_wall.as_secs_f64());
+    println!("  max |err| = {err:.2e}");
+    anyhow::ensure!(err < 2e-3, "verification failed");
+    // physical sanity: temperatures bounded, hot region warmer
+    let avg: f32 = out.data.iter().sum::<f32>() / out.data.len() as f32;
+    println!("  mean temperature {avg:.2} C (bounded, ambient pull 80 C)");
+    anyhow::ensure!(avg > 40.0 && avg < 120.0);
+
+    // --- simulated FPGA timings for the same workload ---
+    println!("\n[simulated FPGAs, same workload]");
+    let shape = hotspot2d_shape();
+    let work = Workload { extent: n as u64, steps };
+    for dev in [stratix_v(), arria_10()] {
+        let res = tune(&shape, &work, &dev);
+        println!(
+            "  {:<18} {:<24} {:>8.4}s  {:>7.1} GFLOP/s  {:>5.1} W  ({})",
+            dev.name, res.best.config.label(), res.best.seconds,
+            res.best.gflops, res.best.power_w,
+            if res.best.memory_bound { "BW-bound" } else { "compute-bound" },
+        );
+    }
+    println!("\ne2e_hotspot OK");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Model-driven configuration tuning — the §5.4 workflow.
+//!
+//! Enumerates the (par, T, bsize) space for each stencil benchmark on
+//! each FPGA, prunes by the area model, ranks by predicted GFLOP/s, and
+//! prints the winner plus the pruning ratio — the step that replaces
+//! multi-day Quartus sweeps in the thesis.
+//!
+//! Run: `cargo run --release --example tuner_search`
+
+use fpga_hpc::device::{arria_10, stratix_10, stratix_v};
+use fpga_hpc::stencil::config::{
+    default_workload, diffusion2d, diffusion3d, hotspot2d_shape, hotspot3d_shape,
+};
+use fpga_hpc::stencil::tuner::tune;
+
+fn main() {
+    let shapes = [
+        (diffusion2d(1), 2), (diffusion2d(2), 2), (diffusion2d(3), 2), (diffusion2d(4), 2),
+        (diffusion3d(1), 3), (diffusion3d(2), 3), (diffusion3d(3), 3), (diffusion3d(4), 3),
+        (hotspot2d_shape(), 2), (hotspot3d_shape(), 3),
+    ];
+    for dev in [stratix_v(), arria_10(), stratix_10()] {
+        println!("=== {} ===", dev.name);
+        println!(
+            "{:<18} {:>24} {:>9} {:>9} {:>9} {:>8} {:>6} {:>6}",
+            "stencil", "best config", "GFLOP/s", "GCell/s", "fmax", "power", "DSP%", "M20K%"
+        );
+        for (shape, dims) in &shapes {
+            let work = default_workload(*dims);
+            let res = tune(shape, &work, &dev);
+            let b = &res.best;
+            println!(
+                "{:<18} {:>24} {:>9.1} {:>9.2} {:>6.0}MHz {:>7.1}W {:>5.0}% {:>5.0}%  ({}/{} feasible){}",
+                shape.name,
+                b.config.label(),
+                b.gflops,
+                b.gcells,
+                b.fmax_mhz,
+                b.power_w,
+                b.budget.dsp * 100.0,
+                b.budget.m20k_blocks * 100.0,
+                res.ranked.len(),
+                res.enumerated,
+                if b.memory_bound { " [BW-bound]" } else { "" },
+            );
+        }
+        println!();
+    }
+}

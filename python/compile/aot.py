@@ -1,0 +1,91 @@
+"""AOT lowering: jax → HLO *text* artifacts for the Rust PJRT runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  Lowering goes jit → stablehlo → XlaComputation(return_tuple=True)
+→ ``as_hlo_text()``; the Rust side unwraps the 1-tuple (or n-tuple).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--only name[,name...]]
+
+Also writes ``manifest.txt``: one line per artifact,
+``name|file|in=<sig>;...|out=<sig>;...|meta k=v;...`` — the Rust artifact
+registry (rust/src/runtime/registry.rs) parses this to know operand shapes
+and the static parameters baked into each compilation unit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import ARTIFACTS, artifacts
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals) -> str:
+    parts = []
+    for a in avals:
+        dt = np.dtype(a.dtype).name
+        parts.append(f"{dt}[{','.join(str(d) for d in a.shape)}]")
+    return ";".join(parts)
+
+
+def lower_artifact(art) -> tuple:
+    """Returns (hlo_text, out_signature) for one artifact."""
+    fn = art.build()
+    lowered = jax.jit(fn).lower(*art.inputs)
+    out_aval = lowered.out_info
+    # out_info is a pytree of ShapeDtypeStruct; flatten it
+    leaves = jax.tree_util.tree_leaves(out_aval)
+    return to_hlo_text(lowered), _sig(leaves)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names to (re)build")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+    manifest_path = os.path.join(args.out_dir, "manifest.txt")
+
+    lines = []
+    for art in artifacts():
+        if only is not None and art.name not in only:
+            continue
+        fname = f"{art.name}.hlo.txt"
+        hlo, out_sig = lower_artifact(art)
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(hlo)
+        meta = ";".join(f"{k}={v}" for k, v in sorted(art.meta.items()))
+        lines.append(f"{art.name}|{fname}|in={_sig(art.inputs)}|out={out_sig}|meta {meta}")
+        print(f"  lowered {art.name}: {len(hlo)} chars -> {fname}")
+
+    if only is None:
+        with open(manifest_path, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        print(f"wrote manifest with {len(lines)} artifacts to {manifest_path}")
+    else:
+        print("(partial build: manifest not rewritten)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1 Pallas kernels for the FPGA-HPC reproduction.
+
+Each module provides *kernel builders*: functions taking static parameters
+(tile shape, coefficients, fused-step counts — the analogue of the FPGA
+design's compile-time constants) and returning a pallas_call-wrapped
+callable.  ``ref`` holds the pure-jnp oracles every kernel is tested
+against.
+"""
+
+from . import dynprog, lud, ref, srad, stencil2d, stencil3d  # noqa: F401

@@ -1,0 +1,103 @@
+"""L1 Pallas kernels for the dynamic-programming Rodinia benchmarks.
+
+Pathfinder and Needleman-Wunsch carry loop dependencies that the thesis
+resolves with FPGA registers / shift registers (§4.3.1.1, §4.3.1.4).  The
+TPU adaptation turns those per-cycle register forwards into *vectorized
+recurrences*:
+
+* **Pathfinder**: the row-to-row dependency stays sequential (an in-kernel
+  fused-rows loop — the analogue of the thesis's ``pyramid_height`` fused
+  rows), while each row update is a radius-1 min-stencil over VPU lanes.
+* **NW**: the thesis processes anti-diagonals with ``par`` cells per clock.
+  Here each *row* is computed in one shot by recognising the left-neighbour
+  recurrence ``s[j] = max(a[j], s[j-1] - p)`` as a max-plus prefix scan:
+  with ``c[j] = a[j] + j*p`` it collapses to ``s[j] = cummax(c)[j] - j*p``,
+  which vectorizes exactly (`lax.cummax`), so a block of n rows needs only
+  an n-step ``fori_loop`` instead of n·m sequential cells.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def pathfinder_tile(width: int, fused_rows: int):
+    """Build the Pathfinder fused-rows kernel.
+
+    Input ``prev``: (width + 2*fused_rows,) i32 — the accumulated cost row
+    with ``fused_rows`` halo cells per side (overlapped blocking, exactly
+    the thesis's ``2*pyramid_height`` column overlap).
+    Input ``wall``: (fused_rows, width + 2*fused_rows) i32 — the next
+    ``fused_rows`` wall rows for the same span.
+    Output: (width,) i32 — the accumulated cost after the fused rows,
+    valid for the un-haloed interior.
+
+    Roll wrap garbage is confined to the halo consumed per fused row; the
+    *grid* boundary clamp is applied by the coordinator when it fills the
+    halo of edge blocks.
+    """
+    padded = width + 2 * fused_rows
+
+    def kernel(prev_ref, wall_ref, o_ref):
+        acc = prev_ref[...]
+        for t in range(fused_rows):
+            left = jnp.roll(acc, 1)
+            right = jnp.roll(acc, -1)
+            acc = wall_ref[t, :] + jnp.minimum(jnp.minimum(left, acc), right)
+        o_ref[...] = acc[fused_rows:padded - fused_rows]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((width,), jnp.int32),
+        interpret=True,
+    )
+
+
+def nw_tile(rows: int, cols: int, penalty: int):
+    """Build the NW block kernel (one (rows, cols) score block).
+
+    Inputs:
+      ``top``:  (cols,) i32 — score row directly above the block.
+      ``left``: (rows,) i32 — score column directly left of the block.
+      ``corner``: (1,) i32 — score at the top-left diagonal corner.
+      ``ref_block``: (rows, cols) i32 — substitution scores for the block.
+    Output: (rows, cols) i32 — the block's score matrix.
+
+    Per-row max-plus prefix scan as described in the module docstring; the
+    row loop is a ``fori_loop`` carrying (prev_row, prev_left_diag).
+    """
+    p = int(penalty)
+
+    def kernel(top_ref, left_ref, corner_ref, refb_ref, o_ref):
+        jidx = lax.iota(jnp.int32, cols)
+        top = top_ref[...]
+        left = left_ref[...]
+        corner = corner_ref[0]
+        refb = refb_ref[...]
+
+        def row_step(i, carry):
+            up, out = carry
+            # diag[j] = score[i-1][j-1]: shift `up` right, seed from left/corner
+            diag_seed = jnp.where(i == 0, corner, left[jnp.maximum(i - 1, 0)])
+            diag = jnp.where(jidx == 0, diag_seed, jnp.roll(up, 1))
+            a = jnp.maximum(diag + refb[i, :], up - p)
+            # s[j] = max(a[j], s[j-1] - p) with s[-1] = left[i]
+            c = a + jidx * p
+            seed = left[i] - p  # c[-1]
+            run = lax.cummax(jnp.maximum(c, jnp.where(jidx == 0, seed, -jnp.int32(2**30))))
+            s = run - jidx * p
+            out = out.at[i, :].set(s)
+            return (s, out)
+
+        out0 = jnp.zeros((rows, cols), dtype=jnp.int32)
+        _, out = lax.fori_loop(0, rows, row_step, (top, out0))
+        o_ref[...] = out
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+        interpret=True,
+    )

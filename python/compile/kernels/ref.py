@@ -1,0 +1,335 @@
+"""Pure-jnp reference oracles for every kernel in the library.
+
+These are the *correctness ground truth*: deliberately simple, written with
+whole-array jnp ops (no pallas, no blocking, no fused time steps).  Every
+pallas kernel and every composed L2 model is pytest-verified against the
+functions in this module, and the Rust coordinator's streamed execution is
+verified end-to-end against HLO lowered straight from these references.
+
+Boundary conventions (shared with the Rust coordinator, see
+rust/src/coordinator/grid.rs):
+
+* ``diffusion`` (Ch. 5 benchmarks): Dirichlet zero — cells outside the grid
+  read as 0.0.
+* ``hotspot`` / ``srad`` / ``pathfinder`` (Rodinia): clamp — out-of-bound
+  neighbours fall back to the nearest border cell, matching Rodinia's
+  original kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Shifting helpers
+# ---------------------------------------------------------------------------
+
+def shift_zero(x: jnp.ndarray, offset: int, axis: int) -> jnp.ndarray:
+    """Shift ``x`` by ``offset`` along ``axis`` bringing zeros in.
+
+    ``offset=+1`` moves values towards higher indices, i.e. the returned
+    array at position i holds ``x[i - 1]`` — the *north/west* neighbour.
+    """
+    if offset == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    sl = [slice(None)] * x.ndim
+    if offset > 0:
+        pad[axis] = (offset, 0)
+        sl[axis] = slice(0, x.shape[axis])
+    else:
+        pad[axis] = (0, -offset)
+        sl[axis] = slice(-offset, x.shape[axis] - offset)
+    return jnp.pad(x, pad)[tuple(sl)]
+
+
+def shift_clamp(x: jnp.ndarray, offset: int, axis: int) -> jnp.ndarray:
+    """Shift with edge-clamp semantics (Rodinia-style boundary)."""
+    if offset == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    sl = [slice(None)] * x.ndim
+    pad[axis] = (max(offset, 0), max(-offset, 0))
+    if offset > 0:
+        sl[axis] = slice(0, x.shape[axis])
+    else:
+        sl[axis] = slice(-offset, x.shape[axis] - offset)
+    return jnp.pad(x, pad, mode="edge")[tuple(sl)]
+
+
+# ---------------------------------------------------------------------------
+# Star-shaped diffusion stencils (Ch. 5)
+# ---------------------------------------------------------------------------
+
+def diffusion2d_step(x: jnp.ndarray, coeffs) -> jnp.ndarray:
+    """One first-to-fourth order star-shaped 2D diffusion step.
+
+    ``coeffs`` has layout ``[c_center, c_1, c_2, ..., c_r]`` where ``c_d``
+    multiplies all four neighbours at distance ``d`` (symmetric star, the
+    form used by the thesis's high-order diffusion benchmark, §5.5.1).
+    Out-of-grid cells read 0 (Dirichlet).
+    """
+    radius = len(coeffs) - 1
+    out = coeffs[0] * x
+    for d in range(1, radius + 1):
+        out = out + coeffs[d] * (
+            shift_zero(x, d, 0)
+            + shift_zero(x, -d, 0)
+            + shift_zero(x, d, 1)
+            + shift_zero(x, -d, 1)
+        )
+    return out
+
+
+def diffusion3d_step(x: jnp.ndarray, coeffs) -> jnp.ndarray:
+    """One star-shaped 3D diffusion step; layout as :func:`diffusion2d_step`."""
+    radius = len(coeffs) - 1
+    out = coeffs[0] * x
+    for d in range(1, radius + 1):
+        acc = jnp.zeros_like(x)
+        for axis in range(3):
+            acc = acc + shift_zero(x, d, axis) + shift_zero(x, -d, axis)
+        out = out + coeffs[d] * acc
+    return out
+
+
+def diffusion2d(x: jnp.ndarray, coeffs, steps: int) -> jnp.ndarray:
+    for _ in range(steps):
+        x = diffusion2d_step(x, coeffs)
+    return x
+
+
+def diffusion3d(x: jnp.ndarray, coeffs, steps: int) -> jnp.ndarray:
+    for _ in range(steps):
+        x = diffusion3d_step(x, coeffs)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Hotspot / Hotspot 3D (Rodinia structured grid)
+# ---------------------------------------------------------------------------
+
+def hotspot2d_step(
+    temp: jnp.ndarray,
+    power: jnp.ndarray,
+    *,
+    cap: float,
+    rx: float,
+    ry: float,
+    rz: float,
+    amb: float,
+) -> jnp.ndarray:
+    """One Rodinia Hotspot step: 5-point stencil + power + ambient terms.
+
+    ``delta = cap * (power + (N + S - 2T)/ry + (E + W - 2T)/rx + (amb - T)/rz)``
+    with clamp boundaries, then ``out = T + delta``.
+    """
+    n = shift_clamp(temp, 1, 0)
+    s = shift_clamp(temp, -1, 0)
+    w = shift_clamp(temp, 1, 1)
+    e = shift_clamp(temp, -1, 1)
+    delta = cap * (
+        power
+        + (n + s - 2.0 * temp) / ry
+        + (e + w - 2.0 * temp) / rx
+        + (amb - temp) / rz
+    )
+    return temp + delta
+
+
+def hotspot2d(temp, power, *, cap, rx, ry, rz, amb, steps: int):
+    for _ in range(steps):
+        temp = hotspot2d_step(temp, power, cap=cap, rx=rx, ry=ry, rz=rz, amb=amb)
+    return temp
+
+
+def hotspot3d_step(
+    temp: jnp.ndarray,
+    power: jnp.ndarray,
+    *,
+    cc: float,
+    cn: float,
+    cs: float,
+    ce: float,
+    cw: float,
+    ct: float,
+    cb: float,
+    sdc: float,
+    amb: float,
+) -> jnp.ndarray:
+    """One Rodinia Hotspot3D step (7-point stencil, clamp boundary).
+
+    ``out = cc*T + cn*N + cs*S + ce*E + cw*W + ct*Top + cb*Bottom
+    + sdc*power + ct*amb`` — the Rodinia formulation with all material
+    constants folded into per-direction coefficients.  Axis layout is
+    (z, y, x).
+    """
+    n = shift_clamp(temp, 1, 1)
+    s = shift_clamp(temp, -1, 1)
+    w = shift_clamp(temp, 1, 2)
+    e = shift_clamp(temp, -1, 2)
+    t = shift_clamp(temp, 1, 0)
+    b = shift_clamp(temp, -1, 0)
+    return (
+        cc * temp + cn * n + cs * s + ce * e + cw * w + ct * t + cb * b
+        + sdc * power + ct * amb
+    )
+
+
+def hotspot3d(temp, power, *, coeffs, steps: int):
+    for _ in range(steps):
+        temp = hotspot3d_step(temp, power, **coeffs)
+    return temp
+
+
+# ---------------------------------------------------------------------------
+# Pathfinder (Rodinia dynamic programming)
+# ---------------------------------------------------------------------------
+
+def pathfinder_row(prev: jnp.ndarray, wall_row: jnp.ndarray) -> jnp.ndarray:
+    """One Pathfinder row update: ``out[j] = wall[j] + min(prev[j-1..j+1])``."""
+    left = shift_clamp(prev, 1, 0)
+    right = shift_clamp(prev, -1, 0)
+    return wall_row + jnp.minimum(jnp.minimum(left, prev), right)
+
+
+def pathfinder(wall: jnp.ndarray) -> jnp.ndarray:
+    """Full Pathfinder: accumulate from row 0 down, returns final cost row."""
+    acc = wall[0]
+    for i in range(1, wall.shape[0]):
+        acc = pathfinder_row(acc, wall[i])
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Needleman-Wunsch (Rodinia dynamic programming)
+# ---------------------------------------------------------------------------
+
+def nw(reference: jnp.ndarray, penalty: int) -> jnp.ndarray:
+    """Needleman-Wunsch score matrix, sequential reference.
+
+    ``reference`` is the (n, m) substitution-score matrix; entry (i, j)
+    scores aligning sequence items i and j.  Row 0 / column 0 are the
+    standard gap initialisation ``-i*penalty`` / ``-j*penalty``.  Returns
+    the full (n, m) score matrix including the initialised borders.
+    """
+    n, m = reference.shape
+    ref_np = np.asarray(reference)
+    score = np.zeros((n, m), dtype=np.int32)
+    score[0, :] = -penalty * np.arange(m, dtype=np.int32)
+    score[:, 0] = -penalty * np.arange(n, dtype=np.int32)
+    for i in range(1, n):
+        for j in range(1, m):
+            score[i, j] = max(
+                score[i - 1, j - 1] + int(ref_np[i, j]),
+                score[i - 1, j] - penalty,
+                score[i, j - 1] - penalty,
+            )
+    return jnp.asarray(score)
+
+
+# ---------------------------------------------------------------------------
+# SRAD (Rodinia structured grid, two stencil passes + reduction)
+# ---------------------------------------------------------------------------
+
+def srad_step(img: jnp.ndarray, lam: float, q0sqr) -> jnp.ndarray:
+    """One SRAD iteration (both passes) with clamp boundaries.
+
+    Pass 1 computes the diffusion coefficient ``c`` per cell from the image
+    gradient; pass 2 applies the divergence update using ``c`` of the south
+    and east neighbours (Rodinia's formulation).
+    """
+    n = shift_clamp(img, 1, 0) - img    # north neighbour difference
+    s = shift_clamp(img, -1, 0) - img   # south
+    w = shift_clamp(img, 1, 1) - img    # west
+    e = shift_clamp(img, -1, 1) - img   # east
+
+    g2 = (n * n + s * s + w * w + e * e) / (img * img)
+    l_ = (n + s + w + e) / img
+    num = 0.5 * g2 - 0.0625 * (l_ * l_)
+    den = 1.0 + 0.25 * l_
+    qsqr = num / (den * den)
+
+    den2 = (qsqr - q0sqr) / (q0sqr * (1.0 + q0sqr))
+    c = 1.0 / (1.0 + den2)
+    c = jnp.clip(c, 0.0, 1.0)
+
+    c_s = shift_clamp(c, -1, 0)   # c at south neighbour
+    c_e = shift_clamp(c, -1, 1)   # c at east neighbour
+    div = c_s * s + c * n + c_e * e + c * w
+    return img + 0.25 * lam * div
+
+
+def srad_q0sqr(img: jnp.ndarray):
+    """The reduction feeding each SRAD iteration: q0² from mean/variance."""
+    total = jnp.sum(img)
+    total2 = jnp.sum(img * img)
+    size = img.size
+    mean = total / size
+    var = (total2 / size) - mean * mean
+    return var / (mean * mean)
+
+
+def srad(img: jnp.ndarray, lam: float, steps: int) -> jnp.ndarray:
+    for _ in range(steps):
+        q0 = srad_q0sqr(img)
+        img = srad_step(img, lam, q0)
+    return img
+
+
+# ---------------------------------------------------------------------------
+# LUD (Rodinia dense linear algebra)
+# ---------------------------------------------------------------------------
+
+def lud(a: jnp.ndarray) -> jnp.ndarray:
+    """Doolittle LU (no pivoting), combined L\\U matrix.
+
+    Returns M where strict-lower(M) = L (unit diagonal implied) and
+    upper(M) = U, matching Rodinia's in-place output layout.
+    """
+    a_np = np.array(a, dtype=np.float64)
+    n = a_np.shape[0]
+    for k in range(n):
+        a_np[k + 1:, k] /= a_np[k, k]
+        a_np[k + 1:, k + 1:] -= np.outer(a_np[k + 1:, k], a_np[k, k + 1:])
+    return jnp.asarray(a_np.astype(np.float32))
+
+
+def lud_diagonal(a: jnp.ndarray) -> jnp.ndarray:
+    """LU-factorise a single (b, b) diagonal block (combined L\\U layout)."""
+    return lud(a)
+
+
+def lud_perimeter_row(diag_lu: jnp.ndarray, a_row: jnp.ndarray) -> jnp.ndarray:
+    """Solve ``L_diag · U_row = A_row`` for U_row (unit-lower forward solve)."""
+    lu = np.asarray(diag_lu)
+    b = lu.shape[0]
+    l = np.tril(lu, -1) + np.eye(b, dtype=np.float32)
+    out = np.linalg.solve(l.astype(np.float64), np.asarray(a_row, np.float64))
+    return jnp.asarray(out.astype(np.float32))
+
+
+def lud_perimeter_col(diag_lu: jnp.ndarray, a_col: jnp.ndarray) -> jnp.ndarray:
+    """Solve ``L_col · U_diag = A_col`` for L_col (upper back-substitution)."""
+    lu = np.asarray(diag_lu)
+    u = np.triu(lu)
+    out = np.linalg.solve(
+        u.astype(np.float64).T, np.asarray(a_col, np.float64).T
+    ).T
+    return jnp.asarray(out.astype(np.float32))
+
+
+def lud_internal(c: jnp.ndarray, l_col: jnp.ndarray, u_row: jnp.ndarray):
+    """Schur-complement update ``C -= L_col @ U_row`` (the GEMM hot spot)."""
+    return c - l_col @ u_row
+
+
+# ---------------------------------------------------------------------------
+# Reductions
+# ---------------------------------------------------------------------------
+
+def sum_and_sumsq(x: jnp.ndarray):
+    """SRAD's prepare+reduce fused: returns (sum(x), sum(x²))."""
+    return jnp.sum(x), jnp.sum(x * x)

@@ -1,0 +1,87 @@
+"""L1 Pallas kernels for SRAD (speckle-reducing anisotropic diffusion).
+
+The thesis's advanced SRAD design (§4.3.1.5) merges Rodinia's six kernels
+into one: a fused prepare+reduce pass and a fused two-pass stencil.  We
+mirror that split as two pallas kernels:
+
+* :func:`sum_sumsq_tile` — the fused prepare+reduce partial reduction for
+  one tile (the coordinator combines partials, mirroring the shift-register
+  reduction tree of §3.2.2.1).
+* :func:`srad_tile` — both stencil passes fused on a VMEM tile.  Pass 1
+  (radius 1) computes the diffusion coefficient, pass 2 (radius 1) applies
+  the divergence; the fused halo is 2 per side per iteration, the same
+  doubled halo the thesis uses for its merged-pass design.
+
+``q0sqr`` is run-time data (the reduction result), so it enters as a (1,)
+array operand rather than a baked constant.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .stencil2d import clamp_restore2d, shift2d
+
+
+def sum_sumsq_tile(tile_shape):
+    """Partial reduction for one tile: out = [sum(x), sum(x*x)]."""
+
+    def kernel(x_ref, o_ref):
+        x = x_ref[...]
+        o_ref[0] = jnp.sum(x)
+        o_ref[1] = jnp.sum(x * x)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.float32),
+        interpret=True,
+    )
+
+
+def srad_tile(tile_shape, lam: float, steps: int = 1):
+    """Fused two-pass SRAD update on one VMEM tile.
+
+    Input tile carries ``h = 2*steps`` halo per side.  ``q0sqr`` is a (steps,)
+    f32 operand (one reduction value per fused iteration).  Output is the
+    interior ``tile[h:-h, h:-h]``.
+    """
+    lam = float(lam)
+    ny, nx = tile_shape
+    h = 2 * steps
+    assert ny > 2 * h and nx > 2 * h
+    out_shape = (ny - 2 * h, nx - 2 * h)
+
+    def one_step(img: jnp.ndarray, q0: jnp.ndarray) -> jnp.ndarray:
+        n = shift2d(img, 1, 0) - img
+        s = shift2d(img, -1, 0) - img
+        w = shift2d(img, 1, 1) - img
+        e = shift2d(img, -1, 1) - img
+
+        g2 = (n * n + s * s + w * w + e * e) / (img * img)
+        l_ = (n + s + w + e) / img
+        num = 0.5 * g2 - 0.0625 * (l_ * l_)
+        den = 1.0 + 0.25 * l_
+        qsqr = num / (den * den)
+
+        den2 = (qsqr - q0) / (q0 * (1.0 + q0))
+        c = jnp.clip(1.0 / (1.0 + den2), 0.0, 1.0)
+
+        c_s = shift2d(c, -1, 0)
+        c_e = shift2d(c, -1, 1)
+        div = c_s * s + c * n + c_e * e + c * w
+        return img + 0.25 * lam * div
+
+    def kernel(img_ref, q0_ref, oob_ref, o_ref):
+        img = img_ref[...]
+        oob = oob_ref[...]
+        for t in range(steps):
+            img = clamp_restore2d(one_step(img, q0_ref[t]), oob)
+        o_ref[...] = img[h:ny - h, h:nx - h]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
+        interpret=True,
+    )

@@ -1,0 +1,188 @@
+"""L1 Pallas kernels: 2D star-shaped stencils with fused temporal blocking.
+
+This is the TPU-side re-thinking of the thesis's FPGA stencil accelerator
+(DESIGN.md §Hardware-Adaptation):
+
+* The FPGA's *shift register* (one stencil window resident on-chip, streamed
+  over the grid) becomes a **VMEM-resident tile**: the kernel receives one
+  spatial block *plus its halo* and keeps it entirely in VMEM.
+* The FPGA's *temporal blocking* (chained compute units, one per fused time
+  step, §5.3.2) becomes an **in-kernel fused time loop**: ``steps``
+  applications of the stencil run back-to-back on the VMEM tile before a
+  single write-back, trading redundant halo compute for external-memory
+  traffic exactly like the thesis does.
+* The FPGA's ``par``-wide vectorization becomes VPU lanes: callers should
+  keep the last tile dimension a multiple of 128.
+
+Halo contract (shared with rust/src/coordinator/grid.rs): for radius ``r``
+and ``steps`` fused time steps the input tile carries ``h = r*steps`` halo
+cells per side; the output is the interior, ``tile[h:-h, h:-h]``.  The
+in-kernel neighbourhood access uses ``jnp.roll``; the wrap-around garbage a
+roll introduces travels at most ``r`` cells inward per step, i.e. it is
+always confined to the halo ring that the next step consumes — the interior
+written back is exact.
+
+Physical-boundary contract: halo cells that fall *outside the grid* cannot
+be left to evolve like ordinary cells — the boundary condition must be
+re-imposed after **every fused step**, not once per pass (the same reason
+the thesis's kernels carry global-index boundary checks, §5.3.3).  Each
+kernel therefore takes an ``oob`` operand ``[top, bottom, left, right]``
+(i32 counts of out-of-grid cells per side of this tile) and restores the
+boundary in-kernel each step: Dirichlet tiles multiply by the in-grid mask,
+clamp tiles gather edge rows/columns outward.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def zero_mask2d(shape, oob):
+    """In-grid mask (1.0 inside, 0.0 outside) from the oob descriptor."""
+    ny, nx = shape
+    yi = lax.broadcasted_iota(jnp.int32, shape, 0)
+    xi = lax.broadcasted_iota(jnp.int32, shape, 1)
+    ok = (yi >= oob[0]) & (yi < ny - oob[1]) & (xi >= oob[2]) & (xi < nx - oob[3])
+    return ok.astype(jnp.float32)
+
+
+def clamp_restore2d(x, oob):
+    """Re-impose clamp boundary: out-of-grid cells copy the nearest
+    in-grid cell (rows first, then columns — corners resolve exactly)."""
+    ny, nx = x.shape
+    yi = jnp.clip(lax.iota(jnp.int32, ny), oob[0], ny - 1 - oob[1])
+    x = jnp.take(x, yi, axis=0)
+    xi = jnp.clip(lax.iota(jnp.int32, nx), oob[2], nx - 1 - oob[3])
+    return jnp.take(x, xi, axis=1)
+
+
+def shift2d(x: jnp.ndarray, off: int, axis: int) -> jnp.ndarray:
+    """Zero-fill shift via pad+slice.
+
+    Perf note (EXPERIMENTS.md §Perf L1): XLA CPU fuses pad+slice chains
+    ~9x better than jnp.roll (roll lowers to concatenate pairs that defeat
+    loop fusion).  Zero fill at the tile edge is as sacrificial as roll
+    wrap: the corruption ring grows r per step and stays inside the halo.
+    """
+    if off == 0:
+        return x
+    pad = [(0, 0), (0, 0)]
+    sl = [slice(None), slice(None)]
+    n = x.shape[axis]
+    if off > 0:
+        pad[axis] = (off, 0)
+        sl[axis] = slice(0, n)
+    else:
+        pad[axis] = (0, -off)
+        sl[axis] = slice(-off, n - off)
+    return jnp.pad(x, pad)[tuple(sl)]
+
+
+def _star2d(x: jnp.ndarray, coeffs) -> jnp.ndarray:
+    """One star-shaped update on the full tile (garbage in halo only)."""
+    out = coeffs[0] * x
+    for d in range(1, len(coeffs)):
+        out = out + coeffs[d] * (
+            shift2d(x, d, 0)
+            + shift2d(x, -d, 0)
+            + shift2d(x, d, 1)
+            + shift2d(x, -d, 1)
+        )
+    return out
+
+
+def diffusion2d_tile(tile_shape, coeffs, steps: int):
+    """Build the fused-time-step diffusion kernel for one VMEM tile.
+
+    Args:
+      tile_shape: (ny, nx) of the *input* tile including halos.
+      coeffs: ``[c0, c1, ..., cr]`` star coefficients (static, baked into
+        the artifact like the FPGA design's compile-time constants).
+      steps: number of fused time steps (the thesis's degree of temporal
+        parallelism).
+
+    Returns a jit-able ``f(tile) -> interior`` where interior has shape
+    ``(ny - 2*r*steps, nx - 2*r*steps)``.
+    """
+    r = len(coeffs) - 1
+    h = r * steps
+    ny, nx = tile_shape
+    assert ny > 2 * h and nx > 2 * h, "tile must be larger than its halo"
+    out_shape = (ny - 2 * h, nx - 2 * h)
+    coeffs = tuple(float(c) for c in coeffs)
+
+    def kernel(x_ref, oob_ref, o_ref):
+        x = x_ref[...]
+        oob = oob_ref[...]
+        mask = zero_mask2d((ny, nx), oob)
+        for _ in range(steps):
+            x = _star2d(x, coeffs) * mask
+        o_ref[...] = x[h:ny - h, h:nx - h]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
+        interpret=True,
+    )
+
+
+def hotspot2d_tile(tile_shape, params, steps: int):
+    """Fused-time-step Rodinia Hotspot kernel for one VMEM tile.
+
+    ``params`` is a dict with keys cap/rx/ry/rz/amb (static).  Takes the
+    temperature tile *and* the co-located power tile (same shape — power is
+    only consumed at the centre cell but fused steps need its halo too).
+    """
+    cap = float(params["cap"])
+    rx = float(params["rx"])
+    ry = float(params["ry"])
+    rz = float(params["rz"])
+    amb = float(params["amb"])
+    ny, nx = tile_shape
+    h = steps  # radius 1
+    assert ny > 2 * h and nx > 2 * h
+    out_shape = (ny - 2 * h, nx - 2 * h)
+
+    def step(t: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+        n = shift2d(t, 1, 0)
+        s = shift2d(t, -1, 0)
+        w = shift2d(t, 1, 1)
+        e = shift2d(t, -1, 1)
+        delta = cap * (
+            p
+            + (n + s - 2.0 * t) / ry
+            + (e + w - 2.0 * t) / rx
+            + (amb - t) / rz
+        )
+        return t + delta
+
+    def kernel(t_ref, p_ref, oob_ref, o_ref):
+        t = t_ref[...]
+        p = p_ref[...]
+        oob = oob_ref[...]
+        for _ in range(steps):
+            t = clamp_restore2d(step(t, p), oob)
+        o_ref[...] = t[h:ny - h, h:nx - h]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
+        interpret=True,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_diffusion2d(tile_shape, coeffs, steps):
+    return jax.jit(diffusion2d_tile(tile_shape, coeffs, steps))
+
+
+def run_diffusion2d_tile(tile, coeffs, steps, oob=(0, 0, 0, 0)):
+    """Convenience entry used by the pytest suite."""
+    import numpy as np
+    return _jitted_diffusion2d(tile.shape, tuple(float(c) for c in coeffs), steps)(
+        tile, np.asarray(oob, np.int32))

@@ -1,0 +1,142 @@
+"""L1 Pallas kernels: 3D star-shaped stencils with fused temporal blocking.
+
+3D analogue of :mod:`.stencil2d`, mirroring the thesis's 3.5D-blocking
+accelerator (§5.3): two blocked spatial dimensions live in the VMEM tile,
+the z walk is driven by the Rust coordinator (the FPGA "streamed" dimension
+maps to the coordinator's block schedule, since a CPU/TPU tile holds a 3D
+sub-volume rather than a rolling plane window).
+
+Halo contract: input tile is (nz, ny, nx) with ``h = r*steps`` halo on every
+face; output is the interior ``tile[h:-h, h:-h, h:-h]``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def zero_mask3d(shape, oob):
+    """In-grid mask from the oob descriptor [z0, z1, y0, y1, x0, x1]."""
+    nz, ny, nx = shape
+    zi = lax.broadcasted_iota(jnp.int32, shape, 0)
+    yi = lax.broadcasted_iota(jnp.int32, shape, 1)
+    xi = lax.broadcasted_iota(jnp.int32, shape, 2)
+    ok = (
+        (zi >= oob[0]) & (zi < nz - oob[1])
+        & (yi >= oob[2]) & (yi < ny - oob[3])
+        & (xi >= oob[4]) & (xi < nx - oob[5])
+    )
+    return ok.astype(jnp.float32)
+
+
+def clamp_restore3d(x, oob):
+    """Re-impose clamp boundary axis by axis (see stencil2d)."""
+    nz, ny, nx = x.shape
+    zi = jnp.clip(lax.iota(jnp.int32, nz), oob[0], nz - 1 - oob[1])
+    x = jnp.take(x, zi, axis=0)
+    yi = jnp.clip(lax.iota(jnp.int32, ny), oob[2], ny - 1 - oob[3])
+    x = jnp.take(x, yi, axis=1)
+    xi = jnp.clip(lax.iota(jnp.int32, nx), oob[4], nx - 1 - oob[5])
+    return jnp.take(x, xi, axis=2)
+
+
+def shift3d(x: jnp.ndarray, off: int, axis: int) -> jnp.ndarray:
+    """Zero-fill shift via pad+slice (see stencil2d.shift2d perf note)."""
+    if off == 0:
+        return x
+    pad = [(0, 0)] * 3
+    sl = [slice(None)] * 3
+    n = x.shape[axis]
+    if off > 0:
+        pad[axis] = (off, 0)
+        sl[axis] = slice(0, n)
+    else:
+        pad[axis] = (0, -off)
+        sl[axis] = slice(-off, n - off)
+    return jnp.pad(x, pad)[tuple(sl)]
+
+
+def _star3d(x: jnp.ndarray, coeffs) -> jnp.ndarray:
+    out = coeffs[0] * x
+    for d in range(1, len(coeffs)):
+        acc = None
+        for axis in range(3):
+            term = shift3d(x, d, axis) + shift3d(x, -d, axis)
+            acc = term if acc is None else acc + term
+        out = out + coeffs[d] * acc
+    return out
+
+
+def diffusion3d_tile(tile_shape, coeffs, steps: int):
+    """Fused-time-step 3D diffusion kernel for one VMEM tile."""
+    r = len(coeffs) - 1
+    h = r * steps
+    nz, ny, nx = tile_shape
+    assert min(nz, ny, nx) > 2 * h, "tile must be larger than its halo"
+    out_shape = (nz - 2 * h, ny - 2 * h, nx - 2 * h)
+    coeffs = tuple(float(c) for c in coeffs)
+
+    def kernel(x_ref, oob_ref, o_ref):
+        x = x_ref[...]
+        oob = oob_ref[...]
+        mask = zero_mask3d((nz, ny, nx), oob)
+        for _ in range(steps):
+            x = _star3d(x, coeffs) * mask
+        o_ref[...] = x[h:nz - h, h:ny - h, h:nx - h]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
+        interpret=True,
+    )
+
+
+def hotspot3d_tile(tile_shape, params, steps: int):
+    """Fused-time-step Rodinia Hotspot3D kernel (7-point + power + ambient).
+
+    ``params``: dict with cc/cn/cs/ce/cw/ct/cb/sdc/amb, all static floats.
+    Axis layout (z, y, x); the ambient term rides on the ``ct`` coefficient
+    exactly as in Rodinia's kernel.
+    """
+    cc = float(params["cc"])
+    cn = float(params["cn"])
+    cs = float(params["cs"])
+    ce = float(params["ce"])
+    cw = float(params["cw"])
+    ct = float(params["ct"])
+    cb = float(params["cb"])
+    sdc = float(params["sdc"])
+    amb = float(params["amb"])
+    nz, ny, nx = tile_shape
+    h = steps  # radius 1
+    assert min(nz, ny, nx) > 2 * h
+    out_shape = (nz - 2 * h, ny - 2 * h, nx - 2 * h)
+
+    def step(t: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+        n = shift3d(t, 1, 1)
+        s = shift3d(t, -1, 1)
+        w = shift3d(t, 1, 2)
+        e = shift3d(t, -1, 2)
+        top = shift3d(t, 1, 0)
+        bot = shift3d(t, -1, 0)
+        return (
+            cc * t + cn * n + cs * s + ce * e + cw * w + ct * top + cb * bot
+            + sdc * p + ct * amb
+        )
+
+    def kernel(t_ref, p_ref, oob_ref, o_ref):
+        t = t_ref[...]
+        p = p_ref[...]
+        oob = oob_ref[...]
+        for _ in range(steps):
+            t = clamp_restore3d(step(t, p), oob)
+        o_ref[...] = t[h:nz - h, h:ny - h, h:nx - h]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
+        interpret=True,
+    )

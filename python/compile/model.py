@@ -1,0 +1,279 @@
+"""L2: the JAX compute-graph layer — artifact definitions for AOT lowering.
+
+Each entry in :data:`ARTIFACTS` names one compiled compute unit the Rust
+coordinator loads at run time (the analogue of one synthesized FPGA kernel
+variant in the thesis).  An artifact is a jit-able callable built from the
+L1 pallas kernels plus the static parameters baked into it — block size,
+stencil radius, fused time steps, coefficients — mirroring how the thesis
+bakes ``BSIZE``/``PAR``/``RAD``/``TIME`` into each bitstream (§5.3).
+
+All run-time-variable data (grid contents, reduction scalars) enters as
+operands; everything else is compile-time constant, keeping Python strictly
+on the build path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dynprog, lud, srad, stencil2d, stencil3d
+
+
+# ---------------------------------------------------------------------------
+# Shared static parameters (mirrored into the artifact manifest so the Rust
+# coordinator and reference implementations use identical constants)
+# ---------------------------------------------------------------------------
+
+def star_coeffs(radius: int, ndim: int) -> tuple:
+    """Stable star-stencil coefficients ``[c0, c1..cr]`` for any order.
+
+    ``c_d = alpha / d²`` with the centre weight chosen so all coefficients
+    are positive and sum to 1 (diffusion-stable: spectral radius ≤ 1).
+    """
+    alpha = 0.06
+    neigh = 2 * ndim
+    cds = [alpha / (d * d) for d in range(1, radius + 1)]
+    c0 = 1.0 - neigh * sum(cds)
+    assert c0 > 0.0
+    return tuple([c0] + cds)
+
+
+HOTSPOT2D_PARAMS = {"cap": 0.05, "rx": 1.0, "ry": 1.0, "rz": 4.0, "amb": 80.0}
+
+HOTSPOT3D_PARAMS = {
+    "cc": 0.68, "cn": 0.06, "cs": 0.06, "ce": 0.06, "cw": 0.06,
+    "ct": 0.04, "cb": 0.04, "sdc": 0.01, "amb": 80.0,
+}
+
+SRAD_LAMBDA = 0.5
+NW_PENALTY = 10
+
+# Default block geometry per artifact family.  2D tiles keep the last dim a
+# multiple of 128 (VPU lanes); 3D tiles trade z-depth for plane size the way
+# the thesis's 3.5D blocking trades block height for width.
+BLOCK_2D = 256
+BLOCK_3D = 32
+PATHFINDER_WIDTH = 4096
+PATHFINDER_FUSED = 8
+NW_BLOCK = 64
+LUD_BLOCK = 64
+
+
+@dataclass
+class Artifact:
+    """One AOT compilation unit: callable + example operands + metadata."""
+
+    name: str
+    build: Callable[[], Callable]
+    inputs: list
+    meta: dict = field(default_factory=dict)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Stencil artifacts (Ch. 5): diffusion 2D/3D for radius 1..4 + Rodinia
+# hotspot 2D/3D.  Fused steps per radius follow the thesis's tuned configs
+# (Table 5-6/5-7: deeper temporal blocking for cheaper stencils).
+# ---------------------------------------------------------------------------
+
+DIFF2D_STEPS = {1: 4, 2: 2, 3: 2, 4: 1}
+DIFF3D_STEPS = {1: 2, 2: 1, 3: 1, 4: 1}
+
+
+def _diffusion2d(radius: int) -> Artifact:
+    steps = DIFF2D_STEPS[radius]
+    h = radius * steps
+    tile = (BLOCK_2D + 2 * h, BLOCK_2D + 2 * h)
+    coeffs = star_coeffs(radius, 2)
+    return Artifact(
+        name=f"diffusion2d_r{radius}",
+        build=lambda: stencil2d.diffusion2d_tile(tile, coeffs, steps),
+        inputs=[_f32(*tile), _i32(4)],
+        meta={
+            "kind": "stencil2d", "radius": radius, "steps": steps,
+            "block": BLOCK_2D, "halo": h,
+            "coeffs": ",".join(f"{c:.9g}" for c in coeffs),
+            "boundary": "zero",
+        },
+    )
+
+
+def _diffusion3d(radius: int) -> Artifact:
+    steps = DIFF3D_STEPS[radius]
+    h = radius * steps
+    tile = (BLOCK_3D + 2 * h,) * 3
+    coeffs = star_coeffs(radius, 3)
+    return Artifact(
+        name=f"diffusion3d_r{radius}",
+        build=lambda: stencil3d.diffusion3d_tile(tile, coeffs, steps),
+        inputs=[_f32(*tile), _i32(6)],
+        meta={
+            "kind": "stencil3d", "radius": radius, "steps": steps,
+            "block": BLOCK_3D, "halo": h,
+            "coeffs": ",".join(f"{c:.9g}" for c in coeffs),
+            "boundary": "zero",
+        },
+    )
+
+
+def _hotspot2d() -> Artifact:
+    steps = 4
+    h = steps
+    tile = (BLOCK_2D + 2 * h, BLOCK_2D + 2 * h)
+    return Artifact(
+        name="hotspot2d",
+        build=lambda: stencil2d.hotspot2d_tile(tile, HOTSPOT2D_PARAMS, steps),
+        inputs=[_f32(*tile), _f32(*tile), _i32(4)],
+        meta={
+            "kind": "stencil2d", "radius": 1, "steps": steps,
+            "block": BLOCK_2D, "halo": h, "boundary": "clamp",
+            **{f"p_{k}": v for k, v in HOTSPOT2D_PARAMS.items()},
+        },
+    )
+
+
+def _hotspot3d() -> Artifact:
+    steps = 2
+    h = steps
+    tile = (BLOCK_3D + 2 * h,) * 3
+    return Artifact(
+        name="hotspot3d",
+        build=lambda: stencil3d.hotspot3d_tile(tile, HOTSPOT3D_PARAMS, steps),
+        inputs=[_f32(*tile), _f32(*tile), _i32(6)],
+        meta={
+            "kind": "stencil3d", "radius": 1, "steps": steps,
+            "block": BLOCK_3D, "halo": h, "boundary": "clamp",
+            **{f"p_{k}": v for k, v in HOTSPOT3D_PARAMS.items()},
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dynamic programming artifacts (Ch. 4)
+# ---------------------------------------------------------------------------
+
+def _pathfinder() -> Artifact:
+    w, t = PATHFINDER_WIDTH, PATHFINDER_FUSED
+    return Artifact(
+        name="pathfinder",
+        build=lambda: dynprog.pathfinder_tile(w, t),
+        inputs=[_i32(w + 2 * t), _i32(t, w + 2 * t)],
+        meta={"kind": "dynprog", "width": w, "fused_rows": t,
+              "boundary": "clamp"},
+    )
+
+
+def _nw() -> Artifact:
+    b = NW_BLOCK
+    return Artifact(
+        name="nw",
+        build=lambda: dynprog.nw_tile(b, b, NW_PENALTY),
+        inputs=[_i32(b), _i32(b), _i32(1), _i32(b, b)],
+        meta={"kind": "dynprog", "block": b, "penalty": NW_PENALTY},
+    )
+
+
+# ---------------------------------------------------------------------------
+# SRAD artifacts (Ch. 4): fused reduction + fused two-pass stencil
+# ---------------------------------------------------------------------------
+
+def _srad() -> Artifact:
+    steps = 1
+    h = 2 * steps
+    tile = (BLOCK_2D + 2 * h, BLOCK_2D + 2 * h)
+    return Artifact(
+        name="srad",
+        build=lambda: srad.srad_tile(tile, SRAD_LAMBDA, steps),
+        inputs=[_f32(*tile), _f32(steps), _i32(4)],
+        meta={"kind": "stencil2d", "radius": 2, "steps": steps,
+              "block": BLOCK_2D, "halo": h, "lambda": SRAD_LAMBDA,
+              "boundary": "clamp"},
+    )
+
+
+def _sum_sumsq() -> Artifact:
+    tile = (BLOCK_2D, BLOCK_2D)
+    return Artifact(
+        name="sum_sumsq",
+        build=lambda: srad.sum_sumsq_tile(tile),
+        inputs=[_f32(*tile)],
+        meta={"kind": "reduction", "block": BLOCK_2D},
+    )
+
+
+# ---------------------------------------------------------------------------
+# LUD artifacts (Ch. 4): the three Rodinia kernels
+# ---------------------------------------------------------------------------
+
+def _lud_internal() -> Artifact:
+    b = LUD_BLOCK
+    return Artifact(
+        name="lud_internal",
+        build=lambda: lud.lud_internal_tile(b),
+        inputs=[_f32(b, b), _f32(b, b), _f32(b, b)],
+        meta={"kind": "lud", "block": b},
+    )
+
+
+def _lud_diagonal() -> Artifact:
+    b = LUD_BLOCK
+    return Artifact(
+        name="lud_diagonal",
+        build=lambda: lud.lud_diagonal_tile(b),
+        inputs=[_f32(b, b)],
+        meta={"kind": "lud", "block": b},
+    )
+
+
+def _lud_perimeter_row() -> Artifact:
+    b = LUD_BLOCK
+    return Artifact(
+        name="lud_perimeter_row",
+        build=lambda: lud.lud_perimeter_row_tile(b),
+        inputs=[_f32(b, b), _f32(b, b)],
+        meta={"kind": "lud", "block": b},
+    )
+
+
+def _lud_perimeter_col() -> Artifact:
+    b = LUD_BLOCK
+    return Artifact(
+        name="lud_perimeter_col",
+        build=lambda: lud.lud_perimeter_col_tile(b),
+        inputs=[_f32(b, b), _f32(b, b)],
+        meta={"kind": "lud", "block": b},
+    )
+
+
+def artifacts() -> list:
+    """The full artifact set, in manifest order."""
+    out = []
+    for r in (1, 2, 3, 4):
+        out.append(_diffusion2d(r))
+    for r in (1, 2, 3, 4):
+        out.append(_diffusion3d(r))
+    out.append(_hotspot2d())
+    out.append(_hotspot3d())
+    out.append(_pathfinder())
+    out.append(_nw())
+    out.append(_srad())
+    out.append(_sum_sumsq())
+    out.append(_lud_internal())
+    out.append(_lud_diagonal())
+    out.append(_lud_perimeter_row())
+    out.append(_lud_perimeter_col())
+    return out
+
+
+ARTIFACTS = {a.name: a for a in artifacts()}

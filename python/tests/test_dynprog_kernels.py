@@ -1,0 +1,108 @@
+"""Pathfinder and NW pallas kernels vs the sequential oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import dynprog, ref
+
+
+def randi(shape, seed=0, lo=0, hi=10):
+    rs = np.random.RandomState(seed)
+    return rs.randint(lo, hi, size=shape).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Pathfinder
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(width=st.sampled_from([16, 33, 64]), fused=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_pathfinder_tile_matches_ref(width, fused, seed):
+    """Interior of the fused-rows kernel equals row-by-row accumulation.
+
+    The halo'd tile is an excerpt of a wider grid, so clamp-vs-interior
+    differences stay confined to the consumed halo.
+    """
+    padded = width + 2 * fused
+    wall = randi((fused + 1, padded), seed)
+    prev = wall[0]
+    k = dynprog.pathfinder_tile(width, fused)
+    out = k(prev, wall[1:])
+
+    acc = jnp.asarray(prev)
+    for t in range(1, fused + 1):
+        acc = ref.pathfinder_row(acc, jnp.asarray(wall[t]))
+    want = np.asarray(acc)[fused:padded - fused]
+    np.testing.assert_array_equal(np.asarray(out), want)
+
+
+def test_pathfinder_full_grid_blocked():
+    """Blocked pathfinder over a full grid equals the oracle, including the
+    grid-edge clamp the coordinator applies when filling halos."""
+    rows, cols, fused, bw = 8, 48, 4, 16
+    wall = randi((rows + 1, cols), 3)
+    acc = wall[0].copy()
+    for base in range(0, rows, fused):
+        nxt = np.empty_like(acc)
+        for x0 in range(0, cols, bw):
+            # coordinator-style halo fill with edge clamp
+            idx = np.clip(np.arange(x0 - fused, x0 + bw + fused), 0, cols - 1)
+            prev = acc[idx]
+            rowsl = wall[base + 1: base + 1 + fused][:, idx]
+            out = dynprog.pathfinder_tile(bw, fused)(
+                prev.astype(np.int32), rowsl.astype(np.int32))
+            nxt[x0:x0 + bw] = np.asarray(out)
+        acc = nxt
+    want = np.asarray(ref.pathfinder(jnp.asarray(wall)))
+    np.testing.assert_array_equal(acc, want)
+
+
+# ---------------------------------------------------------------------------
+# Needleman-Wunsch
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([5, 16, 31]), penalty=st.integers(1, 12),
+       seed=st.integers(0, 2**31 - 1))
+def test_nw_tile_single_block(n, penalty, seed):
+    """One NW block with oracle borders equals the oracle's interior."""
+    full = ref.nw(jnp.asarray(randi((n + 1, n + 1), seed, -5, 15)), penalty)
+    full = np.asarray(full)
+    refm = randi((n + 1, n + 1), seed, -5, 15)
+    # recompute oracle to bind refm (same seed => same values)
+    full = np.asarray(ref.nw(jnp.asarray(refm), penalty))
+
+    top = full[0, 1:]
+    left = full[1:, 0]
+    corner = full[0:1, 0]
+    k = dynprog.nw_tile(n, n, penalty)
+    out = k(top.astype(np.int32), left.astype(np.int32),
+            corner.astype(np.int32), refm[1:, 1:].astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(out), full[1:, 1:])
+
+
+def test_nw_blocked_decomposition():
+    """2x2 block decomposition stitches to the full oracle matrix."""
+    b, penalty, seed = 8, 4, 11
+    n = 2 * b
+    refm = randi((n + 1, n + 1), seed, -5, 15)
+    want = np.asarray(ref.nw(jnp.asarray(refm), penalty))
+
+    score = np.zeros((n + 1, n + 1), dtype=np.int32)
+    score[0, :] = want[0, :]
+    score[:, 0] = want[:, 0]
+    k = dynprog.nw_tile(b, b, penalty)
+    for bi in range(2):
+        for bj in range(2):
+            r0, c0 = 1 + bi * b, 1 + bj * b
+            top = score[r0 - 1, c0:c0 + b]
+            left = score[r0:r0 + b, c0 - 1]
+            corner = score[r0 - 1:r0, c0 - 1]
+            out = k(top.astype(np.int32), left.astype(np.int32),
+                    corner.astype(np.int32),
+                    refm[r0:r0 + b, c0:c0 + b].astype(np.int32))
+            score[r0:r0 + b, c0:c0 + b] = np.asarray(out)
+    np.testing.assert_array_equal(score, want)

@@ -1,0 +1,154 @@
+"""SRAD and LUD pallas kernels vs the oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+
+OOB4 = np.zeros(4, np.int32)
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import lud, ref, srad
+
+
+def rand(shape, seed=0, lo=0.0, hi=1.0):
+    rs = np.random.RandomState(seed)
+    return (lo + (hi - lo) * rs.rand(*shape)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# SRAD
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(block=st.sampled_from([8, 20]), steps=st.integers(1, 2),
+       seed=st.integers(0, 2**31 - 1))
+def test_srad_tile_matches_ref(block, steps, seed):
+    h = 2 * steps
+    n = block + 2 * h
+    # strictly positive image (SRAD divides by the image)
+    img = rand((n, n), seed, 0.5, 2.0)
+    q0s = rand((steps,), seed + 1, 0.05, 0.3)
+    out = srad.srad_tile((n, n), model.SRAD_LAMBDA, steps)(img, q0s, OOB4)
+
+    x = jnp.asarray(img)
+    for t in range(steps):
+        x = ref.srad_step(x, model.SRAD_LAMBDA, float(q0s[t]))
+    want = np.asarray(x)[h:-h, h:-h]
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.sampled_from([16, 33]), seed=st.integers(0, 2**31 - 1))
+def test_sum_sumsq_tile(n, seed):
+    x = rand((n, n), seed)
+    out = np.asarray(srad.sum_sumsq_tile((n, n))(x))
+    np.testing.assert_allclose(out[0], x.sum(), rtol=1e-5)
+    np.testing.assert_allclose(out[1], (x * x).sum(), rtol=1e-5)
+
+
+def test_srad_full_iteration_via_partials():
+    """q0sqr assembled from per-tile partial reductions matches the oracle."""
+    n, bs = 32, 16
+    img = rand((n, n), 5, 0.5, 2.0)
+    red = srad.sum_sumsq_tile((bs, bs))
+    total = np.zeros(2, dtype=np.float64)
+    for i in range(0, n, bs):
+        for j in range(0, n, bs):
+            total += np.asarray(red(img[i:i + bs, j:j + bs]), dtype=np.float64)
+    mean = total[0] / img.size
+    var = total[1] / img.size - mean * mean
+    q0 = var / (mean * mean)
+    np.testing.assert_allclose(q0, float(ref.srad_q0sqr(jnp.asarray(img))),
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# LUD
+# ---------------------------------------------------------------------------
+
+def diag_dominant(n, seed):
+    a = rand((n, n), seed, -1.0, 1.0)
+    a += n * np.eye(n, dtype=np.float32)
+    return a
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**31 - 1))
+def test_lud_diagonal_tile(b, seed):
+    a = diag_dominant(b, seed)
+    out = np.asarray(lud.lud_diagonal_tile(b)(a))
+    want = np.asarray(ref.lud_diagonal(jnp.asarray(a)))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.sampled_from([4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_lud_perimeter_row_tile(b, seed):
+    diag = diag_dominant(b, seed)
+    diag_lu = np.asarray(ref.lud_diagonal(jnp.asarray(diag)))
+    a_row = rand((b, b), seed + 1, -1.0, 1.0)
+    out = np.asarray(lud.lud_perimeter_row_tile(b)(diag_lu, a_row))
+    want = np.asarray(ref.lud_perimeter_row(jnp.asarray(diag_lu), jnp.asarray(a_row)))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.sampled_from([4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_lud_perimeter_col_tile(b, seed):
+    diag = diag_dominant(b, seed)
+    diag_lu = np.asarray(ref.lud_diagonal(jnp.asarray(diag)))
+    a_col = rand((b, b), seed + 2, -1.0, 1.0)
+    out = np.asarray(lud.lud_perimeter_col_tile(b)(diag_lu, a_col))
+    want = np.asarray(ref.lud_perimeter_col(jnp.asarray(diag_lu), jnp.asarray(a_col)))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_lud_internal_tile(seed):
+    b = 16
+    c = rand((b, b), seed)
+    a = rand((b, b), seed + 1)
+    bb = rand((b, b), seed + 2)
+    out = np.asarray(lud.lud_internal_tile(b)(c, a, bb))
+    want = c - a @ bb
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+
+def test_lud_blocked_full_factorization():
+    """Full blocked LUD (diag + perimeter + internal kernels composed the
+    way the Rust coordinator composes them) reproduces the whole-matrix
+    oracle — the Rodinia algorithm end to end."""
+    b, nb = 8, 3
+    n = b * nb
+    a = diag_dominant(n, 9).astype(np.float32)
+    m = a.copy()
+
+    kd = lud.lud_diagonal_tile(b)
+    kr = lud.lud_perimeter_row_tile(b)
+    kc = lud.lud_perimeter_col_tile(b)
+    ki = lud.lud_internal_tile(b)
+
+    for k in range(nb):
+        s = k * b
+        m[s:s + b, s:s + b] = np.asarray(kd(m[s:s + b, s:s + b]))
+        dlu = m[s:s + b, s:s + b]
+        for j in range(k + 1, nb):
+            cs = j * b
+            m[s:s + b, cs:cs + b] = np.asarray(kr(dlu, m[s:s + b, cs:cs + b]))
+            m[cs:cs + b, s:s + b] = np.asarray(kc(dlu, m[cs:cs + b, s:s + b]))
+        for i in range(k + 1, nb):
+            for j in range(k + 1, nb):
+                rs_, cs = i * b, j * b
+                m[rs_:rs_ + b, cs:cs + b] = np.asarray(
+                    ki(m[rs_:rs_ + b, cs:cs + b],
+                       m[rs_:rs_ + b, s:s + b],
+                       m[s:s + b, cs:cs + b]))
+
+    want = np.asarray(ref.lud(jnp.asarray(a)))
+    np.testing.assert_allclose(m, want, rtol=1e-3, atol=1e-4)
+
+    # and L @ U reconstructs A
+    l = np.tril(m, -1) + np.eye(n, dtype=np.float32)
+    u = np.triu(m)
+    np.testing.assert_allclose(l @ u, a, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,112 @@
+"""Pallas stencil kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, radii and fused-step counts; every property is
+the same: running the tile kernel on a halo'd tile must equal running the
+whole-array reference on that tile and cropping the interior.  (Within the
+halo contract the boundary condition is irrelevant — interior cells never
+read beyond the tile — so zero-boundary references are valid for both
+conventions.)
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+OOB4 = np.zeros(4, np.int32)
+OOB6 = np.zeros(6, np.int32)
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref, stencil2d, stencil3d
+
+
+def rand(shape, seed=0, lo=0.0, hi=1.0):
+    rs = np.random.RandomState(seed)
+    return (lo + (hi - lo) * rs.rand(*shape)).astype(np.float32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    radius=st.integers(1, 4),
+    steps=st.integers(1, 3),
+    block=st.sampled_from([8, 17, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_diffusion2d_tile_matches_ref(radius, steps, block, seed):
+    coeffs = model.star_coeffs(radius, 2)
+    h = radius * steps
+    tile = rand((block + 2 * h, block + 2 * h), seed)
+    out = stencil2d.diffusion2d_tile(tile.shape, coeffs, steps)(tile, OOB4)
+    want = ref.diffusion2d(jnp.asarray(tile), coeffs, steps)[h:-h, h:-h]
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    radius=st.integers(1, 3),
+    steps=st.integers(1, 2),
+    block=st.sampled_from([6, 9, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_diffusion3d_tile_matches_ref(radius, steps, block, seed):
+    coeffs = model.star_coeffs(radius, 3)
+    h = radius * steps
+    n = block + 2 * h
+    tile = rand((n, n, n), seed)
+    out = stencil3d.diffusion3d_tile(tile.shape, coeffs, steps)(tile, OOB6)
+    want = ref.diffusion3d(jnp.asarray(tile), coeffs, steps)[h:-h, h:-h, h:-h]
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(steps=st.integers(1, 4), block=st.sampled_from([8, 24]),
+       seed=st.integers(0, 2**31 - 1))
+def test_hotspot2d_tile_matches_ref(steps, block, seed):
+    h = steps
+    n = block + 2 * h
+    temp = rand((n, n), seed, 60.0, 90.0)
+    power = rand((n, n), seed + 1, 0.0, 1.0)
+    out = stencil2d.hotspot2d_tile((n, n), model.HOTSPOT2D_PARAMS, steps)(temp, power, OOB4)
+    want = ref.hotspot2d(
+        jnp.asarray(temp), jnp.asarray(power),
+        steps=steps, **model.HOTSPOT2D_PARAMS,
+    )[h:-h, h:-h]
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(steps=st.integers(1, 2), block=st.sampled_from([6, 12]),
+       seed=st.integers(0, 2**31 - 1))
+def test_hotspot3d_tile_matches_ref(steps, block, seed):
+    h = steps
+    n = block + 2 * h
+    temp = rand((n, n, n), seed, 60.0, 90.0)
+    power = rand((n, n, n), seed + 1, 0.0, 1.0)
+    out = stencil3d.hotspot3d_tile((n, n, n), model.HOTSPOT3D_PARAMS, steps)(temp, power, OOB6)
+    want = ref.hotspot3d(
+        jnp.asarray(temp), jnp.asarray(power),
+        coeffs=model.HOTSPOT3D_PARAMS, steps=steps,
+    )[h:-h, h:-h, h:-h]
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-4)
+
+
+def test_interior_independent_of_boundary_convention():
+    """The halo contract: interior output never reads beyond the tile."""
+    r, steps = 2, 2
+    h = r * steps
+    coeffs = model.star_coeffs(r, 2)
+    tile = rand((16 + 2 * h, 16 + 2 * h), 7)
+    k = stencil2d.diffusion2d_tile(tile.shape, coeffs, steps)
+    out = np.asarray(k(tile, OOB4))
+    # both zero- and clamp-boundary references agree on the interior
+    want_zero = ref.diffusion2d(jnp.asarray(tile), coeffs, steps)[h:-h, h:-h]
+    np.testing.assert_allclose(out, want_zero, rtol=1e-5, atol=1e-6)
+
+
+def test_star_coeffs_stable():
+    for ndim in (2, 3):
+        for r in range(1, 5):
+            c = model.star_coeffs(r, ndim)
+            assert all(x > 0 for x in c)
+            total = c[0] + 2 * ndim * sum(c[1:])
+            assert abs(total - 1.0) < 1e-12

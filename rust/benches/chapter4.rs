@@ -1,0 +1,23 @@
+//! Chapter 4 bench: regenerates every Rodinia table/figure and times the
+//! underlying simulation pipeline (run with `cargo bench`).
+//!
+//! One bench group per paper artefact (Tables 4-3 … 4-11, Fig. 4-2); each
+//! measures the full regeneration — device models, fmax seed sweeps,
+//! power model, table rendering — and prints the table once so the bench
+//! log doubles as the reproduction record.
+
+use fpga_hpc::benchutil::Bencher;
+use fpga_hpc::report;
+
+fn main() {
+    let b = Bencher::quick();
+    println!("=== chapter4 benches: table regeneration ===\n");
+    for id in ["4-3", "4-4", "4-5", "4-6", "4-7", "4-8", "4-9", "4-10", "4-11", "fig4-2"] {
+        let label = format!("table_{id}");
+        b.bench(&label, || report::render(id).unwrap());
+    }
+    // print the artefacts once for the record
+    for id in ["4-3", "4-4", "4-5", "4-6", "4-7", "4-8", "4-9", "4-10", "4-11"] {
+        print!("{}", report::render(id).unwrap());
+    }
+}

@@ -1,0 +1,29 @@
+//! Chapter 5 bench: regenerates the stencil-accelerator tables/figures
+//! (Tables 5-5 … 5-9, Figs. 5-7 … 5-10, model accuracy) and times the
+//! tuner — the component whose job is replacing 8–30 h Quartus runs, so
+//! its own latency is a paper-relevant number.
+
+use fpga_hpc::benchutil::Bencher;
+use fpga_hpc::device::arria_10;
+use fpga_hpc::report;
+use fpga_hpc::stencil::config::{default_workload, diffusion2d, diffusion3d};
+use fpga_hpc::stencil::tuner::tune;
+
+fn main() {
+    let b = Bencher::quick();
+    println!("=== chapter5 benches: tuner + table regeneration ===\n");
+    let dev = arria_10();
+    b.bench("tune_diffusion2d_r1_a10", || tune(&diffusion2d(1), &default_workload(2), &dev));
+    b.bench("tune_diffusion3d_r4_a10", || tune(&diffusion3d(4), &default_workload(3), &dev));
+    for id in ["5-5", "5-6", "5-7", "5-8", "5-9", "fig5-7", "fig5-8", "fig5-9", "fig5-10", "model-accuracy"] {
+        let label = format!("table_{id}");
+        b.bench(&label, || report::render(id).unwrap());
+    }
+    for id in ["5-5", "5-6", "5-7", "5-8", "5-9", "model-accuracy"] {
+        print!("{}", report::render(id).unwrap());
+    }
+    print!("{}", report::render("fig5-7").unwrap());
+    print!("{}", report::render("fig5-8").unwrap());
+    print!("{}", report::render("fig5-9").unwrap());
+    print!("{}", report::render("fig5-10").unwrap());
+}

@@ -1,0 +1,59 @@
+//! Runtime hot-path bench: the L3 request path in isolation.
+//!
+//! Measures per-block PJRT execution, literal marshalling, halo
+//! extraction and the streamed end-to-end cell-update throughput for the
+//! 2D/3D stencil compute units — the numbers the §Perf optimization loop
+//! in EXPERIMENTS.md tracks.
+
+use fpga_hpc::benchutil::Bencher;
+use fpga_hpc::coordinator::grid::{Boundary, Grid2D};
+use fpga_hpc::coordinator::stencil_runner;
+use fpga_hpc::runtime::{Runtime, Tensor};
+use fpga_hpc::testutil::Rng;
+
+fn main() {
+    let rt = Runtime::open("artifacts").expect("run `make artifacts` first");
+    rt.executable("diffusion2d_r1").unwrap();
+    rt.executable("hotspot2d").unwrap();
+    let b = Bencher::default();
+    println!("=== runtime hot-path benches ===\n");
+
+    let mut rng = Rng::new(3);
+    let spec = rt.registry().get("diffusion2d_r1").unwrap().clone();
+    let tile = spec.inputs[0].shape[0];
+    let halo = spec.meta_u64("halo").unwrap() as usize;
+    let tile_data = rng.vec_f32(tile * tile, 0.0, 1.0);
+    let oob = Tensor::I32(vec![0, 0, 0, 0], vec![4]);
+
+    b.bench(&format!("pjrt_execute_diffusion2d_block_{tile}"), || {
+        rt.execute(
+            "diffusion2d_r1",
+            &[Tensor::F32(tile_data.clone(), vec![tile, tile]), oob.clone()],
+        )
+        .unwrap()
+    });
+
+    b.bench(&format!("tensor_marshal_{tile}x{tile}"), || {
+        Tensor::F32(tile_data.clone(), vec![tile, tile])
+    });
+
+    let grid = Grid2D { ny: 1024, nx: 1024, data: rng.vec_f32(1024 * 1024, 0.0, 1.0) };
+    b.bench(&format!("halo_extract_{tile}x{tile}"), || {
+        grid.extract_tile(256, 256, tile, tile, halo, Boundary::Zero)
+    });
+
+    b.bench("streamed_diffusion2d_1024_4steps", || {
+        let g = grid.clone();
+        stencil_runner::run_stencil2d(&rt, "diffusion2d_r1", g, None, 4).unwrap()
+    });
+
+    // report end-to-end throughput once
+    let (_, m) =
+        stencil_runner::run_stencil2d(&rt, "diffusion2d_r1", grid.clone(), None, 16).unwrap();
+    println!("\nstreamed diffusion2d 1024^2 x16 steps: {}", m.summary());
+    let stats = rt.stats();
+    println!(
+        "runtime totals: {} executions, execute {:.1}ms, marshal {:.1}ms",
+        stats.executions, stats.execute_ms, stats.marshal_ms
+    );
+}

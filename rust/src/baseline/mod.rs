@@ -1,0 +1,22 @@
+//! CPU / GPU / Xeon Phi comparator models.
+//!
+//! Two layers:
+//!
+//! * [`rodinia`] — the Chapter 4 comparison columns.  The thesis *measured*
+//!   these on real silicon (Tables 4-10, 4-11); since that hardware is the
+//!   one substrate we can neither build nor simulate from first principles
+//!   (out-of-order cores, GPU cache hierarchies), the measured times/powers
+//!   are kept as a calibration table and exposed through a roofline model
+//!   whose per-benchmark efficiency is *derived* from them.  This is a
+//!   documented substitution (DESIGN.md §1): the FPGA side is genuinely
+//!   modeled, the comparator side is anchored to the published numbers.
+//! * [`stencil`] — the Chapter 5 comparison columns (Table 5-9, Figs.
+//!   5-7 … 5-10): state-of-the-art stencil frameworks (YASK on Xeon/KNL,
+//!   Maruyama's 3.5D blocking on GPUs) modeled as bandwidth rooflines with
+//!   class-level temporal-reuse factors.
+
+pub mod rodinia;
+pub mod stencil;
+
+pub use rodinia::{measured, Measured};
+pub use stencil::stencil_performance;

@@ -1,0 +1,145 @@
+//! Minimal criterion-style benchmark harness.
+//!
+//! The offline vendored dependency set has no criterion, so `cargo bench`
+//! targets use this: warm-up, repeated timed runs, median/mean/stddev
+//! reporting in a criterion-like text format.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        println!(
+            "{:<44} time: [{} {} {}]  ({} iters, sd {})",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.max),
+            self.iters,
+            fmt_dur(self.stddev),
+        );
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a time budget per case.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    min_iters: u32,
+    max_iters: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 200,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(600),
+            min_iters: 3,
+            max_iters: 50,
+        }
+    }
+
+    /// Time `f`, preventing the result from being optimized away via
+    /// `std::hint::black_box`.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        // Warm-up
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.budget || samples.len() < self.min_iters as usize)
+            && samples.len() < self.max_iters as usize
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let mean = total / n as u32;
+        let median = samples[n / 2];
+        let mean_ns = mean.as_nanos() as f64;
+        let var = samples
+            .iter()
+            .map(|s| {
+                let d = s.as_nanos() as f64 - mean_ns;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            iters: n as u32,
+            mean,
+            median,
+            stddev: Duration::from_nanos(var.sqrt() as u64),
+            min: samples[0],
+            max: samples[n - 1],
+        };
+        m.report();
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 10,
+        };
+        let m = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(m.iters >= 3);
+        assert!(m.min <= m.median && m.median <= m.max);
+    }
+}

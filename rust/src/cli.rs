@@ -1,0 +1,146 @@
+//! Command-line interface (hand-rolled: the offline dependency set has
+//! no clap).
+//!
+//! ```text
+//! fpga-hpc table <id>            # print one reproduced table/figure
+//! fpga-hpc report --all          # print every table and figure
+//! fpga-hpc tune <stencil> [dev]  # run the §5.4 tuner for one stencil
+//! fpga-hpc run <benchmark>       # functional run through PJRT artifacts
+//! fpga-hpc sim                   # simulate Ch.4 variants on both FPGAs
+//! fpga-hpc list                  # list artifacts in the manifest
+//! ```
+
+use crate::coordinator::grid::Grid2D;
+use crate::coordinator::{reference, stencil_runner};
+use crate::device::{arria_10, stratix_10, stratix_v, FpgaDevice};
+use crate::runtime::Runtime;
+use crate::stencil::config::{default_workload, diffusion2d, diffusion3d};
+use crate::stencil::tuner::tune;
+use crate::testutil::Rng;
+
+const USAGE: &str = "\
+fpga-hpc — 'High Performance Computing with FPGAs and OpenCL' reproduction
+
+USAGE:
+  fpga-hpc table <id>              print one table/figure (4-3..4-11,
+                                   fig4-2, 5-5..5-9, fig5-7..fig5-10,
+                                   model-accuracy)
+  fpga-hpc report --all            print every table and figure
+  fpga-hpc tune <d2r1|d2r2|..|d3r4> [sv|a10|s10]
+                                   tune one stencil on one device
+  fpga-hpc run diffusion2d [n] [steps]
+                                   functional streamed run + verification
+  fpga-hpc sim                     simulate all Rodinia variants
+  fpga-hpc list                    list AOT artifacts
+";
+
+/// Entry point used by `main.rs`.
+pub fn run() -> crate::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "table" | "figure" => {
+            let id = args
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("missing table id\n{USAGE}"))?;
+            print!("{}", crate::report::render(id)?);
+        }
+        "report" => {
+            print!("{}", crate::report::render_all()?);
+        }
+        "tune" => {
+            let which = args.get(1).map(|s| s.as_str()).unwrap_or("d2r1");
+            let dev = parse_device(args.get(2).map(|s| s.as_str()).unwrap_or("a10"))?;
+            let (shape, dims) = parse_stencil(which)?;
+            let work = default_workload(dims);
+            let res = tune(&shape, &work, &dev);
+            println!(
+                "{} on {}: best {} -> {:.1} GFLOP/s ({:.2} GCell/s) at {:.0} MHz, {:.1} W ({} of {} configs feasible)",
+                shape.name, dev.name, res.best.config.label(), res.best.gflops,
+                res.best.gcells, res.best.fmax_mhz, res.best.power_w,
+                res.ranked.len(), res.enumerated,
+            );
+            for p in res.ranked.iter().take(5) {
+                println!(
+                    "  {:<26} {:>8.1} GFLOP/s  dsp={:>3.0}% m20k={:>3.0}%{}",
+                    p.config.label(), p.gflops, p.budget.dsp * 100.0,
+                    p.budget.m20k_blocks * 100.0,
+                    if p.memory_bound { "  [BW-bound]" } else { "" },
+                );
+            }
+        }
+        "run" => {
+            let n: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(512);
+            let steps: u64 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(8);
+            run_diffusion2d_demo(n, steps)?;
+        }
+        "sim" => {
+            for dev in [stratix_v(), arria_10()] {
+                println!("=== {} ===", dev.name);
+                for (name, rows) in crate::rodinia::all_benchmarks(&dev) {
+                    println!("{name}:");
+                    for r in rows {
+                        println!(
+                            "  {:<14} {:>10.3}s  {:>6.1}W  speedup {:>8.2}",
+                            r.report.name, r.report.seconds, r.report.power_w, r.speedup,
+                        );
+                    }
+                }
+            }
+        }
+        "list" => {
+            let rt = Runtime::open("artifacts")?;
+            for name in rt.registry().names() {
+                let spec = rt.registry().get(&name).unwrap();
+                println!("{:<22} {}", name, spec.file);
+            }
+        }
+        _ => print!("{USAGE}"),
+    }
+    Ok(())
+}
+
+fn parse_device(s: &str) -> crate::Result<FpgaDevice> {
+    Ok(match s {
+        "sv" => stratix_v(),
+        "a10" => arria_10(),
+        "s10" => stratix_10(),
+        other => anyhow::bail!("unknown device '{other}' (sv|a10|s10)"),
+    })
+}
+
+fn parse_stencil(s: &str) -> crate::Result<(crate::stencil::config::StencilShape, u32)> {
+    let (dims, radius) = match s {
+        "d2r1" => (2, 1), "d2r2" => (2, 2), "d2r3" => (2, 3), "d2r4" => (2, 4),
+        "d3r1" => (3, 1), "d3r2" => (3, 2), "d3r3" => (3, 3), "d3r4" => (3, 4),
+        other => anyhow::bail!("unknown stencil '{other}' (d2r1..d3r4)"),
+    };
+    let shape = if dims == 2 { diffusion2d(radius) } else { diffusion3d(radius) };
+    Ok((shape, dims))
+}
+
+fn run_diffusion2d_demo(n: usize, steps: u64) -> crate::Result<()> {
+    let rt = Runtime::open("artifacts")?;
+    let spec = rt
+        .registry()
+        .get("diffusion2d_r1")
+        .ok_or_else(|| anyhow::anyhow!("missing artifact — run `make artifacts`"))?
+        .clone();
+    let coeffs: Vec<f32> = spec
+        .meta_f64_list("coeffs")?
+        .into_iter()
+        .map(|v| v as f32)
+        .collect();
+    let rng = std::cell::RefCell::new(Rng::new(42));
+    let grid = Grid2D::from_fn(n, n, |_, _| rng.borrow_mut().f32_in(0.0, 1.0));
+    println!("running diffusion2d r=1 on {n}x{n} for {steps} steps...");
+    let (out, metrics) =
+        stencil_runner::run_stencil2d(&rt, "diffusion2d_r1", grid.clone(), None, steps)?;
+    println!("  {}", metrics.summary());
+    let want = reference::diffusion2d(grid, &coeffs, steps as usize);
+    let err = crate::testutil::max_abs_diff(&out.data, &want.data);
+    println!("  max |err| vs native reference: {err:.2e}");
+    anyhow::ensure!(err < 1e-4, "verification failed");
+    println!("  verification OK");
+    Ok(())
+}

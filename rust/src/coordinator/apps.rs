@@ -1,0 +1,274 @@
+//! Full-application runners for the Ch. 4 dynamic-programming and
+//! linear-algebra benchmarks, composed from the AOT compute units the
+//! way the thesis's host code drives its bitstreams.
+
+use anyhow::{anyhow, bail};
+
+use crate::coordinator::grid::Grid2D;
+use crate::coordinator::metrics::Metrics;
+use crate::runtime::{Runtime, Tensor};
+
+/// Pathfinder: accumulate min-cost from row 0 down through `wall`
+/// (rows × cols, i32), streaming fused-row blocks through the
+/// `pathfinder` artifact.  `(rows - 1)` must be a multiple of the
+/// artifact's fused depth.
+pub fn run_pathfinder(rt: &Runtime, wall: &[Vec<i32>]) -> crate::Result<(Vec<i32>, Metrics)> {
+    let spec = rt
+        .registry()
+        .get("pathfinder")
+        .ok_or_else(|| anyhow!("missing pathfinder artifact"))?
+        .clone();
+    let width = spec.meta_u64("width")? as usize;
+    let fused = spec.meta_u64("fused_rows")? as usize;
+    let rows = wall.len();
+    let cols = wall[0].len();
+    if (rows - 1) % fused != 0 {
+        bail!("pathfinder: rows-1 = {} not a multiple of fused {fused}", rows - 1);
+    }
+    rt.executable("pathfinder")?;
+
+    let mut metrics = Metrics::default();
+    let wall_t = std::time::Instant::now();
+    let padded = width + 2 * fused;
+    // clamp-index helper for halo/partial-block fill
+    let clamp = |j: isize| -> usize { j.clamp(0, cols as isize - 1) as usize };
+
+    let mut acc: Vec<i32> = wall[0].clone();
+    let mut base = 1usize;
+    while base < rows {
+        let mut next = vec![0i32; cols];
+        let mut x0 = 0usize;
+        while x0 < cols {
+            // halo'd previous row for this block span
+            let mut prev = Vec::with_capacity(padded);
+            for j in 0..padded {
+                prev.push(acc[clamp(x0 as isize + j as isize - fused as isize)]);
+            }
+            // fused wall rows for the same span
+            let mut rows_block = Vec::with_capacity(fused * padded);
+            for t in 0..fused {
+                let row = &wall[base + t];
+                for j in 0..padded {
+                    rows_block.push(row[clamp(x0 as isize + j as isize - fused as isize)]);
+                }
+            }
+            let out = rt.execute(
+                "pathfinder",
+                &[
+                    Tensor::I32(prev, vec![padded]),
+                    Tensor::I32(rows_block, vec![fused, padded]),
+                ],
+            )?;
+            let vals = out[0].as_i32();
+            let w = width.min(cols - x0);
+            next[x0..x0 + w].copy_from_slice(&vals[..w]);
+            metrics.blocks += 1;
+            x0 += width;
+        }
+        acc = next;
+        base += fused;
+        metrics.cell_updates += cols as u64 * fused as u64;
+    }
+    metrics.wall = wall_t.elapsed();
+    Ok((acc, metrics))
+}
+
+/// Needleman-Wunsch over an (n+1)×(n+1) score matrix: the first row and
+/// column are gap-initialised, interior computed block by block through
+/// the `nw` artifact.  `n` must be a multiple of the artifact block.
+pub fn run_nw(
+    rt: &Runtime,
+    reference: &[Vec<i32>],
+    penalty: i32,
+) -> crate::Result<(Vec<Vec<i32>>, Metrics)> {
+    let spec = rt
+        .registry()
+        .get("nw")
+        .ok_or_else(|| anyhow!("missing nw artifact"))?
+        .clone();
+    let b = spec.meta_u64("block")? as usize;
+    let baked_penalty = spec.meta_u64("penalty")? as i32;
+    if penalty != baked_penalty {
+        bail!("nw: penalty {penalty} != artifact's baked {baked_penalty}");
+    }
+    let n = reference.len() - 1;
+    if n % b != 0 {
+        bail!("nw: interior size {n} not a multiple of block {b}");
+    }
+    rt.executable("nw")?;
+
+    let mut metrics = Metrics::default();
+    let wall_t = std::time::Instant::now();
+    let mut score = vec![vec![0i32; n + 1]; n + 1];
+    for j in 0..=n {
+        score[0][j] = -(j as i32) * penalty;
+    }
+    for (i, row) in score.iter_mut().enumerate() {
+        row[0] = -(i as i32) * penalty;
+    }
+
+    // Row-major block walk satisfies the up/left dependencies.
+    for bi in 0..n / b {
+        for bj in 0..n / b {
+            let r0 = 1 + bi * b;
+            let c0 = 1 + bj * b;
+            let top: Vec<i32> = score[r0 - 1][c0..c0 + b].to_vec();
+            let left: Vec<i32> = (0..b).map(|k| score[r0 + k][c0 - 1]).collect();
+            let corner = vec![score[r0 - 1][c0 - 1]];
+            let mut refb = Vec::with_capacity(b * b);
+            for i in 0..b {
+                refb.extend_from_slice(&reference[r0 + i][c0..c0 + b]);
+            }
+            let out = rt.execute(
+                "nw",
+                &[
+                    Tensor::I32(top, vec![b]),
+                    Tensor::I32(left, vec![b]),
+                    Tensor::I32(corner, vec![1]),
+                    Tensor::I32(refb, vec![b, b]),
+                ],
+            )?;
+            let vals = out[0].as_i32();
+            for i in 0..b {
+                score[r0 + i][c0..c0 + b].copy_from_slice(&vals[i * b..(i + 1) * b]);
+            }
+            metrics.blocks += 1;
+            metrics.cell_updates += (b * b) as u64;
+        }
+    }
+    metrics.wall = wall_t.elapsed();
+    Ok((score, metrics))
+}
+
+/// SRAD: `steps` iterations of (tile-partial reduction → fused two-pass
+/// stencil) over a positive image.  Image extents must be multiples of
+/// the artifact block for the reduction tiles.
+pub fn run_srad(
+    rt: &Runtime,
+    img: Grid2D,
+    steps: u64,
+) -> crate::Result<(Grid2D, Metrics)> {
+    let red_spec = rt
+        .registry()
+        .get("sum_sumsq")
+        .ok_or_else(|| anyhow!("missing sum_sumsq artifact"))?
+        .clone();
+    let rblock = red_spec.meta_u64("block")? as usize;
+    rt.executable("sum_sumsq")?;
+    rt.executable("srad")?;
+
+    let mut metrics = Metrics::default();
+    let wall_t = std::time::Instant::now();
+    let mut cur = img;
+    let cells = (cur.ny * cur.nx) as f64;
+
+    for _ in 0..steps {
+        // --- partial reductions (zero-padding is sum-neutral) ---
+        let mut total = 0f64;
+        let mut total2 = 0f64;
+        let mut y0 = 0;
+        while y0 < cur.ny {
+            let mut x0 = 0;
+            while x0 < cur.nx {
+                let t = cur.extract_tile(
+                    y0 as isize, x0 as isize, rblock, rblock, 0,
+                    crate::coordinator::grid::Boundary::Zero,
+                );
+                let out = rt.execute("sum_sumsq", &[Tensor::F32(t, vec![rblock, rblock])])?;
+                let v = out[0].as_f32();
+                total += v[0] as f64;
+                total2 += v[1] as f64;
+                x0 += rblock;
+            }
+            y0 += rblock;
+        }
+        let mean = total / cells;
+        let var = total2 / cells - mean * mean;
+        let q0 = (var / (mean * mean)) as f32;
+
+        // --- fused two-pass stencil, streamed ---
+        let (next, m) = crate::coordinator::stencil_runner::run_stencil2d_with_scalar(
+            rt, "srad", cur, q0,
+        )?;
+        metrics.blocks += m.blocks;
+        cur = next;
+        metrics.cell_updates += cells as u64;
+    }
+    metrics.wall = wall_t.elapsed();
+    Ok((cur, metrics))
+}
+
+/// Blocked LUD: factorize an (n×n) matrix in place using the diagonal /
+/// perimeter / internal artifacts.  `n` must be a multiple of the block.
+pub fn run_lud(rt: &Runtime, a: &[Vec<f32>]) -> crate::Result<(Vec<Vec<f32>>, Metrics)> {
+    let spec = rt
+        .registry()
+        .get("lud_internal")
+        .ok_or_else(|| anyhow!("missing lud artifacts"))?
+        .clone();
+    let b = spec.meta_u64("block")? as usize;
+    let n = a.len();
+    if n % b != 0 {
+        bail!("lud: size {n} not a multiple of block {b}");
+    }
+    for name in ["lud_diagonal", "lud_perimeter_row", "lud_perimeter_col", "lud_internal"] {
+        rt.executable(name)?;
+    }
+    let nb = n / b;
+    let mut m: Vec<Vec<f32>> = a.to_vec();
+    let mut metrics = Metrics::default();
+    let wall_t = std::time::Instant::now();
+
+    let get = |m: &Vec<Vec<f32>>, r: usize, c: usize| -> Vec<f32> {
+        let mut out = Vec::with_capacity(b * b);
+        for i in 0..b {
+            out.extend_from_slice(&m[r * b + i][c * b..c * b + b]);
+        }
+        out
+    };
+    let put = |m: &mut Vec<Vec<f32>>, r: usize, c: usize, vals: &[f32]| {
+        for i in 0..b {
+            m[r * b + i][c * b..c * b + b].copy_from_slice(&vals[i * b..(i + 1) * b]);
+        }
+    };
+
+    for k in 0..nb {
+        let dia = rt.execute("lud_diagonal", &[Tensor::F32(get(&m, k, k), vec![b, b])])?;
+        let dia_vals = dia[0].as_f32().to_vec();
+        put(&mut m, k, k, &dia_vals);
+        metrics.blocks += 1;
+
+        let dlu = Tensor::F32(dia_vals, vec![b, b]);
+        for j in k + 1..nb {
+            let row = rt.execute(
+                "lud_perimeter_row",
+                &[dlu.clone(), Tensor::F32(get(&m, k, j), vec![b, b])],
+            )?;
+            put(&mut m, k, j, row[0].as_f32());
+            let col = rt.execute(
+                "lud_perimeter_col",
+                &[dlu.clone(), Tensor::F32(get(&m, j, k), vec![b, b])],
+            )?;
+            put(&mut m, j, k, col[0].as_f32());
+            metrics.blocks += 2;
+        }
+        for i in k + 1..nb {
+            let lcol = Tensor::F32(get(&m, i, k), vec![b, b]);
+            for j in k + 1..nb {
+                let out = rt.execute(
+                    "lud_internal",
+                    &[
+                        Tensor::F32(get(&m, i, j), vec![b, b]),
+                        lcol.clone(),
+                        Tensor::F32(get(&m, k, j), vec![b, b]),
+                    ],
+                )?;
+                put(&mut m, i, j, out[0].as_f32());
+                metrics.blocks += 1;
+                metrics.cell_updates += (b * b) as u64;
+            }
+        }
+    }
+    metrics.wall = wall_t.elapsed();
+    Ok((m, metrics))
+}

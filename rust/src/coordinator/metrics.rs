@@ -1,0 +1,90 @@
+//! Throughput / latency accounting for coordinator runs.
+
+use std::time::{Duration, Instant};
+
+/// Accumulated run metrics, printed by examples and used in §Perf.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    /// Blocks streamed through the compute units.
+    pub blocks: u64,
+    /// Valid (written-back) cell updates.
+    pub cell_updates: u64,
+    /// Time spent marshalling tensors into/out of PJRT buffers.
+    pub extract: Duration,
+    /// Time spent in PJRT execution (includes result fetch).
+    pub execute: Duration,
+    /// Time spent writing interiors back.
+    pub writeback: Duration,
+    /// End-to-end wall time.
+    pub wall: Duration,
+}
+
+impl Metrics {
+    pub fn gcell_per_sec(&self) -> f64 {
+        self.cell_updates as f64 / self.wall.as_secs_f64().max(1e-12) / 1e9
+    }
+
+    pub fn gflops(&self, flops_per_cell: f64) -> f64 {
+        self.gcell_per_sec() * flops_per_cell
+    }
+
+    /// Coordinator overhead: fraction of wall time not in PJRT execute.
+    pub fn overhead_frac(&self) -> f64 {
+        let e = self.execute.as_secs_f64();
+        let w = self.wall.as_secs_f64().max(1e-12);
+        ((w - e) / w).max(0.0)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "blocks={} updates={} wall={:.3}s (marshal {:.1}% execute {:.1}% writeback {:.1}%) {:.3} GCell/s",
+            self.blocks,
+            self.cell_updates,
+            self.wall.as_secs_f64(),
+            100.0 * self.extract.as_secs_f64() / self.wall.as_secs_f64().max(1e-12),
+            100.0 * self.execute.as_secs_f64() / self.wall.as_secs_f64().max(1e-12),
+            100.0 * self.writeback.as_secs_f64() / self.wall.as_secs_f64().max(1e-12),
+            self.gcell_per_sec(),
+        )
+    }
+}
+
+/// Scope timer that adds into a Duration on drop.
+pub struct Timed<'a>(&'a mut Duration, Instant);
+
+impl<'a> Timed<'a> {
+    pub fn new(slot: &'a mut Duration) -> Self {
+        Timed(slot, Instant::now())
+    }
+}
+
+impl Drop for Timed<'_> {
+    fn drop(&mut self) {
+        *self.0 += self.1.elapsed();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_accumulates() {
+        let mut d = Duration::ZERO;
+        {
+            let _t = Timed::new(&mut d);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(d >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn gcell_rate() {
+        let m = Metrics {
+            cell_updates: 2_000_000_000,
+            wall: Duration::from_secs(2),
+            ..Default::default()
+        };
+        assert!((m.gcell_per_sec() - 1.0).abs() < 1e-9);
+    }
+}

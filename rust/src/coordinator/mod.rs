@@ -1,0 +1,27 @@
+//! L3 coordinator: the system that owns grids, decomposes them into
+//! overlapped blocks, streams blocks through the AOT compute units and
+//! reassembles results — the role the OpenCL host + board infrastructure
+//! plays in the thesis.
+//!
+//! * [`grid`] — 2D/3D grids, halo extraction with the benchmark's
+//!   boundary rule, interior write-back;
+//! * [`scheduler`] — the block-streaming engine: marshalling parallelized
+//!   across worker threads, PJRT execution pinned to the coordinator
+//!   thread (the client is `Rc`-based);
+//! * [`stencil_runner`] — temporal-block streaming for the Ch. 5 stencil
+//!   workloads (diffusion/hotspot, 2D/3D);
+//! * [`apps`] — full-application runners for the Ch. 4 dynamic-programming
+//!   and linear-algebra benchmarks (Pathfinder, NW, SRAD, LUD);
+//! * [`reference`] — native-Rust oracles used by the integration tests
+//!   and the end-to-end examples;
+//! * [`metrics`] — throughput/latency accounting for the §Perf work.
+
+pub mod apps;
+pub mod grid;
+pub mod metrics;
+pub mod reference;
+pub mod scheduler;
+pub mod stencil_runner;
+
+pub use grid::{Boundary, Grid2D, Grid3D};
+pub use metrics::Metrics;

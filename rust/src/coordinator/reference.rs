@@ -1,0 +1,369 @@
+//! Native-Rust oracles for end-to-end validation.
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly (same boundary rules,
+//! same constants) so streamed coordinator runs can be verified without
+//! touching Python at run time.  Also doubles as the "CPU measured"
+//! implementation in wallclock comparisons.
+
+use crate::coordinator::grid::{Boundary, Grid2D, Grid3D};
+
+/// One star-shaped 2D diffusion step; `coeffs = [c0, c1..cr]`.
+pub fn diffusion2d_step(g: &Grid2D, coeffs: &[f32], b: Boundary) -> Grid2D {
+    let r = coeffs.len() - 1;
+    let mut out = Grid2D::zeros(g.ny, g.nx);
+    for y in 0..g.ny {
+        for x in 0..g.nx {
+            let yi = y as isize;
+            let xi = x as isize;
+            let mut acc = coeffs[0] * g.at(y, x);
+            for d in 1..=r {
+                let di = d as isize;
+                acc += coeffs[d]
+                    * (g.read(yi - di, xi, b)
+                        + g.read(yi + di, xi, b)
+                        + g.read(yi, xi - di, b)
+                        + g.read(yi, xi + di, b));
+            }
+            out.data[y * g.nx + x] = acc;
+        }
+    }
+    out
+}
+
+pub fn diffusion2d(mut g: Grid2D, coeffs: &[f32], steps: usize) -> Grid2D {
+    for _ in 0..steps {
+        g = diffusion2d_step(&g, coeffs, Boundary::Zero);
+    }
+    g
+}
+
+/// One star-shaped 3D diffusion step.
+pub fn diffusion3d_step(g: &Grid3D, coeffs: &[f32], b: Boundary) -> Grid3D {
+    let r = coeffs.len() - 1;
+    let mut out = Grid3D::zeros(g.nz, g.ny, g.nx);
+    for z in 0..g.nz {
+        for y in 0..g.ny {
+            for x in 0..g.nx {
+                let (zi, yi, xi) = (z as isize, y as isize, x as isize);
+                let mut acc = coeffs[0] * g.at(z, y, x);
+                for d in 1..=r {
+                    let di = d as isize;
+                    acc += coeffs[d]
+                        * (g.read(zi - di, yi, xi, b)
+                            + g.read(zi + di, yi, xi, b)
+                            + g.read(zi, yi - di, xi, b)
+                            + g.read(zi, yi + di, xi, b)
+                            + g.read(zi, yi, xi - di, b)
+                            + g.read(zi, yi, xi + di, b));
+                }
+                out.data[(z * g.ny + y) * g.nx + x] = acc;
+            }
+        }
+    }
+    out
+}
+
+pub fn diffusion3d(mut g: Grid3D, coeffs: &[f32], steps: usize) -> Grid3D {
+    for _ in 0..steps {
+        g = diffusion3d_step(&g, coeffs, Boundary::Zero);
+    }
+    g
+}
+
+/// Hotspot parameters (must match `python/compile/model.py`).
+#[derive(Debug, Clone, Copy)]
+pub struct HotspotParams {
+    pub cap: f32,
+    pub rx: f32,
+    pub ry: f32,
+    pub rz: f32,
+    pub amb: f32,
+}
+
+impl Default for HotspotParams {
+    fn default() -> Self {
+        HotspotParams { cap: 0.05, rx: 1.0, ry: 1.0, rz: 4.0, amb: 80.0 }
+    }
+}
+
+/// One Rodinia Hotspot step (clamp boundary).
+pub fn hotspot2d_step(temp: &Grid2D, power: &Grid2D, p: HotspotParams) -> Grid2D {
+    let b = Boundary::Clamp;
+    let mut out = Grid2D::zeros(temp.ny, temp.nx);
+    for y in 0..temp.ny {
+        for x in 0..temp.nx {
+            let (yi, xi) = (y as isize, x as isize);
+            let t = temp.at(y, x);
+            let n = temp.read(yi - 1, xi, b);
+            let s = temp.read(yi + 1, xi, b);
+            let w = temp.read(yi, xi - 1, b);
+            let e = temp.read(yi, xi + 1, b);
+            let delta = p.cap
+                * (power.at(y, x)
+                    + (n + s - 2.0 * t) / p.ry
+                    + (e + w - 2.0 * t) / p.rx
+                    + (p.amb - t) / p.rz);
+            out.data[y * temp.nx + x] = t + delta;
+        }
+    }
+    out
+}
+
+pub fn hotspot2d(mut temp: Grid2D, power: &Grid2D, p: HotspotParams, steps: usize) -> Grid2D {
+    for _ in 0..steps {
+        temp = hotspot2d_step(&temp, power, p);
+    }
+    temp
+}
+
+/// Hotspot 3D coefficients (must match `python/compile/model.py`).
+#[derive(Debug, Clone, Copy)]
+pub struct Hotspot3DParams {
+    pub cc: f32,
+    pub cn: f32,
+    pub cs: f32,
+    pub ce: f32,
+    pub cw: f32,
+    pub ct: f32,
+    pub cb: f32,
+    pub sdc: f32,
+    pub amb: f32,
+}
+
+impl Default for Hotspot3DParams {
+    fn default() -> Self {
+        Hotspot3DParams {
+            cc: 0.68, cn: 0.06, cs: 0.06, ce: 0.06, cw: 0.06,
+            ct: 0.04, cb: 0.04, sdc: 0.01, amb: 80.0,
+        }
+    }
+}
+
+/// One Rodinia Hotspot3D step (clamp boundary; (z, y, x) layout).
+pub fn hotspot3d_step(temp: &Grid3D, power: &Grid3D, p: Hotspot3DParams) -> Grid3D {
+    let b = Boundary::Clamp;
+    let mut out = Grid3D::zeros(temp.nz, temp.ny, temp.nx);
+    for z in 0..temp.nz {
+        for y in 0..temp.ny {
+            for x in 0..temp.nx {
+                let (zi, yi, xi) = (z as isize, y as isize, x as isize);
+                let v = p.cc * temp.at(z, y, x)
+                    + p.cn * temp.read(zi, yi - 1, xi, b)
+                    + p.cs * temp.read(zi, yi + 1, xi, b)
+                    + p.cw * temp.read(zi, yi, xi - 1, b)
+                    + p.ce * temp.read(zi, yi, xi + 1, b)
+                    + p.ct * temp.read(zi - 1, yi, xi, b)
+                    + p.cb * temp.read(zi + 1, yi, xi, b)
+                    + p.sdc * power.at(z, y, x)
+                    + p.ct * p.amb;
+                out.data[(z * temp.ny + y) * temp.nx + x] = v;
+            }
+        }
+    }
+    out
+}
+
+pub fn hotspot3d(mut t: Grid3D, power: &Grid3D, p: Hotspot3DParams, steps: usize) -> Grid3D {
+    for _ in 0..steps {
+        t = hotspot3d_step(&t, power, p);
+    }
+    t
+}
+
+/// Full Pathfinder: accumulate from row 0; returns the final cost row.
+pub fn pathfinder(wall: &[Vec<i32>]) -> Vec<i32> {
+    let cols = wall[0].len();
+    let mut acc = wall[0].clone();
+    for row in &wall[1..] {
+        let mut next = vec![0i32; cols];
+        for j in 0..cols {
+            let l = acc[j.saturating_sub(1)];
+            let c = acc[j];
+            let r = acc[(j + 1).min(cols - 1)];
+            next[j] = row[j] + l.min(c).min(r);
+        }
+        acc = next;
+    }
+    acc
+}
+
+/// Full NW score matrix (including initialised borders).
+pub fn nw(reference: &[Vec<i32>], penalty: i32) -> Vec<Vec<i32>> {
+    let n = reference.len();
+    let m = reference[0].len();
+    let mut s = vec![vec![0i32; m]; n];
+    for j in 0..m {
+        s[0][j] = -(j as i32) * penalty;
+    }
+    for i in 0..n {
+        s[i][0] = -(i as i32) * penalty;
+    }
+    for i in 1..n {
+        for j in 1..m {
+            s[i][j] = (s[i - 1][j - 1] + reference[i][j])
+                .max(s[i - 1][j] - penalty)
+                .max(s[i][j - 1] - penalty);
+        }
+    }
+    s
+}
+
+/// SRAD reduction: q0² from mean/variance.
+pub fn srad_q0sqr(img: &Grid2D) -> f32 {
+    let n = img.data.len() as f64;
+    let sum: f64 = img.data.iter().map(|&v| v as f64).sum();
+    let sum2: f64 = img.data.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    let mean = sum / n;
+    let var = sum2 / n - mean * mean;
+    (var / (mean * mean)) as f32
+}
+
+/// One SRAD iteration (both passes, clamp boundary, lambda as in model.py).
+pub fn srad_step(img: &Grid2D, lam: f32, q0: f32) -> Grid2D {
+    let b = Boundary::Clamp;
+    let (ny, nx) = (img.ny, img.nx);
+    let mut c = Grid2D::zeros(ny, nx);
+    let mut dn = vec![0f32; ny * nx];
+    let mut ds = vec![0f32; ny * nx];
+    let mut dw = vec![0f32; ny * nx];
+    let mut de = vec![0f32; ny * nx];
+    for y in 0..ny {
+        for x in 0..nx {
+            let (yi, xi) = (y as isize, x as isize);
+            let v = img.at(y, x);
+            let n_ = img.read(yi - 1, xi, b) - v;
+            let s_ = img.read(yi + 1, xi, b) - v;
+            let w_ = img.read(yi, xi - 1, b) - v;
+            let e_ = img.read(yi, xi + 1, b) - v;
+            let idx = y * nx + x;
+            dn[idx] = n_;
+            ds[idx] = s_;
+            dw[idx] = w_;
+            de[idx] = e_;
+            let g2 = (n_ * n_ + s_ * s_ + w_ * w_ + e_ * e_) / (v * v);
+            let l = (n_ + s_ + w_ + e_) / v;
+            let num = 0.5 * g2 - 0.0625 * l * l;
+            let den = 1.0 + 0.25 * l;
+            let qsqr = num / (den * den);
+            let den2 = (qsqr - q0) / (q0 * (1.0 + q0));
+            c.data[idx] = (1.0 / (1.0 + den2)).clamp(0.0, 1.0);
+        }
+    }
+    let mut out = Grid2D::zeros(ny, nx);
+    for y in 0..ny {
+        for x in 0..nx {
+            let (yi, xi) = (y as isize, x as isize);
+            let idx = y * nx + x;
+            let c_c = c.at(y, x);
+            let c_s = c.read(yi + 1, xi, b);
+            let c_e = c.read(yi, xi + 1, b);
+            let div = c_s * ds[idx] + c_c * dn[idx] + c_e * de[idx] + c_c * dw[idx];
+            out.data[idx] = img.at(y, x) + 0.25 * lam * div;
+        }
+    }
+    out
+}
+
+pub fn srad(mut img: Grid2D, lam: f32, steps: usize) -> Grid2D {
+    for _ in 0..steps {
+        let q0 = srad_q0sqr(&img);
+        img = srad_step(&img, lam, q0);
+    }
+    img
+}
+
+/// Doolittle LU (no pivoting), in-place combined L\U layout, f64
+/// accumulation like the numpy oracle.
+pub fn lud(a: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let n = a.len();
+    let mut m: Vec<Vec<f64>> = a
+        .iter()
+        .map(|row| row.iter().map(|&v| v as f64).collect())
+        .collect();
+    for k in 0..n {
+        let pivot = m[k][k];
+        for i in k + 1..n {
+            m[i][k] /= pivot;
+        }
+        for i in k + 1..n {
+            let lik = m[i][k];
+            for j in k + 1..n {
+                m[i][j] -= lik * m[k][j];
+            }
+        }
+    }
+    m.iter()
+        .map(|row| row.iter().map(|&v| v as f32).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn diffusion_conserves_with_unit_coeffs() {
+        // With c0=1 and no neighbours, the step is the identity.
+        let g = Grid2D::from_fn(8, 8, |y, x| (y + x) as f32);
+        let out = diffusion2d_step(&g, &[1.0], Boundary::Zero);
+        assert_eq!(g, out);
+    }
+
+    #[test]
+    fn hotspot_converges_to_ambient_without_power() {
+        let p = HotspotParams::default();
+        let temp = Grid2D::from_fn(8, 8, |_, _| 60.0);
+        let power = Grid2D::zeros(8, 8);
+        let out = hotspot2d(temp, &power, p, 400);
+        for &v in &out.data {
+            assert!((v - p.amb).abs() < 1.0, "v={v}");
+        }
+    }
+
+    #[test]
+    fn pathfinder_monotone() {
+        let wall = vec![vec![1, 2, 3], vec![0, 0, 0], vec![5, 5, 5]];
+        let out = pathfinder(&wall);
+        assert_eq!(out, vec![6, 6, 6]);
+    }
+
+    #[test]
+    fn nw_small_case() {
+        // 2x2 with zero scores: best path is all gaps or diagonal.
+        let r = vec![vec![0, 0], vec![0, 5]];
+        let s = nw(&r, 2);
+        assert_eq!(s[1][1], 5); // corner 0 + ref 5
+    }
+
+    #[test]
+    fn lud_reconstructs() {
+        let mut rng = Rng::new(5);
+        let n = 12;
+        let a: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                (0..n)
+                    .map(|j| {
+                        rng.f32_in(-1.0, 1.0) + if i == j { n as f32 } else { 0.0 }
+                    })
+                    .collect()
+            })
+            .collect();
+        let m = lud(&a);
+        // L @ U == A (unit-lower L, upper U from the combined layout)
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for k in 0..=i.min(j) {
+                    let l = if k == i { 1.0 } else { m[i][k] as f64 };
+                    acc += l * m[k][j] as f64;
+                }
+                assert!(
+                    (acc - a[i][j] as f64).abs() < 1e-2,
+                    "({i},{j}): {acc} vs {}",
+                    a[i][j]
+                );
+            }
+        }
+    }
+}

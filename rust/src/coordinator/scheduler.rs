@@ -1,0 +1,127 @@
+//! Block-streaming scheduler.
+//!
+//! The PJRT client is `Rc`-based (not `Send`), so execution stays on the
+//! coordinator thread; the scheduler instead pipelines the *marshalling*:
+//! while block `i` executes, worker threads extract the halo'd tile for
+//! block `i+1..i+depth` (double/treble buffering — the software analogue
+//! of the thesis's load/compute overlap discussion in §4.3.1.6).
+//!
+//! The implementation uses scoped threads and a simple bounded queue of
+//! pre-extracted tiles.  For small blocks the sequential path is used —
+//! thread handoff would dominate.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+
+/// A unit of work: index into the block plan.
+pub type BlockId = usize;
+
+/// Runs `plan.len()` blocks: `extract(id)` produces the input tensors on
+/// worker threads (in order), `execute(id, tile)` runs on this thread.
+///
+/// `lookahead` bounds in-flight extracted tiles (memory backpressure).
+pub fn run_pipelined<T: Send>(
+    nblocks: usize,
+    lookahead: usize,
+    extract: impl Fn(BlockId) -> T + Sync,
+    mut execute: impl FnMut(BlockId, T) -> crate::Result<()>,
+) -> crate::Result<()> {
+    if nblocks == 0 {
+        return Ok(());
+    }
+    // Small plans — or a single-core host, where a marshalling thread can
+    // only steal cycles from execution (§Perf L3: sequential is ~4 %
+    // faster at nproc=1) — run sequentially.
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if nblocks <= 2 || lookahead <= 1 || cores <= 1 {
+        for id in 0..nblocks {
+            let t = extract(id);
+            execute(id, t)?;
+        }
+        return Ok(());
+    }
+
+    std::thread::scope(|scope| -> crate::Result<()> {
+        let (tx, rx) = mpsc::sync_channel::<(BlockId, T)>(lookahead);
+        let extract_ref = &extract;
+        scope.spawn(move || {
+            for id in 0..nblocks {
+                let t = extract_ref(id);
+                if tx.send((id, t)).is_err() {
+                    return; // consumer dropped (error path)
+                }
+            }
+        });
+        // Execution consumes in order; tiles arrive in order from the
+        // single producer.
+        let mut pending: VecDeque<(BlockId, T)> = VecDeque::new();
+        for expect in 0..nblocks {
+            let (id, t) = if let Some(front) = pending.pop_front() {
+                front
+            } else {
+                rx.recv().map_err(|_| anyhow::anyhow!("extractor died"))?
+            };
+            debug_assert_eq!(id, expect);
+            execute(id, t)?;
+        }
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_blocks_in_order() {
+        let n = 37;
+        let extracted = AtomicUsize::new(0);
+        let mut seen = Vec::new();
+        run_pipelined(
+            n,
+            4,
+            |id| {
+                extracted.fetch_add(1, Ordering::SeqCst);
+                id * 10
+            },
+            |id, t| {
+                assert_eq!(t, id * 10);
+                seen.push(id);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(seen, (0..n).collect::<Vec<_>>());
+        assert_eq!(extracted.load(Ordering::SeqCst), n);
+    }
+
+    #[test]
+    fn sequential_fallback() {
+        let mut seen = Vec::new();
+        run_pipelined(2, 8, |id| id, |id, t| {
+            assert_eq!(id, t);
+            seen.push(id);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![0, 1]);
+    }
+
+    #[test]
+    fn error_propagates() {
+        let r = run_pipelined(10, 3, |id| id, |id, _| {
+            if id == 5 {
+                anyhow::bail!("boom")
+            } else {
+                Ok(())
+            }
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn zero_blocks_ok() {
+        run_pipelined(0, 4, |id| id, |_, _| Ok(())).unwrap();
+    }
+}

@@ -1,0 +1,300 @@
+//! Temporal-block streaming of stencil workloads through the AOT
+//! compute units — the functional counterpart of the Ch. 5 accelerator.
+//!
+//! One *pass* advances the whole grid by the artifact's fused step count
+//! `T`: the grid is cut into `block`-sized interiors, each extracted with
+//! an `r·T` halo (overlapped blocking, §5.3.1), pushed through the
+//! compute unit, and its interior written to the next grid.  `steps`
+//! must be a multiple of `T` (the bitstream's temporal depth is fixed at
+//! compile time, exactly as in the thesis).
+
+use anyhow::{anyhow, bail};
+
+use crate::coordinator::grid::{Boundary, Grid2D, Grid3D};
+use crate::coordinator::metrics::{Metrics, Timed};
+use crate::coordinator::scheduler::run_pipelined;
+use crate::runtime::{Runtime, Tensor};
+
+
+/// Out-of-grid cell counts per tile side: [top, bottom] for an axis.
+/// `o0` is the block's interior origin, `n` the grid extent.
+fn oob_axis(o0: usize, block: usize, halo: usize, n: usize) -> (i32, i32) {
+    let top = halo.saturating_sub(o0).min(block + 2 * halo) as i32;
+    let bottom = (o0 + block + halo).saturating_sub(n).min(block + 2 * halo) as i32;
+    (top, bottom)
+}
+
+fn boundary_of(spec: &crate::runtime::ArtifactSpec) -> Boundary {
+    match spec.meta_str("boundary") {
+        Some("clamp") => Boundary::Clamp,
+        _ => Boundary::Zero,
+    }
+}
+
+/// Run `steps` time steps of a 2D stencil artifact over `grid`.
+///
+/// `aux` is the optional second input stream (Hotspot's power grid, same
+/// extents).  Returns the final grid and metrics.
+pub fn run_stencil2d(
+    rt: &Runtime,
+    artifact: &str,
+    grid: Grid2D,
+    aux: Option<&Grid2D>,
+    steps: u64,
+) -> crate::Result<(Grid2D, Metrics)> {
+    let spec = rt
+        .registry()
+        .get(artifact)
+        .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
+        .clone();
+    let block = spec.meta_u64("block")? as usize;
+    let halo = spec.meta_u64("halo")? as usize;
+    let t_fused = spec.meta_u64("steps")?;
+    let boundary = boundary_of(&spec);
+    let wants_aux = spec.inputs.len() == 3;
+    if wants_aux != aux.is_some() {
+        bail!("{artifact}: aux input mismatch (expects {wants_aux})");
+    }
+    if steps % t_fused != 0 {
+        bail!("{artifact}: steps {steps} not a multiple of fused T={t_fused}");
+    }
+    let tile = block + 2 * halo;
+    let passes = steps / t_fused;
+
+    // Compile up front, outside the timed region (the analogue of FPGA
+    // reprogramming, which the thesis also excludes from kernel timing,
+    // §4.2.4).
+    rt.executable(artifact)?;
+    let stats0 = rt.stats();
+
+    let mut metrics = Metrics::default();
+    let wall = std::time::Instant::now();
+    let mut cur = grid;
+    let mut next = Grid2D::zeros(cur.ny, cur.nx);
+
+    // block origins (fixed across passes)
+    let mut origins: Vec<(usize, usize)> = Vec::new();
+    let mut y0 = 0;
+    while y0 < cur.ny {
+        let mut x0 = 0;
+        while x0 < cur.nx {
+            origins.push((y0, x0));
+            x0 += block;
+        }
+        y0 += block;
+    }
+
+    for _ in 0..passes {
+        let cur_ref = &cur;
+        let next_ref = &mut next;
+        let mut writeback = std::time::Duration::ZERO;
+        let mut blocks = 0u64;
+        run_pipelined(
+            origins.len(),
+            4,
+            |id| {
+                let (y0, x0) = origins[id];
+                let mut inputs = Vec::with_capacity(3);
+                let t = cur_ref.extract_tile(y0 as isize, x0 as isize, tile, tile, halo, boundary);
+                inputs.push(Tensor::F32(t, vec![tile, tile]));
+                if let Some(a) = aux {
+                    let p = a.extract_tile(y0 as isize, x0 as isize, tile, tile, halo, boundary);
+                    inputs.push(Tensor::F32(p, vec![tile, tile]));
+                }
+                // per-step boundary restoration descriptor (see the
+                // physical-boundary contract in kernels/stencil2d.py)
+                let (t0, t1) = oob_axis(y0, block, halo, cur_ref.ny);
+                let (l0, l1) = oob_axis(x0, block, halo, cur_ref.nx);
+                inputs.push(Tensor::I32(vec![t0, t1, l0, l1], vec![4]));
+                inputs
+            },
+            |id, inputs| {
+                let out = rt.execute(artifact, &inputs)?;
+                let (y0, x0) = origins[id];
+                let _t = Timed::new(&mut writeback);
+                next_ref.write_block(y0, x0, block, block, out[0].as_f32());
+                blocks += 1;
+                Ok(())
+            },
+        )?;
+        metrics.writeback += writeback;
+        metrics.blocks += blocks;
+        std::mem::swap(&mut cur, &mut next);
+    }
+
+    metrics.cell_updates = (cur.ny * cur.nx) as u64 * steps;
+    metrics.wall = wall.elapsed();
+    let stats = rt.stats();
+    metrics.execute =
+        std::time::Duration::from_secs_f64((stats.execute_ms - stats0.execute_ms) / 1e3);
+    metrics.extract =
+        std::time::Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms) / 1e3);
+    Ok((cur, metrics))
+}
+
+/// Run `steps` time steps of a 3D stencil artifact over `grid`.
+pub fn run_stencil3d(
+    rt: &Runtime,
+    artifact: &str,
+    grid: Grid3D,
+    aux: Option<&Grid3D>,
+    steps: u64,
+) -> crate::Result<(Grid3D, Metrics)> {
+    let spec = rt
+        .registry()
+        .get(artifact)
+        .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
+        .clone();
+    let block = spec.meta_u64("block")? as usize;
+    let halo = spec.meta_u64("halo")? as usize;
+    let t_fused = spec.meta_u64("steps")?;
+    let boundary = boundary_of(&spec);
+    let wants_aux = spec.inputs.len() == 3;
+    if wants_aux != aux.is_some() {
+        bail!("{artifact}: aux input mismatch");
+    }
+    if steps % t_fused != 0 {
+        bail!("{artifact}: steps {steps} not a multiple of fused T={t_fused}");
+    }
+    let tile = block + 2 * halo;
+    let passes = steps / t_fused;
+
+    rt.executable(artifact)?;
+    let stats0 = rt.stats();
+
+    let mut metrics = Metrics::default();
+    let wall = std::time::Instant::now();
+    let mut cur = grid;
+    let mut next = Grid3D::zeros(cur.nz, cur.ny, cur.nx);
+
+    let mut origins: Vec<(usize, usize, usize)> = Vec::new();
+    let mut z0 = 0;
+    while z0 < cur.nz {
+        let mut y0 = 0;
+        while y0 < cur.ny {
+            let mut x0 = 0;
+            while x0 < cur.nx {
+                origins.push((z0, y0, x0));
+                x0 += block;
+            }
+            y0 += block;
+        }
+        z0 += block;
+    }
+
+    for _ in 0..passes {
+        let cur_ref = &cur;
+        let next_ref = &mut next;
+        let mut writeback = std::time::Duration::ZERO;
+        let mut blocks = 0u64;
+        run_pipelined(
+            origins.len(),
+            4,
+            |id| {
+                let (z0, y0, x0) = origins[id];
+                let mut inputs = Vec::with_capacity(3);
+                let t = cur_ref.extract_tile_owned(
+                    z0 as isize, y0 as isize, x0 as isize, tile, halo, boundary);
+                inputs.push(Tensor::F32(t, vec![tile, tile, tile]));
+                if let Some(a) = aux {
+                    let p = a.extract_tile_owned(
+                        z0 as isize, y0 as isize, x0 as isize, tile, halo, boundary);
+                    inputs.push(Tensor::F32(p, vec![tile, tile, tile]));
+                }
+                let (z0o, z1o) = oob_axis(z0, block, halo, cur_ref.nz);
+                let (y0o, y1o) = oob_axis(y0, block, halo, cur_ref.ny);
+                let (x0o, x1o) = oob_axis(x0, block, halo, cur_ref.nx);
+                inputs.push(Tensor::I32(vec![z0o, z1o, y0o, y1o, x0o, x1o], vec![6]));
+                inputs
+            },
+            |id, inputs| {
+                let out = rt.execute(artifact, &inputs)?;
+                let (z0, y0, x0) = origins[id];
+                let _t = Timed::new(&mut writeback);
+                next_ref.write_block(z0, y0, x0, block, out[0].as_f32());
+                blocks += 1;
+                Ok(())
+            },
+        )?;
+        metrics.writeback += writeback;
+        metrics.blocks += blocks;
+        std::mem::swap(&mut cur, &mut next);
+    }
+
+    metrics.cell_updates = (cur.nz * cur.ny * cur.nx) as u64 * steps;
+    metrics.wall = wall.elapsed();
+    let stats = rt.stats();
+    metrics.execute =
+        std::time::Duration::from_secs_f64((stats.execute_ms - stats0.execute_ms) / 1e3);
+    metrics.extract =
+        std::time::Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms) / 1e3);
+    Ok((cur, metrics))
+}
+
+/// One pass of a 2D stencil artifact that takes a run-time scalar operand
+/// (SRAD's q0² reduction result, shape `[steps]`).  Advances the grid by
+/// the artifact's fused step count.
+pub fn run_stencil2d_with_scalar(
+    rt: &Runtime,
+    artifact: &str,
+    grid: Grid2D,
+    scalar: f32,
+) -> crate::Result<(Grid2D, Metrics)> {
+    let spec = rt
+        .registry()
+        .get(artifact)
+        .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
+        .clone();
+    let block = spec.meta_u64("block")? as usize;
+    let halo = spec.meta_u64("halo")? as usize;
+    let t_fused = spec.meta_u64("steps")? as usize;
+    let boundary = boundary_of(&spec);
+    let tile = block + 2 * halo;
+
+    let mut metrics = Metrics::default();
+    let wall = std::time::Instant::now();
+    let cur = grid;
+    let mut next = Grid2D::zeros(cur.ny, cur.nx);
+
+    let mut origins: Vec<(usize, usize)> = Vec::new();
+    let mut y0 = 0;
+    while y0 < cur.ny {
+        let mut x0 = 0;
+        while x0 < cur.nx {
+            origins.push((y0, x0));
+            x0 += block;
+        }
+        y0 += block;
+    }
+
+    rt.executable(artifact)?;
+    let cur_ref = &cur;
+    let next_ref = &mut next;
+    let mut blocks = 0u64;
+    run_pipelined(
+        origins.len(),
+        4,
+        |id| {
+            let (y0, x0) = origins[id];
+            let t = cur_ref.extract_tile(y0 as isize, x0 as isize, tile, tile, halo, boundary);
+            let (t0, t1) = oob_axis(y0, block, halo, cur_ref.ny);
+            let (l0, l1) = oob_axis(x0, block, halo, cur_ref.nx);
+            vec![
+                Tensor::F32(t, vec![tile, tile]),
+                Tensor::F32(vec![scalar; t_fused], vec![t_fused]),
+                Tensor::I32(vec![t0, t1, l0, l1], vec![4]),
+            ]
+        },
+        |id, inputs| {
+            let out = rt.execute(artifact, &inputs)?;
+            let (y0, x0) = origins[id];
+            next_ref.write_block(y0, x0, block, block, out[0].as_f32());
+            blocks += 1;
+            Ok(())
+        },
+    )?;
+    metrics.blocks += blocks;
+    metrics.cell_updates = (cur.ny * cur.nx) as u64 * t_fused as u64;
+    metrics.wall = wall.elapsed();
+    Ok((next, metrics))
+}

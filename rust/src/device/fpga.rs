@@ -1,0 +1,162 @@
+//! FPGA device models (thesis Tables 4-1 and 5-3).
+//!
+//! Resource counts are the published device characteristics; the derived
+//! quantities (`bytes_per_cycle`, `peak_sp_gflops`) implement the formulas
+//! the thesis uses in §1.2 and §5.4.
+
+/// One FPGA device + board, as used by the analytic simulator.
+#[derive(Debug, Clone)]
+pub struct FpgaDevice {
+    /// Marketing name, e.g. "Stratix V GX A7".
+    pub name: &'static str,
+    /// Short id used in reports ("sv", "a10", "s10").
+    pub id: &'static str,
+    /// Adaptive Logic Modules available.
+    pub alm: u64,
+    /// Registers (thousands).
+    pub registers_k: u64,
+    /// M20K on-chip RAM blocks.
+    pub m20k_blocks: u64,
+    /// Total M20K capacity in bits.
+    pub m20k_bits: u64,
+    /// DSP blocks.
+    pub dsp: u64,
+    /// Whether DSPs natively support IEEE-754 single precision
+    /// (Arria 10 onwards; on Stratix V floating point burns ALMs).
+    pub native_fp_dsp: bool,
+    /// Board external-memory bandwidth, GB/s (2 banks DDR3/DDR4).
+    pub mem_bw_gbs: f64,
+    /// Number of external memory banks on the board.
+    pub mem_banks: u32,
+    /// Typical kernel clock achievable for a small well-pipelined design
+    /// on this device+toolchain combination (thesis §3.1.1: 150–350 MHz).
+    pub base_fmax_mhz: f64,
+    /// Peak DSP-rated clock (for peak-GFLOP/s book-keeping only).
+    pub peak_dsp_mhz: f64,
+    /// Board TDP, watts (Table 4-2).
+    pub tdp_w: f64,
+    /// Idle/static board power, watts (calibrated to the thesis's
+    /// lowest observed readings per board).
+    pub static_power_w: f64,
+    /// Release year (for the "same-generation" pairing of Table 4-2).
+    pub year: u32,
+}
+
+impl FpgaDevice {
+    /// Peak single-precision GFLOP/s with every DSP doing an FMA at the
+    /// peak DSP clock (the §1.2 calculation: 1518 DSPs × 2 × 480 MHz
+    /// ≈ 1.45 TFLOP/s for Arria 10).
+    pub fn peak_sp_gflops(&self) -> f64 {
+        // 2 FLOP per DSP-anchored FMA; on Stratix V the add half lives in
+        // soft logic paired with the DSP multiplier (thesis quotes ~200
+        // GFLOP/s peak for the device).
+        self.dsp as f64 * 2.0 * self.peak_dsp_mhz * 1e-3
+    }
+
+    /// External-memory bytes available per kernel clock cycle at `fmax`
+    /// (the `BW` term of Eq. 3-5).
+    pub fn bytes_per_cycle(&self, fmax_mhz: f64) -> f64 {
+        self.mem_bw_gbs * 1e9 / (fmax_mhz * 1e6)
+    }
+
+    /// On-chip memory capacity in bytes.
+    pub fn m20k_bytes(&self) -> f64 {
+        self.m20k_bits as f64 / 8.0
+    }
+}
+
+/// Stratix V GX A7 on the Terasic DE5-Net (Table 4-1; 2× DDR3-1600).
+pub fn stratix_v() -> FpgaDevice {
+    FpgaDevice {
+        name: "Stratix V GX A7",
+        id: "sv",
+        alm: 234_720,
+        registers_k: 939,
+        m20k_blocks: 2_560,
+        m20k_bits: 50 * 1024 * 1024,
+        dsp: 256,
+        native_fp_dsp: false,
+        mem_bw_gbs: 25.6,
+        mem_banks: 2,
+        base_fmax_mhz: 305.0,
+        peak_dsp_mhz: 390.0,
+        tdp_w: 40.0,
+        static_power_w: 12.4,
+        year: 2011,
+    }
+}
+
+/// Arria 10 GX 1150 on the Nallatech 385A (Table 4-1; 2× DDR4-2133).
+pub fn arria_10() -> FpgaDevice {
+    FpgaDevice {
+        name: "Arria 10 GX 1150",
+        id: "a10",
+        alm: 427_200,
+        registers_k: 1_709,
+        m20k_blocks: 2_713,
+        m20k_bits: 53 * 1024 * 1024,
+        dsp: 1_518,
+        native_fp_dsp: true,
+        mem_bw_gbs: 34.1,
+        mem_banks: 2,
+        base_fmax_mhz: 300.0,
+        peak_dsp_mhz: 480.0,
+        tdp_w: 70.0,
+        static_power_w: 29.0,
+        year: 2014,
+    }
+}
+
+/// Stratix 10 GX 2800 as projected in §5.7.3 (4× DDR4-2400 assumed,
+/// HyperFlex fabric with a higher achievable kernel clock).
+pub fn stratix_10() -> FpgaDevice {
+    FpgaDevice {
+        name: "Stratix 10 GX 2800",
+        id: "s10",
+        alm: 933_120,
+        registers_k: 3_732,
+        m20k_blocks: 11_721,
+        m20k_bits: 229 * 1024 * 1024,
+        dsp: 5_760,
+        native_fp_dsp: true,
+        mem_bw_gbs: 76.8,
+        mem_banks: 4,
+        base_fmax_mhz: 550.0,
+        peak_dsp_mhz: 750.0,
+        tdp_w: 148.0,
+        static_power_w: 52.0,
+        year: 2018,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arria10_peak_matches_thesis() {
+        // §1.2: 1.45 TFLOP/s single precision at 480 MHz.
+        let a10 = arria_10();
+        assert!((a10.peak_sp_gflops() - 1457.3).abs() < 1.0);
+    }
+
+    #[test]
+    fn stratix_v_peak_near_200() {
+        let sv = stratix_v();
+        assert!((sv.peak_sp_gflops() - 200.0).abs() < 30.0);
+    }
+
+    #[test]
+    fn bytes_per_cycle_sane() {
+        let sv = stratix_v();
+        // 25.6 GB/s at 256 MHz = 100 B/cycle
+        assert!((sv.bytes_per_cycle(256.0) - 100.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn stratix10_projection_scale() {
+        // Thesis projects up to 4.2 TFLOP/s usable on S10 — peak must
+        // comfortably exceed that.
+        assert!(stratix_10().peak_sp_gflops() > 4200.0);
+    }
+}

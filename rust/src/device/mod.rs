@@ -1,0 +1,38 @@
+//! Device database: every piece of hardware the thesis evaluates or
+//! projects, with the characteristics from Tables 4-1, 4-2, 5-3 and 5-4.
+//!
+//! The FPGA entries feed the analytic simulator in [`crate::perfmodel`];
+//! the CPU/GPU/Xeon Phi entries feed the roofline comparators in
+//! [`crate::baseline`].
+
+pub mod fpga;
+pub mod others;
+
+pub use fpga::{arria_10, stratix_10, stratix_v, FpgaDevice};
+pub use others::{
+    cpu_e5_2650v3, cpu_e5_2690v4_dual, cpu_i7_3930k, gpu_980ti, gpu_k20x,
+    gpu_p100, gpu_v100, xeon_phi_7210f, ComputeDevice, DeviceClass,
+};
+
+/// All devices used in the Chapter 4 comparison (Fig. 4-2).
+pub fn chapter4_devices() -> Vec<ComputeDevice> {
+    vec![
+        cpu_i7_3930k(),
+        cpu_e5_2650v3(),
+        gpu_k20x(),
+        gpu_980ti(),
+    ]
+}
+
+/// All non-FPGA devices used in the Chapter 5 comparison (Table 5-9).
+pub fn chapter5_devices() -> Vec<ComputeDevice> {
+    vec![
+        cpu_e5_2650v3(),
+        cpu_e5_2690v4_dual(),
+        xeon_phi_7210f(),
+        gpu_k20x(),
+        gpu_980ti(),
+        gpu_p100(),
+        gpu_v100(),
+    ]
+}

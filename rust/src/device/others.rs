@@ -1,0 +1,133 @@
+//! CPU, GPU and Xeon Phi device models (thesis Tables 4-2 and 5-4).
+//!
+//! These parameterize the roofline comparators in [`crate::baseline`].
+//! Peak numbers are the published single-precision figures the thesis
+//! quotes; `idle_power_w`/`load_power_w` bracket the power model.
+
+/// Category of a non-FPGA comparator device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceClass {
+    Cpu,
+    Gpu,
+    XeonPhi,
+}
+
+/// A fixed-architecture comparator device.
+#[derive(Debug, Clone)]
+pub struct ComputeDevice {
+    pub name: &'static str,
+    pub id: &'static str,
+    pub class: DeviceClass,
+    /// Peak single-precision GFLOP/s.
+    pub peak_gflops: f64,
+    /// Peak external-memory bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Thermal design power, watts.
+    pub tdp_w: f64,
+    /// Typical power at high load for this class of workload, watts
+    /// (calibrated to the thesis's measured averages, Tables 4-10/4-11).
+    pub load_power_w: f64,
+    /// Production node, nm (Table 4-2).
+    pub node_nm: u32,
+    pub year: u32,
+}
+
+impl ComputeDevice {
+    /// Machine-balance in FLOP/byte: workloads below this are memory-bound.
+    pub fn balance(&self) -> f64 {
+        self.peak_gflops / self.mem_bw_gbs
+    }
+}
+
+/// Intel Core i7-3930K (Sandy Bridge-E, 6C/12T) — Stratix V's generation.
+pub fn cpu_i7_3930k() -> ComputeDevice {
+    ComputeDevice {
+        name: "Core i7-3930K", id: "i7-3930k", class: DeviceClass::Cpu,
+        peak_gflops: 300.0, mem_bw_gbs: 42.7, tdp_w: 130.0,
+        load_power_w: 128.0, node_nm: 32, year: 2011,
+    }
+}
+
+/// Intel Xeon E5-2650 v3 (Haswell-EP, 10C/20T) — Arria 10's generation.
+pub fn cpu_e5_2650v3() -> ComputeDevice {
+    ComputeDevice {
+        name: "Xeon E5-2650 v3", id: "e5-2650v3", class: DeviceClass::Cpu,
+        peak_gflops: 640.0, mem_bw_gbs: 68.3, tdp_w: 105.0,
+        load_power_w: 88.0, node_nm: 22, year: 2014,
+    }
+}
+
+/// 2× Intel Xeon E5-2690 v4 (Broadwell-EP, 2×14C) — Ch. 5 comparison node.
+pub fn cpu_e5_2690v4_dual() -> ComputeDevice {
+    ComputeDevice {
+        name: "2x Xeon E5-2690 v4", id: "2xe5-2690v4", class: DeviceClass::Cpu,
+        peak_gflops: 2_995.0, mem_bw_gbs: 153.6, tdp_w: 270.0,
+        load_power_w: 240.0, node_nm: 14, year: 2016,
+    }
+}
+
+/// Intel Xeon Phi 7210F (Knights Landing, 64C) — Ch. 5 comparison.
+pub fn xeon_phi_7210f() -> ComputeDevice {
+    ComputeDevice {
+        name: "Xeon Phi 7210F", id: "knl-7210f", class: DeviceClass::XeonPhi,
+        peak_gflops: 5_325.0, mem_bw_gbs: 400.0, tdp_w: 230.0,
+        load_power_w: 215.0, node_nm: 14, year: 2016,
+    }
+}
+
+/// NVIDIA Tesla K20X (Kepler) — Stratix V's generation (Table 4-2).
+pub fn gpu_k20x() -> ComputeDevice {
+    ComputeDevice {
+        name: "Tesla K20X", id: "k20x", class: DeviceClass::Gpu,
+        peak_gflops: 3_935.0, mem_bw_gbs: 249.6, tdp_w: 235.0,
+        load_power_w: 130.0, node_nm: 28, year: 2012,
+    }
+}
+
+/// NVIDIA GTX 980 Ti (Maxwell, factory OC model) — Arria 10's generation.
+pub fn gpu_980ti() -> ComputeDevice {
+    ComputeDevice {
+        name: "GTX 980 Ti", id: "980ti", class: DeviceClass::Gpu,
+        peak_gflops: 6_900.0, mem_bw_gbs: 340.6, tdp_w: 275.0,
+        load_power_w: 190.0, node_nm: 28, year: 2015,
+    }
+}
+
+/// NVIDIA Tesla P100 (Pascal, PCIe) — Ch. 5 comparison.
+pub fn gpu_p100() -> ComputeDevice {
+    ComputeDevice {
+        name: "Tesla P100", id: "p100", class: DeviceClass::Gpu,
+        peak_gflops: 9_300.0, mem_bw_gbs: 732.0, tdp_w: 250.0,
+        load_power_w: 180.0, node_nm: 16, year: 2016,
+    }
+}
+
+/// NVIDIA Tesla V100 (Volta, SXM2) — Ch. 5 comparison.
+pub fn gpu_v100() -> ComputeDevice {
+    ComputeDevice {
+        name: "Tesla V100", id: "v100", class: DeviceClass::Gpu,
+        peak_gflops: 15_700.0, mem_bw_gbs: 900.0, tdp_w: 300.0,
+        load_power_w: 230.0, node_nm: 12, year: 2017,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_pairings_hold() {
+        // Table 4-2: FPGA vs same-generation CPU/GPU pairing by year.
+        assert_eq!(cpu_i7_3930k().year, 2011);
+        assert!(gpu_k20x().year - cpu_i7_3930k().year <= 1);
+    }
+
+    #[test]
+    fn balances_reasonable() {
+        // GPUs are compute-rich: balance well above CPUs'.
+        assert!(gpu_980ti().balance() > cpu_e5_2650v3().balance());
+        for d in [cpu_i7_3930k(), gpu_980ti(), gpu_v100(), xeon_phi_7210f()] {
+            assert!(d.balance() > 1.0 && d.balance() < 40.0, "{}", d.name);
+        }
+    }
+}

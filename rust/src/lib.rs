@@ -1,0 +1,40 @@
+//! # fpga-hpc — "High Performance Computing with FPGAs and OpenCL", reproduced
+//!
+//! A reproduction of Hamid Reza Zohouri's 2018 thesis as a three-layer
+//! Rust + JAX + Pallas stack.  The paper's FPGA testbed is replaced by an
+//! analytic simulator implementing the thesis's own performance model
+//! (Ch. 3 and §5.4); the paper's OpenCL kernels are replaced by AOT-lowered
+//! JAX/Pallas compute units executed through PJRT.  See DESIGN.md for the
+//! full system inventory and the per-table experiment index.
+//!
+//! Layer map:
+//!
+//! * [`runtime`] — loads `artifacts/*.hlo.txt` (HLO text produced by
+//!   `python/compile/aot.py`) into a PJRT CPU client and executes them.
+//!   Python never runs at request time.
+//! * [`coordinator`] — the L3 system: grid decomposition with halos,
+//!   overlapped spatial blocking, temporal-block streaming, metrics.
+//! * [`perfmodel`] — the thesis's general FPGA performance model
+//!   (Eqs. 3-1 … 3-8) plus area / f_max / power models.
+//! * [`device`] — device database (Tables 4-1, 4-2, 5-3, 5-4).
+//! * [`stencil`] — the Ch. 5 stencil-accelerator model, tuner and
+//!   Stratix 10 projection.
+//! * [`rodinia`] — the Ch. 4 benchmark descriptors (six benchmarks ×
+//!   optimization levels × kernel models).
+//! * [`baseline`] — CPU/GPU/Xeon Phi roofline comparators.
+//! * [`report`] — regenerates every table and figure of the evaluation.
+
+pub mod baseline;
+pub mod benchutil;
+pub mod cli;
+pub mod coordinator;
+pub mod device;
+pub mod perfmodel;
+pub mod report;
+pub mod rodinia;
+pub mod runtime;
+pub mod stencil;
+pub mod testutil;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,5 @@
+//! `fpga-hpc` binary: leader entry point.  See [`fpga_hpc::cli`].
+
+fn main() -> anyhow::Result<()> {
+    fpga_hpc::cli::run()
+}

@@ -1,0 +1,281 @@
+//! Area model: FLOP units → DSPs/ALMs, buffers → M20K blocks.
+//!
+//! Implements the resource accounting the thesis does by reading Quartus
+//! fitter reports, including:
+//!
+//! * per-operation DSP/ALM costs — on Stratix V only the 27×27 multiplier
+//!   lives in the DSP and every floating-point add burns soft logic, while
+//!   Arria 10 / Stratix 10 DSPs natively implement FADD/FMUL/FMA (§2.1.1);
+//! * Block-RAM replication for multi-ported buffers (§3.2.4.2): each M20K
+//!   has two physical ports, extra concurrent reads replicate the buffer,
+//!   a second write port forces double-pumping;
+//! * the Table 5-5 DSPs-per-cell-update counts for star stencils.
+
+use crate::device::FpgaDevice;
+
+/// Floating-point (and related) operation counts per pipeline stage slice,
+/// i.e. per single data-parallel lane; multiply by N_p for totals.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FpOpCounts {
+    pub fadd: u64,
+    pub fmul: u64,
+    pub fma: u64,
+    pub fdiv: u64,
+    /// Special functions (exp, log, sqrt...) — big soft-logic islands.
+    pub special: u64,
+    /// 32-bit integer ALU ops implemented in soft logic (DP benchmarks).
+    pub int_ops: u64,
+}
+
+impl FpOpCounts {
+    /// Total FLOPs this op mix contributes per cell/iteration (FMA = 2).
+    pub fn flops(&self) -> f64 {
+        (self.fadd + self.fmul + self.fdiv + self.special) as f64
+            + 2.0 * self.fma as f64
+    }
+
+    /// DSP blocks consumed on the given device.
+    pub fn dsp(&self, dev: &FpgaDevice) -> u64 {
+        if dev.native_fp_dsp {
+            // One DSP per FADD/FMUL/FMA (§2.1.1); division is a multi-DSP
+            // Newton-Raphson macro; specials mostly burn logic + a few DSPs.
+            self.fadd + self.fmul + self.fma + 4 * self.fdiv + 2 * self.special
+        } else {
+            // Stratix V: only multipliers map to DSPs (FMUL and the
+            // multiply half of an FMA); adds live in ALMs; a division
+            // macro burns several 27x27 multipliers (Newton-Raphson).
+            self.fmul + self.fma + 6 * self.fdiv
+        }
+    }
+
+    /// ALMs consumed on the given device (logic cost of the datapath).
+    pub fn alm(&self, dev: &FpgaDevice) -> u64 {
+        if dev.native_fp_dsp {
+            // Hardened FP leaves only glue logic per op.
+            45 * (self.fadd + self.fmul + self.fma)
+                + 350 * self.fdiv
+                + 900 * self.special
+                + 9 * self.int_ops
+        } else {
+            // Soft FP adders/normalizers dominate (≈550 ALM per FADD on
+            // Stratix V-class fabric; an FMA needs the adder + glue).
+            550 * self.fadd
+                + 120 * self.fmul
+                + 650 * self.fma
+                + 3_000 * self.fdiv
+                + 2_200 * self.special
+                + 9 * self.int_ops
+        }
+    }
+}
+
+/// On-chip buffer style — decides the replication rule (§3.2.4.1/.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufferStyle {
+    /// Static-addressed shifting window: no port replication needed and
+    /// single-cycle access (the FPGA-specific storage of §3.2.4.1).
+    ShiftRegister,
+    /// Dynamically addressed RAM/ROM: two physical ports per M20K;
+    /// concurrent accesses beyond that replicate (reads) or double-pump
+    /// (second write).
+    Ram,
+}
+
+/// One local-memory buffer of a kernel variant.
+#[derive(Debug, Clone, Copy)]
+pub struct BufferSpec {
+    pub bits: u64,
+    pub read_ports: u64,
+    pub write_ports: u64,
+    pub style: BufferStyle,
+}
+
+impl BufferSpec {
+    /// M20K blocks required, including replication.
+    ///
+    /// Base blocks come from capacity at the 512 × 40-bit geometry
+    /// (§2.1.1).  For [`BufferStyle::Ram`], reads beyond the ports left
+    /// by writes replicate the whole buffer; double-pumping (implied once
+    /// >1 write port exists) doubles effective ports, exactly the
+    /// behaviour described in §3.2.4.2.
+    pub fn m20k_blocks(&self) -> u64 {
+        let base = self.bits.div_ceil(20 * 1024).max(1);
+        match self.style {
+            BufferStyle::ShiftRegister => base,
+            BufferStyle::Ram => {
+                let double_pumped = self.write_ports > 1;
+                let ports_per_block: u64 = if double_pumped { 4 } else { 2 };
+                let write_cost = self.write_ports.min(ports_per_block);
+                let free_reads = ports_per_block - write_cost;
+                let replicas = if self.read_ports <= free_reads {
+                    1
+                } else {
+                    // each replica's remaining ports serve reads
+                    self.read_ports.div_ceil(free_reads.max(1))
+                };
+                base * replicas
+            }
+        }
+    }
+}
+
+/// Accumulated area of a design.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AreaUsage {
+    pub alm: u64,
+    pub m20k_blocks: u64,
+    pub m20k_bits: u64,
+    pub dsp: u64,
+}
+
+impl AreaUsage {
+    pub fn add(&mut self, other: AreaUsage) {
+        self.alm += other.alm;
+        self.m20k_blocks += other.m20k_blocks;
+        self.m20k_bits += other.m20k_bits;
+        self.dsp += other.dsp;
+    }
+
+    /// BSP / interface overhead: the OpenCL shell (DDR controllers,
+    /// PCIe, DMA) the thesis's area percentages always include.
+    pub fn bsp_overhead(dev: &FpgaDevice) -> AreaUsage {
+        AreaUsage {
+            alm: (dev.alm as f64 * 0.17) as u64,
+            m20k_blocks: (dev.m20k_blocks as f64 * 0.14) as u64,
+            m20k_bits: (dev.m20k_bits as f64 * 0.03) as u64,
+            dsp: 0,
+        }
+    }
+}
+
+/// Utilization fractions against a device (the %-columns of the tables).
+#[derive(Debug, Clone, Copy)]
+pub struct AreaBudget {
+    pub logic: f64,
+    pub m20k_blocks: f64,
+    pub m20k_bits: f64,
+    pub dsp: f64,
+}
+
+impl AreaBudget {
+    pub fn of(usage: &AreaUsage, dev: &FpgaDevice) -> Self {
+        AreaBudget {
+            logic: usage.alm as f64 / dev.alm as f64,
+            m20k_blocks: usage.m20k_blocks as f64 / dev.m20k_blocks as f64,
+            m20k_bits: usage.m20k_bits as f64 / dev.m20k_bits as f64,
+            dsp: usage.dsp as f64 / dev.dsp as f64,
+        }
+    }
+
+    /// Does the design fit?  Placement fails at 100 %; with the Arria 10
+    /// PR flow the practical ceiling for M20K is ~95 % (§4.3.2.1).
+    pub fn fits(&self, m20k_ceiling: f64) -> bool {
+        self.logic < 0.98
+            && self.m20k_blocks < m20k_ceiling
+            && self.m20k_bits < 1.0
+            && self.dsp <= 1.0
+    }
+
+    pub fn max_utilization(&self) -> f64 {
+        self.logic.max(self.m20k_blocks).max(self.dsp)
+    }
+}
+
+/// Star-stencil op mix per cell update in the factored form the
+/// accelerator synthesizes (per distance d: 3 (2D) / 5 (3D) neighbour
+/// adds + 1 FMA; plus the centre multiply).  Feeds Table 5-5.
+pub fn star_ops(radius: u32, dims: u32) -> FpOpCounts {
+    let neigh_adds = match dims {
+        2 => 3,
+        3 => 5,
+        _ => panic!("dims must be 2 or 3"),
+    };
+    FpOpCounts {
+        fadd: (neigh_adds * radius) as u64,
+        fmul: 1,
+        fma: radius as u64,
+        ..Default::default()
+    }
+}
+
+/// DSPs for one cell update on a native-FP device (Table 5-5).
+pub fn dsp_per_cell_update(radius: u32, dims: u32, dev: &FpgaDevice) -> u64 {
+    star_ops(radius, dims).dsp(dev)
+}
+
+/// FLOPs per cell update for GFLOP/s book-keeping (naive count, the
+/// convention stencil papers use: (2·dims·r+1) muls + 2·dims·r adds).
+pub fn flops_per_cell(radius: u32, dims: u32) -> f64 {
+    let n = (2 * dims * radius) as f64;
+    (n + 1.0) + n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{arria_10, stratix_v};
+
+    #[test]
+    fn table_5_5_shape() {
+        // DSP cost grows linearly with radius, 3D > 2D, and first-order
+        // 2D costs a handful of DSPs on Arria 10.
+        let a10 = arria_10();
+        let d2 = [1, 2, 3, 4].map(|r| dsp_per_cell_update(r, 2, &a10));
+        let d3 = [1, 2, 3, 4].map(|r| dsp_per_cell_update(r, 3, &a10));
+        assert_eq!(d2[0], 5); // 3 adds + 1 FMA + 1 mul
+        assert_eq!(d3[0], 7);
+        for i in 1..4 {
+            assert!(d2[i] > d2[i - 1] && d3[i] > d3[i - 1]);
+            assert!(d3[i] > d2[i]);
+        }
+    }
+
+    #[test]
+    fn stratix_v_burns_logic_for_fp() {
+        let sv = stratix_v();
+        let a10 = arria_10();
+        let ops = star_ops(1, 2);
+        assert!(ops.alm(&sv) > 5 * ops.alm(&a10));
+        assert!(ops.dsp(&sv) <= ops.dsp(&a10));
+    }
+
+    #[test]
+    fn shift_register_avoids_replication() {
+        let sr = BufferSpec {
+            bits: 1 << 20, read_ports: 8, write_ports: 1,
+            style: BufferStyle::ShiftRegister,
+        };
+        let ram = BufferSpec { style: BufferStyle::Ram, ..sr };
+        assert!(ram.m20k_blocks() > sr.m20k_blocks());
+    }
+
+    #[test]
+    fn second_write_port_double_pumps() {
+        let one_w = BufferSpec {
+            bits: 40 * 20 * 1024, read_ports: 3, write_ports: 1,
+            style: BufferStyle::Ram,
+        };
+        let two_w = BufferSpec { write_ports: 2, ..one_w };
+        // double-pumping gives 4 ports: 2 writes + 2 reads -> fewer
+        // replicas than tripling single-pumped blocks
+        assert!(two_w.m20k_blocks() <= 2 * one_w.m20k_blocks());
+    }
+
+    #[test]
+    fn flops_per_cell_convention() {
+        assert_eq!(flops_per_cell(1, 2), 9.0);  // 5 muls + 4 adds
+        assert_eq!(flops_per_cell(1, 3), 13.0); // 7 muls + 6 adds
+        assert_eq!(flops_per_cell(4, 2), 33.0);
+    }
+
+    #[test]
+    fn budget_fits_logic() {
+        let dev = stratix_v();
+        let mut u = AreaUsage::default();
+        u.add(AreaUsage { alm: dev.alm / 2, m20k_blocks: 100, m20k_bits: 0, dsp: 10 });
+        let b = AreaBudget::of(&u, &dev);
+        assert!(b.fits(1.0));
+        u.add(AreaUsage { alm: dev.alm, ..Default::default() });
+        assert!(!AreaBudget::of(&u, &dev).fits(1.0));
+    }
+}

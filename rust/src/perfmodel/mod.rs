@@ -1,0 +1,22 @@
+//! The thesis's general performance model for HLS designs on FPGAs
+//! (Chapter 3), implemented as an analytic simulator.
+//!
+//! This is the central hardware substitution of the reproduction (see
+//! DESIGN.md §1): the paper's Quartus-synthesized bitstreams become
+//! [`pipeline::PipelineSpec`] descriptors evaluated against a
+//! [`crate::device::FpgaDevice`], giving cycle counts (Eqs. 3-1 … 3-8),
+//! area utilization, achievable clock and power.  The thesis itself
+//! validates this model family against silicon at 76–99 % accuracy
+//! (§5.7.2), which is what makes the substitution meaningful.
+
+pub mod area;
+pub mod fmax;
+pub mod memory;
+pub mod pipeline;
+pub mod power;
+
+pub use area::{AreaBudget, AreaUsage, FpOpCounts};
+pub use fmax::{seed_sweep, FmaxEstimate};
+pub use memory::{AccessPattern, MemorySpec};
+pub use pipeline::{KernelClass, PipelineSpec, SimReport};
+pub use power::power_watts;

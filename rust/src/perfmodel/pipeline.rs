@@ -1,0 +1,182 @@
+//! The single-pipeline execution model, Eqs. 3-1 … 3-8 of the thesis.
+//!
+//! For a pipeline of depth `P`, trip count `L` and initiation interval
+//! `II`:
+//!
+//! ```text
+//! T_cycle = P + II · (L − 1)                                   (3-1)
+//! II      = max(II_c, II_r)                                    (3-6)
+//! II_c    = N_d + 1      (Single Work-item: compile-time stalls)
+//! II_c    = N_b + 1      (NDRange: barriers act like stalls)   (3-4)
+//! II_r    ≥ N_m / BW     (external-memory pressure)            (3-5)
+//! ```
+//!
+//! and with a degree of data parallelism `N_p` (SIMD / unroll / CU
+//! replication) the trip count divides while memory pressure multiplies
+//! (Eqs. 3-7, 3-8).
+
+use crate::device::FpgaDevice;
+use crate::perfmodel::memory::MemorySpec;
+
+/// NDRange vs Single Work-item (§2.3.2, §2.3.3) — which source feeds the
+/// compile-time initiation interval.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelClass {
+    /// Loop iterations pipelined; `stalls` = N_d from loop-carried or
+    /// load/store dependencies determined "at compile time".
+    SingleWorkItem { stalls: u64 },
+    /// Work-items pipelined; `barriers` = N_b, each flushing the pipeline.
+    NdRange { barriers: u64 },
+}
+
+/// A synthesized pipeline: the analytic stand-in for one OpenCL kernel
+/// (or one loop nest of it) on the FPGA.
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    /// Descriptive name for reports.
+    pub name: String,
+    /// Pipeline depth P (filled-latency cycles).  The compiler controls
+    /// this; typical generated pipelines run hundreds of stages.
+    pub depth: u64,
+    /// Loop trip count L — total iterations (SWI) or work-items (NDR)
+    /// pushed through the pipeline for the whole workload.
+    pub trip_count: u64,
+    /// Kernel class and its II_c source.
+    pub class: KernelClass,
+    /// Bytes touched in external memory per *logical iteration* (N_m),
+    /// before applying the parallelism multiplier.
+    pub bytes_per_iter: f64,
+    /// Degree of data parallelism N_p (SIMD × unroll × compute units).
+    pub parallelism: u64,
+    /// Memory access pattern (drives effective bandwidth, §3.2.1.5).
+    pub memory: MemorySpec,
+    /// Number of sequential outer repetitions that cannot be pipelined
+    /// (e.g. the host-side time loop): the pipeline refills each time.
+    pub invocations: u64,
+}
+
+impl PipelineSpec {
+    /// Compile-time initiation interval II_c.
+    pub fn ii_compile(&self) -> f64 {
+        match self.class {
+            KernelClass::SingleWorkItem { stalls } => (stalls + 1) as f64,
+            KernelClass::NdRange { barriers } => (barriers + 1) as f64,
+        }
+    }
+
+    /// Run-time initiation interval II_r from external-memory pressure
+    /// (Eq. 3-5 with the N_p multiplier of Eq. 3-8), in cycles.
+    pub fn ii_runtime(&self, dev: &FpgaDevice, fmax_mhz: f64) -> f64 {
+        let eff_bw = self.memory.effective_bytes_per_cycle(dev, fmax_mhz);
+        if eff_bw <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.bytes_per_iter * self.parallelism as f64 / eff_bw
+    }
+
+    /// Effective initiation interval (Eq. 3-6).
+    pub fn ii(&self, dev: &FpgaDevice, fmax_mhz: f64) -> f64 {
+        self.ii_compile().max(self.ii_runtime(dev, fmax_mhz))
+    }
+
+    /// Total cycles for the workload (Eq. 3-7, times `invocations`).
+    pub fn cycles(&self, dev: &FpgaDevice, fmax_mhz: f64) -> f64 {
+        let np = self.parallelism.max(1) as f64;
+        let l = self.trip_count as f64;
+        let per_invocation =
+            self.depth as f64 + self.ii(dev, fmax_mhz) * ((l / np) - 1.0).max(0.0);
+        per_invocation * self.invocations.max(1) as f64
+    }
+
+    /// Wall-clock seconds at the given kernel clock (Eq. 3-2).
+    pub fn seconds(&self, dev: &FpgaDevice, fmax_mhz: f64) -> f64 {
+        self.cycles(dev, fmax_mhz) / (fmax_mhz * 1e6)
+    }
+
+    /// Is this design memory-bound at the given clock? (II_r > II_c)
+    pub fn memory_bound(&self, dev: &FpgaDevice, fmax_mhz: f64) -> bool {
+        self.ii_runtime(dev, fmax_mhz) > self.ii_compile()
+    }
+}
+
+/// Result of simulating one kernel variant on one device: the row shape
+/// of the thesis's per-benchmark tables (4-3 … 4-8).
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub name: String,
+    pub seconds: f64,
+    pub fmax_mhz: f64,
+    pub power_w: f64,
+    pub energy_j: f64,
+    pub logic_frac: f64,
+    pub m20k_bits_frac: f64,
+    pub m20k_blocks_frac: f64,
+    pub dsp_frac: f64,
+    pub memory_bound: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::stratix_v;
+    use crate::perfmodel::memory::MemorySpec;
+
+    fn spec(class: KernelClass, bytes: f64, par: u64) -> PipelineSpec {
+        PipelineSpec {
+            name: "t".into(),
+            depth: 100,
+            trip_count: 1_000_000,
+            class,
+            bytes_per_iter: bytes,
+            parallelism: par,
+            memory: MemorySpec::streaming(),
+            invocations: 1,
+        }
+    }
+
+    #[test]
+    fn ii_compile_matches_eq_3_3_and_3_4() {
+        let s = spec(KernelClass::SingleWorkItem { stalls: 7 }, 0.0, 1);
+        assert_eq!(s.ii_compile(), 8.0);
+        let n = spec(KernelClass::NdRange { barriers: 2 }, 0.0, 1);
+        assert_eq!(n.ii_compile(), 3.0);
+    }
+
+    #[test]
+    fn compute_bound_cycles_follow_eq_3_1() {
+        let dev = stratix_v();
+        let s = spec(KernelClass::SingleWorkItem { stalls: 0 }, 0.0, 1);
+        let c = s.cycles(&dev, 300.0);
+        assert!((c - (100.0 + 999_999.0)).abs() < 1.0);
+    }
+
+    #[test]
+    fn parallelism_divides_trip_count() {
+        let dev = stratix_v();
+        let s1 = spec(KernelClass::SingleWorkItem { stalls: 0 }, 0.0, 1);
+        let s16 = spec(KernelClass::SingleWorkItem { stalls: 0 }, 0.0, 16);
+        let speedup = s1.cycles(&dev, 300.0) / s16.cycles(&dev, 300.0);
+        assert!(speedup > 15.0 && speedup <= 16.1, "speedup {speedup}");
+    }
+
+    #[test]
+    fn memory_pressure_caps_parallel_speedup() {
+        // 8 B/iter on a ~85 B/cycle device: at N_p = 64 the design is
+        // firmly memory-bound and far from 64x scaling (Eq. 3-8).
+        let dev = stratix_v();
+        let s1 = spec(KernelClass::SingleWorkItem { stalls: 0 }, 8.0, 1);
+        let s64 = spec(KernelClass::SingleWorkItem { stalls: 0 }, 8.0, 64);
+        assert!(!s1.memory_bound(&dev, 300.0));
+        assert!(s64.memory_bound(&dev, 300.0));
+        let speedup = s1.cycles(&dev, 300.0) / s64.cycles(&dev, 300.0);
+        assert!(speedup < 16.0, "memory-bound speedup {speedup}");
+    }
+
+    #[test]
+    fn barriers_hurt_ndrange_like_stalls() {
+        let dev = stratix_v();
+        let swi = spec(KernelClass::SingleWorkItem { stalls: 0 }, 0.0, 1);
+        let ndr = spec(KernelClass::NdRange { barriers: 3 }, 0.0, 1);
+        assert!(ndr.cycles(&dev, 300.0) / swi.cycles(&dev, 300.0) > 3.5);
+    }
+}

@@ -1,0 +1,132 @@
+//! Minimal ASCII table renderer (right-aligned numeric columns, header
+//! rule, optional title) plus a horizontal bar-chart helper for the
+//! "figure" reports.
+
+/// Simple table builder.
+#[derive(Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Table { title: title.into(), ..Default::default() }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cols: Vec<String>) -> &mut Self {
+        self.rows.push(cols);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len().max(
+            self.rows.iter().map(|r| r.len()).max().unwrap_or(0),
+        );
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("\n### {}\n", self.title));
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                // left-align first column, right-align the rest
+                if i == 0 {
+                    line.push_str(&format!("{:<width$}", c, width = widths[i]));
+                } else {
+                    line.push_str(&format!("{:>width$}", c, width = widths[i]));
+                }
+            }
+            line.push('\n');
+            line
+        };
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header, &widths));
+            let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+            out.push_str(&"-".repeat(total));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Render a labelled horizontal bar chart (for the figure reports).
+pub fn bar_chart(title: &str, unit: &str, entries: &[(String, f64)]) -> String {
+    let mut out = format!("\n### {title}\n");
+    let max = entries.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max);
+    let label_w = entries.iter().map(|(l, _)| l.chars().count()).max().unwrap_or(0);
+    for (label, v) in entries {
+        let bars = if max > 0.0 { (v / max * 46.0).round() as usize } else { 0 };
+        out.push_str(&format!(
+            "{:<label_w$}  {:>10.2} {unit}  |{}\n",
+            label,
+            v,
+            "#".repeat(bars),
+        ));
+    }
+    out
+}
+
+/// f64 formatting helpers for table cells.
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.0}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new("Test").header(&["name", "val"]);
+        t.row(vec!["a".into(), "1.0".into()]);
+        t.row(vec!["long-name".into(), "100.0".into()]);
+        let s = t.render();
+        assert!(s.contains("### Test"));
+        assert!(s.contains("long-name"));
+        let lines: Vec<&str> = s.lines().filter(|l| !l.is_empty()).collect();
+        // header + rule + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart("T", "GF", &[("a".into(), 50.0), ("b".into(), 100.0)]);
+        let a_bars = s.lines().find(|l| l.starts_with('a')).unwrap().matches('#').count();
+        let b_bars = s.lines().find(|l| l.starts_with('b')).unwrap().matches('#').count();
+        assert_eq!(b_bars, 2 * a_bars);
+    }
+}

@@ -1,0 +1,232 @@
+//! Chapter 4 reports: Rodinia on FPGAs vs CPUs vs GPUs
+//! (Tables 4-3 … 4-11, Figure 4-2).
+
+use crate::baseline::rodinia::{measured, BENCHMARKS};
+use crate::device::{chapter4_devices, arria_10, stratix_v};
+use crate::report::ascii::{bar_chart, f1, f2, f3, pct, Table};
+use crate::rodinia;
+
+/// One per-benchmark table (4-3 … 4-8): all simulated variants on
+/// Stratix V, same columns as the thesis.
+pub fn per_benchmark_table(benchmark: &str, table_id: &str) -> String {
+    let dev = stratix_v();
+    let rows = rodinia::all_benchmarks(&dev)
+        .into_iter()
+        .find(|(n, _)| *n == benchmark)
+        .map(|(_, r)| r)
+        .expect("unknown benchmark");
+    let mut t = Table::new(format!(
+        "Table {table_id}: Performance and Area Utilization of {benchmark} on Stratix V (simulated)"
+    ))
+    .header(&[
+        "Opt.Level", "Type", "Time (s)", "Power (W)", "Energy (J)",
+        "f_max (MHz)", "Logic", "M20K bits", "M20K blk", "DSP", "Speed-up",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.key.level.label().to_string(),
+            r.key.kind.to_string(),
+            f3(r.report.seconds),
+            f1(r.report.power_w),
+            f1(r.report.energy_j),
+            f1(r.report.fmax_mhz),
+            pct(r.report.logic_frac),
+            pct(r.report.m20k_bits_frac),
+            pct(r.report.m20k_blocks_frac),
+            pct(r.report.dsp_frac),
+            f2(r.speedup),
+        ]);
+    }
+    t.render()
+}
+
+/// Table 4-9: best variant per benchmark on Stratix V and Arria 10, with
+/// the bottleneck column.
+pub fn table_4_9() -> String {
+    let mut t = Table::new(
+        "Table 4-9: Performance and Power Efficiency of All Benchmarks on Stratix V and Arria 10 (simulated)",
+    )
+    .header(&[
+        "Benchmark", "FPGA", "Time (s)", "Power (W)", "Energy (J)",
+        "f_max (MHz)", "Logic", "M20K blk", "DSP", "Bottleneck",
+    ]);
+    for dev in [stratix_v(), arria_10()] {
+        for (name, row) in rodinia::best_per_benchmark(&dev) {
+            let bottleneck = if row.report.memory_bound {
+                "BW".to_string()
+            } else if row.report.dsp_frac > 0.85 {
+                "DSP".to_string()
+            } else if row.report.m20k_blocks_frac > 0.85 {
+                "M20K".to_string()
+            } else if row.report.logic_frac > 0.75 {
+                "Logic".to_string()
+            } else {
+                "-".to_string()
+            };
+            t.row(vec![
+                name.to_string(),
+                dev.id.to_string(),
+                f3(row.report.seconds),
+                f1(row.report.power_w),
+                f1(row.report.energy_j),
+                f1(row.report.fmax_mhz),
+                pct(row.report.logic_frac),
+                pct(row.report.m20k_blocks_frac),
+                pct(row.report.dsp_frac),
+                bottleneck,
+            ]);
+        }
+    }
+    t.render()
+}
+
+/// Table 4-10: CPU results (thesis-measured calibration data).
+pub fn table_4_10() -> String {
+    let mut t = Table::new(
+        "Table 4-10: Performance and Power Efficiency of All Benchmarks on CPUs (thesis-measured)",
+    )
+    .header(&["Benchmark", "CPU", "Time (s)", "Power (W)", "Energy (J)"]);
+    for b in BENCHMARKS {
+        for id in ["i7-3930k", "e5-2650v3"] {
+            let m = measured(id, b).unwrap();
+            t.row(vec![
+                b.to_string(),
+                id.to_string(),
+                f3(m.seconds),
+                f1(m.power_w),
+                f1(m.energy_j()),
+            ]);
+        }
+    }
+    t.render()
+}
+
+/// Table 4-11: GPU results (thesis-measured calibration data).
+pub fn table_4_11() -> String {
+    let mut t = Table::new(
+        "Table 4-11: Performance and Power Efficiency of All Benchmarks on GPUs (thesis-measured)",
+    )
+    .header(&["Benchmark", "GPU", "Time (s)", "Power (W)", "Energy (J)"]);
+    for b in BENCHMARKS {
+        for id in ["k20x", "980ti"] {
+            let m = measured(id, b).unwrap();
+            t.row(vec![
+                b.to_string(),
+                id.to_string(),
+                f3(m.seconds),
+                f1(m.power_w),
+                f1(m.energy_j()),
+            ]);
+        }
+    }
+    t.render()
+}
+
+/// Figure 4-2: normalized performance and power-efficiency comparison
+/// across all hardware, per benchmark.
+pub fn figure_4_2() -> String {
+    let mut out = String::from(
+        "\n### Figure 4-2: Performance and Power Efficiency Comparison Between Different Hardware\n",
+    );
+    let sv = stratix_v();
+    let a10 = arria_10();
+    let sv_best = rodinia::best_per_benchmark(&sv);
+    let a10_best = rodinia::best_per_benchmark(&a10);
+
+    for (i, b) in BENCHMARKS.iter().enumerate() {
+        // (label, seconds, watts)
+        let mut entries: Vec<(String, f64, f64)> = vec![
+            (
+                "Stratix V".into(),
+                sv_best[i].1.report.seconds,
+                sv_best[i].1.report.power_w,
+            ),
+            (
+                "Arria 10".into(),
+                a10_best[i].1.report.seconds,
+                a10_best[i].1.report.power_w,
+            ),
+        ];
+        for dev in chapter4_devices() {
+            let m = measured(dev.id, b).unwrap();
+            entries.push((dev.name.to_string(), m.seconds, m.power_w));
+        }
+        // normalize performance to the slowest device
+        let tmax = entries.iter().map(|e| e.1).fold(f64::MIN, f64::max);
+        let perf: Vec<(String, f64)> = entries
+            .iter()
+            .map(|(l, t, _)| (l.clone(), tmax / t))
+            .collect();
+        out.push_str(&bar_chart(
+            &format!("{b}: relative performance (higher is better)"),
+            "x",
+            &perf,
+        ));
+        let eff: Vec<(String, f64)> = entries
+            .iter()
+            .map(|(l, t, w)| (l.clone(), 1.0 / (t * w)))
+            .collect();
+        let emax = eff.iter().map(|e| e.1).fold(f64::MIN, f64::max);
+        let eff_norm: Vec<(String, f64)> =
+            eff.into_iter().map(|(l, v)| (l, v / emax)).collect();
+        out.push_str(&bar_chart(
+            &format!("{b}: relative power efficiency (1/energy, higher is better)"),
+            "",
+            &eff_norm,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fpga_beats_cpu_everywhere_in_fig_4_2() {
+        // The chapter's headline: FPGAs beat same-generation CPUs in both
+        // performance and power efficiency in every benchmark.
+        let sv = stratix_v();
+        for (name, row) in rodinia::best_per_benchmark(&sv) {
+            let cpu = measured("i7-3930k", name).unwrap();
+            assert!(
+                row.report.seconds < cpu.seconds,
+                "{name}: sv {} vs cpu {}",
+                row.report.seconds,
+                cpu.seconds
+            );
+            assert!(row.report.energy_j < cpu.energy_j(), "{name} energy");
+        }
+    }
+
+    #[test]
+    fn fpga_beats_gpu_power_efficiency() {
+        // Stratix V achieves better energy-to-solution than its
+        // same-generation GPU in every benchmark (up to 5.6x, §4.3.5).
+        let sv = stratix_v();
+        for (name, row) in rodinia::best_per_benchmark(&sv) {
+            let gpu = measured("k20x", name).unwrap();
+            assert!(
+                row.report.energy_j < gpu.energy_j(),
+                "{name}: sv {}J vs k20x {}J",
+                row.report.energy_j,
+                gpu.energy_j()
+            );
+        }
+    }
+
+    #[test]
+    fn gpus_beat_fpgas_on_performance_mostly() {
+        // §4.3.5: except NW, the same-generation GPU outperforms the FPGA.
+        let sv = stratix_v();
+        let mut fpga_wins = 0;
+        for (name, row) in rodinia::best_per_benchmark(&sv) {
+            let gpu = measured("k20x", name).unwrap();
+            if row.report.seconds < gpu.seconds {
+                fpga_wins += 1;
+                assert!(name == "NW" || name == "Pathfinder", "unexpected FPGA win: {name}");
+            }
+        }
+        assert!(fpga_wins <= 2);
+    }
+}

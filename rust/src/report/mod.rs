@@ -1,0 +1,74 @@
+//! Regenerates every table and figure of the thesis's evaluation in
+//! paper-like textual form (see DESIGN.md §5 for the experiment index).
+//!
+//! Each `table_*` / `figure_*` function returns the rendered text;
+//! `render_all` strings them together.  The CLI (`fpga-hpc table 4-3`)
+//! and the bench targets call into these.
+
+pub mod ascii;
+pub mod chapter4;
+pub mod chapter5;
+
+pub use ascii::Table;
+
+/// All report ids, in thesis order.
+pub const ALL_REPORTS: &[&str] = &[
+    "4-3", "4-4", "4-5", "4-6", "4-7", "4-8", "4-9", "4-10", "4-11",
+    "fig4-2", "5-5", "5-6", "5-7", "5-8", "5-9", "fig5-7", "fig5-8",
+    "fig5-9", "fig5-10", "model-accuracy",
+];
+
+/// Render one report by id.
+pub fn render(id: &str) -> crate::Result<String> {
+    Ok(match id {
+        "4-3" => chapter4::per_benchmark_table("NW", "4-3"),
+        "4-4" => chapter4::per_benchmark_table("Hotspot", "4-4"),
+        "4-5" => chapter4::per_benchmark_table("Hotspot 3D", "4-5"),
+        "4-6" => chapter4::per_benchmark_table("Pathfinder", "4-6"),
+        "4-7" => chapter4::per_benchmark_table("SRAD", "4-7"),
+        "4-8" => chapter4::per_benchmark_table("LUD", "4-8"),
+        "4-9" => chapter4::table_4_9(),
+        "4-10" => chapter4::table_4_10(),
+        "4-11" => chapter4::table_4_11(),
+        "fig4-2" => chapter4::figure_4_2(),
+        "5-5" => chapter5::table_5_5(),
+        "5-6" => chapter5::table_5_6(),
+        "5-7" => chapter5::table_5_7(),
+        "5-8" => chapter5::table_5_8(),
+        "5-9" => chapter5::table_5_9(),
+        "fig5-7" => chapter5::figure_5_7(),
+        "fig5-8" => chapter5::figure_5_8(),
+        "fig5-9" => chapter5::figure_5_9(),
+        "fig5-10" => chapter5::figure_5_10(),
+        "model-accuracy" => chapter5::model_accuracy(),
+        other => anyhow::bail!("unknown report id '{other}' (try one of {ALL_REPORTS:?})"),
+    })
+}
+
+/// Render every table and figure.
+pub fn render_all() -> crate::Result<String> {
+    let mut out = String::new();
+    for id in ALL_REPORTS {
+        out.push_str(&render(id)?);
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_report_renders() {
+        for id in ALL_REPORTS {
+            let text = render(id).unwrap();
+            assert!(text.len() > 100, "{id} too short");
+        }
+    }
+
+    #[test]
+    fn unknown_report_errors() {
+        assert!(render("9-9").is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! Shared machinery for the Rodinia benchmark descriptors.
+
+use crate::device::FpgaDevice;
+use crate::perfmodel::area::{AreaBudget, AreaUsage};
+use crate::perfmodel::fmax::{self, CriticalPath};
+use crate::perfmodel::pipeline::{PipelineSpec, SimReport};
+use crate::perfmodel::power::power_watts;
+
+/// The thesis's three optimization levels (§4.2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptLevel {
+    None,
+    Basic,
+    Advanced,
+}
+
+impl OptLevel {
+    pub fn label(&self) -> &'static str {
+        match self {
+            OptLevel::None => "None",
+            OptLevel::Basic => "Basic",
+            OptLevel::Advanced => "Advanced",
+        }
+    }
+}
+
+/// Identifies one kernel variant row in a table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VariantKey {
+    pub level: OptLevel,
+    /// "NDR" or "SWI".
+    pub kind: &'static str,
+}
+
+/// One synthesized design: pipelines + area + timing structure.
+///
+/// `pipelines` run back-to-back per workload (multi-kernel benchmarks
+/// like SRAD/LUD chain several); `usage` is the whole design's area.
+#[derive(Debug, Clone)]
+pub struct KernelDesign {
+    pub key: VariantKey,
+    pub pipelines: Vec<PipelineSpec>,
+    pub usage: AreaUsage,
+    pub critical_path: CriticalPath,
+    /// Whether the Arria 10 flat-compilation flow applies (§3.2.3.4):
+    /// true for SWI designs, false for large NDRange ones.
+    pub flat: bool,
+    /// Sustained fraction of board bandwidth (drives the power model).
+    pub bw_utilization: f64,
+}
+
+impl KernelDesign {
+    /// Simulate on a device → one table row.
+    pub fn simulate(&self, dev: &FpgaDevice) -> SimReport {
+        let budget = AreaBudget::of(&self.usage, dev);
+        let raw = fmax::estimate(dev, &budget, self.critical_path, self.flat);
+        let name = format!("{}-{}", self.key.level.label(), self.key.kind);
+        let fmax_mhz = fmax::seed_sweep(&name, raw, 8).swept_mhz;
+        let seconds: f64 = self
+            .pipelines
+            .iter()
+            .map(|p| p.seconds(dev, fmax_mhz))
+            .sum();
+        let memory_bound = self
+            .pipelines
+            .iter()
+            .any(|p| p.memory_bound(dev, fmax_mhz));
+        let power_w = power_watts(dev, &budget, fmax_mhz, self.bw_utilization);
+        SimReport {
+            name,
+            seconds,
+            fmax_mhz,
+            power_w,
+            energy_j: power_w * seconds,
+            logic_frac: budget.logic,
+            m20k_bits_frac: budget.m20k_bits,
+            m20k_blocks_frac: budget.m20k_blocks,
+            dsp_frac: budget.dsp,
+            memory_bound,
+        }
+    }
+}
+
+/// One row of a per-benchmark table (4-3 … 4-8).
+#[derive(Debug, Clone)]
+pub struct BenchmarkRow {
+    pub key: VariantKey,
+    pub report: SimReport,
+    /// Speed-up over the table's baseline (the original NDRange kernel).
+    pub speedup: f64,
+}
+
+/// Simulate a variant list and compute speed-ups against the first row
+/// (the `None`/NDR baseline, as the thesis does).
+pub fn rows_with_speedup(designs: &[KernelDesign], dev: &FpgaDevice) -> Vec<BenchmarkRow> {
+    let reports: Vec<SimReport> = designs.iter().map(|d| d.simulate(dev)).collect();
+    let baseline = reports[0].seconds;
+    designs
+        .iter()
+        .zip(reports)
+        .map(|(d, report)| BenchmarkRow {
+            key: d.key,
+            speedup: baseline / report.seconds,
+            report,
+        })
+        .collect()
+}
+
+/// Convenience: scale an AreaUsage by a utilization fraction of a device
+/// (used when the thesis reports percentages rather than op mixes).
+pub fn usage_frac(dev: &FpgaDevice, logic: f64, blocks: f64, bits: f64, dsp: f64) -> AreaUsage {
+    AreaUsage {
+        alm: (dev.alm as f64 * logic) as u64,
+        m20k_blocks: (dev.m20k_blocks as f64 * blocks) as u64,
+        m20k_bits: (dev.m20k_bits as f64 * bits) as u64,
+        dsp: (dev.dsp as f64 * dsp) as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::stratix_v;
+    use crate::perfmodel::memory::MemorySpec;
+    use crate::perfmodel::pipeline::KernelClass;
+
+    fn toy(level: OptLevel, stalls: u64) -> KernelDesign {
+        KernelDesign {
+            key: VariantKey { level, kind: "SWI" },
+            pipelines: vec![PipelineSpec {
+                name: "k".into(),
+                depth: 200,
+                trip_count: 10_000_000,
+                class: KernelClass::SingleWorkItem { stalls },
+                bytes_per_iter: 4.0,
+                parallelism: 1,
+                memory: MemorySpec::streaming(),
+                invocations: 1,
+            }],
+            usage: usage_frac(&stratix_v(), 0.3, 0.3, 0.1, 0.1),
+            critical_path: CriticalPath::Clean,
+            flat: true,
+            bw_utilization: 0.5,
+        }
+    }
+
+    #[test]
+    fn speedup_is_relative_to_first_row() {
+        let dev = stratix_v();
+        let designs = vec![toy(OptLevel::None, 9), toy(OptLevel::Advanced, 0)];
+        let rows = rows_with_speedup(&designs, &dev);
+        assert!((rows[0].speedup - 1.0).abs() < 1e-9);
+        assert!(rows[1].speedup > 8.0 && rows[1].speedup < 11.0);
+    }
+
+    #[test]
+    fn energy_is_power_times_time() {
+        let dev = stratix_v();
+        let r = toy(OptLevel::None, 0).simulate(&dev);
+        assert!((r.energy_j - r.power_w * r.seconds).abs() < 1e-9);
+    }
+}

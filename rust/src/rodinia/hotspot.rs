@@ -1,0 +1,230 @@
+//! Hotspot (§4.3.1.2): first-order 2D structured grid with a power term.
+//!
+//! Variant derivations (Table 4-4):
+//!
+//! * **None/NDR** — Rodinia's 2D-blocked kernel with temporal blocking,
+//!   but un-set work-group size limits blocks to 16² and pyramid_height
+//!   to 1; multiple barriers per fused step.
+//! * **None/SWI** — OpenMP port as a doubly-nested loop: pipelines at
+//!   II = 1 but uncoalesced narrow accesses choke bandwidth.
+//! * **Basic/NDR** — work-group size 64², SIMD 16, pyramid 4.
+//! * **Basic/SWI** — constants hoisted, branches lifted, unroll 2 (the
+//!   compiler fails to coalesce beyond that).
+//! * **Advanced/NDR** — the heavily reworked local-memory design:
+//!   128×64 blocks, unroll 2 × SIMD 16, pyramid 6; logic-bound on
+//!   Stratix V (soft FP), ~2.2x faster than the SWI variant thanks to
+//!   temporal blocking.
+//! * **Advanced/SWI** — 1D spatial blocking, bsize 4096, unroll 16,
+//!   shift-register line buffers, no temporal blocking: saturates DDR.
+
+use crate::device::FpgaDevice;
+use crate::perfmodel::area::{star_ops, AreaUsage};
+use crate::perfmodel::fmax::CriticalPath;
+use crate::perfmodel::memory::{AccessPattern, MemorySpec};
+use crate::perfmodel::pipeline::{KernelClass, PipelineSpec};
+use crate::rodinia::common::{
+    rows_with_speedup, usage_frac, BenchmarkRow, KernelDesign, OptLevel, VariantKey,
+};
+
+/// Input (§4.3.1.2): 8000², 100 time steps.
+pub const N: u64 = 8_000;
+pub const STEPS: u64 = 100;
+
+fn updates() -> u64 {
+    N * N * STEPS
+}
+
+pub fn designs(dev: &FpgaDevice) -> Vec<KernelDesign> {
+    let mut v = Vec::new();
+
+    // --- None / NDR: 16x16 blocks, pyramid 1, barrier-ridden ---
+    let red16 = (16.0f64 / 14.0).powi(2); // halo redundancy at 16² blocks
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::None, kind: "NDR" },
+        pipelines: vec![PipelineSpec {
+            name: "hotspot-none-ndr".into(),
+            depth: 800,
+            trip_count: (updates() as f64 * red16) as u64,
+            class: KernelClass::NdRange { barriers: 1 },
+            bytes_per_iter: 12.0, // temp in/out + power, blocked
+            parallelism: 1,
+            memory: MemorySpec::with_pattern(AccessPattern::Strided),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.22, 0.17, 0.05, 0.12),
+        critical_path: CriticalPath::Clean,
+        flat: false,
+        bw_utilization: 0.40,
+    });
+
+    // --- None / SWI: nested loop, II=1, uncoalesced narrow ports ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::None, kind: "SWI" },
+        pipelines: vec![PipelineSpec {
+            name: "hotspot-none-swi".into(),
+            depth: 500,
+            trip_count: updates(),
+            class: KernelClass::SingleWorkItem { stalls: 0 },
+            bytes_per_iter: 28.0, // 5 neighbour reads + power + write
+            parallelism: 1,
+            memory: MemorySpec::with_pattern(AccessPattern::Strided),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.21, 0.22, 0.10, 0.10),
+        critical_path: CriticalPath::Clean,
+        flat: true,
+        bw_utilization: 0.55,
+    });
+
+    // --- Basic / NDR: wg 64², SIMD 16, pyramid 4 ---
+    let red64 = (64.0f64 / (64.0 - 8.0)).powi(2); // pyramid-4 halos
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Basic, kind: "NDR" },
+        pipelines: vec![PipelineSpec {
+            name: "hotspot-basic-ndr".into(),
+            depth: 900,
+            trip_count: (updates() as f64 * red64) as u64,
+            class: KernelClass::NdRange { barriers: 1 },
+            bytes_per_iter: 12.0 / 4.0, // traffic amortized over pyramid 4
+            parallelism: 16,
+            memory: MemorySpec::with_pattern(AccessPattern::Strided),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.58, 0.78, 0.37, 0.27),
+        critical_path: CriticalPath::BarrierMux,
+        flat: false,
+        bw_utilization: 0.60,
+    });
+
+    // --- Basic / SWI: unroll 2, still uncoalesced ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Basic, kind: "SWI" },
+        pipelines: vec![PipelineSpec {
+            name: "hotspot-basic-swi".into(),
+            depth: 550,
+            trip_count: updates(),
+            class: KernelClass::SingleWorkItem { stalls: 0 },
+            bytes_per_iter: 28.0,
+            parallelism: 2,
+            memory: MemorySpec::with_pattern(AccessPattern::Strided),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.24, 0.23, 0.12, 0.04),
+        critical_path: CriticalPath::Clean,
+        flat: true,
+        bw_utilization: 0.60,
+    });
+
+    // --- Advanced / NDR: 128x64 blocks, SIMD16 x unroll2, pyramid 6 ---
+    let redadv = (128.0f64 / (128.0 - 12.0)) * (64.0f64 / (64.0 - 12.0));
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Advanced, kind: "NDR" },
+        pipelines: vec![PipelineSpec {
+            name: "hotspot-adv-ndr".into(),
+            depth: 1_200,
+            trip_count: (updates() as f64 * redadv) as u64,
+            class: KernelClass::NdRange { barriers: 1 },
+            bytes_per_iter: 12.0 / 6.0, // pyramid 6
+            parallelism: 32,
+            memory: MemorySpec::with_pattern(AccessPattern::Streaming),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.78, 0.71, 0.42, 0.52),
+        critical_path: CriticalPath::BarrierMux,
+        flat: false,
+        bw_utilization: 0.55,
+    });
+
+    // --- Advanced / SWI: 1D blocking, bsize 4096, unroll 16 ---
+    let ops = {
+        // 5-point star + power/ambient terms
+        let mut o = star_ops(1, 2);
+        o.fadd += 3;
+        o.fmul += 1;
+        o.fma += 2;
+        o
+    };
+    let par = 16u64;
+    let red1d = 4096.0f64 / (4096.0 - 2.0);
+    let mut adv_usage = AreaUsage {
+        alm: ops.alm(dev) * par + 900 * par,
+        dsp: ops.dsp(dev) * par,
+        m20k_blocks: 64 + (2 * 4096 * 32 * 2 / (20 * 1024)),
+        m20k_bits: 2 * 4096 * 32 * 2,
+    };
+    adv_usage.add(AreaUsage::bsp_overhead(dev));
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Advanced, kind: "SWI" },
+        pipelines: vec![PipelineSpec {
+            name: "hotspot-adv-swi".into(),
+            depth: 1_000,
+            trip_count: (updates() as f64 * red1d) as u64,
+            class: KernelClass::SingleWorkItem { stalls: 0 },
+            bytes_per_iter: 12.0, // temp read + power read + write
+            parallelism: par,
+            memory: MemorySpec::streaming().banked(),
+            invocations: 1,
+        }],
+        usage: adv_usage,
+        critical_path: CriticalPath::Clean,
+        flat: true,
+        bw_utilization: 0.97,
+    });
+
+    v
+}
+
+pub fn simulate(dev: &FpgaDevice) -> Vec<BenchmarkRow> {
+    rows_with_speedup(&designs(dev), dev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::stratix_v;
+
+    #[test]
+    fn table_4_4_shape() {
+        let rows = simulate(&stratix_v());
+        let t = |i: usize| rows[i].report.seconds;
+        assert!(t(1) < t(0), "none/SWI beats barrier-ridden none/NDR");
+        assert!(t(2) < t(1), "basic/NDR jumps ahead (SIMD+pyramid)");
+        assert!(t(4) < t(5), "adv/NDR (temporal) beats adv/SWI (BW-bound)");
+        assert!(t(4) < t(2) && t(5) < t(3));
+        assert!(rows[4].speedup > 10.0, "adv speedup {}", rows[4].speedup);
+    }
+
+    #[test]
+    fn advanced_swi_saturates_bandwidth() {
+        let rows = simulate(&stratix_v());
+        assert!(rows[5].report.memory_bound);
+        // and has a high clock (thesis: 304 MHz, modest area)
+        assert!(rows[5].report.fmax_mhz > 270.0);
+    }
+
+    #[test]
+    fn advanced_ndr_breaks_bandwidth_wall() {
+        // temporal blocking: the NDR advanced kernel must NOT be
+        // memory-bound (the §4.3.5 conclusion about stencils).
+        let rows = simulate(&stratix_v());
+        assert!(!rows[4].report.memory_bound);
+    }
+
+    #[test]
+    fn times_in_thesis_band() {
+        // Thesis: 45.7 / 21.4 / 3.3 / 14.6 / 1.9 / 4.1 seconds — check
+        // each simulated time is within ~3x of its column.
+        let want = [45.7, 21.4, 3.3, 14.6, 1.9, 4.1];
+        let rows = simulate(&stratix_v());
+        for (row, w) in rows.iter().zip(want) {
+            let r = row.report.seconds / w;
+            assert!(
+                (0.33..3.0).contains(&r),
+                "{}: {} vs thesis {} (ratio {r})",
+                row.report.name,
+                row.report.seconds,
+                w
+            );
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Hotspot 3D (§4.3.1.3): first-order 3D structured grid (7-point star).
+//!
+//! Variant derivations (Table 4-5):
+//!
+//! * **None/NDR** — Rodinia's kernel: no explicit blocking, only private
+//!   z-registers; poor memory behaviour everywhere.
+//! * **None/SWI** — OpenMP port, triply-nested loop, II = 1.
+//! * **Basic/NDR** — work-group size + SIMD 8 (coalescing-limited).
+//! * **Basic/SWI** — branch-hoisted, unroll 4 (contention-limited).
+//! * **Advanced/SWI** — 2D spatial blocking 512×512, unroll 16,
+//!   shift-register plane buffers, cache disabled; DDR-saturated.
+
+use crate::device::FpgaDevice;
+use crate::perfmodel::area::{star_ops, AreaUsage};
+use crate::perfmodel::fmax::CriticalPath;
+use crate::perfmodel::memory::{AccessPattern, MemorySpec};
+use crate::perfmodel::pipeline::{KernelClass, PipelineSpec};
+use crate::rodinia::common::{
+    rows_with_speedup, usage_frac, BenchmarkRow, KernelDesign, OptLevel, VariantKey,
+};
+
+/// Input (§4.3.1.3): 960×960×100 grid, 100 time steps.
+pub const NX: u64 = 960;
+pub const NZ: u64 = 100;
+pub const STEPS: u64 = 100;
+
+fn updates() -> u64 {
+    NX * NX * NZ * STEPS
+}
+
+pub fn designs(dev: &FpgaDevice) -> Vec<KernelDesign> {
+    let mut v = Vec::new();
+
+    // --- None / NDR ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::None, kind: "NDR" },
+        pipelines: vec![PipelineSpec {
+            name: "hotspot3d-none-ndr".into(),
+            depth: 900,
+            trip_count: updates(),
+            class: KernelClass::NdRange { barriers: 1 },
+            bytes_per_iter: 36.0, // 7 reads + power + write, uncached
+            parallelism: 1,
+            // page-hostile 3D strides with zero caching behave like
+            // random access on the DDR bus (Table 4-5's 249 s baseline)
+            memory: MemorySpec::with_pattern(AccessPattern::Random),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.28, 0.26, 0.11, 0.13),
+        critical_path: CriticalPath::Clean,
+        flat: false,
+        bw_utilization: 0.50,
+    });
+
+    // --- None / SWI ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::None, kind: "SWI" },
+        pipelines: vec![PipelineSpec {
+            name: "hotspot3d-none-swi".into(),
+            depth: 600,
+            trip_count: updates(),
+            class: KernelClass::SingleWorkItem { stalls: 0 },
+            bytes_per_iter: 20.0, // compiler cache catches some reuse
+            parallelism: 1,
+            memory: MemorySpec::with_pattern(AccessPattern::Strided),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.21, 0.25, 0.13, 0.05),
+        critical_path: CriticalPath::Clean,
+        flat: true,
+        bw_utilization: 0.55,
+    });
+
+    // --- Basic / NDR: SIMD 8 ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Basic, kind: "NDR" },
+        pipelines: vec![PipelineSpec {
+            name: "hotspot3d-basic-ndr".into(),
+            depth: 1_000,
+            trip_count: updates(),
+            class: KernelClass::NdRange { barriers: 1 },
+            // SIMD 8 without coalescing multiplies narrow ports: traffic
+            // per lane stays at the uncached level (Table 4-5: basic/NDR
+            // is slower than even the unoptimized SWI port)
+            bytes_per_iter: 36.0,
+            parallelism: 8,
+            memory: MemorySpec::with_pattern(AccessPattern::Strided),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.80, 0.78, 0.31, 0.78),
+        critical_path: CriticalPath::BarrierMux,
+        flat: false,
+        bw_utilization: 0.65,
+    });
+
+    // --- Basic / SWI: unroll 4 ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Basic, kind: "SWI" },
+        pipelines: vec![PipelineSpec {
+            name: "hotspot3d-basic-swi".into(),
+            depth: 700,
+            trip_count: updates(),
+            class: KernelClass::SingleWorkItem { stalls: 0 },
+            bytes_per_iter: 20.0,
+            parallelism: 4,
+            memory: MemorySpec::with_pattern(AccessPattern::Strided),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.32, 0.35, 0.21, 0.15),
+        critical_path: CriticalPath::Clean,
+        flat: true,
+        bw_utilization: 0.65,
+    });
+
+    // --- Advanced / SWI: 2D blocking 512², unroll 16 ---
+    let ops = {
+        let mut o = star_ops(1, 3);
+        o.fadd += 2;
+        o.fmul += 1;
+        o.fma += 2;
+        o
+    };
+    let par = 16u64;
+    let bsize = 512u64;
+    let red = (bsize as f64 / (bsize as f64 - 2.0)).powi(2);
+    let window_bits = 2 * bsize * bsize * 32 * 2; // temp + power planes
+    let mut usage = AreaUsage {
+        alm: ops.alm(dev) * par + 900 * par,
+        dsp: ops.dsp(dev) * par,
+        m20k_blocks: 64 + window_bits / (20 * 1024),
+        m20k_bits: window_bits,
+    };
+    usage.add(AreaUsage::bsp_overhead(dev));
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Advanced, kind: "SWI" },
+        pipelines: vec![PipelineSpec {
+            name: "hotspot3d-adv-swi".into(),
+            depth: 1_500,
+            trip_count: (updates() as f64 * red) as u64,
+            class: KernelClass::SingleWorkItem { stalls: 0 },
+            bytes_per_iter: 12.0, // temp + power reads, temp write
+            parallelism: par,
+            memory: MemorySpec::streaming().banked(),
+            invocations: 1,
+        }],
+        usage,
+        critical_path: CriticalPath::Clean,
+        flat: true,
+        bw_utilization: 0.97,
+    });
+
+    v
+}
+
+pub fn simulate(dev: &FpgaDevice) -> Vec<BenchmarkRow> {
+    rows_with_speedup(&designs(dev), dev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::stratix_v;
+
+    #[test]
+    fn table_4_5_shape() {
+        let rows = simulate(&stratix_v());
+        let t = |i: usize| rows[i].report.seconds;
+        assert!(t(1) < t(0), "none/SWI beats none/NDR");
+        assert!(t(2) < t(0) && t(2) > t(1), "basic/NDR between them");
+        assert!(t(3) < t(1), "basic/SWI improves");
+        assert!(t(4) < t(3), "advanced fastest");
+        assert!(rows[4].speedup > 20.0, "speedup {}", rows[4].speedup);
+    }
+
+    #[test]
+    fn advanced_time_in_band() {
+        // Thesis: 5.76 s on Stratix V.
+        let rows = simulate(&stratix_v());
+        let t = rows[4].report.seconds;
+        assert!(t > 2.0 && t < 18.0, "t={t}");
+        assert!(rows[4].report.memory_bound);
+    }
+
+    #[test]
+    fn big_plane_buffers_cost_m20k() {
+        // Table 4-5: advanced kernel uses ~60 % of M20K blocks.
+        let rows = simulate(&stratix_v());
+        assert!(rows[4].report.m20k_blocks_frac > 0.4);
+    }
+}

@@ -1,0 +1,190 @@
+//! LUD (§4.3.1.6): blocked dense LU decomposition — diameter, perimeter
+//! and internal (GEMM) kernels.
+//!
+//! Variant derivations (Table 4-8):
+//!
+//! * **None/NDR** — Rodinia original, block 16, auto-unroll suppressed:
+//!   no explicit parallelism, run time dominated by the internal GEMM at
+//!   ~2 FLOP/cycle.
+//! * **None/SWI** — OpenMP port: non-pipelineable outer loops and no
+//!   compute/memory overlap make it *slower* than the NDR baseline.
+//! * **Basic/NDR** — wg set, block 64; internal fully unrolled (64
+//!   mul-add/cycle) × 3 compute units; two orders of magnitude jump.
+//! * **Basic/SWI** — shift-register reduction + unroll 2: marginal.
+//! * **Advanced/NDR** — block 96 (SV) / 128 (A10), port-optimized local
+//!   buffers, SIMD 2 internal: near-full DSP/M20K, bandwidth-saturated
+//!   internal kernel.
+//!
+//! Total work: (2/3)·n³ FMA-FLOPs for n = 11520.
+
+use crate::device::FpgaDevice;
+use crate::perfmodel::fmax::CriticalPath;
+use crate::perfmodel::memory::{AccessPattern, MemorySpec};
+use crate::perfmodel::pipeline::{KernelClass, PipelineSpec};
+use crate::rodinia::common::{
+    rows_with_speedup, usage_frac, BenchmarkRow, KernelDesign, OptLevel, VariantKey,
+};
+
+/// Input (§4.3.1.6): 11520×11520 matrix.
+pub const N: u64 = 11_520;
+
+/// Total multiply-add pairs of the factorization.
+fn madds() -> f64 {
+    (N as f64).powi(3) / 3.0
+}
+
+/// GEMM-style pipeline: trip counts as madds / lane count.
+fn gemm_pipeline(name: &str, lanes: u64, class: KernelClass,
+                 bytes_per_iter: f64, pattern: AccessPattern) -> PipelineSpec {
+    PipelineSpec {
+        name: name.into(),
+        depth: 1_000,
+        trip_count: (madds() / lanes as f64) as u64,
+        class,
+        bytes_per_iter,
+        parallelism: 1, // lanes already folded into trip_count
+        memory: MemorySpec::with_pattern(pattern),
+        invocations: 1,
+    }
+}
+
+pub fn designs(dev: &FpgaDevice) -> Vec<KernelDesign> {
+    let mut v = Vec::new();
+
+    // --- None / NDR: ~1 madd/cycle, blocked at 16 so decent locality ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::None, kind: "NDR" },
+        // work-group pipelining hides the two barriers at this trip
+        // count, so the baseline sustains ~1 madd/cycle (1944 s measured)
+        pipelines: vec![gemm_pipeline(
+            "lud-none-ndr", 1, KernelClass::NdRange { barriers: 0 },
+            1.5, AccessPattern::Strided,
+        )],
+        usage: usage_frac(dev, 0.30, 0.28, 0.14, 0.13),
+        critical_path: CriticalPath::Clean,
+        flat: false,
+        bw_utilization: 0.30,
+    });
+
+    // --- None / SWI: sequential outer loops, no overlap ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::None, kind: "SWI" },
+        pipelines: vec![gemm_pipeline(
+            "lud-none-swi", 1, KernelClass::SingleWorkItem { stalls: 0 },
+            2.0, AccessPattern::Strided,
+        ),
+        // non-pipelined block loads/stores add a serial pass over the data
+        PipelineSpec {
+            name: "lud-none-swi-copy".into(),
+            depth: 300,
+            trip_count: N * N * (N / 16) / 8, // block traffic, serialized
+            class: KernelClass::SingleWorkItem { stalls: 3 },
+            bytes_per_iter: 8.0,
+            parallelism: 1,
+            memory: MemorySpec::with_pattern(AccessPattern::Strided),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.34, 0.28, 0.12, 0.16),
+        critical_path: CriticalPath::ExitChain { depth: 3 },
+        flat: true,
+        bw_utilization: 0.35,
+    });
+
+    // --- Basic / NDR: internal fully unrolled (64) x 3 CUs ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Basic, kind: "NDR" },
+        // work-group pipelining hides the barrier; residual port-sharing
+        // stalls on the small 64-blocks show up as memory pressure
+        pipelines: vec![gemm_pipeline(
+            "lud-basic-ndr", 64 * 3, KernelClass::NdRange { barriers: 0 },
+            60.0, AccessPattern::Strided,
+        )],
+        usage: usage_frac(dev, 0.69, 0.95, 0.42, 0.99),
+        critical_path: CriticalPath::BarrierMux,
+        flat: false,
+        bw_utilization: 0.75,
+    });
+
+    // --- Basic / SWI: unroll 2 on the middle loop ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Basic, kind: "SWI" },
+        pipelines: vec![gemm_pipeline(
+            "lud-basic-swi", 2, KernelClass::SingleWorkItem { stalls: 0 },
+            2.0, AccessPattern::Strided,
+        )],
+        usage: usage_frac(dev, 0.65, 0.61, 0.24, 0.65),
+        critical_path: CriticalPath::ExitChain { depth: 3 },
+        flat: true,
+        bw_utilization: 0.40,
+    });
+
+    // --- Advanced / NDR: block 96/128, SIMD 2 internal ---
+    // Lanes: block-width unroll x SIMD 2; A10's DSP headroom raises the
+    // usable lane count but M20K + DDR cap the gain (§4.3.2.1).
+    let lanes: u64 = if dev.native_fp_dsp { 128 * 2 } else { 96 * 2 };
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Advanced, kind: "NDR" },
+        // bigger blocks (96/128) raise on-chip reuse: the internal GEMM
+        // runs just below the DDR saturation point (§4.3.1.6 notes fmax
+        // past that point *reduces* performance)
+        pipelines: vec![gemm_pipeline(
+            "lud-adv-ndr", lanes, KernelClass::NdRange { barriers: 0 },
+            24.0, AccessPattern::Streaming,
+        )],
+        usage: if dev.native_fp_dsp {
+            usage_frac(dev, 0.33, 0.93, 0.45, 0.41)
+        } else {
+            usage_frac(dev, 0.81, 0.98, 0.50, 0.96)
+        },
+        critical_path: CriticalPath::BarrierMux,
+        flat: false,
+        bw_utilization: 0.85,
+    });
+
+    v
+}
+
+pub fn simulate(dev: &FpgaDevice) -> Vec<BenchmarkRow> {
+    rows_with_speedup(&designs(dev), dev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{arria_10, stratix_v};
+
+    #[test]
+    fn table_4_8_shape() {
+        let rows = simulate(&stratix_v());
+        let t = |i: usize| rows[i].report.seconds;
+        assert!(t(1) > t(0), "none/SWI slower than none/NDR");
+        assert!(t(2) < t(0) / 50.0, "basic/NDR two-orders jump");
+        assert!(t(3) > t(2), "basic/SWI far behind basic/NDR");
+        assert!(t(4) < t(2), "advanced/NDR fastest");
+        assert!(rows[4].speedup > 80.0, "speedup {}", rows[4].speedup);
+    }
+
+    #[test]
+    fn baseline_is_thousands_of_seconds() {
+        // Table 4-8: 1944 s baseline, ~13 s advanced.
+        let rows = simulate(&stratix_v());
+        assert!(rows[0].report.seconds > 800.0);
+        assert!(rows[4].report.seconds > 4.0 && rows[4].report.seconds < 60.0);
+    }
+
+    #[test]
+    fn advanced_near_full_dsp_on_stratix_v() {
+        let rows = simulate(&stratix_v());
+        assert!(rows[4].report.dsp_frac > 0.9);
+        assert!(rows[4].report.m20k_blocks_frac > 0.9);
+    }
+
+    #[test]
+    fn arria10_roughly_doubles() {
+        // Table 4-9: LUD 13.2 s -> 5.3 s on A10 (the clearest A10 win).
+        let sv = simulate(&stratix_v());
+        let a10 = simulate(&arria_10());
+        let gain = sv[4].report.seconds / a10[4].report.seconds;
+        assert!(gain > 1.4 && gain < 5.0, "gain {gain}");
+    }
+}

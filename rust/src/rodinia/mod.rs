@@ -1,0 +1,52 @@
+//! The Chapter 4 Rodinia benchmark suite on the simulated FPGAs.
+//!
+//! Each benchmark module defines the kernel *variants* the thesis builds —
+//! (None | Basic | Advanced) × (NDRange | Single Work-item) — as
+//! [`common::KernelDesign`] descriptors: pipeline structure (II sources,
+//! trip counts, bytes/iteration), area usage and critical-path class, all
+//! derived from the §4.3.1 design descriptions.  Feeding them through
+//! [`crate::perfmodel`] regenerates the per-benchmark tables (4-3 … 4-8)
+//! and the cross-device comparison (Tables 4-9 … 4-11, Fig. 4-2).
+//!
+//! The *functional* side of each benchmark (real numerics) runs through
+//! [`crate::coordinator`] against the AOT Pallas artifacts.
+
+pub mod common;
+pub mod hotspot;
+pub mod hotspot3d;
+pub mod lud;
+pub mod nw;
+pub mod pathfinder;
+pub mod srad;
+
+pub use common::{BenchmarkRow, KernelDesign, OptLevel, VariantKey};
+
+use crate::device::FpgaDevice;
+
+/// All six benchmarks, with their thesis input settings, simulated on one
+/// device.  Returns (benchmark name, rows best-last like the tables).
+pub fn all_benchmarks(dev: &FpgaDevice) -> Vec<(&'static str, Vec<BenchmarkRow>)> {
+    vec![
+        ("NW", nw::simulate(dev)),
+        ("Hotspot", hotspot::simulate(dev)),
+        ("Hotspot 3D", hotspot3d::simulate(dev)),
+        ("Pathfinder", pathfinder::simulate(dev)),
+        ("SRAD", srad::simulate(dev)),
+        ("LUD", lud::simulate(dev)),
+    ]
+}
+
+/// The best (advanced) variant for each benchmark — the Table 4-9 rows.
+pub fn best_per_benchmark(dev: &FpgaDevice) -> Vec<(&'static str, BenchmarkRow)> {
+    all_benchmarks(dev)
+        .into_iter()
+        .map(|(name, rows)| {
+            let best = rows
+                .iter()
+                .min_by(|a, b| a.report.seconds.total_cmp(&b.report.seconds))
+                .expect("no rows")
+                .clone();
+            (name, best)
+        })
+        .collect()
+}

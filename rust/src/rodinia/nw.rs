@@ -1,0 +1,219 @@
+//! Needleman-Wunsch (§4.3.1.1): dynamic programming, integer, with
+//! top/left/top-left loop-carried dependencies.
+//!
+//! Variant derivations (Table 4-3's designs):
+//!
+//! * **None/NDR** — Rodinia's 2D-blocked diagonal-parallel kernel,
+//!   128×128 blocks: two barrier regions per diagonal step, heavily
+//!   strided local/global access.
+//! * **None/SWI** — direct OpenMP port: the outer (row) loop does not
+//!   pipeline; the inner loop pipelines at II = 328, the minimum latency
+//!   of an external-memory write followed by a read.
+//! * **Basic/NDR** — work-group size set + SIMD 2, block shrinks to 64².
+//! * **Basic/SWI** — left neighbour cached in a register + `ivdep`:
+//!   inner loop reaches II = 1 but rows stay sequential (pipeline refills
+//!   every row), and the register forward sets a RAW-feedback critical
+//!   path.
+//! * **Advanced/SWI** — the diagonal 1D-blocked design of Fig. 4-1:
+//!   `bsize` = 4096, `par` = 64 cells per cycle, shift registers for all
+//!   dependencies, diagonal↔row access conversion buffers, manual memory
+//!   banking; fully pipelined at II = 1 and bandwidth-bound.
+
+use crate::device::FpgaDevice;
+use crate::perfmodel::area::AreaUsage;
+use crate::perfmodel::fmax::CriticalPath;
+use crate::perfmodel::memory::{AccessPattern, MemorySpec};
+use crate::perfmodel::pipeline::{KernelClass, PipelineSpec};
+use crate::rodinia::common::{
+    rows_with_speedup, usage_frac, BenchmarkRow, KernelDesign, OptLevel, VariantKey,
+};
+
+/// Input size (§4.3.1.1): 23040 × 23040 cells.
+pub const N: u64 = 23_040;
+
+/// Advanced-variant parameters (§4.3.1.1).
+pub const BSIZE: u64 = 4_096;
+pub const PAR: u64 = 64;
+
+fn cells() -> u64 {
+    N * N
+}
+
+pub fn designs(dev: &FpgaDevice) -> Vec<KernelDesign> {
+    let mut v = Vec::new();
+
+    // --- None / NDR: Rodinia original, 128x128 diagonal blocking ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::None, kind: "NDR" },
+        pipelines: vec![PipelineSpec {
+            name: "nw-none-ndr".into(),
+            depth: 600,
+            trip_count: cells(),
+            class: KernelClass::NdRange { barriers: 2 },
+            // score write + 3 neighbour reads + reference read, poorly
+            // coalesced diagonal pattern
+            bytes_per_iter: 20.0,
+            parallelism: 1,
+            memory: MemorySpec::with_pattern(AccessPattern::Strided),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.27, 0.30, 0.16, 0.06),
+        critical_path: CriticalPath::BarrierMux,
+        flat: false,
+        bw_utilization: 0.45,
+    });
+
+    // --- None / SWI: direct port, inner loop II = 328 ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::None, kind: "SWI" },
+        pipelines: vec![PipelineSpec {
+            name: "nw-none-swi".into(),
+            depth: 400,
+            trip_count: cells(),
+            class: KernelClass::SingleWorkItem { stalls: 327 },
+            bytes_per_iter: 20.0,
+            parallelism: 1,
+            memory: MemorySpec::with_pattern(AccessPattern::Strided),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.20, 0.17, 0.05, 0.005),
+        critical_path: CriticalPath::Clean,
+        flat: true,
+        bw_utilization: 0.10,
+    });
+
+    // --- Basic / NDR: work-group size + SIMD 2, 64x64 blocks ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Basic, kind: "NDR" },
+        pipelines: vec![PipelineSpec {
+            name: "nw-basic-ndr".into(),
+            depth: 600,
+            trip_count: cells(),
+            class: KernelClass::NdRange { barriers: 2 },
+            bytes_per_iter: 20.0,
+            parallelism: 2,
+            memory: MemorySpec::with_pattern(AccessPattern::Strided),
+            invocations: 1,
+        }],
+        // local-buffer replication for work-group pipelining exhausts
+        // Block RAM (Table 4-3: 100 % M20K blocks)
+        usage: usage_frac(dev, 0.38, 1.00, 0.68, 0.08),
+        critical_path: CriticalPath::BarrierMux,
+        flat: false,
+        bw_utilization: 0.50,
+    });
+
+    // --- Basic / SWI: register-cached left neighbour, II = 1, rows
+    //     sequential (refill per row) ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Basic, kind: "SWI" },
+        pipelines: vec![PipelineSpec {
+            name: "nw-basic-swi".into(),
+            depth: 250,
+            trip_count: N, // one row per invocation
+            class: KernelClass::SingleWorkItem { stalls: 0 },
+            bytes_per_iter: 12.0, // read ref + top row, write score
+            parallelism: 1,
+            memory: MemorySpec::with_pattern(AccessPattern::Streaming),
+            invocations: N, // outer row loop not pipelined
+        }],
+        usage: usage_frac(dev, 0.19, 0.18, 0.08, 0.005),
+        critical_path: CriticalPath::RawFeedback,
+        flat: true,
+        bw_utilization: 0.55,
+    });
+
+    // --- Advanced / SWI: diagonal-blocked par=64 design (Fig. 4-1) ---
+    // Blocks overlap one row (bsize -> bsize+1 rows read); diagonal
+    // access converted to coalesced via delay shift registers; the two
+    // hot buffers manually banked.
+    let overlap = (BSIZE + 1) as f64 / BSIZE as f64;
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Advanced, kind: "SWI" },
+        pipelines: vec![PipelineSpec {
+            name: "nw-adv-swi".into(),
+            depth: 2_000, // deep delay-buffer chains
+            trip_count: (cells() as f64 * overlap) as u64,
+            class: KernelClass::SingleWorkItem { stalls: 0 },
+            // per cell: 4 B score read + 4 B write + reference byte
+            // stream, amortized column reads
+            bytes_per_iter: 8.6,
+            parallelism: PAR,
+            memory: MemorySpec::with_pattern(AccessPattern::Streaming).banked(),
+            invocations: 1,
+        }],
+        usage: nw_advanced_area(dev),
+        critical_path: CriticalPath::RawFeedback,
+        flat: true,
+        bw_utilization: 0.95,
+    });
+
+    v
+}
+
+/// Advanced-variant area from first principles: `par` integer max/add
+/// cells plus the diagonal-to-row conversion shift registers (one per
+/// column in the chunk, sizes par..1) and the bsize-deep column buffer.
+fn nw_advanced_area(dev: &FpgaDevice) -> AreaUsage {
+    let int_alm_per_cell = 220; // 3-way max + add + mux datapath, 32-bit
+    let conv_regs_bits = PAR * (PAR + 1) / 2 * 32 * 2; // read + write sets
+    let col_buffer_bits = BSIZE * 32;
+    let mut u = AreaUsage {
+        alm: int_alm_per_cell * PAR + 12_000,
+        dsp: (dev.dsp as f64 * 0.02) as u64,
+        m20k_blocks: ((conv_regs_bits + col_buffer_bits * 3) / (20 * 1024)).max(64),
+        m20k_bits: conv_regs_bits + col_buffer_bits * 3,
+    };
+    let bsp = AreaUsage::bsp_overhead(dev);
+    u.add(bsp);
+    u
+}
+
+pub fn simulate(dev: &FpgaDevice) -> Vec<BenchmarkRow> {
+    rows_with_speedup(&designs(dev), dev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{arria_10, stratix_v};
+
+    #[test]
+    fn table_4_3_shape() {
+        let rows = simulate(&stratix_v());
+        let t = |i: usize| rows[i].report.seconds;
+        // ordering: none/SWI slowest, advanced fastest (Table 4-3)
+        assert!(t(1) > t(0), "none/SWI slower than none/NDR");
+        assert!(t(2) < t(0), "basic/NDR improves");
+        assert!(t(3) < t(2), "basic/SWI beats basic/NDR");
+        assert!(t(4) < t(3), "advanced fastest");
+        // headline: tens-of-x speedup for the advanced kernel
+        assert!(rows[4].speedup > 15.0, "speedup {}", rows[4].speedup);
+        // advanced run time in the sub-second band (thesis 0.26 s)
+        assert!(t(4) > 0.05 && t(4) < 1.0, "adv time {}", t(4));
+    }
+
+    #[test]
+    fn advanced_is_bandwidth_bound() {
+        let rows = simulate(&stratix_v());
+        assert!(rows[4].report.memory_bound);
+    }
+
+    #[test]
+    fn raw_feedback_lowers_advanced_fmax() {
+        // §4.3.1.1: NW's register forwarding keeps fmax well below the
+        // clean-design clock.
+        let dev = stratix_v();
+        let rows = simulate(&dev);
+        assert!(rows[4].report.fmax_mhz < dev.base_fmax_mhz * 0.82);
+    }
+
+    #[test]
+    fn arria10_gains_little_over_stratix_v() {
+        // Table 4-9: NW is BW-bound; A10's 1.33x bandwidth cap the gain.
+        let sv = simulate(&stratix_v());
+        let a10 = simulate(&arria_10());
+        let gain = sv[4].report.seconds / a10[4].report.seconds;
+        assert!(gain > 1.0 && gain < 2.0, "gain {gain}");
+    }
+}

@@ -1,0 +1,196 @@
+//! Pathfinder (§4.3.1.4): dynamic programming, integer min-accumulate
+//! over a 2D grid with row-to-row dependency.
+//!
+//! Variant derivations (Table 4-6):
+//!
+//! * **None/NDR** — Rodinia original: 256-wide blocks, pyramid 10.
+//! * **None/SWI** — column loop in-kernel (II=1), row loop on the host.
+//! * **Basic/NDR** — wg 1024, SIMD 16, pipeline ×2, pyramid 32.
+//! * **Basic/SWI** — branch-hoisted + unroll 64.
+//! * **Advanced/NDR** — Hotspot-style local-memory rework: block 8192,
+//!   SIMD 16 × unroll 2, pyramid 92.
+//! * **Advanced/SWI** — shift-register design, block 32768, unroll 32,
+//!   pyramid fused in-pipeline; unaligned overlapped reads and a single
+//!   hot buffer limit DDR efficiency (§4.3.1.4's analysis).
+
+use crate::device::FpgaDevice;
+use crate::perfmodel::fmax::CriticalPath;
+use crate::perfmodel::memory::{AccessPattern, MemorySpec};
+use crate::perfmodel::pipeline::{KernelClass, PipelineSpec};
+use crate::rodinia::common::{
+    rows_with_speedup, usage_frac, BenchmarkRow, KernelDesign, OptLevel, VariantKey,
+};
+
+/// Input (§4.3.1.4): 1,000,000 columns × 1,000 rows.
+pub const COLS: u64 = 1_000_000;
+pub const ROWS: u64 = 1_000;
+
+fn cells() -> u64 {
+    COLS * ROWS
+}
+
+pub fn designs(dev: &FpgaDevice) -> Vec<KernelDesign> {
+    let mut v = Vec::new();
+
+    // --- None / NDR: block 256, pyramid 10 ---
+    let red = |bsize: f64, pyr: f64| bsize / (bsize - 2.0 * pyr);
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::None, kind: "NDR" },
+        pipelines: vec![PipelineSpec {
+            name: "pathfinder-none-ndr".into(),
+            depth: 500,
+            trip_count: (cells() as f64 * red(256.0, 10.0)) as u64,
+            // work-group pipelining hides the single barrier here
+            class: KernelClass::NdRange { barriers: 0 },
+            // wall streamed every row; result row amortized over pyramid
+            bytes_per_iter: 4.4,
+            parallelism: 1,
+            memory: MemorySpec::with_pattern(AccessPattern::StreamingUnaligned),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.20, 0.16, 0.04, 0.02),
+        critical_path: CriticalPath::Clean,
+        flat: false,
+        bw_utilization: 0.35,
+    });
+
+    // --- None / SWI: row loop on host -> refill per row ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::None, kind: "SWI" },
+        pipelines: vec![PipelineSpec {
+            name: "pathfinder-none-swi".into(),
+            depth: 400,
+            trip_count: COLS,
+            class: KernelClass::SingleWorkItem { stalls: 0 },
+            bytes_per_iter: 4.4, // wall streamed; prev row cached on-chip
+            parallelism: 1,
+            memory: MemorySpec::streaming(),
+            invocations: ROWS,
+        }],
+        usage: usage_frac(dev, 0.20, 0.16, 0.05, 0.005),
+        critical_path: CriticalPath::Clean,
+        flat: true,
+        bw_utilization: 0.50,
+    });
+
+    // --- Basic / NDR: wg 1024, SIMD 16, CU x2, pyramid 32 ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Basic, kind: "NDR" },
+        pipelines: vec![PipelineSpec {
+            name: "pathfinder-basic-ndr".into(),
+            depth: 700,
+            trip_count: (cells() as f64 * red(1024.0, 32.0)) as u64,
+            class: KernelClass::NdRange { barriers: 1 },
+            bytes_per_iter: 4.2,
+            parallelism: 32,
+            memory: MemorySpec::with_pattern(AccessPattern::StreamingUnaligned),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.54, 0.80, 0.35, 0.03),
+        critical_path: CriticalPath::BarrierMux,
+        flat: false,
+        bw_utilization: 0.60,
+    });
+
+    // --- Basic / SWI: unroll 64, but refills per row remain ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Basic, kind: "SWI" },
+        pipelines: vec![PipelineSpec {
+            name: "pathfinder-basic-swi".into(),
+            depth: 900,
+            trip_count: COLS,
+            class: KernelClass::SingleWorkItem { stalls: 0 },
+            bytes_per_iter: 4.2,
+            parallelism: 64,
+            // unroll-64 keeps many narrow ports despite register hoisting
+            memory: MemorySpec::with_pattern(AccessPattern::Strided),
+            invocations: ROWS,
+        }],
+        usage: usage_frac(dev, 0.40, 0.32, 0.20, 0.005),
+        critical_path: CriticalPath::Clean,
+        flat: true,
+        bw_utilization: 0.60,
+    });
+
+    // --- Advanced / NDR: block 8192, SIMD16 x unroll2, pyramid 92 ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Advanced, kind: "NDR" },
+        pipelines: vec![PipelineSpec {
+            name: "pathfinder-adv-ndr".into(),
+            depth: 1_200,
+            trip_count: (cells() as f64 * red(8192.0, 92.0)) as u64,
+            class: KernelClass::NdRange { barriers: 1 },
+            bytes_per_iter: 4.1,
+            parallelism: 32,
+            // work-group pipelining overlaps the two banks' streams,
+            // recovering the alignment losses (§4.3.1.4's explanation of
+            // the NDR kernel's win)
+            memory: MemorySpec::with_pattern(AccessPattern::Streaming),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.44, 0.55, 0.32, 0.02),
+        critical_path: CriticalPath::Clean,
+        flat: false,
+        bw_utilization: 0.55,
+    });
+
+    // --- Advanced / SWI: shift registers, block 32768, unroll 32 ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Advanced, kind: "SWI" },
+        pipelines: vec![PipelineSpec {
+            name: "pathfinder-adv-swi".into(),
+            depth: 1_500,
+            trip_count: (cells() as f64 * red(32768.0, 92.0)) as u64,
+            class: KernelClass::SingleWorkItem { stalls: 0 },
+            bytes_per_iter: 4.1,
+            parallelism: 32,
+            // unaligned overlapped reads + a single hot buffer that
+            // cannot keep both banks busy (§4.3.1.4)
+            memory: MemorySpec::with_pattern(AccessPattern::StreamingUnaligned)
+                .bank_limited(0.8),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.34, 0.21, 0.07, 0.005),
+        critical_path: CriticalPath::Clean,
+        flat: true,
+        bw_utilization: 0.50,
+    });
+
+    v
+}
+
+pub fn simulate(dev: &FpgaDevice) -> Vec<BenchmarkRow> {
+    rows_with_speedup(&designs(dev), dev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::stratix_v;
+
+    #[test]
+    fn table_4_6_shape() {
+        let rows = simulate(&stratix_v());
+        let t = |i: usize| rows[i].report.seconds;
+        assert!(t(1) < t(0) * 1.5, "none variants comparable");
+        assert!(t(2) < t(1) && t(3) < t(1), "basic improves");
+        assert!(t(4) < t(2) && t(5) < t(3), "advanced improves further");
+        assert!(t(4) < t(5), "adv/NDR narrowly wins (work-group pipelining)");
+        assert!(rows[4].speedup > 8.0, "speedup {}", rows[4].speedup);
+    }
+
+    #[test]
+    fn advanced_swi_higher_fmax_lower_bram() {
+        // Table 4-6: the SWI design clocks higher (278 vs 240 MHz) with
+        // far less Block RAM despite a 4x bigger block.
+        let rows = simulate(&stratix_v());
+        assert!(rows[5].report.fmax_mhz > rows[4].report.fmax_mhz);
+        assert!(rows[5].report.m20k_blocks_frac < rows[4].report.m20k_blocks_frac);
+    }
+
+    #[test]
+    fn subsecond_advanced_times() {
+        let rows = simulate(&stratix_v());
+        assert!(rows[4].report.seconds < 1.0 && rows[5].report.seconds < 1.0);
+    }
+}

@@ -1,0 +1,214 @@
+//! SRAD (§4.3.1.5): speckle-reducing anisotropic diffusion — two stencil
+//! passes + a global reduction per iteration, floating-point heavy.
+//!
+//! Variant derivations (Table 4-7):
+//!
+//! * **None/NDR** — Rodinia original: six kernels, indirect neighbour
+//!   addressing through four extra buffers, five-buffer output fan-out,
+//!   no caching: catastrophic memory behaviour.
+//! * **None/SWI** — same structure as basic loops; `ivdep` on srad2.
+//! * **Basic/NDR** — wg set + SIMD (2-8 per kernel), reduce unrolled 2.
+//! * **Basic/SWI** — shift-register FP reduction + unroll 8/2.
+//! * **Advanced/SWI** — full rewrite: all kernels fused, direct
+//!   addressing, merged stencil passes (halo 2), 1D blocking 4096,
+//!   unroll 4 (stencil) / 16 (reduction), manual banking; >10x traffic
+//!   reduction, DSP-bound on Stratix V.
+
+use crate::device::FpgaDevice;
+use crate::perfmodel::area::{AreaUsage, FpOpCounts};
+use crate::perfmodel::fmax::CriticalPath;
+use crate::perfmodel::memory::{AccessPattern, MemorySpec};
+use crate::perfmodel::pipeline::{KernelClass, PipelineSpec};
+use crate::rodinia::common::{
+    rows_with_speedup, usage_frac, BenchmarkRow, KernelDesign, OptLevel, VariantKey,
+};
+
+/// Input (§4.3.1.5): 8000² image, 100 iterations.
+pub const N: u64 = 8_000;
+pub const STEPS: u64 = 100;
+
+fn updates() -> u64 {
+    N * N * STEPS
+}
+
+/// Per-cell FP op mix of the fused two-pass SRAD update (both passes +
+/// coefficient computation; divisions dominate DSP/logic cost).
+fn srad_ops() -> FpOpCounts {
+    FpOpCounts {
+        fadd: 14,
+        fmul: 10,
+        fma: 4,
+        fdiv: 3,
+        special: 0,
+        int_ops: 6,
+    }
+}
+
+pub fn designs(dev: &FpgaDevice) -> Vec<KernelDesign> {
+    let mut v = Vec::new();
+
+    // --- None / NDR: indirect addressing, 10+ buffers ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::None, kind: "NDR" },
+        pipelines: vec![PipelineSpec {
+            name: "srad-none-ndr".into(),
+            depth: 1_500,
+            trip_count: updates(),
+            class: KernelClass::NdRange { barriers: 1 },
+            // address buffers + image + 5 outputs + reduce traffic;
+            // default 256 work-group and no caching at all
+            bytes_per_iter: 80.0,
+            parallelism: 1,
+            memory: MemorySpec::with_pattern(AccessPattern::Random),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.47, 0.42, 0.22, 0.26),
+        critical_path: CriticalPath::Clean,
+        flat: false,
+        bw_utilization: 0.70,
+    });
+
+    // --- None / SWI ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::None, kind: "SWI" },
+        pipelines: vec![PipelineSpec {
+            name: "srad-none-swi".into(),
+            depth: 1_200,
+            trip_count: updates(),
+            class: KernelClass::SingleWorkItem { stalls: 0 },
+            bytes_per_iter: 48.0,
+            parallelism: 1,
+            memory: MemorySpec::with_pattern(AccessPattern::Random),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.36, 0.33, 0.15, 0.24),
+        critical_path: CriticalPath::Clean,
+        flat: true,
+        bw_utilization: 0.70,
+    });
+
+    // --- Basic / NDR: SIMD but the structure is unchanged ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Basic, kind: "NDR" },
+        pipelines: vec![PipelineSpec {
+            name: "srad-basic-ndr".into(),
+            depth: 1_600,
+            trip_count: updates(),
+            class: KernelClass::NdRange { barriers: 1 },
+            bytes_per_iter: 60.0,
+            parallelism: 2,
+            memory: MemorySpec::with_pattern(AccessPattern::Random),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.64, 0.78, 0.34, 0.52),
+        critical_path: CriticalPath::BarrierMux,
+        flat: false,
+        bw_utilization: 0.75,
+    });
+
+    // --- Basic / SWI: shift-register reduction + unroll ---
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Basic, kind: "SWI" },
+        pipelines: vec![PipelineSpec {
+            name: "srad-basic-swi".into(),
+            depth: 1_300,
+            trip_count: updates(),
+            class: KernelClass::SingleWorkItem { stalls: 0 },
+            bytes_per_iter: 40.0,
+            parallelism: 2,
+            memory: MemorySpec::with_pattern(AccessPattern::Strided),
+            invocations: 1,
+        }],
+        usage: usage_frac(dev, 0.48, 0.57, 0.37, 0.46),
+        critical_path: CriticalPath::Clean,
+        flat: true,
+        bw_utilization: 0.75,
+    });
+
+    // --- Advanced / SWI: fused single kernel, unroll 4 / 16 ---
+    // On Arria 10 the stencil unroll rises to 16 (native FP DSPs, §4.3.2.1).
+    let par: u64 = if dev.native_fp_dsp { 16 } else { 4 };
+    let ops = srad_ops();
+    let bsize = 4_096u64;
+    let red = bsize as f64 / (bsize as f64 - 4.0);
+    let window_bits = 4 * bsize * 32 * 2; // halo-2 line buffers, 2 streams
+    let mut usage = AreaUsage {
+        alm: ops.alm(dev) * par + 900 * par + 15_000,
+        dsp: ops.dsp(dev) * par + (dev.dsp as f64 * 0.04) as u64, // + reduce
+        m20k_blocks: 48 + window_bits / (20 * 1024),
+        m20k_bits: window_bits,
+    };
+    usage.add(AreaUsage::bsp_overhead(dev));
+    v.push(KernelDesign {
+        key: VariantKey { level: OptLevel::Advanced, kind: "SWI" },
+        pipelines: vec![
+            // fused prepare+reduce pass (reads image once per iteration)
+            PipelineSpec {
+                name: "srad-adv-reduce".into(),
+                depth: 800,
+                trip_count: updates(),
+                class: KernelClass::SingleWorkItem { stalls: 0 },
+                bytes_per_iter: 4.0,
+                parallelism: 16,
+                memory: MemorySpec::streaming().banked(),
+                invocations: 1,
+            },
+            // fused two-pass stencil
+            PipelineSpec {
+                name: "srad-adv-stencil".into(),
+                depth: 2_500,
+                trip_count: (updates() as f64 * red) as u64,
+                class: KernelClass::SingleWorkItem { stalls: 0 },
+                bytes_per_iter: 8.0, // read + write only
+                parallelism: par,
+                memory: MemorySpec::streaming().banked(),
+                invocations: 1,
+            },
+        ],
+        usage,
+        critical_path: CriticalPath::Clean,
+        flat: true,
+        bw_utilization: if dev.native_fp_dsp { 0.95 } else { 0.60 },
+    });
+
+    v
+}
+
+pub fn simulate(dev: &FpgaDevice) -> Vec<BenchmarkRow> {
+    rows_with_speedup(&designs(dev), dev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{arria_10, stratix_v};
+
+    #[test]
+    fn table_4_7_shape() {
+        let rows = simulate(&stratix_v());
+        let t = |i: usize| rows[i].report.seconds;
+        assert!(t(1) < t(0), "none/SWI beats none/NDR");
+        assert!(t(2) < t(0), "basic/NDR barely improves");
+        assert!(t(3) < t(2) / 2.0, "basic/SWI large jump");
+        assert!(t(4) < t(3) / 2.0, "advanced largest jump");
+        assert!(rows[4].speedup > 15.0, "speedup {}", rows[4].speedup);
+    }
+
+    #[test]
+    fn advanced_dsp_bound_on_stratix_v() {
+        // Table 4-7: 87 % DSP on Stratix V; not memory-bound.
+        let rows = simulate(&stratix_v());
+        assert!(rows[4].report.dsp_frac > 0.5);
+        assert!(!rows[4].report.memory_bound);
+    }
+
+    #[test]
+    fn arria10_shifts_to_memory_bound() {
+        // §4.3.2.1: unroll 16 on A10 turns SRAD memory-bound with real
+        // speedup over Stratix V (one of only two benchmarks that gain).
+        let sv = simulate(&stratix_v());
+        let a10 = simulate(&arria_10());
+        assert!(a10[4].report.seconds < sv[4].report.seconds / 1.3);
+        assert!(a10[4].report.memory_bound);
+    }
+}

@@ -1,0 +1,262 @@
+//! L3 runtime: loads AOT-compiled HLO-text artifacts into a PJRT CPU
+//! client and executes them from the Rust request path.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire run-time interface to the compiled compute units.  Interchange
+//! is HLO *text* (see `python/compile/aot.py` — serialized protos from
+//! jax ≥ 0.5 are rejected by xla_extension 0.5.1).
+//!
+//! The PJRT client wraps an `Rc`, so executables are not `Send`: the
+//! coordinator keeps execution on one thread and parallelizes data
+//! marshalling instead (see [`crate::coordinator::scheduler`]).
+
+pub mod registry;
+
+pub use registry::{ArtifactSpec, DType, Registry, TensorSpec};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context};
+
+/// Typed host-side tensor for kernel I/O.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v, _) => v.len(),
+            Tensor::I32(v, _) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Tensor::F32(v, _) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            Tensor::I32(v, _) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    #[cfg_attr(not(test), allow(dead_code))] // retained for the literal
+    // round-trip tests and as the fallback marshalling path
+    fn to_literal(&self) -> crate::Result<xla::Literal> {
+        let (bytes, ty, dims): (&[u8], xla::ElementType, &[usize]) = match self {
+            Tensor::F32(v, s) => (cast_f32(v), xla::ElementType::F32, s),
+            Tensor::I32(v, s) => (cast_i32(v), xla::ElementType::S32, s),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes)
+            .map_err(|e| anyhow!("literal creation failed: {e:?}"))
+    }
+
+    /// Stage this tensor as a device buffer.  The buffer path skips the
+    /// per-call literal→buffer conversion inside the C shim, which costs
+    /// ~1 µs/KB — a 1.7x end-to-end win on stencil blocks (EXPERIMENTS.md
+    /// §Perf L3).
+    fn to_buffer(&self, client: &xla::PjRtClient) -> crate::Result<xla::PjRtBuffer> {
+        match self {
+            Tensor::F32(v, s) => client.buffer_from_host_buffer::<f32>(v, s, None),
+            Tensor::I32(v, s) => client.buffer_from_host_buffer::<i32>(v, s, None),
+        }
+        .map_err(|e| anyhow!("buffer staging failed: {e:?}"))
+    }
+
+    fn from_literal(lit: &xla::Literal) -> crate::Result<Tensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("shape query failed: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32(
+                lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+                dims,
+            )),
+            xla::ElementType::S32 => Ok(Tensor::I32(
+                lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+                dims,
+            )),
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+fn cast_f32(v: &[f32]) -> &[u8] {
+    // f32 -> u8 reinterpretation is always valid (no alignment shrink).
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn cast_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Execution statistics for the metrics endpoint / §Perf work.
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub compile_ms: f64,
+    pub execute_ms: f64,
+    pub marshal_ms: f64,
+}
+
+/// The PJRT runtime: artifact registry + compile cache + typed execute.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    registry: Registry,
+    dir: PathBuf,
+    executables: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default `artifacts/`) and its
+    /// manifest; creates the PJRT CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> crate::Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let registry = Registry::load(dir.join("manifest.txt"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client creation failed: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            registry,
+            dir,
+            executables: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Compile (or fetch from cache) one artifact.
+    pub fn executable(&self, name: &str) -> crate::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .registry
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {} failed: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name} failed: {e:?}"))?;
+        self.stats.borrow_mut().compile_ms += t0.elapsed().as_secs_f64() * 1e3;
+        let exe = Rc::new(exe);
+        self.executables
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact in the manifest.
+    pub fn warmup(&self) -> crate::Result<()> {
+        for name in self.registry.names() {
+            self.executable(&name)?;
+        }
+        Ok(())
+    }
+
+    /// Execute one artifact with shape/dtype validation.
+    ///
+    /// Outputs come back as host tensors (the lowering always wraps
+    /// results in a tuple — `return_tuple=True` in aot.py).
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> crate::Result<Vec<Tensor>> {
+        let spec = self
+            .registry
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        spec.validate_inputs(inputs)?;
+        let exe = self.executable(name)?;
+
+        let tm = std::time::Instant::now();
+        let buffers: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| t.to_buffer(&self.client))
+            .collect::<crate::Result<_>>()?;
+        let marshal_in = tm.elapsed();
+
+        let t0 = std::time::Instant::now();
+        let refs: Vec<&xla::PjRtBuffer> = buffers.iter().collect();
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&refs)
+            .map_err(|e| anyhow!("executing {name} failed: {e:?}"))?;
+        let buffer = &result[0][0];
+        let mut tuple = buffer
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result failed: {e:?}"))?;
+        let execute = t0.elapsed();
+
+        let tm2 = std::time::Instant::now();
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decomposing tuple failed: {e:?}"))?;
+        let outs: Vec<Tensor> = parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<crate::Result<_>>()?;
+        let marshal_out = tm2.elapsed();
+
+        let mut stats = self.stats.borrow_mut();
+        stats.executions += 1;
+        stats.execute_ms += execute.as_secs_f64() * 1e3;
+        stats.marshal_ms += (marshal_in + marshal_out).as_secs_f64() * 1e3;
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip_f32() {
+        let t = Tensor::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn tensor_roundtrip_i32() {
+        let t = Tensor::I32(vec![-1, 7, 42], vec![3]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,255 @@
+//! Artifact registry: parses `artifacts/manifest.txt`.
+//!
+//! Manifest line format (written by `python/compile/aot.py`):
+//!
+//! ```text
+//! name|file.hlo.txt|in=float32[264,264];float32[264,264]|out=float32[256,256]|meta k=v;k=v
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::runtime::Tensor;
+
+/// Element types used by the artifact set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> crate::Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// Shape + dtype of one operand.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn parse(s: &str) -> crate::Result<TensorSpec> {
+        // "float32[264,264]"
+        let open = s.find('[').ok_or_else(|| anyhow!("bad signature '{s}'"))?;
+        let dtype = DType::parse(&s[..open])?;
+        let inner = s[open + 1..]
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("bad signature '{s}'"))?;
+        let shape = if inner.is_empty() {
+            vec![]
+        } else {
+            inner
+                .split(',')
+                .map(|d| d.trim().parse::<usize>().context("bad dim"))
+                .collect::<Result<_, _>>()?
+        };
+        Ok(TensorSpec { dtype, shape })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn matches(&self, t: &Tensor) -> bool {
+        let dt_ok = matches!(
+            (self.dtype, t),
+            (DType::F32, Tensor::F32(..)) | (DType::I32, Tensor::I32(..))
+        );
+        dt_ok && t.shape() == self.shape.as_slice()
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: HashMap<String, String>,
+}
+
+impl ArtifactSpec {
+    /// Shape/dtype-check a set of runtime inputs.
+    pub fn validate_inputs(&self, inputs: &[Tensor]) -> crate::Result<()> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (spec, t)) in self.inputs.iter().zip(inputs).enumerate() {
+            if !spec.matches(t) {
+                bail!(
+                    "{}: input {i} mismatch: expected {:?}{:?}, got {:?}",
+                    self.name,
+                    spec.dtype,
+                    spec.shape,
+                    t.shape()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Typed metadata accessors (static parameters baked at AOT time).
+    pub fn meta_u64(&self, key: &str) -> crate::Result<u64> {
+        self.meta
+            .get(key)
+            .ok_or_else(|| anyhow!("{}: missing meta '{key}'", self.name))?
+            .parse()
+            .with_context(|| format!("{}: meta '{key}' not u64", self.name))
+    }
+
+    pub fn meta_f64(&self, key: &str) -> crate::Result<f64> {
+        self.meta
+            .get(key)
+            .ok_or_else(|| anyhow!("{}: missing meta '{key}'", self.name))?
+            .parse()
+            .with_context(|| format!("{}: meta '{key}' not f64", self.name))
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).map(|s| s.as_str())
+    }
+
+    /// Comma-separated f64 list (stencil coefficients).
+    pub fn meta_f64_list(&self, key: &str) -> crate::Result<Vec<f64>> {
+        self.meta
+            .get(key)
+            .ok_or_else(|| anyhow!("{}: missing meta '{key}'", self.name))?
+            .split(',')
+            .map(|p| p.trim().parse().context("bad f64 in list"))
+            .collect::<Result<_, _>>()
+            .map_err(Into::into)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    specs: HashMap<String, ArtifactSpec>,
+    order: Vec<String>,
+}
+
+impl Registry {
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Registry> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Registry::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> crate::Result<Registry> {
+        let mut reg = Registry::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let spec = parse_line(line)
+                .with_context(|| format!("manifest line {}", lineno + 1))?;
+            reg.order.push(spec.name.clone());
+            reg.specs.insert(spec.name.clone(), spec);
+        }
+        Ok(reg)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.order.clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+}
+
+fn parse_line(line: &str) -> crate::Result<ArtifactSpec> {
+    let fields: Vec<&str> = line.split('|').collect();
+    if fields.len() != 5 {
+        bail!("expected 5 |-separated fields, got {}", fields.len());
+    }
+    let name = fields[0].to_string();
+    let file = fields[1].to_string();
+    let inputs = parse_sigs(fields[2].strip_prefix("in=").ok_or_else(|| anyhow!("missing in="))?)?;
+    let outputs =
+        parse_sigs(fields[3].strip_prefix("out=").ok_or_else(|| anyhow!("missing out="))?)?;
+    let meta_str = fields[4]
+        .strip_prefix("meta ")
+        .ok_or_else(|| anyhow!("missing meta"))?;
+    let mut meta = HashMap::new();
+    for pair in meta_str.split(';') {
+        if let Some((k, v)) = pair.split_once('=') {
+            meta.insert(k.trim().to_string(), v.trim().to_string());
+        }
+    }
+    Ok(ArtifactSpec { name, file, inputs, outputs, meta })
+}
+
+fn parse_sigs(s: &str) -> crate::Result<Vec<TensorSpec>> {
+    s.split(';')
+        .filter(|p| !p.is_empty())
+        .map(TensorSpec::parse)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LINE: &str = "diffusion2d_r1|diffusion2d_r1.hlo.txt|in=float32[264,264]|out=float32[256,256]|meta block=256;boundary=zero;coeffs=0.76,0.06;halo=4;kind=stencil2d;radius=1;steps=4";
+
+    #[test]
+    fn parses_manifest_line() {
+        let reg = Registry::parse(LINE).unwrap();
+        let spec = reg.get("diffusion2d_r1").unwrap();
+        assert_eq!(spec.inputs.len(), 1);
+        assert_eq!(spec.inputs[0].shape, vec![264, 264]);
+        assert_eq!(spec.outputs[0].shape, vec![256, 256]);
+        assert_eq!(spec.meta_u64("halo").unwrap(), 4);
+        assert_eq!(spec.meta_f64_list("coeffs").unwrap(), vec![0.76, 0.06]);
+        assert_eq!(spec.meta_str("boundary"), Some("zero"));
+    }
+
+    #[test]
+    fn validates_inputs() {
+        let reg = Registry::parse(LINE).unwrap();
+        let spec = reg.get("diffusion2d_r1").unwrap();
+        let good = Tensor::F32(vec![0.0; 264 * 264], vec![264, 264]);
+        assert!(spec.validate_inputs(&[good.clone()]).is_ok());
+        let bad_shape = Tensor::F32(vec![0.0; 4], vec![2, 2]);
+        assert!(spec.validate_inputs(&[bad_shape]).is_err());
+        let bad_dtype = Tensor::I32(vec![0; 264 * 264], vec![264, 264]);
+        assert!(spec.validate_inputs(&[bad_dtype]).is_err());
+        assert!(spec.validate_inputs(&[good.clone(), good]).is_err());
+    }
+
+    #[test]
+    fn multi_input_sigs() {
+        let line = "nw|nw.hlo.txt|in=int32[64];int32[64];int32[1];int32[64,64]|out=int32[64,64]|meta block=64;kind=dynprog;penalty=10";
+        let reg = Registry::parse(line).unwrap();
+        let spec = reg.get("nw").unwrap();
+        assert_eq!(spec.inputs.len(), 4);
+        assert_eq!(spec.inputs[3].shape, vec![64, 64]);
+        assert_eq!(spec.inputs[3].dtype, DType::I32);
+    }
+}

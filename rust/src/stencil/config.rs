@@ -1,0 +1,187 @@
+//! Stencil shapes, workloads and accelerator configurations (Table 5-1).
+
+use crate::perfmodel::area::{flops_per_cell, star_ops, FpOpCounts};
+
+/// A star-shaped stencil benchmark (Table 5-2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StencilShape {
+    pub name: &'static str,
+    /// Stencil radius r (1..=4 for the thesis's benchmarks).
+    pub radius: u32,
+    /// 2 or 3 spatial dimensions.
+    pub dims: u32,
+    /// Extra per-cell FP ops beyond the plain star (Hotspot's power +
+    /// ambient terms), as (fadd, fmul, fma).
+    pub extra: (u64, u64, u64),
+    /// Extra input streams read per cell (Hotspot's power grid).
+    pub extra_reads: u32,
+}
+
+impl StencilShape {
+    pub const fn diffusion(radius: u32, dims: u32, name: &'static str) -> Self {
+        StencilShape { name, radius, dims, extra: (0, 0, 0), extra_reads: 0 }
+    }
+
+    /// Per-cell FP op mix (drives DSP/ALM counts).
+    pub fn ops(&self) -> FpOpCounts {
+        let mut ops = star_ops(self.radius, self.dims);
+        ops.fadd += self.extra.0;
+        ops.fmul += self.extra.1;
+        ops.fma += self.extra.2;
+        ops
+    }
+
+    /// FLOPs per cell update, naive convention (for GFLOP/s columns).
+    pub fn flops_per_cell(&self) -> f64 {
+        flops_per_cell(self.radius, self.dims)
+            + (self.extra.0 + self.extra.1) as f64
+            + 2.0 * self.extra.2 as f64
+    }
+}
+
+/// Diffusion 2D, first to fourth order (Table 5-2).
+pub fn diffusion2d(radius: u32) -> StencilShape {
+    match radius {
+        1 => StencilShape::diffusion(1, 2, "Diffusion 2D r=1"),
+        2 => StencilShape::diffusion(2, 2, "Diffusion 2D r=2"),
+        3 => StencilShape::diffusion(3, 2, "Diffusion 2D r=3"),
+        4 => StencilShape::diffusion(4, 2, "Diffusion 2D r=4"),
+        _ => panic!("radius 1..=4"),
+    }
+}
+
+/// Diffusion 3D, first to fourth order.
+pub fn diffusion3d(radius: u32) -> StencilShape {
+    match radius {
+        1 => StencilShape::diffusion(1, 3, "Diffusion 3D r=1"),
+        2 => StencilShape::diffusion(2, 3, "Diffusion 3D r=2"),
+        3 => StencilShape::diffusion(3, 3, "Diffusion 3D r=3"),
+        4 => StencilShape::diffusion(4, 3, "Diffusion 3D r=4"),
+        _ => panic!("radius 1..=4"),
+    }
+}
+
+/// Rodinia Hotspot as a first-order 2D stencil with power + ambient terms.
+pub fn hotspot2d_shape() -> StencilShape {
+    StencilShape {
+        name: "Hotspot 2D",
+        radius: 1,
+        dims: 2,
+        // delta/out datapath beyond the 5-point star: 3 extra adds,
+        // 1 mul (cap), 2 fma (power, ambient resistances).
+        extra: (3, 1, 2),
+        extra_reads: 1,
+    }
+}
+
+/// Rodinia Hotspot 3D (7-point star + power + ambient).
+pub fn hotspot3d_shape() -> StencilShape {
+    StencilShape {
+        name: "Hotspot 3D",
+        radius: 1,
+        dims: 3,
+        extra: (2, 1, 2),
+        extra_reads: 1,
+    }
+}
+
+/// A concrete grid + time-step workload (Table 5-2's input settings).
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    /// Grid extent in every spatial dimension.
+    pub extent: u64,
+    /// Total time steps.
+    pub steps: u64,
+}
+
+impl Workload {
+    pub fn cells(&self, dims: u32) -> f64 {
+        (self.extent as f64).powi(dims as i32)
+    }
+
+    pub fn cell_updates(&self, dims: u32) -> f64 {
+        self.cells(dims) * self.steps as f64
+    }
+}
+
+/// Thesis benchmark settings (§5.5.5): large 2D grids, 3D grids sized to
+/// board memory, hundreds of iterations.
+pub fn default_workload(dims: u32) -> Workload {
+    match dims {
+        2 => Workload { extent: 16_384, steps: 1_000 },
+        3 => Workload { extent: 512, steps: 100 },
+        _ => panic!("dims must be 2 or 3"),
+    }
+}
+
+/// The tunable accelerator parameters (Table 5-1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AcceleratorConfig {
+    /// Degree of vectorization: cells computed per cycle per time step.
+    pub par: u32,
+    /// Degree of temporal parallelism: fused time steps in the pipeline.
+    pub time: u32,
+    /// Spatial block size in each blocked dimension (x for 2D; x and y
+    /// for 3D — the remaining dimension streams, §5.3.1 / 3.5D blocking).
+    pub bsize: u32,
+}
+
+impl AcceleratorConfig {
+    /// Halo consumed per blocked-dimension side over the fused steps.
+    pub fn halo(&self, radius: u32) -> u32 {
+        radius * self.time
+    }
+
+    /// Valid (non-redundant) cells per block in one blocked dimension.
+    pub fn valid_span(&self, radius: u32) -> u32 {
+        self.bsize.saturating_sub(2 * self.halo(radius))
+    }
+
+    /// Compute redundancy factor: issued cells / valid cells (§5.4).
+    pub fn redundancy(&self, radius: u32, dims: u32) -> f64 {
+        let v = self.valid_span(radius);
+        if v == 0 {
+            return f64::INFINITY;
+        }
+        let blocked_dims = dims - 1; // one dimension always streams
+        (self.bsize as f64 / v as f64).powi(blocked_dims as i32)
+    }
+
+    pub fn label(&self) -> String {
+        format!("par={} T={} bsize={}", self.par, self.time, self.bsize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn redundancy_grows_with_time_blocking() {
+        let shape = diffusion2d(1);
+        let c1 = AcceleratorConfig { par: 8, time: 1, bsize: 512 };
+        let c8 = AcceleratorConfig { par: 8, time: 8, bsize: 512 };
+        assert!(c8.redundancy(shape.radius, shape.dims)
+            > c1.redundancy(shape.radius, shape.dims));
+    }
+
+    #[test]
+    fn redundancy_3d_squares() {
+        let c = AcceleratorConfig { par: 4, time: 2, bsize: 64 };
+        let r2 = c.redundancy(1, 2);
+        let r3 = c.redundancy(1, 3);
+        assert!((r3 - r2 * r2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hotspot_flops_exceed_diffusion() {
+        assert!(hotspot2d_shape().flops_per_cell()
+            > diffusion2d(1).flops_per_cell());
+    }
+
+    #[test]
+    fn degenerate_block_is_infinite_redundancy() {
+        let c = AcceleratorConfig { par: 1, time: 16, bsize: 16 };
+        assert!(c.redundancy(1, 2).is_infinite());
+    }
+}

@@ -1,0 +1,17 @@
+//! The Chapter 5 stencil accelerator: parameterized spatial + temporal
+//! blocking, its §5.4 performance model, the configuration tuner that
+//! replaces multi-day place-and-route sweeps, a coarse cycle-level
+//! simulator used as the "measured" side of the §5.7.2 model-accuracy
+//! study, and the §5.7.3 Stratix 10 projection.
+
+pub mod config;
+pub mod cyclesim;
+pub mod model;
+pub mod projection;
+pub mod tuner;
+
+pub use config::{AcceleratorConfig, StencilShape, Workload};
+pub use cyclesim::simulate_cycles;
+pub use model::{predict, Prediction};
+pub use projection::project_stratix10;
+pub use tuner::{tune, TuneResult};

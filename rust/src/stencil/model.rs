@@ -1,0 +1,245 @@
+//! The §5.4 performance model for the stencil accelerator.
+//!
+//! Given a [`StencilShape`], a [`Workload`], an [`AcceleratorConfig`] and
+//! a device, predicts: area, achievable clock, cycles, run time, GCell/s
+//! and GFLOP/s, and whether compute or memory bounds the design.  This is
+//! the model the thesis uses to prune the parameter space before spending
+//! 8–30 hours per placement (§5.4), and it is the source of every FPGA
+//! column in Tables 5-6 … 5-9.
+//!
+//! Structure (2D shown; 3D blocks two dimensions and streams the third):
+//!
+//! * the grid is cut into overlapped block columns of width `bsize`
+//!   (read-redundancy `2·r·T` per boundary, §5.3.1);
+//! * a chain of `T` compute stages (one per fused time step) each consume
+//!   `par` cells/cycle out of shift-register line buffers (§5.3.2);
+//! * one pass over the grid advances time by `T`; `steps/T` passes run.
+
+use crate::device::FpgaDevice;
+use crate::perfmodel::area::{AreaBudget, AreaUsage, BufferSpec, BufferStyle};
+use crate::perfmodel::fmax::{self, CriticalPath};
+use crate::perfmodel::power::power_watts;
+use crate::stencil::config::{AcceleratorConfig, StencilShape, Workload};
+
+/// Model output for one (shape, workload, config, device) point.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub config: AcceleratorConfig,
+    pub fits: bool,
+    pub budget: AreaBudget,
+    pub usage: AreaUsage,
+    pub fmax_mhz: f64,
+    pub cycles: f64,
+    pub seconds: f64,
+    pub gcells: f64,
+    pub gflops: f64,
+    pub power_w: f64,
+    pub memory_bound: bool,
+    /// Fraction of board DDR bandwidth the design sustains.
+    pub bw_utilization: f64,
+}
+
+/// Area of the accelerator at a given configuration.
+pub fn area(shape: &StencilShape, cfg: &AcceleratorConfig, dev: &FpgaDevice) -> AreaUsage {
+    let ops = shape.ops();
+    let lanes = (cfg.par * cfg.time) as u64;
+
+    let mut usage = AreaUsage {
+        alm: ops.alm(dev) * lanes,
+        dsp: ops.dsp(dev) * lanes,
+        m20k_blocks: 0,
+        m20k_bits: 0,
+    };
+
+    // Line buffers: each of the T stages holds a 2r-deep window of the
+    // blocked footprint in shift registers (§5.3.1, Fig. 5-4):
+    //   2D: 2r rows of bsize cells; 3D: 2r planes of bsize² cells.
+    let window_cells: u64 = match shape.dims {
+        2 => 2 * shape.radius as u64 * cfg.bsize as u64,
+        3 => 2 * shape.radius as u64 * (cfg.bsize as u64).pow(2),
+        _ => unreachable!(),
+    };
+    // The power grid (extra_reads) needs an equivalent delay buffer per
+    // stage so its centre cell arrives in phase.
+    let streams = 1 + shape.extra_reads as u64;
+    let bits_per_stage = window_cells * 32 * streams;
+    for _ in 0..cfg.time {
+        let buf = BufferSpec {
+            bits: bits_per_stage,
+            read_ports: (2 * shape.dims * shape.radius) as u64,
+            write_ports: 1,
+            style: BufferStyle::ShiftRegister,
+        };
+        usage.m20k_blocks += buf.m20k_blocks();
+        usage.m20k_bits += bits_per_stage;
+    }
+    // Wide load/store units & FIFOs scale with par.
+    usage.alm += 900 * cfg.par as u64;
+    usage.m20k_blocks += (cfg.par as u64).div_ceil(4) * 4;
+
+    let mut total = AreaUsage::bsp_overhead(dev);
+    total.add(usage);
+    total
+}
+
+/// Full §5.4 prediction.
+pub fn predict(
+    shape: &StencilShape,
+    work: &Workload,
+    cfg: &AcceleratorConfig,
+    dev: &FpgaDevice,
+) -> Prediction {
+    let usage = area(shape, cfg, dev);
+    let budget = AreaBudget::of(&usage, dev);
+    // Arria 10 PR flow M20K ceiling (§4.3.2.1); flat flow for SWI designs.
+    let fits = budget.fits(0.97) && cfg.valid_span(shape.radius) > 0;
+
+    let raw_fmax = fmax::estimate(dev, &budget, CriticalPath::Clean, true);
+    let fmax_mhz = fmax::seed_sweep(
+        &format!("{}-{}", shape.name, cfg.label()),
+        raw_fmax,
+        8,
+    )
+    .swept_mhz;
+
+    // ---- cycles per pass (§5.4) ----
+    let r = shape.radius;
+    let valid = cfg.valid_span(r).max(1) as f64;
+    let extent = work.extent as f64;
+    let blocks_per_dim = (extent / valid).ceil();
+    let blocked_dims = (shape.dims - 1) as i32;
+    let issued_cells_per_pass =
+        blocks_per_dim.powi(blocked_dims) * (cfg.bsize as f64).powi(blocked_dims) * extent;
+    let compute_cycles = issued_cells_per_pass / cfg.par as f64;
+
+    // External traffic per pass: read grid (+extra streams) + write grid,
+    // all with block redundancy; amortized over T fused steps.
+    let bytes_per_pass =
+        issued_cells_per_pass * 4.0 * (1.0 + shape.extra_reads as f64 + 1.0);
+    let eff_bw = crate::perfmodel::memory::MemorySpec::streaming()
+        .banked()
+        .effective_bytes_per_cycle(dev, fmax_mhz);
+    let memory_cycles = bytes_per_pass / eff_bw;
+
+    let per_pass = compute_cycles.max(memory_cycles);
+    let memory_bound = memory_cycles > compute_cycles;
+
+    // Pipeline fill per block column: the T-deep stage chain must warm up
+    // its line buffers (2r rows / planes each) before the first output.
+    let fill_per_block = cfg.time as f64
+        * (2 * r) as f64
+        * match shape.dims {
+            2 => cfg.bsize as f64 / cfg.par as f64,
+            _ => (cfg.bsize as f64).powi(2) / cfg.par as f64,
+        };
+    let fills = blocks_per_dim.powi(blocked_dims) * fill_per_block;
+
+    let passes = (work.steps as f64 / cfg.time as f64).ceil();
+    let cycles = passes * (per_pass + fills);
+    let seconds = cycles / (fmax_mhz * 1e6);
+
+    let updates = work.cell_updates(shape.dims);
+    let gcells = updates / seconds / 1e9;
+    let gflops = gcells * shape.flops_per_cell();
+
+    let bw_utilization =
+        (bytes_per_pass * passes / seconds / (dev.mem_bw_gbs * 1e9)).min(1.0);
+    let power_w = power_watts(dev, &budget, fmax_mhz, bw_utilization);
+
+    Prediction {
+        config: *cfg,
+        fits,
+        budget,
+        usage,
+        fmax_mhz,
+        cycles,
+        seconds,
+        gcells,
+        gflops,
+        power_w,
+        memory_bound,
+        bw_utilization,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{arria_10, stratix_10, stratix_v};
+    use crate::stencil::config::{default_workload, diffusion2d, diffusion3d};
+
+    #[test]
+    fn temporal_blocking_breaks_bandwidth_wall() {
+        // The thesis's core claim (§5.1.3): with spatial blocking only
+        // (T=1) the design is memory-bound; temporal blocking multiplies
+        // throughput ~linearly until area runs out.
+        let dev = arria_10();
+        let shape = diffusion2d(1);
+        let work = default_workload(2);
+        let t1 = predict(&shape, &work, &AcceleratorConfig { par: 16, time: 1, bsize: 4096 }, &dev);
+        let t8 = predict(&shape, &work, &AcceleratorConfig { par: 16, time: 8, bsize: 4096 }, &dev);
+        assert!(t1.memory_bound);
+        assert!(t8.fits, "T=8 should still fit");
+        assert!(t8.gflops > 4.0 * t1.gflops, "t8={} t1={}", t8.gflops, t1.gflops);
+    }
+
+    #[test]
+    fn area_scales_with_par_times_time() {
+        let dev = arria_10();
+        let shape = diffusion2d(1);
+        let a1 = area(&shape, &AcceleratorConfig { par: 4, time: 2, bsize: 1024 }, &dev);
+        let a2 = area(&shape, &AcceleratorConfig { par: 8, time: 4, bsize: 1024 }, &dev);
+        assert!(a2.dsp >= 4 * a1.dsp - a1.dsp / 4);
+    }
+
+    #[test]
+    fn small_block_with_deep_time_fails() {
+        let dev = arria_10();
+        let shape = diffusion2d(4);
+        let work = default_workload(2);
+        let p = predict(&shape, &work, &AcceleratorConfig { par: 8, time: 8, bsize: 32 }, &dev);
+        assert!(!p.fits); // valid span would be <= 0
+    }
+
+    #[test]
+    fn three_d_line_buffers_dominate_m20k() {
+        // 3D line buffers hold planes: block size is the M20K pressure
+        // point (§5.3.1), which is why 3D configs use small bsize.
+        let dev = arria_10();
+        let shape = diffusion3d(1);
+        let a = area(&shape, &AcceleratorConfig { par: 4, time: 4, bsize: 256 }, &dev);
+        let b = AreaBudget::of(&a, &dev);
+        assert!(b.m20k_blocks > 0.35, "m20k={}", b.m20k_blocks);
+        // and the same config in 2D is comparatively M20K-cheap
+        let a2 = area(&crate::stencil::config::diffusion2d(1),
+                      &AcceleratorConfig { par: 4, time: 4, bsize: 256 }, &dev);
+        assert!(AreaBudget::of(&a2, &dev).m20k_blocks < b.m20k_blocks / 2.0);
+    }
+
+    #[test]
+    fn stratix10_projection_order_of_magnitude() {
+        // §5.7.3: S10 reaches multi-TFLOP/s on 2D first-order stencils.
+        let dev = stratix_10();
+        let shape = diffusion2d(1);
+        let work = default_workload(2);
+        // Deep temporal chains amortize DDR traffic to 8/T bytes per
+        // update — the projection's key lever (§5.7.3).
+        let p = predict(&shape, &work, &AcceleratorConfig { par: 16, time: 64, bsize: 8192 }, &dev);
+        assert!(p.fits);
+        assert!(p.gflops > 2000.0, "gflops={}", p.gflops);
+    }
+
+    #[test]
+    fn stratix_v_slower_than_arria10_when_compute_bound() {
+        let sv = stratix_v();
+        let a10 = arria_10();
+        let shape = diffusion2d(1);
+        let work = default_workload(2);
+        let cfg = AcceleratorConfig { par: 8, time: 4, bsize: 2048 };
+        let p_sv = predict(&shape, &work, &cfg, &sv);
+        let p_a10 = predict(&shape, &work, &cfg, &a10);
+        if p_sv.fits && p_a10.fits {
+            assert!(p_a10.gflops >= p_sv.gflops * 0.9);
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Stratix 10 performance projection (§5.7.3, Table 5-8).
+//!
+//! The thesis projects its tuned designs onto the then-unreleased
+//! Stratix 10 family by scaling resources (5760 DSPs, 11721 M20Ks, 4
+//! memory banks) and clock (HyperFlex fabric), then re-running the same
+//! §5.4 model.  We reproduce exactly that: re-tune on the
+//! [`crate::device::stratix_10`] device entry.
+
+use crate::device::{stratix_10, FpgaDevice};
+use crate::stencil::config::{StencilShape, Workload};
+use crate::stencil::tuner::{tune, TuneResult};
+
+/// Projection outcome for one stencil.
+#[derive(Debug, Clone)]
+pub struct Projection {
+    pub shape_name: &'static str,
+    pub result: TuneResult,
+    /// Speed-up vs the given reference prediction (typically Arria 10's
+    /// tuned best), the Table 5-8 ratio column.
+    pub speedup_vs_ref: f64,
+}
+
+/// Project a stencil onto Stratix 10, given the Arria 10 tuned GFLOP/s.
+pub fn project_stratix10(
+    shape: &StencilShape,
+    work: &Workload,
+    ref_gflops: f64,
+) -> Projection {
+    let dev: FpgaDevice = stratix_10();
+    let result = tune(shape, work, &dev);
+    Projection {
+        shape_name: shape.name,
+        speedup_vs_ref: result.best.gflops / ref_gflops,
+        result,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::arria_10;
+    use crate::stencil::config::{default_workload, diffusion2d, diffusion3d};
+    use crate::stencil::tuner::tune;
+
+    #[test]
+    fn stratix10_beats_arria10_several_fold() {
+        // Table 5-8: S10 projects to ~4-6x Arria 10 on 2D stencils.
+        let work = default_workload(2);
+        let shape = diffusion2d(1);
+        let a10 = tune(&shape, &work, &arria_10());
+        let proj = project_stratix10(&shape, &work, a10.best.gflops);
+        assert!(proj.speedup_vs_ref > 2.0, "speedup {}", proj.speedup_vs_ref);
+        assert!(proj.result.best.gflops > 1500.0);
+    }
+
+    #[test]
+    fn stratix10_3d_in_thesis_band() {
+        // §1.3: up to ~1.8 TFLOP/s for 3D on S10 — our model must land in
+        // the hundreds-to-~2000 range, not 10x off either way.
+        let work = default_workload(3);
+        let shape = diffusion3d(1);
+        let proj = project_stratix10(&shape, &work, 1.0);
+        let g = proj.result.best.gflops;
+        assert!(g > 300.0 && g < 4000.0, "3d gflops {g}");
+    }
+}

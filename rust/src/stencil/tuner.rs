@@ -1,0 +1,110 @@
+//! Configuration tuner: the model-driven pruning of §5.4.
+//!
+//! The thesis's motivation for its performance model is that each FPGA
+//! placement takes 8–30 hours, so exhaustively compiling the (par, T,
+//! bsize) space is impossible; instead the model ranks configurations and
+//! only the top few are compiled.  Here the "compile" step is the cycle
+//! simulator, but the workflow is preserved: enumerate → prune by area →
+//! rank by predicted throughput.
+
+use crate::device::FpgaDevice;
+use crate::stencil::config::{AcceleratorConfig, StencilShape, Workload};
+use crate::stencil::model::{predict, Prediction};
+
+/// Outcome of tuning one stencil on one device.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub best: Prediction,
+    /// All feasible candidates, best first.
+    pub ranked: Vec<Prediction>,
+    /// Total points enumerated (for the pruning-ratio report).
+    pub enumerated: usize,
+}
+
+/// The search space the thesis sweeps (§5.6.3): power-of-two vector
+/// widths, temporal degrees up to the area wall, block sizes bounded by
+/// on-chip memory.
+pub fn search_space(shape: &StencilShape) -> Vec<AcceleratorConfig> {
+    let pars: &[u32] = &[1, 2, 4, 8, 16, 32, 64];
+    let times: &[u32] = &[1, 2, 3, 4, 6, 8, 10, 12, 16, 20, 24, 32, 48, 64, 96];
+    let bsizes: &[u32] = if shape.dims == 2 {
+        &[512, 1024, 2048, 4096, 8192, 16384]
+    } else {
+        &[16, 32, 64, 128, 256, 512]
+    };
+    let mut out = Vec::new();
+    for &par in pars {
+        for &time in times {
+            for &bsize in bsizes {
+                out.push(AcceleratorConfig { par, time, bsize });
+            }
+        }
+    }
+    out
+}
+
+/// Tune: enumerate, evaluate the model, keep feasible, rank by GFLOP/s.
+pub fn tune(shape: &StencilShape, work: &Workload, dev: &FpgaDevice) -> TuneResult {
+    let space = search_space(shape);
+    let enumerated = space.len();
+    let mut ranked: Vec<Prediction> = space
+        .iter()
+        .map(|cfg| predict(shape, work, cfg, dev))
+        .filter(|p| p.fits)
+        .collect();
+    ranked.sort_by(|a, b| b.gflops.total_cmp(&a.gflops));
+    let best = ranked.first().expect("no feasible configuration").clone();
+    TuneResult { best, ranked, enumerated }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{arria_10, stratix_v};
+    use crate::stencil::config::{default_workload, diffusion2d, diffusion3d};
+
+    #[test]
+    fn tuner_finds_feasible_best() {
+        let dev = arria_10();
+        let shape = diffusion2d(1);
+        let res = tune(&shape, &default_workload(2), &dev);
+        assert!(res.best.fits);
+        assert!(res.ranked.len() > 10);
+        assert!(res.ranked.len() < res.enumerated); // pruning happened
+        // ranked is sorted
+        for w in res.ranked.windows(2) {
+            assert!(w[0].gflops >= w[1].gflops);
+        }
+    }
+
+    #[test]
+    fn best_uses_temporal_blocking() {
+        // On both devices the winning first-order 2D config must fuse
+        // multiple time steps — the chapter's central design point.
+        for dev in [stratix_v(), arria_10()] {
+            let res = tune(&diffusion2d(1), &default_workload(2), &dev);
+            assert!(res.best.config.time > 1, "{}: {:?}", dev.name, res.best.config);
+        }
+    }
+
+    #[test]
+    fn high_order_uses_shallower_time() {
+        // Higher radius = more DSPs and bigger halos per fused step, so
+        // the tuner should choose a smaller T for r=4 than r=1 (Table 5-7).
+        let dev = arria_10();
+        let w = default_workload(2);
+        let r1 = tune(&diffusion2d(1), &w, &dev);
+        let r4 = tune(&diffusion2d(4), &w, &dev);
+        assert!(r4.best.config.time <= r1.best.config.time);
+        assert!(r4.best.gcells < r1.best.gcells);
+    }
+
+    #[test]
+    fn three_d_throughput_below_2d() {
+        // Table 5-6: ~700 GFLOP/s 2D vs ~270 GFLOP/s 3D on Arria 10.
+        let dev = arria_10();
+        let g2 = tune(&diffusion2d(1), &default_workload(2), &dev).best.gflops;
+        let g3 = tune(&diffusion3d(1), &default_workload(3), &dev).best.gflops;
+        assert!(g2 > g3, "2d={g2} 3d={g3}");
+    }
+}

@@ -1,0 +1,229 @@
+//! End-to-end integration tests: AOT artifacts → PJRT runtime →
+//! coordinator streaming, verified against the native-Rust oracles.
+//!
+//! These tests require `artifacts/` (run `make artifacts` first); they are
+//! the Rust-side counterpart of the pytest suite's kernel-vs-oracle
+//! checks, now covering the *whole* request path: manifest parsing,
+//! literal marshalling, halo extraction, block scheduling, temporal
+//! blocking, write-back and reassembly.
+
+use fpga_hpc::coordinator::grid::{Grid2D, Grid3D};
+use fpga_hpc::coordinator::{apps, reference, stencil_runner};
+use fpga_hpc::runtime::{Runtime, Tensor};
+use fpga_hpc::testutil::{assert_allclose, max_abs_diff, Rng};
+
+fn runtime() -> Runtime {
+    Runtime::open("artifacts").expect("artifacts missing — run `make artifacts`")
+}
+
+fn rand_grid2d(ny: usize, nx: usize, seed: u64, lo: f32, hi: f32) -> Grid2D {
+    let mut rng = Rng::new(seed);
+    let data = rng.vec_f32(ny * nx, lo, hi);
+    Grid2D { ny, nx, data }
+}
+
+fn rand_grid3d(nz: usize, ny: usize, nx: usize, seed: u64, lo: f32, hi: f32) -> Grid3D {
+    let mut rng = Rng::new(seed);
+    let data = rng.vec_f32(nz * ny * nx, lo, hi);
+    Grid3D { nz, ny, nx, data }
+}
+
+fn coeffs_of(rt: &Runtime, artifact: &str) -> Vec<f32> {
+    rt.registry()
+        .get(artifact)
+        .unwrap()
+        .meta_f64_list("coeffs")
+        .unwrap()
+        .into_iter()
+        .map(|v| v as f32)
+        .collect()
+}
+
+#[test]
+fn manifest_loads_all_artifacts() {
+    let rt = runtime();
+    assert!(rt.registry().len() >= 18, "expected full artifact set");
+    for name in ["diffusion2d_r1", "hotspot3d", "nw", "srad", "lud_internal"] {
+        assert!(rt.registry().get(name).is_some(), "{name}");
+    }
+}
+
+#[test]
+fn diffusion2d_streamed_matches_reference() {
+    let rt = runtime();
+    for radius in [1u32, 2] {
+        let artifact = format!("diffusion2d_r{radius}");
+        let t = rt.registry().get(&artifact).unwrap().meta_u64("steps").unwrap();
+        let coeffs = coeffs_of(&rt, &artifact);
+        let grid = rand_grid2d(512, 512, 7 + radius as u64, 0.0, 1.0);
+        let steps = 2 * t;
+        let (out, metrics) =
+            stencil_runner::run_stencil2d(&rt, &artifact, grid.clone(), None, steps).unwrap();
+        let want = reference::diffusion2d(grid, &coeffs, steps as usize);
+        let err = max_abs_diff(&out.data, &want.data);
+        assert!(err < 1e-5, "r={radius}: err {err}");
+        assert!(metrics.blocks > 0 && metrics.cell_updates > 0);
+    }
+}
+
+#[test]
+fn diffusion2d_partial_blocks_match_reference() {
+    // Grid not a multiple of the 256-block: partial edge blocks extend
+    // past the grid and must be clipped exactly.
+    let rt = runtime();
+    let coeffs = coeffs_of(&rt, "diffusion2d_r1");
+    let grid = rand_grid2d(300, 520, 11, 0.0, 1.0);
+    let (out, _) =
+        stencil_runner::run_stencil2d(&rt, "diffusion2d_r1", grid.clone(), None, 4).unwrap();
+    let want = reference::diffusion2d(grid, &coeffs, 4);
+    assert!(max_abs_diff(&out.data, &want.data) < 1e-5);
+}
+
+#[test]
+fn hotspot2d_streamed_matches_reference() {
+    let rt = runtime();
+    let temp = rand_grid2d(512, 512, 21, 60.0, 90.0);
+    let power = rand_grid2d(512, 512, 22, 0.0, 1.0);
+    let steps = 8; // 2 passes of T=4
+    let (out, _) =
+        stencil_runner::run_stencil2d(&rt, "hotspot2d", temp.clone(), Some(&power), steps)
+            .unwrap();
+    let want = reference::hotspot2d(temp, &power, reference::HotspotParams::default(), steps as usize);
+    assert_allclose(&out.data, &want.data, 1e-4, 1e-3, "hotspot2d");
+}
+
+#[test]
+fn diffusion3d_streamed_matches_reference() {
+    let rt = runtime();
+    let coeffs = coeffs_of(&rt, "diffusion3d_r1");
+    let grid = rand_grid3d(64, 64, 64, 31, 0.0, 1.0);
+    let steps = 4; // 2 passes of T=2
+    let (out, _) =
+        stencil_runner::run_stencil3d(&rt, "diffusion3d_r1", grid.clone(), None, steps).unwrap();
+    let want = reference::diffusion3d(grid, &coeffs, steps as usize);
+    assert!(max_abs_diff(&out.data, &want.data) < 1e-5);
+}
+
+#[test]
+fn hotspot3d_streamed_matches_reference() {
+    let rt = runtime();
+    let temp = rand_grid3d(48, 48, 48, 41, 60.0, 90.0);
+    let power = rand_grid3d(48, 48, 48, 42, 0.0, 1.0);
+    let steps = 4;
+    let (out, _) =
+        stencil_runner::run_stencil3d(&rt, "hotspot3d", temp.clone(), Some(&power), steps)
+            .unwrap();
+    let want =
+        reference::hotspot3d(temp, &power, reference::Hotspot3DParams::default(), steps as usize);
+    assert_allclose(&out.data, &want.data, 1e-4, 1e-3, "hotspot3d");
+}
+
+#[test]
+fn stencil2d_rejects_bad_step_counts() {
+    let rt = runtime();
+    let grid = rand_grid2d(256, 256, 1, 0.0, 1.0);
+    // diffusion2d_r1 has T=4; 6 steps is not a multiple
+    let r = stencil_runner::run_stencil2d(&rt, "diffusion2d_r1", grid, None, 6);
+    assert!(r.is_err());
+}
+
+#[test]
+fn pathfinder_app_matches_reference() {
+    let rt = runtime();
+    let mut rng = Rng::new(55);
+    let rows = 17; // 1 + 2 fused chunks of 8
+    let cols = 5_000; // exercises a partial final block (width 4096)
+    let wall: Vec<Vec<i32>> = (0..rows).map(|_| rng.vec_i32(cols, 0, 10)).collect();
+    let (got, metrics) = apps::run_pathfinder(&rt, &wall).unwrap();
+    let want = reference::pathfinder(&wall);
+    assert_eq!(got, want);
+    assert!(metrics.blocks >= 4);
+}
+
+#[test]
+fn nw_app_matches_reference() {
+    let rt = runtime();
+    let mut rng = Rng::new(66);
+    let n = 128; // 2x2 blocks of 64
+    let reference_matrix: Vec<Vec<i32>> =
+        (0..=n).map(|_| rng.vec_i32(n + 1, -5, 15)).collect();
+    let (got, _) = apps::run_nw(&rt, &reference_matrix, 10).unwrap();
+    let want = reference::nw(&reference_matrix, 10);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn nw_app_rejects_wrong_penalty() {
+    let rt = runtime();
+    let refm = vec![vec![0i32; 65]; 65];
+    assert!(apps::run_nw(&rt, &refm, 3).is_err());
+}
+
+#[test]
+fn srad_app_matches_reference() {
+    let rt = runtime();
+    let img = rand_grid2d(512, 512, 77, 0.5, 2.0);
+    let steps = 2;
+    let (got, _) = apps::run_srad(&rt, img.clone(), steps).unwrap();
+    let want = reference::srad(img, 0.5, steps as usize);
+    assert_allclose(&got.data, &want.data, 5e-4, 5e-4, "srad");
+}
+
+#[test]
+fn lud_app_matches_reference() {
+    let rt = runtime();
+    let mut rng = Rng::new(88);
+    let n = 128; // 2x2 blocks of 64
+    let a: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            (0..n)
+                .map(|j| rng.f32_in(-1.0, 1.0) + if i == j { n as f32 } else { 0.0 })
+                .collect()
+        })
+        .collect();
+    let (got, _) = apps::run_lud(&rt, &a).unwrap();
+    let want = reference::lud(&a);
+    for i in 0..n {
+        assert_allclose(&got[i], &want[i], 1e-3, 1e-3, &format!("lud row {i}"));
+    }
+}
+
+#[test]
+fn runtime_rejects_shape_mismatch() {
+    let rt = runtime();
+    let bad = Tensor::F32(vec![0.0; 16], vec![4, 4]);
+    assert!(rt.execute("diffusion2d_r1", &[bad]).is_err());
+}
+
+#[test]
+fn runtime_stats_accumulate() {
+    let rt = runtime();
+    let spec = rt.registry().get("sum_sumsq").unwrap().clone();
+    let n = spec.inputs[0].shape[0];
+    let t = Tensor::F32(vec![1.0; n * n], vec![n, n]);
+    let out = rt.execute("sum_sumsq", &[t]).unwrap();
+    assert!((out[0].as_f32()[0] - (n * n) as f32).abs() < 1.0);
+    let stats = rt.stats();
+    assert_eq!(stats.executions, 1);
+    assert!(stats.execute_ms > 0.0);
+}
+
+#[test]
+fn property_streamed_equals_reference_random_geometry() {
+    // Property test: random grid sizes and step counts (multiples of T)
+    // always reproduce the oracle.
+    let rt = runtime();
+    let coeffs = coeffs_of(&rt, "diffusion2d_r1");
+    fpga_hpc::testutil::for_cases(4, |rng| {
+        let ny = rng.usize_in(64, 400);
+        let nx = rng.usize_in(64, 400);
+        let steps = 4 * rng.u64_in(1, 2);
+        let grid = rand_grid2d(ny, nx, rng.next_u64(), 0.0, 1.0);
+        let (out, _) =
+            stencil_runner::run_stencil2d(&rt, "diffusion2d_r1", grid.clone(), None, steps)
+                .unwrap();
+        let want = reference::diffusion2d(grid, &coeffs, steps as usize);
+        let err = max_abs_diff(&out.data, &want.data);
+        assert!(err < 1e-5, "{ny}x{nx} steps={steps}: err {err}");
+    });
+}

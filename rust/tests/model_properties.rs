@@ -1,0 +1,224 @@
+//! Property-based tests over the analytic models (xorshift-driven; the
+//! offline dependency set has no proptest — see `fpga_hpc::testutil`).
+//!
+//! These pin down the *invariants* the thesis's performance model must
+//! satisfy regardless of parameter values — the Rust-side counterpart of
+//! the hypothesis sweeps in python/tests/.
+
+use fpga_hpc::device::{arria_10, stratix_10, stratix_v};
+use fpga_hpc::perfmodel::memory::{AccessPattern, MemorySpec};
+use fpga_hpc::perfmodel::pipeline::{KernelClass, PipelineSpec};
+use fpga_hpc::runtime::Registry;
+use fpga_hpc::stencil::config::{diffusion2d, diffusion3d, AcceleratorConfig, Workload};
+use fpga_hpc::stencil::model::predict;
+use fpga_hpc::testutil::{for_cases, Rng};
+
+fn rand_spec(rng: &mut Rng) -> PipelineSpec {
+    let class = if rng.f64() < 0.5 {
+        KernelClass::SingleWorkItem { stalls: rng.u64_in(0, 300) }
+    } else {
+        KernelClass::NdRange { barriers: rng.u64_in(0, 5) }
+    };
+    let pattern = *rng.choose(&[
+        AccessPattern::Streaming,
+        AccessPattern::StreamingUnaligned,
+        AccessPattern::Strided,
+        AccessPattern::Random,
+    ]);
+    PipelineSpec {
+        name: "prop".into(),
+        depth: rng.u64_in(10, 3_000),
+        trip_count: rng.u64_in(1_000, 10_000_000_000),
+        class,
+        bytes_per_iter: rng.f64() * 64.0,
+        parallelism: *rng.choose(&[1u64, 2, 4, 8, 16, 32, 64]),
+        memory: MemorySpec::with_pattern(pattern),
+        invocations: rng.u64_in(1, 100),
+    }
+}
+
+#[test]
+fn pipeline_cycles_positive_and_ii_bounded_below() {
+    for_cases(300, |rng| {
+        let dev = if rng.f64() < 0.5 { stratix_v() } else { arria_10() };
+        let spec = rand_spec(rng);
+        let fmax = 150.0 + rng.f64() * 200.0;
+        let ii = spec.ii(&dev, fmax);
+        assert!(ii >= spec.ii_compile(), "II below II_c");
+        assert!(ii >= spec.ii_runtime(&dev, fmax) - 1e-9, "II below II_r");
+        let c = spec.cycles(&dev, fmax);
+        assert!(c.is_finite() && c >= spec.depth as f64);
+        assert!(spec.seconds(&dev, fmax) > 0.0);
+    });
+}
+
+#[test]
+fn pipeline_more_stalls_never_faster() {
+    for_cases(200, |rng| {
+        let dev = stratix_v();
+        let mut a = rand_spec(rng);
+        a.class = KernelClass::SingleWorkItem { stalls: rng.u64_in(0, 50) };
+        let mut b = a.clone();
+        let extra = rng.u64_in(1, 100);
+        if let KernelClass::SingleWorkItem { stalls } = a.class {
+            b.class = KernelClass::SingleWorkItem { stalls: stalls + extra };
+        }
+        assert!(b.cycles(&dev, 250.0) >= a.cycles(&dev, 250.0));
+    });
+}
+
+#[test]
+fn pipeline_parallelism_never_hurts_cycles() {
+    // Eq. 3-7/3-8: raising N_p divides the trip count but multiplies the
+    // memory pressure — cycle count must never increase.
+    for_cases(200, |rng| {
+        let dev = arria_10();
+        let mut a = rand_spec(rng);
+        a.parallelism = 1;
+        let mut b = a.clone();
+        b.parallelism = *rng.choose(&[2u64, 4, 8, 16, 32]);
+        assert!(
+            b.cycles(&dev, 250.0) <= a.cycles(&dev, 250.0) * 1.0001,
+            "parallelism made it slower"
+        );
+    });
+}
+
+#[test]
+fn stencil_prediction_invariants() {
+    for_cases(120, |rng| {
+        let dims = if rng.f64() < 0.5 { 2 } else { 3 };
+        let radius = rng.u64_in(1, 4) as u32;
+        let shape = if dims == 2 { diffusion2d(radius) } else { diffusion3d(radius) };
+        let dev = match rng.u64_in(0, 2) {
+            0 => stratix_v(),
+            1 => arria_10(),
+            _ => stratix_10(),
+        };
+        let cfg = AcceleratorConfig {
+            par: *rng.choose(&[1u32, 2, 4, 8, 16, 32]),
+            time: *rng.choose(&[1u32, 2, 4, 8, 16]),
+            bsize: if dims == 2 {
+                *rng.choose(&[512u32, 1024, 2048, 4096])
+            } else {
+                *rng.choose(&[32u32, 64, 128, 256])
+            },
+        };
+        let work = Workload {
+            extent: if dims == 2 { rng.u64_in(1024, 32768) } else { rng.u64_in(64, 512) },
+            steps: rng.u64_in(1, 1000),
+        };
+        let p = predict(&shape, &work, &cfg, &dev);
+        // GFLOP/s and GCell/s are consistent
+        let expect = p.gcells * shape.flops_per_cell();
+        assert!((p.gflops - expect).abs() < 1e-6 * expect.max(1.0));
+        // the clock is within the device's physical range
+        assert!(p.fmax_mhz >= 120.0 && p.fmax_mhz <= dev.base_fmax_mhz * 1.05);
+        // power is bounded by board TDP (only meaningful for designs
+        // that actually fit — infeasible configs have >100 % budgets)
+        assert!(p.power_w > 0.0);
+        if p.fits {
+            assert!(p.power_w < dev.tdp_w * 1.1, "{} on {}", p.power_w, dev.name);
+        }
+        // cycles/time positive and consistent
+        assert!(p.seconds > 0.0 && p.cycles > 0.0);
+        // feasible configs never have a degenerate valid span
+        if p.fits {
+            assert!(cfg.valid_span(radius) > 0);
+        }
+    });
+}
+
+#[test]
+fn stencil_deeper_time_never_increases_traffic_per_update() {
+    // The core §5.1.3 argument: fused steps amortize DDR traffic.
+    for_cases(100, |rng| {
+        let shape = diffusion2d(rng.u64_in(1, 4) as u32);
+        let dev = arria_10();
+        let work = Workload { extent: 16_384, steps: 960 };
+        let par = *rng.choose(&[4u32, 8, 16]);
+        let bsize = *rng.choose(&[2048u32, 4096, 8192]);
+        let t1 = predict(&shape, &work, &AcceleratorConfig { par, time: 1, bsize }, &dev);
+        let t2 = predict(&shape, &work, &AcceleratorConfig { par, time: 4, bsize }, &dev);
+        if t1.fits && t2.fits {
+            assert!(t2.bw_utilization <= t1.bw_utilization * 1.5 || !t2.memory_bound);
+        }
+    });
+}
+
+#[test]
+fn registry_parser_never_panics() {
+    for_cases(300, |rng| {
+        // random mutations of a valid line must parse or error, not panic
+        let valid = "x|x.hlo.txt|in=float32[8,8]|out=float32[4,4]|meta block=4;halo=2";
+        let mut bytes = valid.as_bytes().to_vec();
+        for _ in 0..rng.u64_in(0, 6) {
+            let i = rng.usize_in(0, bytes.len() - 1);
+            bytes[i] = (rng.u64_in(32, 126)) as u8;
+        }
+        let s = String::from_utf8_lossy(&bytes).to_string();
+        let _ = Registry::parse(&s); // Ok or Err both fine
+    });
+}
+
+#[test]
+fn grid_extract_write_roundtrip_random_geometry() {
+    use fpga_hpc::coordinator::grid::{Boundary, Grid2D};
+    for_cases(100, |rng| {
+        let ny = rng.usize_in(4, 96);
+        let nx = rng.usize_in(4, 96);
+        let data = rng.vec_f32(ny * nx, -1.0, 1.0);
+        let g = Grid2D { ny, nx, data };
+        let bh = rng.usize_in(1, ny);
+        let bw = rng.usize_in(1, nx);
+        let y0 = rng.usize_in(0, ny - 1);
+        let x0 = rng.usize_in(0, nx - 1);
+        let halo = rng.usize_in(0, 6);
+        let b = if rng.f64() < 0.5 { Boundary::Zero } else { Boundary::Clamp };
+        let tile = g.extract_tile(y0 as isize, x0 as isize, bh + 2 * halo, bw + 2 * halo, halo, b);
+        assert_eq!(tile.len(), (bh + 2 * halo) * (bw + 2 * halo));
+        // interior of the tile equals the grid block (clipped)
+        for ty in 0..bh.min(ny - y0) {
+            for tx in 0..bw.min(nx - x0) {
+                let got = tile[(ty + halo) * (bw + 2 * halo) + tx + halo];
+                assert_eq!(got, g.at(y0 + ty, x0 + tx));
+            }
+        }
+        // write-back of the interior is idempotent
+        let mut g2 = g.clone();
+        let interior: Vec<f32> = (0..bh)
+            .flat_map(|ty| (0..bw).map(move |tx| (ty, tx)))
+            .map(|(ty, tx)| {
+                let gy = (y0 + ty).min(ny - 1);
+                let gx = (x0 + tx).min(nx - 1);
+                g.at(gy, gx)
+            })
+            .collect();
+        // only exact in-grid writes are checked here
+        if y0 + bh <= ny && x0 + bw <= nx {
+            g2.write_block(y0, x0, bh, bw, &interior);
+            assert_eq!(g2, g);
+        }
+    });
+}
+
+#[test]
+fn fmax_monotone_in_utilization() {
+    use fpga_hpc::perfmodel::area::AreaBudget;
+    use fpga_hpc::perfmodel::fmax::{estimate, CriticalPath};
+    for_cases(200, |rng| {
+        let dev = if rng.f64() < 0.5 { stratix_v() } else { arria_10() };
+        let base = AreaBudget {
+            logic: rng.f64() * 0.7,
+            m20k_blocks: rng.f64() * 0.7,
+            m20k_bits: rng.f64() * 0.7,
+            dsp: rng.f64() * 0.7,
+        };
+        let mut heavier = base;
+        heavier.logic = (base.logic + 0.25).min(1.0);
+        heavier.m20k_blocks = (base.m20k_blocks + 0.25).min(1.0);
+        let f_lo = estimate(&dev, &heavier, CriticalPath::Clean, true);
+        let f_hi = estimate(&dev, &base, CriticalPath::Clean, true);
+        assert!(f_lo <= f_hi + 1e-9);
+    });
+}
