@@ -3,12 +3,14 @@
 //! Measures per-block PJRT execution, literal marshalling, halo
 //! extraction and the streamed end-to-end cell-update throughput for the
 //! 2D/3D stencil compute units — the numbers the §Perf optimization loop
-//! in EXPERIMENTS.md tracks.
+//! in EXPERIMENTS.md tracks.  The scheduler-lanes sweep at the end runs
+//! the same streamed workload through the multi-lane engine at 1/2/4
+//! lanes and writes `BENCH_runtime.json` for trajectory tracking.
 
-use fpga_hpc::benchutil::Bencher;
+use fpga_hpc::benchutil::{write_bench_json, BenchRow, Bencher};
 use fpga_hpc::coordinator::grid::{Boundary, Grid2D};
 use fpga_hpc::coordinator::stencil_runner;
-use fpga_hpc::runtime::{Runtime, Tensor};
+use fpga_hpc::runtime::{Runtime, RuntimePool, Tensor};
 use fpga_hpc::testutil::Rng;
 
 fn main() {
@@ -33,6 +35,14 @@ fn main() {
         .unwrap()
     });
 
+    b.bench(&format!("pjrt_execute_f32_fastpath_{tile}"), || {
+        rt.execute_f32(
+            "diffusion2d_r1",
+            &[Tensor::F32(tile_data.clone(), vec![tile, tile]), oob.clone()],
+        )
+        .unwrap()
+    });
+
     b.bench(&format!("tensor_marshal_{tile}x{tile}"), || {
         Tensor::F32(tile_data.clone(), vec![tile, tile])
     });
@@ -40,6 +50,12 @@ fn main() {
     let grid = Grid2D { ny: 1024, nx: 1024, data: rng.vec_f32(1024 * 1024, 0.0, 1.0) };
     b.bench(&format!("halo_extract_{tile}x{tile}"), || {
         grid.extract_tile(256, 256, tile, tile, halo, Boundary::Zero)
+    });
+
+    let bufpool = fpga_hpc::coordinator::bufpool::TilePool::default();
+    b.bench(&format!("halo_extract_pooled_{tile}x{tile}"), || {
+        let v = grid.extract_tile_pooled(256, 256, tile, tile, halo, Boundary::Zero, &bufpool);
+        bufpool.put(v);
     });
 
     b.bench("streamed_diffusion2d_1024_4steps", || {
@@ -56,4 +72,41 @@ fn main() {
         "runtime totals: {} executions, execute {:.1}ms, marshal {:.1}ms",
         stats.executions, stats.execute_ms, stats.marshal_ms
     );
+
+    // --- scheduler-lanes sweep: replicated compute units ---
+    println!("\n=== scheduler-lanes sweep (streamed diffusion2d 1024^2 x16) ===\n");
+    let mut rows = Vec::new();
+    for lanes in [1usize, 2, 4] {
+        let pool = RuntimePool::open("artifacts", lanes).expect("pool open");
+        pool.warmup_artifact("diffusion2d_r1").unwrap();
+        // one unmeasured run to warm per-lane compile caches and the
+        // allocator (each run owns its tile pool: pass 1 fills the
+        // shelves, later passes extract allocation-free)
+        stencil_runner::run_stencil2d_lanes(&pool, "diffusion2d_r1", grid.clone(), None, 4)
+            .unwrap();
+        let (_, m) =
+            stencil_runner::run_stencil2d_lanes(&pool, "diffusion2d_r1", grid.clone(), None, 16)
+                .unwrap();
+        println!("lanes={lanes}: {}", m.summary());
+        rows.push(BenchRow {
+            name: "streamed_diffusion2d_1024_16steps".into(),
+            lanes,
+            gcells_per_sec: m.gcell_per_sec(),
+            wall_secs: m.wall.as_secs_f64(),
+            blocks: m.blocks,
+            pool_hits: m.pool_hits,
+            pool_misses: m.pool_misses,
+        });
+    }
+    if let (Some(one), Some(four)) = (
+        rows.iter().find(|r| r.lanes == 1),
+        rows.iter().find(|r| r.lanes == 4),
+    ) {
+        println!(
+            "\n4-lane speedup over 1 lane: {:.2}x",
+            four.gcells_per_sec / one.gcells_per_sec.max(1e-12)
+        );
+    }
+    write_bench_json("BENCH_runtime.json", &rows).expect("writing BENCH_runtime.json");
+    println!("wrote BENCH_runtime.json");
 }

@@ -2,8 +2,12 @@
 //!
 //! The offline vendored dependency set has no criterion, so `cargo bench`
 //! targets use this: warm-up, repeated timed runs, median/mean/stddev
-//! reporting in a criterion-like text format.
+//! reporting in a criterion-like text format.  [`write_bench_json`]
+//! additionally emits a machine-readable trajectory file (no serde in
+//! the dependency set either — the JSON is hand-rolled) so the §Perf
+//! loop can track GCell/s across PRs.
 
+use std::io::Write;
 use std::time::{Duration, Instant};
 
 /// One benchmark measurement.
@@ -120,6 +124,59 @@ impl Bencher {
     }
 }
 
+/// One row of a machine-readable benchmark trajectory (e.g. the
+/// scheduler-lanes sweep in `benches/runtime_hotpath.rs`).
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub name: String,
+    pub lanes: usize,
+    pub gcells_per_sec: f64,
+    pub wall_secs: f64,
+    pub blocks: u64,
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render rows as a JSON document (stable field order, one object per
+/// row) — the exact bytes [`write_bench_json`] writes.
+pub fn bench_rows_json(rows: &[BenchRow]) -> String {
+    let mut s = String::from("{\n  \"benches\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"lanes\": {}, \"gcells_per_sec\": {:.6}, \"wall_secs\": {:.6}, \"blocks\": {}, \"pool_hits\": {}, \"pool_misses\": {}}}{}\n",
+            json_escape(&r.name),
+            r.lanes,
+            r.gcells_per_sec,
+            r.wall_secs,
+            r.blocks,
+            r.pool_hits,
+            r.pool_misses,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write the rows to `path` as JSON (e.g. `BENCH_runtime.json`).
+pub fn write_bench_json(path: &str, rows: &[BenchRow]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(bench_rows_json(rows).as_bytes())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +198,42 @@ mod tests {
         });
         assert!(m.iters >= 3);
         assert!(m.min <= m.median && m.median <= m.max);
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        let rows = vec![
+            BenchRow {
+                name: "diffusion2d_1024".into(),
+                lanes: 1,
+                gcells_per_sec: 0.5,
+                wall_secs: 2.0,
+                blocks: 16,
+                pool_hits: 12,
+                pool_misses: 4,
+            },
+            BenchRow {
+                name: "diffusion2d_1024".into(),
+                lanes: 4,
+                gcells_per_sec: 1.25,
+                wall_secs: 0.8,
+                blocks: 16,
+                pool_hits: 15,
+                pool_misses: 1,
+            },
+        ];
+        let s = bench_rows_json(&rows);
+        assert!(s.contains("\"benches\""));
+        assert!(s.contains("\"lanes\": 4"));
+        assert!(s.contains("\"gcells_per_sec\": 1.250000"));
+        // two objects, comma after the first only
+        assert_eq!(s.matches("{\"name\"").count(), 2);
+        assert_eq!(s.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("tab\there"), "tab\\u0009here");
     }
 }

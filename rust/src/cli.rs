@@ -13,7 +13,7 @@
 use crate::coordinator::grid::Grid2D;
 use crate::coordinator::{reference, stencil_runner};
 use crate::device::{arria_10, stratix_10, stratix_v, FpgaDevice};
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, RuntimePool};
 use crate::stencil::config::{default_workload, diffusion2d, diffusion3d};
 use crate::stencil::tuner::tune;
 use crate::testutil::Rng;
@@ -28,8 +28,10 @@ USAGE:
   fpga-hpc report --all            print every table and figure
   fpga-hpc tune <d2r1|d2r2|..|d3r4> [sv|a10|s10]
                                    tune one stencil on one device
-  fpga-hpc run diffusion2d [n] [steps]
-                                   functional streamed run + verification
+  fpga-hpc run diffusion2d [n] [steps] [--lanes N]
+                                   functional streamed run + verification;
+                                   --lanes N replicates the compute unit
+                                   across N worker threads (default 1)
   fpga-hpc sim                     simulate all Rodinia variants
   fpga-hpc list                    list AOT artifacts
 ";
@@ -70,9 +72,11 @@ pub fn run() -> crate::Result<()> {
             }
         }
         "run" => {
-            let n: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(512);
-            let steps: u64 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(8);
-            run_diffusion2d_demo(n, steps)?;
+            let mut rest: Vec<String> = args[1..].to_vec();
+            let lanes = take_lanes_flag(&mut rest)?;
+            let n: usize = rest.get(1).and_then(|s| s.parse().ok()).unwrap_or(512);
+            let steps: u64 = rest.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+            run_diffusion2d_demo(n, steps, lanes)?;
         }
         "sim" => {
             for dev in [stratix_v(), arria_10()] {
@@ -100,6 +104,25 @@ pub fn run() -> crate::Result<()> {
     Ok(())
 }
 
+/// Remove `--lanes N` from `args` (if present) and return N (default 1).
+fn take_lanes_flag(args: &mut Vec<String>) -> crate::Result<usize> {
+    let Some(pos) = args.iter().position(|a| a == "--lanes") else {
+        return Ok(1);
+    };
+    let val = args
+        .get(pos + 1)
+        .ok_or_else(|| anyhow::anyhow!("--lanes requires a value\n{USAGE}"))?
+        .clone();
+    let lanes: usize = val
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--lanes: '{val}' is not a positive integer"))?;
+    if lanes == 0 {
+        anyhow::bail!("--lanes must be >= 1");
+    }
+    args.drain(pos..=pos + 1);
+    Ok(lanes)
+}
+
 fn parse_device(s: &str) -> crate::Result<FpgaDevice> {
     Ok(match s {
         "sv" => stratix_v(),
@@ -119,10 +142,23 @@ fn parse_stencil(s: &str) -> crate::Result<(crate::stencil::config::StencilShape
     Ok((shape, dims))
 }
 
-fn run_diffusion2d_demo(n: usize, steps: u64) -> crate::Result<()> {
-    let rt = Runtime::open("artifacts")?;
-    let spec = rt
-        .registry()
+fn run_diffusion2d_demo(n: usize, steps: u64, lanes: usize) -> crate::Result<()> {
+    // One engine only: a PJRT client is heavyweight, so don't open a
+    // single-lane Runtime just to read metadata when a pool is in play.
+    enum Engine {
+        Single(Runtime),
+        Pool(RuntimePool),
+    }
+    let engine = if lanes > 1 {
+        Engine::Pool(RuntimePool::open("artifacts", lanes)?)
+    } else {
+        Engine::Single(Runtime::open("artifacts")?)
+    };
+    let registry = match &engine {
+        Engine::Single(rt) => rt.registry(),
+        Engine::Pool(pool) => pool.registry(),
+    };
+    let spec = registry
         .get("diffusion2d_r1")
         .ok_or_else(|| anyhow::anyhow!("missing artifact — run `make artifacts`"))?
         .clone();
@@ -133,9 +169,16 @@ fn run_diffusion2d_demo(n: usize, steps: u64) -> crate::Result<()> {
         .collect();
     let rng = std::cell::RefCell::new(Rng::new(42));
     let grid = Grid2D::from_fn(n, n, |_, _| rng.borrow_mut().f32_in(0.0, 1.0));
-    println!("running diffusion2d r=1 on {n}x{n} for {steps} steps...");
-    let (out, metrics) =
-        stencil_runner::run_stencil2d(&rt, "diffusion2d_r1", grid.clone(), None, steps)?;
+    println!("running diffusion2d r=1 on {n}x{n} for {steps} steps ({lanes} lane{})...",
+        if lanes == 1 { "" } else { "s" });
+    let (out, metrics) = match &engine {
+        Engine::Pool(pool) => {
+            stencil_runner::run_stencil2d_lanes(pool, "diffusion2d_r1", grid.clone(), None, steps)?
+        }
+        Engine::Single(rt) => {
+            stencil_runner::run_stencil2d(rt, "diffusion2d_r1", grid.clone(), None, steps)?
+        }
+    };
     println!("  {}", metrics.summary());
     let want = reference::diffusion2d(grid, &coeffs, steps as usize);
     let err = crate::testutil::max_abs_diff(&out.data, &want.data);

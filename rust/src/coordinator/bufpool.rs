@@ -1,0 +1,150 @@
+//! Reusable tile arenas for the marshalling path.
+//!
+//! Every block of every pass needs a freshly filled `Vec<f32>` for the
+//! halo'd input tile (and one comes back per output).  Allocating those
+//! per block is the host-side anti-pattern the thesis's deep pipelines
+//! avoid on hardware; the pool recycles buffers by size instead, so a
+//! steady-state pass performs **zero** heap allocations for tile
+//! extraction (after the first pass warms the shelves).
+//!
+//! Shelves are keyed by capacity in a `BTreeMap`, and `take(len)` hands
+//! out the smallest buffer whose capacity covers `len`, so tile inputs
+//! (`tile²`/`tile³` cells) and recycled kernel outputs (`block²`/`block³`
+//! cells) coexist in one pool.  Hit/miss counters feed the
+//! `pool_hits`/`pool_misses` fields of
+//! [`crate::coordinator::metrics::Metrics`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Thread-safe recycling pool of `Vec<f32>` buffers.
+#[derive(Debug, Default)]
+pub struct TilePool {
+    shelves: Mutex<BTreeMap<usize, Vec<Vec<f32>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl TilePool {
+    /// Fetch a cleared buffer with capacity ≥ `len` (allocating one only
+    /// on a pool miss).
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        let mut shelves = self.shelves.lock().unwrap();
+        // Smallest shelf that covers the request.
+        if let Some((&cap, stack)) = shelves.range_mut(len..).next() {
+            let v = stack.pop().expect("empty shelves are removed on pop");
+            if stack.is_empty() {
+                shelves.remove(&cap);
+            }
+            drop(shelves);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return v;
+        }
+        drop(shelves);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Vec::with_capacity(len)
+    }
+
+    /// Return a buffer for reuse.  Zero-capacity buffers are dropped,
+    /// and each shelf is capped so recycled buffers that nothing ever
+    /// re-requests (e.g. a one-off tile size) cannot grow without bound.
+    pub fn put(&self, mut v: Vec<f32>) {
+        const MAX_PER_SHELF: usize = 256;
+        v.clear();
+        let cap = v.capacity();
+        if cap == 0 {
+            return;
+        }
+        let mut shelves = self.shelves.lock().unwrap();
+        let stack = shelves.entry(cap).or_default();
+        if stack.len() < MAX_PER_SHELF {
+            stack.push(v);
+        }
+    }
+
+    /// Buffers served from the shelves (reuses).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Buffers that had to be freshly allocated.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_allocates_then_reuses() {
+        let p = TilePool::default();
+        let mut a = p.take(64);
+        assert!(a.capacity() >= 64);
+        assert_eq!((p.hits(), p.misses()), (0, 1));
+        a.extend(std::iter::repeat(1.0).take(64));
+        p.put(a);
+        let b = p.take(64);
+        assert!(b.is_empty(), "recycled buffers come back cleared");
+        assert!(b.capacity() >= 64);
+        assert_eq!((p.hits(), p.misses()), (1, 1));
+    }
+
+    #[test]
+    fn smaller_requests_reuse_bigger_buffers() {
+        let p = TilePool::default();
+        p.put(Vec::with_capacity(1000));
+        let v = p.take(100);
+        assert!(v.capacity() >= 1000);
+        assert_eq!(p.hits(), 1);
+    }
+
+    #[test]
+    fn bigger_requests_miss() {
+        let p = TilePool::default();
+        p.put(Vec::with_capacity(10));
+        let v = p.take(100);
+        assert!(v.capacity() >= 100);
+        assert_eq!((p.hits(), p.misses()), (0, 1));
+        // The small buffer is still shelved for a matching request.
+        assert!(p.take(10).capacity() >= 10);
+        assert_eq!(p.hits(), 1);
+        drop(v);
+    }
+
+    #[test]
+    fn steady_state_is_allocation_free() {
+        // Simulates two passes of a 4-block plan with one in flight:
+        // pass 1 misses once per block, pass 2 runs entirely off shelves.
+        let p = TilePool::default();
+        for _pass in 0..2 {
+            for _block in 0..4 {
+                let mut t = p.take(256);
+                t.resize(256, 0.5);
+                p.put(t);
+            }
+        }
+        assert_eq!(p.misses(), 1, "single in-flight buffer allocated once");
+        assert_eq!(p.hits(), 7);
+    }
+
+    #[test]
+    fn concurrent_take_put() {
+        let p = std::sync::Arc::new(TilePool::default());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let p = p.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        let mut v = p.take(128);
+                        v.push(1.0);
+                        p.put(v);
+                    }
+                });
+            }
+        });
+        assert_eq!(p.hits() + p.misses(), 400);
+    }
+}

@@ -111,6 +111,40 @@ impl Grid2D {
         out
     }
 
+    /// [`Grid2D::extract_tile`] into a buffer recycled from `pool` —
+    /// the steady-state (zero-allocation) marshalling path of the
+    /// multi-lane engine.
+    pub fn extract_tile_pooled(
+        &self,
+        y0: isize,
+        x0: isize,
+        tile_h: usize,
+        tile_w: usize,
+        halo: usize,
+        b: Boundary,
+        pool: &crate::coordinator::bufpool::TilePool,
+    ) -> Vec<f32> {
+        let mut out = pool.take(tile_h * tile_w);
+        self.extract_tile_into(y0, x0, tile_h, tile_w, halo, b, &mut out);
+        out
+    }
+
+    /// Shared write handle over this grid's storage for lane-parallel
+    /// writeback.
+    ///
+    /// # Safety
+    ///
+    /// The grid must outlive every use of the returned writer, and
+    /// concurrent [`GridWriter2D::write_block`] calls must target
+    /// pairwise-disjoint block origins (which the block plans guarantee:
+    /// origins lie on a `block`-spaced lattice and each write covers at
+    /// most `block × block` cells from its origin).  The caller must not
+    /// read or write the grid through any other path until the writers
+    /// are quiesced.
+    pub unsafe fn shared_writer(&mut self) -> GridWriter2D {
+        GridWriter2D { ptr: self.data.as_mut_ptr(), ny: self.ny, nx: self.nx }
+    }
+
     /// Write a (bh, bw) interior block at (y0, x0), clipping out-of-grid
     /// parts (partial edge blocks).
     pub fn write_block(&mut self, y0: usize, x0: usize, bh: usize, bw: usize, block: &[f32]) {
@@ -121,6 +155,43 @@ impl Grid2D {
             let src = by * bw;
             let dst = (y0 + by) * self.nx + x0;
             self.data[dst..dst + w].copy_from_slice(&block[src..src + w]);
+        }
+    }
+}
+
+/// Write-only view of a [`Grid2D`] shared across execute lanes; created
+/// by the unsafe [`Grid2D::shared_writer`], whose contract (disjoint
+/// block writes, grid outlives the writer) makes these writes sound.
+#[derive(Debug, Clone, Copy)]
+pub struct GridWriter2D {
+    ptr: *mut f32,
+    ny: usize,
+    nx: usize,
+}
+
+// SAFETY: the `shared_writer` contract guarantees disjoint target cells
+// across threads and a live backing allocation.
+unsafe impl Send for GridWriter2D {}
+unsafe impl Sync for GridWriter2D {}
+
+impl GridWriter2D {
+    /// Same clipping semantics as [`Grid2D::write_block`].
+    pub fn write_block(&self, y0: usize, x0: usize, bh: usize, bw: usize, block: &[f32]) {
+        debug_assert_eq!(block.len(), bh * bw);
+        let h = bh.min(self.ny.saturating_sub(y0));
+        let w = bw.min(self.nx.saturating_sub(x0));
+        for by in 0..h {
+            let src = &block[by * bw..by * bw + w];
+            // SAFETY: rows y0+by < ny and columns x0..x0+w < nx index
+            // inside the grid allocation; disjointness across threads is
+            // the `shared_writer` contract.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    src.as_ptr(),
+                    self.ptr.add((y0 + by) * self.nx + x0),
+                    w,
+                );
+            }
         }
     }
 }
@@ -211,6 +282,39 @@ impl Grid3D {
         }
     }
 
+    /// [`Grid3D::extract_tile_owned`] into a buffer recycled from
+    /// `pool` — the steady-state (zero-allocation) marshalling path.
+    pub fn extract_tile_pooled(
+        &self,
+        z0: isize,
+        y0: isize,
+        x0: isize,
+        tile: usize,
+        halo: usize,
+        b: Boundary,
+        pool: &crate::coordinator::bufpool::TilePool,
+    ) -> Vec<f32> {
+        let mut out = pool.take(tile * tile * tile);
+        self.extract_tile_into(z0, y0, x0, tile, halo, b, &mut out);
+        out
+    }
+
+    /// Shared write handle for lane-parallel writeback.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`Grid2D::shared_writer`]: the grid outlives
+    /// every use, concurrent writes target disjoint block origins, and
+    /// no other access happens until the writers are quiesced.
+    pub unsafe fn shared_writer(&mut self) -> GridWriter3D {
+        GridWriter3D {
+            ptr: self.data.as_mut_ptr(),
+            nz: self.nz,
+            ny: self.ny,
+            nx: self.nx,
+        }
+    }
+
     /// Write a cubic interior block at (z0, y0, x0), clipped to the grid.
     pub fn write_block(&mut self, z0: usize, y0: usize, x0: usize, bs: usize, block: &[f32]) {
         debug_assert_eq!(block.len(), bs * bs * bs);
@@ -222,6 +326,44 @@ impl Grid3D {
                 let src = (bz * bs + by) * bs;
                 let dst = ((z0 + bz) * self.ny + (y0 + by)) * self.nx + x0;
                 self.data[dst..dst + w].copy_from_slice(&block[src..src + w]);
+            }
+        }
+    }
+}
+
+/// Write-only view of a [`Grid3D`] shared across execute lanes; see
+/// [`Grid3D::shared_writer`] for the soundness contract.
+#[derive(Debug, Clone, Copy)]
+pub struct GridWriter3D {
+    ptr: *mut f32,
+    nz: usize,
+    ny: usize,
+    nx: usize,
+}
+
+// SAFETY: see GridWriter2D.
+unsafe impl Send for GridWriter3D {}
+unsafe impl Sync for GridWriter3D {}
+
+impl GridWriter3D {
+    /// Same clipping semantics as [`Grid3D::write_block`].
+    pub fn write_block(&self, z0: usize, y0: usize, x0: usize, bs: usize, block: &[f32]) {
+        debug_assert_eq!(block.len(), bs * bs * bs);
+        let d = bs.min(self.nz.saturating_sub(z0));
+        let h = bs.min(self.ny.saturating_sub(y0));
+        let w = bs.min(self.nx.saturating_sub(x0));
+        for bz in 0..d {
+            for by in 0..h {
+                let src = &block[(bz * bs + by) * bs..(bz * bs + by) * bs + w];
+                // SAFETY: target indices are in-grid; disjointness across
+                // threads is the `shared_writer` contract.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        src.as_ptr(),
+                        self.ptr.add(((z0 + bz) * self.ny + (y0 + by)) * self.nx + x0),
+                        w,
+                    );
+                }
             }
         }
     }
@@ -286,6 +428,60 @@ mod tests {
         let t = g.extract_tile_owned(0, 0, 0, 5, 1, Boundary::Clamp);
         assert_eq!(t[0], g.at(0, 0, 0));
         assert_eq!(t.len(), 125);
+    }
+
+    #[test]
+    fn pooled_extract_matches_owned() {
+        let pool = crate::coordinator::bufpool::TilePool::default();
+        let g = Grid2D::from_fn(8, 8, |y, x| (y * 8 + x) as f32);
+        let a = g.extract_tile(2, 2, 6, 6, 1, Boundary::Zero);
+        let b = g.extract_tile_pooled(2, 2, 6, 6, 1, Boundary::Zero, &pool);
+        assert_eq!(a, b);
+        pool.put(b);
+        // second extraction reuses the shelved buffer
+        let c = g.extract_tile_pooled(2, 2, 6, 6, 1, Boundary::Zero, &pool);
+        assert_eq!(a, c);
+        assert_eq!(pool.hits(), 1);
+
+        let g3 = Grid3D::from_fn(4, 4, 4, |z, y, x| (z * 16 + y * 4 + x) as f32);
+        let a3 = g3.extract_tile_owned(1, 1, 1, 3, 1, Boundary::Clamp);
+        let b3 = g3.extract_tile_pooled(1, 1, 1, 3, 1, Boundary::Clamp, &pool);
+        assert_eq!(a3, b3);
+    }
+
+    #[test]
+    fn shared_writer_matches_write_block() {
+        let block: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let mut a = Grid2D::zeros(5, 5); // partial block clips at the edge
+        let mut b = Grid2D::zeros(5, 5);
+        a.write_block(3, 3, 4, 4, &block);
+        let w = unsafe { b.shared_writer() };
+        w.write_block(3, 3, 4, 4, &block);
+        assert_eq!(a, b);
+
+        let cube: Vec<f32> = (0..27).map(|v| v as f32).collect();
+        let mut a3 = Grid3D::zeros(4, 4, 4);
+        let mut b3 = Grid3D::zeros(4, 4, 4);
+        a3.write_block(2, 2, 2, 3, &cube);
+        let w3 = unsafe { b3.shared_writer() };
+        w3.write_block(2, 2, 2, 3, &cube);
+        assert_eq!(a3, b3);
+    }
+
+    #[test]
+    fn shared_writer_parallel_disjoint_blocks() {
+        let src = Grid2D::from_fn(8, 8, |y, x| (y * 8 + x) as f32);
+        let mut dst = Grid2D::zeros(8, 8);
+        let w = unsafe { dst.shared_writer() };
+        std::thread::scope(|s| {
+            for y0 in (0..8).step_by(4) {
+                for x0 in (0..8).step_by(4) {
+                    let tile = src.extract_tile(y0 as isize, x0 as isize, 4, 4, 0, Boundary::Zero);
+                    s.spawn(move || w.write_block(y0, x0, 4, 4, &tile));
+                }
+            }
+        });
+        assert_eq!(src, dst);
     }
 }
 

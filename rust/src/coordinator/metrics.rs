@@ -17,6 +17,11 @@ pub struct Metrics {
     pub writeback: Duration,
     /// End-to-end wall time.
     pub wall: Duration,
+    /// Tile buffers served from the recycle pool (steady-state passes
+    /// should be all hits — zero per-block allocations).
+    pub pool_hits: u64,
+    /// Tile buffers that had to be freshly allocated (pool warm-up).
+    pub pool_misses: u64,
 }
 
 impl Metrics {
@@ -35,15 +40,25 @@ impl Metrics {
         ((w - e) / w).max(0.0)
     }
 
+    /// Fraction of tile-buffer requests served without allocating.
+    pub fn pool_reuse_frac(&self) -> f64 {
+        let total = self.pool_hits + self.pool_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.pool_hits as f64 / total as f64
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "blocks={} updates={} wall={:.3}s (marshal {:.1}% execute {:.1}% writeback {:.1}%) {:.3} GCell/s",
+            "blocks={} updates={} wall={:.3}s (marshal {:.1}% execute {:.1}% writeback {:.1}%) buf-reuse {:.0}% {:.3} GCell/s",
             self.blocks,
             self.cell_updates,
             self.wall.as_secs_f64(),
             100.0 * self.extract.as_secs_f64() / self.wall.as_secs_f64().max(1e-12),
             100.0 * self.execute.as_secs_f64() / self.wall.as_secs_f64().max(1e-12),
             100.0 * self.writeback.as_secs_f64() / self.wall.as_secs_f64().max(1e-12),
+            100.0 * self.pool_reuse_frac(),
             self.gcell_per_sec(),
         )
     }

@@ -4,12 +4,17 @@
 //! plays in the thesis.
 //!
 //! * [`grid`] — 2D/3D grids, halo extraction with the benchmark's
-//!   boundary rule, interior write-back;
-//! * [`scheduler`] — the block-streaming engine: marshalling parallelized
-//!   across worker threads, PJRT execution pinned to the coordinator
-//!   thread (the client is `Rc`-based);
+//!   boundary rule, interior write-back (including the lane-shared
+//!   writers used for unordered writeback);
+//! * [`bufpool`] — recycled tile arenas so steady-state passes allocate
+//!   nothing on the marshalling path;
+//! * [`scheduler`] — the block-streaming engines: the single-runtime
+//!   pipelined path (PJRT execution pinned to the coordinator thread —
+//!   the client is `Rc`-based) and the extractor fan-out that feeds the
+//!   multi-lane [`crate::runtime::pool::RuntimePool`];
 //! * [`stencil_runner`] — temporal-block streaming for the Ch. 5 stencil
-//!   workloads (diffusion/hotspot, 2D/3D);
+//!   workloads (diffusion/hotspot, 2D/3D), single-runtime and
+//!   lane-parallel variants;
 //! * [`apps`] — full-application runners for the Ch. 4 dynamic-programming
 //!   and linear-algebra benchmarks (Pathfinder, NW, SRAD, LUD);
 //! * [`reference`] — native-Rust oracles used by the integration tests
@@ -17,6 +22,7 @@
 //! * [`metrics`] — throughput/latency accounting for the §Perf work.
 
 pub mod apps;
+pub mod bufpool;
 pub mod grid;
 pub mod metrics;
 pub mod reference;

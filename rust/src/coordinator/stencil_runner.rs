@@ -7,14 +7,34 @@
 //! compute unit, and its interior written to the next grid.  `steps`
 //! must be a multiple of `T` (the bitstream's temporal depth is fixed at
 //! compile time, exactly as in the thesis).
+//!
+//! Each workload has two entry points:
+//!
+//! * `run_stencil{2d,3d}` — single [`Runtime`]: execution pinned to the
+//!   caller's thread, one extractor thread pipelining tiles ahead of it;
+//! * `run_stencil{2d,3d}_lanes` — [`RuntimePool`]: M extractor workers
+//!   feed N execute lanes through the pool's bounded queue, and each
+//!   lane writes its own block back (unordered — interiors are
+//!   disjoint, so only metrics, not correctness, depend on order).
+//!   Results are bit-identical to the single-runtime path for any lane
+//!   count (see the lane-invariance integration tests).
+//!
+//! Both paths marshal through a [`TilePool`], so steady-state passes
+//! allocate nothing for tile extraction (`Metrics::pool_hits` /
+//! `pool_misses` expose the reuse rate).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail};
 
+use crate::coordinator::bufpool::TilePool;
 use crate::coordinator::grid::{Boundary, Grid2D, Grid3D};
 use crate::coordinator::metrics::{Metrics, Timed};
-use crate::coordinator::scheduler::run_pipelined;
-use crate::runtime::{Runtime, Tensor};
-
+use crate::coordinator::scheduler::{feed_blocks, run_pipelined};
+use crate::runtime::pool::IdleGuard;
+use crate::runtime::{Runtime, RuntimePool, Tensor};
 
 /// Out-of-grid cell counts per tile side: [top, bottom] for an axis.
 /// `o0` is the block's interior origin, `n` the grid extent.
@@ -29,6 +49,91 @@ fn boundary_of(spec: &crate::runtime::ArtifactSpec) -> Boundary {
         Some("clamp") => Boundary::Clamp,
         _ => Boundary::Zero,
     }
+}
+
+/// Static stencil parameters baked into an artifact's manifest entry.
+struct StencilMeta {
+    block: usize,
+    halo: usize,
+    tile: usize,
+    t_fused: u64,
+    boundary: Boundary,
+}
+
+fn stencil_meta(
+    spec: &crate::runtime::ArtifactSpec,
+    has_aux: bool,
+    steps: u64,
+) -> crate::Result<StencilMeta> {
+    let block = spec.meta_u64("block")? as usize;
+    let halo = spec.meta_u64("halo")? as usize;
+    let t_fused = spec.meta_u64("steps")?;
+    let wants_aux = spec.inputs.len() == 3;
+    if wants_aux != has_aux {
+        bail!("{}: aux input mismatch (expects {wants_aux})", spec.name);
+    }
+    if steps % t_fused != 0 {
+        bail!("{}: steps {steps} not a multiple of fused T={t_fused}", spec.name);
+    }
+    Ok(StencilMeta {
+        block,
+        halo,
+        tile: block + 2 * halo,
+        t_fused,
+        boundary: boundary_of(spec),
+    })
+}
+
+fn block_origins_2d(ny: usize, nx: usize, block: usize) -> Vec<(usize, usize)> {
+    let mut origins = Vec::new();
+    let mut y0 = 0;
+    while y0 < ny {
+        let mut x0 = 0;
+        while x0 < nx {
+            origins.push((y0, x0));
+            x0 += block;
+        }
+        y0 += block;
+    }
+    origins
+}
+
+fn block_origins_3d(nz: usize, ny: usize, nx: usize, block: usize) -> Vec<(usize, usize, usize)> {
+    let mut origins = Vec::new();
+    let mut z0 = 0;
+    while z0 < nz {
+        let mut y0 = 0;
+        while y0 < ny {
+            let mut x0 = 0;
+            while x0 < nx {
+                origins.push((z0, y0, x0));
+                x0 += block;
+            }
+            y0 += block;
+        }
+        z0 += block;
+    }
+    origins
+}
+
+/// Return a block's f32 input buffers to the tile pool for reuse.
+///
+/// Kernel *output* buffers are deliberately not pooled: they are
+/// `block²`/`block³` cells while every extraction request is
+/// `tile²`/`tile³` (strictly larger for halo ≥ 1), so they could never
+/// satisfy a `take` — shelving them would only hold dead memory.
+fn recycle_inputs(pool: &TilePool, inputs: Vec<Tensor>) {
+    for t in inputs {
+        if let Tensor::F32(v, _) = t {
+            pool.put(v);
+        }
+    }
+}
+
+/// How many extractor workers to pair with `lanes` execute lanes: halo
+/// extraction runs at memcpy rate, so half the lane count saturates it.
+fn extractor_count(lanes: usize) -> usize {
+    (lanes + 1) / 2
 }
 
 /// Run `steps` time steps of a 2D stencil artifact over `grid`.
@@ -47,19 +152,10 @@ pub fn run_stencil2d(
         .get(artifact)
         .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
         .clone();
-    let block = spec.meta_u64("block")? as usize;
-    let halo = spec.meta_u64("halo")? as usize;
-    let t_fused = spec.meta_u64("steps")?;
-    let boundary = boundary_of(&spec);
-    let wants_aux = spec.inputs.len() == 3;
-    if wants_aux != aux.is_some() {
-        bail!("{artifact}: aux input mismatch (expects {wants_aux})");
-    }
-    if steps % t_fused != 0 {
-        bail!("{artifact}: steps {steps} not a multiple of fused T={t_fused}");
-    }
-    let tile = block + 2 * halo;
-    let passes = steps / t_fused;
+    let m = stencil_meta(&spec, aux.is_some(), steps)?;
+    let (block, halo, tile) = (m.block, m.halo, m.tile);
+    let boundary = m.boundary;
+    let passes = steps / m.t_fused;
 
     // Compile up front, outside the timed region (the analogue of FPGA
     // reprogramming, which the thesis also excludes from kernel timing,
@@ -67,27 +163,20 @@ pub fn run_stencil2d(
     rt.executable(artifact)?;
     let stats0 = rt.stats();
 
+    let tile_pool = TilePool::default();
     let mut metrics = Metrics::default();
-    let wall = std::time::Instant::now();
+    let wall = Instant::now();
     let mut cur = grid;
     let mut next = Grid2D::zeros(cur.ny, cur.nx);
 
     // block origins (fixed across passes)
-    let mut origins: Vec<(usize, usize)> = Vec::new();
-    let mut y0 = 0;
-    while y0 < cur.ny {
-        let mut x0 = 0;
-        while x0 < cur.nx {
-            origins.push((y0, x0));
-            x0 += block;
-        }
-        y0 += block;
-    }
+    let origins = block_origins_2d(cur.ny, cur.nx, block);
 
     for _ in 0..passes {
         let cur_ref = &cur;
         let next_ref = &mut next;
-        let mut writeback = std::time::Duration::ZERO;
+        let pool_ref = &tile_pool;
+        let mut writeback = Duration::ZERO;
         let mut blocks = 0u64;
         run_pipelined(
             origins.len(),
@@ -95,10 +184,12 @@ pub fn run_stencil2d(
             |id| {
                 let (y0, x0) = origins[id];
                 let mut inputs = Vec::with_capacity(3);
-                let t = cur_ref.extract_tile(y0 as isize, x0 as isize, tile, tile, halo, boundary);
+                let t = cur_ref.extract_tile_pooled(
+                    y0 as isize, x0 as isize, tile, tile, halo, boundary, pool_ref);
                 inputs.push(Tensor::F32(t, vec![tile, tile]));
                 if let Some(a) = aux {
-                    let p = a.extract_tile(y0 as isize, x0 as isize, tile, tile, halo, boundary);
+                    let p = a.extract_tile_pooled(
+                        y0 as isize, x0 as isize, tile, tile, halo, boundary, pool_ref);
                     inputs.push(Tensor::F32(p, vec![tile, tile]));
                 }
                 // per-step boundary restoration descriptor (see the
@@ -109,11 +200,14 @@ pub fn run_stencil2d(
                 inputs
             },
             |id, inputs| {
-                let out = rt.execute(artifact, &inputs)?;
+                let out = rt.execute_f32(artifact, &inputs)?;
                 let (y0, x0) = origins[id];
-                let _t = Timed::new(&mut writeback);
-                next_ref.write_block(y0, x0, block, block, out[0].as_f32());
+                {
+                    let _t = Timed::new(&mut writeback);
+                    next_ref.write_block(y0, x0, block, block, &out);
+                }
                 blocks += 1;
+                recycle_inputs(pool_ref, inputs);
                 Ok(())
             },
         )?;
@@ -126,9 +220,119 @@ pub fn run_stencil2d(
     metrics.wall = wall.elapsed();
     let stats = rt.stats();
     metrics.execute =
-        std::time::Duration::from_secs_f64((stats.execute_ms - stats0.execute_ms) / 1e3);
+        Duration::from_secs_f64((stats.execute_ms - stats0.execute_ms) / 1e3);
     metrics.extract =
-        std::time::Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms) / 1e3);
+        Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms) / 1e3);
+    metrics.pool_hits = tile_pool.hits();
+    metrics.pool_misses = tile_pool.misses();
+    Ok((cur, metrics))
+}
+
+/// Lane-parallel variant of [`run_stencil2d`]: extractor workers feed
+/// the pool's execute lanes through its bounded job queue; each lane
+/// runs the compute unit on its own PJRT client and writes its block
+/// back itself, off the other lanes' critical path.  Bit-identical to
+/// the single-runtime path for any lane count.
+pub fn run_stencil2d_lanes(
+    pool: &RuntimePool,
+    artifact: &str,
+    grid: Grid2D,
+    aux: Option<&Grid2D>,
+    steps: u64,
+) -> crate::Result<(Grid2D, Metrics)> {
+    let spec = pool
+        .registry()
+        .get(artifact)
+        .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
+        .clone();
+    let m = stencil_meta(&spec, aux.is_some(), steps)?;
+    let (block, halo, tile) = (m.block, m.halo, m.tile);
+    let boundary = m.boundary;
+    let passes = steps / m.t_fused;
+
+    // Compile on every lane outside the timed region.
+    pool.warmup_artifact(artifact)?;
+    let stats0 = pool.stats();
+
+    let tile_pool = Arc::new(TilePool::default());
+    let artifact_arc: Arc<str> = Arc::from(artifact);
+    let origins = Arc::new(block_origins_2d(grid.ny, grid.nx, block));
+    let blocks_done = Arc::new(AtomicU64::new(0));
+    let wb_nanos = Arc::new(AtomicU64::new(0));
+    let extractors = extractor_count(pool.lanes());
+
+    let mut metrics = Metrics::default();
+    let wall = Instant::now();
+    let mut cur = grid;
+    let mut next = Grid2D::zeros(cur.ny, cur.nx);
+
+    for _ in 0..passes {
+        // SAFETY: every job writes a distinct origin on the block
+        // lattice (disjoint interiors), `next` is not touched below
+        // until the lanes are drained, and the IdleGuard drains them
+        // even on an unwinding exit from this frame.
+        let writer = unsafe { next.shared_writer() };
+        let cur_ref = &cur;
+        let guard = IdleGuard::new(pool);
+        let fed = feed_blocks(
+            origins.len(),
+            extractors,
+            |id| {
+                let (y0, x0) = origins[id];
+                let mut inputs = Vec::with_capacity(3);
+                let t = cur_ref.extract_tile_pooled(
+                    y0 as isize, x0 as isize, tile, tile, halo, boundary, &tile_pool);
+                inputs.push(Tensor::F32(t, vec![tile, tile]));
+                if let Some(a) = aux {
+                    let p = a.extract_tile_pooled(
+                        y0 as isize, x0 as isize, tile, tile, halo, boundary, &tile_pool);
+                    inputs.push(Tensor::F32(p, vec![tile, tile]));
+                }
+                let (t0, t1) = oob_axis(y0, block, halo, cur_ref.ny);
+                let (l0, l1) = oob_axis(x0, block, halo, cur_ref.nx);
+                inputs.push(Tensor::I32(vec![t0, t1, l0, l1], vec![4]));
+                inputs
+            },
+            |id, inputs| {
+                let artifact = artifact_arc.clone();
+                let origins = origins.clone();
+                let tile_pool = tile_pool.clone();
+                let blocks_done = blocks_done.clone();
+                let wb_nanos = wb_nanos.clone();
+                pool.submit(move |_lane, rt| {
+                    let out = rt.execute_f32(&artifact, &inputs)?;
+                    let (y0, x0) = origins[id];
+                    let t0 = Instant::now();
+                    writer.write_block(y0, x0, block, block, &out);
+                    wb_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    blocks_done.fetch_add(1, Ordering::Relaxed);
+                    recycle_inputs(&tile_pool, inputs);
+                    Ok(())
+                });
+                Ok(())
+            },
+        );
+        // Drain the lanes before touching `next` (pass barrier), then
+        // surface extractor-side and lane-side failures in that order.
+        let idle = pool.wait_idle();
+        drop(guard);
+        fed?;
+        idle?;
+        std::mem::swap(&mut cur, &mut next);
+    }
+
+    metrics.blocks = blocks_done.load(Ordering::Relaxed);
+    metrics.writeback = Duration::from_nanos(wb_nanos.load(Ordering::Relaxed));
+    metrics.cell_updates = (cur.ny * cur.nx) as u64 * steps;
+    metrics.wall = wall.elapsed();
+    let stats = pool.stats();
+    // Aggregate lane-seconds: with N lanes this can exceed wall time.
+    metrics.execute =
+        Duration::from_secs_f64((stats.execute_ms - stats0.execute_ms) / 1e3);
+    metrics.extract =
+        Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms) / 1e3);
+    metrics.pool_hits = tile_pool.hits();
+    metrics.pool_misses = tile_pool.misses();
     Ok((cur, metrics))
 }
 
@@ -145,47 +349,27 @@ pub fn run_stencil3d(
         .get(artifact)
         .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
         .clone();
-    let block = spec.meta_u64("block")? as usize;
-    let halo = spec.meta_u64("halo")? as usize;
-    let t_fused = spec.meta_u64("steps")?;
-    let boundary = boundary_of(&spec);
-    let wants_aux = spec.inputs.len() == 3;
-    if wants_aux != aux.is_some() {
-        bail!("{artifact}: aux input mismatch");
-    }
-    if steps % t_fused != 0 {
-        bail!("{artifact}: steps {steps} not a multiple of fused T={t_fused}");
-    }
-    let tile = block + 2 * halo;
-    let passes = steps / t_fused;
+    let m = stencil_meta(&spec, aux.is_some(), steps)?;
+    let (block, halo, tile) = (m.block, m.halo, m.tile);
+    let boundary = m.boundary;
+    let passes = steps / m.t_fused;
 
     rt.executable(artifact)?;
     let stats0 = rt.stats();
 
+    let tile_pool = TilePool::default();
     let mut metrics = Metrics::default();
-    let wall = std::time::Instant::now();
+    let wall = Instant::now();
     let mut cur = grid;
     let mut next = Grid3D::zeros(cur.nz, cur.ny, cur.nx);
 
-    let mut origins: Vec<(usize, usize, usize)> = Vec::new();
-    let mut z0 = 0;
-    while z0 < cur.nz {
-        let mut y0 = 0;
-        while y0 < cur.ny {
-            let mut x0 = 0;
-            while x0 < cur.nx {
-                origins.push((z0, y0, x0));
-                x0 += block;
-            }
-            y0 += block;
-        }
-        z0 += block;
-    }
+    let origins = block_origins_3d(cur.nz, cur.ny, cur.nx, block);
 
     for _ in 0..passes {
         let cur_ref = &cur;
         let next_ref = &mut next;
-        let mut writeback = std::time::Duration::ZERO;
+        let pool_ref = &tile_pool;
+        let mut writeback = Duration::ZERO;
         let mut blocks = 0u64;
         run_pipelined(
             origins.len(),
@@ -193,12 +377,12 @@ pub fn run_stencil3d(
             |id| {
                 let (z0, y0, x0) = origins[id];
                 let mut inputs = Vec::with_capacity(3);
-                let t = cur_ref.extract_tile_owned(
-                    z0 as isize, y0 as isize, x0 as isize, tile, halo, boundary);
+                let t = cur_ref.extract_tile_pooled(
+                    z0 as isize, y0 as isize, x0 as isize, tile, halo, boundary, pool_ref);
                 inputs.push(Tensor::F32(t, vec![tile, tile, tile]));
                 if let Some(a) = aux {
-                    let p = a.extract_tile_owned(
-                        z0 as isize, y0 as isize, x0 as isize, tile, halo, boundary);
+                    let p = a.extract_tile_pooled(
+                        z0 as isize, y0 as isize, x0 as isize, tile, halo, boundary, pool_ref);
                     inputs.push(Tensor::F32(p, vec![tile, tile, tile]));
                 }
                 let (z0o, z1o) = oob_axis(z0, block, halo, cur_ref.nz);
@@ -208,11 +392,14 @@ pub fn run_stencil3d(
                 inputs
             },
             |id, inputs| {
-                let out = rt.execute(artifact, &inputs)?;
+                let out = rt.execute_f32(artifact, &inputs)?;
                 let (z0, y0, x0) = origins[id];
-                let _t = Timed::new(&mut writeback);
-                next_ref.write_block(z0, y0, x0, block, out[0].as_f32());
+                {
+                    let _t = Timed::new(&mut writeback);
+                    next_ref.write_block(z0, y0, x0, block, &out);
+                }
                 blocks += 1;
+                recycle_inputs(pool_ref, inputs);
                 Ok(())
             },
         )?;
@@ -225,9 +412,111 @@ pub fn run_stencil3d(
     metrics.wall = wall.elapsed();
     let stats = rt.stats();
     metrics.execute =
-        std::time::Duration::from_secs_f64((stats.execute_ms - stats0.execute_ms) / 1e3);
+        Duration::from_secs_f64((stats.execute_ms - stats0.execute_ms) / 1e3);
     metrics.extract =
-        std::time::Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms) / 1e3);
+        Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms) / 1e3);
+    metrics.pool_hits = tile_pool.hits();
+    metrics.pool_misses = tile_pool.misses();
+    Ok((cur, metrics))
+}
+
+/// Lane-parallel variant of [`run_stencil3d`]; see
+/// [`run_stencil2d_lanes`] for the engine layout.
+pub fn run_stencil3d_lanes(
+    pool: &RuntimePool,
+    artifact: &str,
+    grid: Grid3D,
+    aux: Option<&Grid3D>,
+    steps: u64,
+) -> crate::Result<(Grid3D, Metrics)> {
+    let spec = pool
+        .registry()
+        .get(artifact)
+        .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
+        .clone();
+    let m = stencil_meta(&spec, aux.is_some(), steps)?;
+    let (block, halo, tile) = (m.block, m.halo, m.tile);
+    let boundary = m.boundary;
+    let passes = steps / m.t_fused;
+
+    pool.warmup_artifact(artifact)?;
+    let stats0 = pool.stats();
+
+    let tile_pool = Arc::new(TilePool::default());
+    let artifact_arc: Arc<str> = Arc::from(artifact);
+    let origins = Arc::new(block_origins_3d(grid.nz, grid.ny, grid.nx, block));
+    let blocks_done = Arc::new(AtomicU64::new(0));
+    let wb_nanos = Arc::new(AtomicU64::new(0));
+    let extractors = extractor_count(pool.lanes());
+
+    let mut metrics = Metrics::default();
+    let wall = Instant::now();
+    let mut cur = grid;
+    let mut next = Grid3D::zeros(cur.nz, cur.ny, cur.nx);
+
+    for _ in 0..passes {
+        // SAFETY: same contract as run_stencil2d_lanes — disjoint block
+        // writes, lanes drained (IdleGuard) before `next` is reused.
+        let writer = unsafe { next.shared_writer() };
+        let cur_ref = &cur;
+        let guard = IdleGuard::new(pool);
+        let fed = feed_blocks(
+            origins.len(),
+            extractors,
+            |id| {
+                let (z0, y0, x0) = origins[id];
+                let mut inputs = Vec::with_capacity(3);
+                let t = cur_ref.extract_tile_pooled(
+                    z0 as isize, y0 as isize, x0 as isize, tile, halo, boundary, &tile_pool);
+                inputs.push(Tensor::F32(t, vec![tile, tile, tile]));
+                if let Some(a) = aux {
+                    let p = a.extract_tile_pooled(
+                        z0 as isize, y0 as isize, x0 as isize, tile, halo, boundary, &tile_pool);
+                    inputs.push(Tensor::F32(p, vec![tile, tile, tile]));
+                }
+                let (z0o, z1o) = oob_axis(z0, block, halo, cur_ref.nz);
+                let (y0o, y1o) = oob_axis(y0, block, halo, cur_ref.ny);
+                let (x0o, x1o) = oob_axis(x0, block, halo, cur_ref.nx);
+                inputs.push(Tensor::I32(vec![z0o, z1o, y0o, y1o, x0o, x1o], vec![6]));
+                inputs
+            },
+            |id, inputs| {
+                let artifact = artifact_arc.clone();
+                let origins = origins.clone();
+                let tile_pool = tile_pool.clone();
+                let blocks_done = blocks_done.clone();
+                let wb_nanos = wb_nanos.clone();
+                pool.submit(move |_lane, rt| {
+                    let out = rt.execute_f32(&artifact, &inputs)?;
+                    let (z0, y0, x0) = origins[id];
+                    let t0 = Instant::now();
+                    writer.write_block(z0, y0, x0, block, &out);
+                    wb_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    blocks_done.fetch_add(1, Ordering::Relaxed);
+                    recycle_inputs(&tile_pool, inputs);
+                    Ok(())
+                });
+                Ok(())
+            },
+        );
+        let idle = pool.wait_idle();
+        drop(guard);
+        fed?;
+        idle?;
+        std::mem::swap(&mut cur, &mut next);
+    }
+
+    metrics.blocks = blocks_done.load(Ordering::Relaxed);
+    metrics.writeback = Duration::from_nanos(wb_nanos.load(Ordering::Relaxed));
+    metrics.cell_updates = (cur.nz * cur.ny * cur.nx) as u64 * steps;
+    metrics.wall = wall.elapsed();
+    let stats = pool.stats();
+    metrics.execute =
+        Duration::from_secs_f64((stats.execute_ms - stats0.execute_ms) / 1e3);
+    metrics.extract =
+        Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms) / 1e3);
+    metrics.pool_hits = tile_pool.hits();
+    metrics.pool_misses = tile_pool.misses();
     Ok((cur, metrics))
 }
 
@@ -251,32 +540,26 @@ pub fn run_stencil2d_with_scalar(
     let boundary = boundary_of(&spec);
     let tile = block + 2 * halo;
 
+    let tile_pool = TilePool::default();
     let mut metrics = Metrics::default();
-    let wall = std::time::Instant::now();
+    let wall = Instant::now();
     let cur = grid;
     let mut next = Grid2D::zeros(cur.ny, cur.nx);
 
-    let mut origins: Vec<(usize, usize)> = Vec::new();
-    let mut y0 = 0;
-    while y0 < cur.ny {
-        let mut x0 = 0;
-        while x0 < cur.nx {
-            origins.push((y0, x0));
-            x0 += block;
-        }
-        y0 += block;
-    }
+    let origins = block_origins_2d(cur.ny, cur.nx, block);
 
     rt.executable(artifact)?;
     let cur_ref = &cur;
     let next_ref = &mut next;
+    let pool_ref = &tile_pool;
     let mut blocks = 0u64;
     run_pipelined(
         origins.len(),
         4,
         |id| {
             let (y0, x0) = origins[id];
-            let t = cur_ref.extract_tile(y0 as isize, x0 as isize, tile, tile, halo, boundary);
+            let t = cur_ref.extract_tile_pooled(
+                y0 as isize, x0 as isize, tile, tile, halo, boundary, pool_ref);
             let (t0, t1) = oob_axis(y0, block, halo, cur_ref.ny);
             let (l0, l1) = oob_axis(x0, block, halo, cur_ref.nx);
             vec![
@@ -286,15 +569,110 @@ pub fn run_stencil2d_with_scalar(
             ]
         },
         |id, inputs| {
-            let out = rt.execute(artifact, &inputs)?;
+            let out = rt.execute_f32(artifact, &inputs)?;
             let (y0, x0) = origins[id];
-            next_ref.write_block(y0, x0, block, block, out[0].as_f32());
+            next_ref.write_block(y0, x0, block, block, &out);
             blocks += 1;
+            recycle_inputs(pool_ref, inputs);
             Ok(())
         },
     )?;
     metrics.blocks += blocks;
     metrics.cell_updates = (cur.ny * cur.nx) as u64 * t_fused as u64;
     metrics.wall = wall.elapsed();
+    metrics.pool_hits = tile_pool.hits();
+    metrics.pool_misses = tile_pool.misses();
     Ok((next, metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // tile coverage invariant: oob(top) + in-grid rows + oob(bottom)
+    // always equals the issued tile width.
+    fn check_covers(o0: usize, block: usize, halo: usize, n: usize) {
+        let tile = (block + 2 * halo) as i64;
+        let (top, bottom) = oob_axis(o0, block, halo, n);
+        let lo = o0 as i64 - halo as i64;
+        let hi = o0 as i64 + (block + halo) as i64;
+        let in_grid = (hi.min(n as i64) - lo.max(0)).max(0);
+        assert_eq!(
+            top as i64 + in_grid + bottom as i64,
+            tile,
+            "o0={o0} block={block} halo={halo} n={n}"
+        );
+    }
+
+    #[test]
+    fn oob_axis_interior_block_has_no_oob() {
+        assert_eq!(oob_axis(256, 256, 4, 1024), (0, 0));
+        check_covers(256, 256, 4, 1024);
+    }
+
+    #[test]
+    fn oob_axis_origin_at_grid_start_and_edge() {
+        // origin 0: only the leading halo hangs out
+        assert_eq!(oob_axis(0, 256, 4, 1024), (4, 0));
+        // last full block: only the trailing halo hangs out
+        assert_eq!(oob_axis(768, 256, 4, 1024), (0, 4));
+        check_covers(0, 256, 4, 1024);
+        check_covers(768, 256, 4, 1024);
+    }
+
+    #[test]
+    fn oob_axis_block_larger_than_grid() {
+        // a 512-block against a 300-cell grid: the whole trailing 212
+        // cells of interior plus the 4-halo are out of grid.
+        assert_eq!(oob_axis(0, 512, 4, 300), (4, 216));
+        check_covers(0, 512, 4, 300);
+    }
+
+    #[test]
+    fn oob_axis_partial_edge_block() {
+        // origin 256 with block 256 against n=300: 212 interior cells
+        // plus the trailing halo are out of grid.
+        assert_eq!(oob_axis(256, 256, 4, 300), (0, 216));
+        check_covers(256, 256, 4, 300);
+    }
+
+    #[test]
+    fn oob_axis_halo_larger_than_extent() {
+        // halo 8 on a 2-cell grid with a 4-block tile (tile = 20):
+        // 8 leading + 2 in-grid + 10 trailing.
+        assert_eq!(oob_axis(0, 4, 8, 2), (8, 10));
+        check_covers(0, 4, 8, 2);
+    }
+
+    #[test]
+    fn oob_axis_counts_clamped_to_tile() {
+        // degenerate: both sides saturate but never exceed the tile.
+        let (top, bottom) = oob_axis(0, 2, 50, 1);
+        let tile = (2 + 2 * 50) as i32;
+        assert!(top <= tile && bottom <= tile);
+        check_covers(0, 2, 50, 1);
+    }
+
+    #[test]
+    fn oob_axis_coverage_sweep() {
+        for block in [2usize, 7, 64] {
+            for halo in [0usize, 1, 4, 9] {
+                for n in [1usize, 5, 63, 64, 65, 200] {
+                    let mut o0 = 0;
+                    while o0 < n {
+                        check_covers(o0, block, halo, n);
+                        o0 += block;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn extractor_count_scales_with_lanes() {
+        assert_eq!(extractor_count(1), 1);
+        assert_eq!(extractor_count(2), 1);
+        assert_eq!(extractor_count(4), 2);
+        assert_eq!(extractor_count(8), 4);
+    }
 }

@@ -10,8 +10,9 @@
 //! Layer map:
 //!
 //! * [`runtime`] — loads `artifacts/*.hlo.txt` (HLO text produced by
-//!   `python/compile/aot.py`) into a PJRT CPU client and executes them.
-//!   Python never runs at request time.
+//!   `python/compile/aot.py`) into PJRT CPU clients and executes them;
+//!   [`runtime::pool`] replicates one client per lane thread (the
+//!   software `PAR` knob).  Python never runs at request time.
 //! * [`coordinator`] — the L3 system: grid decomposition with halos,
 //!   overlapped spatial blocking, temporal-block streaming, metrics.
 //! * [`perfmodel`] — the thesis's general FPGA performance model

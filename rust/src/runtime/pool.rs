@@ -1,0 +1,331 @@
+//! Multi-lane runtime pool: N worker threads, each owning its own PJRT
+//! CPU client — the software analogue of the thesis's replicated compute
+//! units (`PAR`, §4.3.1.6, §5.3).
+//!
+//! The PJRT client wraps an `Rc` and is `!Send`, so a [`Runtime`] can
+//! never cross threads.  The pool sidesteps that by *creating* one
+//! `Runtime` per lane thread, on that thread: the artifact manifest is
+//! parsed once and shared (cloned) into every lane, while executables are
+//! compiled per lane (per-lane compile caches — each PJRT client must own
+//! its executables).
+//!
+//! Work arrives as boxed `FnOnce(lane, &Runtime)` jobs through a bounded
+//! queue (backpressure for the extractor side).  Errors and panics inside
+//! jobs poison the pool until the next [`RuntimePool::wait_idle`], which
+//! reports the first failure; remaining queued jobs of the failed batch
+//! are drained without running.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context};
+
+use super::{Registry, Runtime, RuntimeStats, Tensor};
+
+/// A unit of pool work.  Takes the lane index and that lane's runtime.
+type Job = Box<dyn FnOnce(usize, &Runtime) -> crate::Result<()> + Send + 'static>;
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    in_flight: usize,
+    closed: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    /// Lanes wait here for work.
+    job_ready: Condvar,
+    /// Producers wait here for queue space.
+    space: Condvar,
+    /// `wait_idle` callers wait here for the queue to drain.
+    idle: Condvar,
+    /// First error from any lane since the last `wait_idle`.
+    error: Mutex<Option<anyhow::Error>>,
+    /// Set alongside `error`; lanes drain (skip) jobs while poisoned.
+    poisoned: AtomicBool,
+    /// Aggregated per-lane runtime stats (updated after every job).
+    stats: Mutex<RuntimeStats>,
+    queue_cap: usize,
+}
+
+impl Shared {
+    fn record_error(&self, e: anyhow::Error) {
+        self.poisoned.store(true, Ordering::Release);
+        self.error.lock().unwrap().get_or_insert(e);
+    }
+}
+
+/// `N` lane threads, each with its own PJRT client and compile cache.
+pub struct RuntimePool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    registry: Registry,
+    lanes: usize,
+}
+
+impl RuntimePool {
+    /// Open the artifact directory and spin up `lanes` worker threads
+    /// (clamped to ≥ 1).  The manifest is read once on the calling
+    /// thread; each lane then creates its own PJRT client.  Returns an
+    /// error if the manifest fails to parse or any lane fails to start.
+    pub fn open(dir: impl AsRef<Path>, lanes: usize) -> crate::Result<RuntimePool> {
+        let lanes = lanes.max(1);
+        let dir: PathBuf = dir.as_ref().to_path_buf();
+        let registry = Registry::load(dir.join("manifest.txt"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                in_flight: 0,
+                closed: false,
+            }),
+            job_ready: Condvar::new(),
+            space: Condvar::new(),
+            idle: Condvar::new(),
+            error: Mutex::new(None),
+            poisoned: AtomicBool::new(false),
+            stats: Mutex::new(RuntimeStats::default()),
+            queue_cap: (lanes * 4).max(8),
+        });
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<crate::Result<()>>();
+        let mut handles = Vec::with_capacity(lanes);
+        for lane in 0..lanes {
+            let dir = dir.clone();
+            let reg = registry.clone();
+            let sh = shared.clone();
+            let tx = ready_tx.clone();
+            let handle = match std::thread::Builder::new()
+                .name(format!("rt-lane-{lane}"))
+                .spawn(move || lane_main(lane, dir, reg, sh, tx))
+            {
+                Ok(h) => h,
+                Err(e) => {
+                    // Release the lanes already spawned so they exit.
+                    shared.state.lock().unwrap().closed = true;
+                    shared.job_ready.notify_all();
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(anyhow!("spawning lane {lane} failed: {e}"));
+                }
+            };
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        let pool = RuntimePool { shared, handles, registry, lanes };
+        for _ in 0..lanes {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("lane thread died during startup"))?
+                .context("opening a lane runtime")?;
+        }
+        Ok(pool)
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Aggregate execution stats across all lanes.
+    pub fn stats(&self) -> RuntimeStats {
+        self.shared.stats.lock().unwrap().clone()
+    }
+
+    /// Enqueue a job.  Blocks while the queue is at capacity (the
+    /// bounded-channel backpressure between extractors and lanes).
+    pub fn submit<F>(&self, job: F)
+    where
+        F: FnOnce(usize, &Runtime) -> crate::Result<()> + Send + 'static,
+    {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.jobs.len() >= self.shared.queue_cap && !st.closed {
+            st = self.shared.space.wait(st).unwrap();
+        }
+        if st.closed {
+            return; // pool shutting down; job dropped
+        }
+        st.jobs.push_back(Box::new(job));
+        drop(st);
+        self.shared.job_ready.notify_one();
+    }
+
+    /// Block until every submitted job has finished, then report the
+    /// first error (if any) and clear the poison flag so the pool can be
+    /// reused.
+    pub fn wait_idle(&self) -> crate::Result<()> {
+        let mut st = self.shared.state.lock().unwrap();
+        while !(st.jobs.is_empty() && st.in_flight == 0) {
+            st = self.shared.idle.wait(st).unwrap();
+        }
+        drop(st);
+        self.shared.poisoned.store(false, Ordering::Release);
+        match self.shared.error.lock().unwrap().take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Compile `artifact` on *every* lane, outside any timed region (the
+    /// analogue of FPGA reprogramming, excluded from kernel timing as in
+    /// §4.2.4).  A barrier keeps each lane from grabbing two warmup jobs.
+    pub fn warmup_artifact(&self, artifact: &str) -> crate::Result<()> {
+        // Drain any stale poison first: a poisoned lane would skip its
+        // warmup job and leave the other lanes parked on the barrier.
+        self.wait_idle()?;
+        let barrier = Arc::new(Barrier::new(self.lanes));
+        let name: Arc<str> = Arc::from(artifact);
+        for _ in 0..self.lanes {
+            let b = barrier.clone();
+            let n = name.clone();
+            self.submit(move |lane, rt| {
+                // Catch panics locally: an unwinding compile must not
+                // skip the barrier, or the other lanes would park in
+                // b.wait() forever (lane_main's catch_unwind is too
+                // late — it runs after this job body).
+                let r = catch_unwind(AssertUnwindSafe(|| rt.executable(&n).map(|_| ())));
+                // Rendezvous even on error so every lane's wait releases.
+                b.wait();
+                match r {
+                    Ok(r) => r,
+                    Err(p) => Err(anyhow!(
+                        "lane {lane} warmup panicked: {}",
+                        crate::coordinator::scheduler::panic_text(p.as_ref())
+                    )),
+                }
+            });
+        }
+        self.wait_idle()
+    }
+
+    /// Convenience single execution on whichever lane is free first.
+    pub fn execute(&self, artifact: &str, inputs: Vec<Tensor>) -> crate::Result<Vec<Tensor>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let name: Arc<str> = Arc::from(artifact);
+        self.submit(move |_lane, rt| {
+            // The caller sees the execution error through the channel;
+            // don't also poison the pool.
+            let _ = tx.send(rt.execute(&name, &inputs));
+            Ok(())
+        });
+        match rx.recv() {
+            Ok(r) => r,
+            // The lane dropped the sender without replying: it skipped
+            // the job because the pool was poisoned by an earlier batch
+            // (or the lane died).  Harvest and report the real error
+            // rather than a misleading channel failure.
+            Err(_) => Err(self
+                .wait_idle()
+                .err()
+                .unwrap_or_else(|| anyhow!("lane dropped the result channel"))),
+        }
+    }
+}
+
+impl Drop for RuntimePool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+        }
+        self.shared.job_ready.notify_all();
+        self.shared.space.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Guard that waits for the pool to drain on drop.  Hold one across any
+/// region that submits jobs borrowing stack data through raw-pointer
+/// writers (see [`crate::coordinator::grid::GridWriter2D`]): even on a
+/// panic-unwind of the submitting frame, the guard drains the lanes
+/// before the borrowed grid is freed.
+pub struct IdleGuard<'a>(&'a RuntimePool);
+
+impl<'a> IdleGuard<'a> {
+    pub fn new(pool: &'a RuntimePool) -> Self {
+        IdleGuard(pool)
+    }
+}
+
+impl Drop for IdleGuard<'_> {
+    fn drop(&mut self) {
+        // Error (if any) is surfaced by the runner's own wait_idle call;
+        // this drop only guarantees quiescence.
+        let _ = self.0.wait_idle();
+    }
+}
+
+fn lane_main(
+    lane: usize,
+    dir: PathBuf,
+    registry: Registry,
+    shared: Arc<Shared>,
+    ready_tx: std::sync::mpsc::Sender<crate::Result<()>>,
+) {
+    let rt = match Runtime::with_registry(&dir, registry) {
+        Ok(rt) => {
+            let _ = ready_tx.send(Ok(()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    drop(ready_tx);
+    let mut last = RuntimeStats::default();
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    st.in_flight += 1;
+                    break Some(j);
+                }
+                if st.closed {
+                    break None;
+                }
+                st = shared.job_ready.wait(st).unwrap();
+            }
+        };
+        let Some(job) = job else { return };
+        shared.space.notify_one();
+
+        if !shared.poisoned.load(Ordering::Acquire) {
+            match catch_unwind(AssertUnwindSafe(|| job(lane, &rt))) {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => shared.record_error(e),
+                Err(p) => shared.record_error(anyhow!(
+                    "lane {lane} job panicked: {}",
+                    crate::coordinator::scheduler::panic_text(p.as_ref())
+                )),
+            }
+        }
+
+        // Fold this lane's stats delta into the pool aggregate.
+        let now = rt.stats();
+        {
+            let mut agg = shared.stats.lock().unwrap();
+            agg.executions += now.executions - last.executions;
+            agg.compile_ms += now.compile_ms - last.compile_ms;
+            agg.execute_ms += now.execute_ms - last.execute_ms;
+            agg.marshal_ms += now.marshal_ms - last.marshal_ms;
+        }
+        last = now;
+
+        let mut st = shared.state.lock().unwrap();
+        st.in_flight -= 1;
+        if st.in_flight == 0 && st.jobs.is_empty() {
+            shared.idle.notify_all();
+        }
+    }
+}

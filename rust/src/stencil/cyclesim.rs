@@ -109,7 +109,9 @@ pub fn model_accuracy(
 mod tests {
     use super::*;
     use crate::device::arria_10;
-    use crate::stencil::config::{default_workload, diffusion2d, diffusion3d, AcceleratorConfig};
+    use crate::stencil::config::{
+        default_workload, diffusion2d, diffusion3d, AcceleratorConfig, Workload,
+    };
 
     #[test]
     fn sim_and_model_agree_within_thesis_band() {
@@ -142,6 +144,4 @@ mod tests {
         let c_odd = simulate_cycles(&shape, &odd, &cfg, &dev, 250.0);
         assert!(c_odd > c_even);
     }
-
-    use crate::stencil::config::Workload;
 }

@@ -9,7 +9,7 @@
 
 use fpga_hpc::coordinator::grid::{Grid2D, Grid3D};
 use fpga_hpc::coordinator::{apps, reference, stencil_runner};
-use fpga_hpc::runtime::{Runtime, Tensor};
+use fpga_hpc::runtime::{Runtime, RuntimePool, Tensor};
 use fpga_hpc::testutil::{assert_allclose, max_abs_diff, Rng};
 
 fn runtime() -> Runtime {
@@ -186,6 +186,125 @@ fn lud_app_matches_reference() {
     for i in 0..n {
         assert_allclose(&got[i], &want[i], 1e-3, 1e-3, &format!("lud row {i}"));
     }
+}
+
+#[test]
+fn lane_count_invariance_hotspot2d() {
+    // lanes=1 and lanes=4 must produce bit-identical grids, both equal
+    // to the single-runtime pipelined path: block compute is identical
+    // per block and interiors are disjoint, so writeback order is
+    // invisible.
+    let temp = rand_grid2d(512, 512, 21, 60.0, 90.0);
+    let power = rand_grid2d(512, 512, 22, 0.0, 1.0);
+    let steps = 8;
+    let pool1 = RuntimePool::open("artifacts", 1).unwrap();
+    let (one, m1) =
+        stencil_runner::run_stencil2d_lanes(&pool1, "hotspot2d", temp.clone(), Some(&power), steps)
+            .unwrap();
+    let pool4 = RuntimePool::open("artifacts", 4).unwrap();
+    let (four, m4) =
+        stencil_runner::run_stencil2d_lanes(&pool4, "hotspot2d", temp.clone(), Some(&power), steps)
+            .unwrap();
+    assert_eq!(one.data, four.data, "hotspot2d: lanes=1 vs lanes=4 differ");
+    assert_eq!(m1.blocks, m4.blocks);
+    let rt = runtime();
+    let (single, _) =
+        stencil_runner::run_stencil2d(&rt, "hotspot2d", temp, Some(&power), steps).unwrap();
+    assert_eq!(one.data, single.data, "pooled vs single-runtime path differ");
+}
+
+#[test]
+fn lane_count_invariance_diffusion3d() {
+    let grid = rand_grid3d(64, 64, 64, 31, 0.0, 1.0);
+    let steps = 4;
+    let pool1 = RuntimePool::open("artifacts", 1).unwrap();
+    let (one, _) =
+        stencil_runner::run_stencil3d_lanes(&pool1, "diffusion3d_r1", grid.clone(), None, steps)
+            .unwrap();
+    let pool4 = RuntimePool::open("artifacts", 4).unwrap();
+    let (four, _) =
+        stencil_runner::run_stencil3d_lanes(&pool4, "diffusion3d_r1", grid.clone(), None, steps)
+            .unwrap();
+    assert_eq!(one.data, four.data, "diffusion3d: lanes=1 vs lanes=4 differ");
+    let rt = runtime();
+    let (single, _) =
+        stencil_runner::run_stencil3d(&rt, "diffusion3d_r1", grid, None, steps).unwrap();
+    assert_eq!(one.data, single.data, "pooled vs single-runtime path differ");
+}
+
+#[test]
+fn steady_state_passes_reuse_tile_buffers() {
+    // Two passes (T=4, steps=8): pass 1 may allocate (pool warm-up),
+    // pass 2 must be served entirely from the recycle pool — zero
+    // per-block heap allocations for tile extraction in steady state.
+    let rt = runtime();
+    let grid = rand_grid2d(1024, 1024, 99, 0.0, 1.0);
+    let (_, m) = stencil_runner::run_stencil2d(&rt, "diffusion2d_r1", grid, None, 8).unwrap();
+    let blocks_per_pass = m.blocks / 2;
+    assert!(blocks_per_pass > 0);
+    assert!(
+        m.pool_misses <= blocks_per_pass,
+        "misses {} exceed pass-1 tile requests {blocks_per_pass} — steady-state passes allocated",
+        m.pool_misses
+    );
+    assert!(
+        m.pool_hits >= blocks_per_pass,
+        "pass 2 should be all pool hits, got {} of {blocks_per_pass}",
+        m.pool_hits
+    );
+}
+
+#[test]
+fn pooled_runner_reuses_tile_buffers() {
+    let grid = rand_grid2d(1024, 1024, 101, 0.0, 1.0);
+    let pool = RuntimePool::open("artifacts", 2).unwrap();
+    let (_, m) =
+        stencil_runner::run_stencil2d_lanes(&pool, "diffusion2d_r1", grid, None, 8).unwrap();
+    let blocks_per_pass = m.blocks / 2;
+    assert!(
+        m.pool_misses <= blocks_per_pass,
+        "lane path: steady-state passes allocated ({} misses)",
+        m.pool_misses
+    );
+    assert!(m.pool_hits >= blocks_per_pass);
+}
+
+#[test]
+fn runtime_pool_executes_and_aggregates_stats() {
+    let pool = RuntimePool::open("artifacts", 2).unwrap();
+    assert_eq!(pool.lanes(), 2);
+    pool.warmup_artifact("sum_sumsq").unwrap();
+    let spec = pool.registry().get("sum_sumsq").unwrap().clone();
+    let n = spec.inputs[0].shape[0];
+    let out = pool
+        .execute("sum_sumsq", vec![Tensor::F32(vec![1.0; n * n], vec![n, n])])
+        .unwrap();
+    assert!((out[0].as_f32()[0] - (n * n) as f32).abs() < 1.0);
+    let stats = pool.stats();
+    assert!(stats.executions >= 1);
+    assert!(stats.compile_ms > 0.0, "warmup compiles on every lane");
+}
+
+#[test]
+fn runtime_pool_surfaces_lane_errors_and_recovers() {
+    let pool = RuntimePool::open("artifacts", 2).unwrap();
+    pool.submit(|_, rt| rt.execute("no_such_artifact", &[]).map(|_| ()));
+    let err = pool.wait_idle().expect_err("lane error must surface");
+    assert!(format!("{err}").contains("no_such_artifact"), "got: {err}");
+    // The pool un-poisons after reporting and keeps working.
+    pool.wait_idle().unwrap();
+    let spec = pool.registry().get("sum_sumsq").unwrap().clone();
+    let n = spec.inputs[0].shape[0];
+    pool.execute("sum_sumsq", vec![Tensor::F32(vec![0.5; n * n], vec![n, n])])
+        .unwrap();
+}
+
+#[test]
+fn runtime_pool_surfaces_job_panics() {
+    let pool = RuntimePool::open("artifacts", 1).unwrap();
+    pool.submit(|_, _| panic!("job exploded"));
+    let err = pool.wait_idle().expect_err("panic must surface as error");
+    assert!(format!("{err}").contains("job exploded"), "got: {err}");
 }
 
 #[test]
