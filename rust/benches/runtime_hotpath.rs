@@ -5,11 +5,14 @@
 //! 2D/3D stencil compute units — the numbers the §Perf optimization loop
 //! in EXPERIMENTS.md tracks.  The scheduler-lanes sweep at the end runs
 //! the same streamed workload through the multi-lane engine at 1/2/4
-//! lanes and writes `BENCH_runtime.json` for trajectory tracking.
+//! lanes under **both** inter-pass schedules — `barrier` (drain between
+//! passes, the PR 1 baseline) and `pipelined` (dependency-tracked
+//! cross-pass writeback) — and writes `BENCH_runtime.json` for
+//! trajectory tracking; CI gates on pipelined-vs-barrier at lanes=4.
 
 use fpga_hpc::benchutil::{write_bench_json, BenchRow, Bencher};
 use fpga_hpc::coordinator::grid::{Boundary, Grid2D};
-use fpga_hpc::coordinator::stencil_runner;
+use fpga_hpc::coordinator::{stencil_runner, PassMode};
 use fpga_hpc::runtime::{Runtime, RuntimePool, Tensor};
 use fpga_hpc::testutil::Rng;
 
@@ -73,38 +76,47 @@ fn main() {
         stats.executions, stats.execute_ms, stats.marshal_ms
     );
 
-    // --- scheduler-lanes sweep: replicated compute units ---
+    // --- scheduler-lanes sweep: replicated compute units, barrier vs
+    // --- cross-pass pipelined inter-pass schedules ---
     println!("\n=== scheduler-lanes sweep (streamed diffusion2d 1024^2 x16) ===\n");
     let mut rows = Vec::new();
     for lanes in [1usize, 2, 4] {
         let pool = RuntimePool::open("artifacts", lanes).expect("pool open");
         pool.warmup_artifact("diffusion2d_r1").unwrap();
         // one unmeasured run to warm per-lane compile caches and the
-        // allocator (each run owns its tile pool: pass 1 fills the
+        // allocator (each run owns its tile pools: pass 1 fills the
         // shelves, later passes extract allocation-free)
         stencil_runner::run_stencil2d_lanes(&pool, "diffusion2d_r1", grid.clone(), None, 4)
             .unwrap();
-        let (_, m) =
-            stencil_runner::run_stencil2d_lanes(&pool, "diffusion2d_r1", grid.clone(), None, 16)
-                .unwrap();
-        println!("lanes={lanes}: {}", m.summary());
-        rows.push(BenchRow {
-            name: "streamed_diffusion2d_1024_16steps".into(),
-            lanes,
-            gcells_per_sec: m.gcell_per_sec(),
-            wall_secs: m.wall.as_secs_f64(),
-            blocks: m.blocks,
-            pool_hits: m.pool_hits,
-            pool_misses: m.pool_misses,
-        });
+        for (mode, tag) in [(PassMode::Barrier, "barrier"), (PassMode::Pipelined, "pipelined")] {
+            let (_, m) = stencil_runner::run_stencil2d_lanes_mode(
+                &pool, "diffusion2d_r1", grid.clone(), None, 16, mode,
+            )
+            .unwrap();
+            println!("lanes={lanes} {tag}: {}", m.summary());
+            rows.push(BenchRow {
+                name: format!("streamed_diffusion2d_1024_16steps_{tag}"),
+                lanes,
+                gcells_per_sec: m.gcell_per_sec(),
+                wall_secs: m.wall.as_secs_f64(),
+                blocks: m.blocks,
+                pool_hits: m.pool_hits,
+                pool_misses: m.pool_misses,
+            });
+        }
     }
-    if let (Some(one), Some(four)) = (
-        rows.iter().find(|r| r.lanes == 1),
-        rows.iter().find(|r| r.lanes == 4),
-    ) {
+    let find = |tag: &str, lanes: usize| {
+        rows.iter()
+            .find(|r| r.lanes == lanes && r.name.ends_with(tag))
+            .map(|r| r.gcells_per_sec)
+    };
+    if let (Some(one), Some(four)) = (find("pipelined", 1), find("pipelined", 4)) {
+        println!("\n4-lane speedup over 1 lane (pipelined): {:.2}x", four / one.max(1e-12));
+    }
+    if let (Some(bar), Some(pipe)) = (find("barrier", 4), find("pipelined", 4)) {
         println!(
-            "\n4-lane speedup over 1 lane: {:.2}x",
-            four.gcells_per_sec / one.gcells_per_sec.max(1e-12)
+            "pipelined vs barrier at lanes=4: {:.2}x (CI gates at >= 0.90x)",
+            pipe / bar.max(1e-12)
         );
     }
     write_bench_json("BENCH_runtime.json", &rows).expect("writing BENCH_runtime.json");

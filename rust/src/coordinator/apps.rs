@@ -6,7 +6,36 @@ use anyhow::{anyhow, bail};
 
 use crate::coordinator::grid::Grid2D;
 use crate::coordinator::metrics::Metrics;
-use crate::runtime::{Runtime, Tensor};
+use crate::runtime::{Runtime, RuntimePool, Tensor};
+
+/// Gather one Pathfinder block's kernel inputs: the halo'd previous
+/// cost row and the fused wall rows over the same (clamp-indexed)
+/// span.  Shared by the single-runtime and lane-parallel runners so
+/// their bit-identity contract rests on one implementation.
+fn pathfinder_block_inputs(
+    acc: &[i32],
+    wall: &[Vec<i32>],
+    base: usize,
+    x0: usize,
+    width: usize,
+    fused: usize,
+) -> (Vec<i32>, Vec<i32>) {
+    let cols = acc.len();
+    let padded = width + 2 * fused;
+    let clamp = |j: isize| -> usize { j.clamp(0, cols as isize - 1) as usize };
+    let mut prev = Vec::with_capacity(padded);
+    for j in 0..padded {
+        prev.push(acc[clamp(x0 as isize + j as isize - fused as isize)]);
+    }
+    let mut rows_block = Vec::with_capacity(fused * padded);
+    for t in 0..fused {
+        let row = &wall[base + t];
+        for j in 0..padded {
+            rows_block.push(row[clamp(x0 as isize + j as isize - fused as isize)]);
+        }
+    }
+    (prev, rows_block)
+}
 
 /// Pathfinder: accumulate min-cost from row 0 down through `wall`
 /// (rows × cols, i32), streaming fused-row blocks through the
@@ -30,8 +59,6 @@ pub fn run_pathfinder(rt: &Runtime, wall: &[Vec<i32>]) -> crate::Result<(Vec<i32
     let mut metrics = Metrics::default();
     let wall_t = std::time::Instant::now();
     let padded = width + 2 * fused;
-    // clamp-index helper for halo/partial-block fill
-    let clamp = |j: isize| -> usize { j.clamp(0, cols as isize - 1) as usize };
 
     let mut acc: Vec<i32> = wall[0].clone();
     let mut base = 1usize;
@@ -39,19 +66,7 @@ pub fn run_pathfinder(rt: &Runtime, wall: &[Vec<i32>]) -> crate::Result<(Vec<i32
         let mut next = vec![0i32; cols];
         let mut x0 = 0usize;
         while x0 < cols {
-            // halo'd previous row for this block span
-            let mut prev = Vec::with_capacity(padded);
-            for j in 0..padded {
-                prev.push(acc[clamp(x0 as isize + j as isize - fused as isize)]);
-            }
-            // fused wall rows for the same span
-            let mut rows_block = Vec::with_capacity(fused * padded);
-            for t in 0..fused {
-                let row = &wall[base + t];
-                for j in 0..padded {
-                    rows_block.push(row[clamp(x0 as isize + j as isize - fused as isize)]);
-                }
-            }
+            let (prev, rows_block) = pathfinder_block_inputs(&acc, wall, base, x0, width, fused);
             let out = rt.execute(
                 "pathfinder",
                 &[
@@ -69,6 +84,89 @@ pub fn run_pathfinder(rt: &Runtime, wall: &[Vec<i32>]) -> crate::Result<(Vec<i32
         base += fused;
         metrics.cell_updates += cols as u64 * fused as u64;
     }
+    metrics.wall = wall_t.elapsed();
+    Ok((acc, metrics))
+}
+
+/// Lane-parallel Pathfinder: the first Ch. 4 app on the
+/// [`RuntimePool`].  Within one wave (a fused-row chunk) the
+/// column-blocks are independent — each reads only the previous
+/// accumulated row — so every block of the wave is submitted to the
+/// pool at once and executes on whichever lane frees up first; the
+/// caller assembles the next row as results stream back (the wave
+/// barrier is the result count, not a pool drain).  Waves themselves
+/// are sequential: wave `w+1` consumes the row wave `w` produced.
+/// Bit-identical to [`run_pathfinder`] for any lane count (integer
+/// arithmetic, disjoint output spans).
+pub fn run_pathfinder_lanes(
+    pool: &RuntimePool,
+    wall: &[Vec<i32>],
+) -> crate::Result<(Vec<i32>, Metrics)> {
+    let spec = pool
+        .registry()
+        .get("pathfinder")
+        .ok_or_else(|| anyhow!("missing pathfinder artifact"))?
+        .clone();
+    let width = spec.meta_u64("width")? as usize;
+    let fused = spec.meta_u64("fused_rows")? as usize;
+    let rows = wall.len();
+    let cols = wall[0].len();
+    if (rows - 1) % fused != 0 {
+        bail!("pathfinder: rows-1 = {} not a multiple of fused {fused}", rows - 1);
+    }
+    // Compile on every lane outside the timed region.
+    pool.warmup_artifact("pathfinder")?;
+
+    let mut metrics = Metrics::default();
+    let wall_t = std::time::Instant::now();
+    let padded = width + 2 * fused;
+    let nblocks = cols.div_ceil(width);
+
+    let mut acc: Vec<i32> = wall[0].clone();
+    let mut base = 1usize;
+    while base < rows {
+        // Extract every block's inputs on the caller thread (cheap
+        // integer gathers), then fan the wave out across the lanes.
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, Vec<i32>)>();
+        for bi in 0..nblocks {
+            let x0 = bi * width;
+            let (prev, rows_block) = pathfinder_block_inputs(&acc, wall, base, x0, width, fused);
+            let tx = tx.clone();
+            pool.submit(move |_lane, rt| {
+                let out = rt.execute(
+                    "pathfinder",
+                    &[
+                        Tensor::I32(prev, vec![padded]),
+                        Tensor::I32(rows_block, vec![fused, padded]),
+                    ],
+                )?;
+                let _ = tx.send((x0, out[0].as_i32().to_vec()));
+                Ok(())
+            });
+        }
+        drop(tx);
+
+        // The wave barrier: all `nblocks` results, in any order.
+        let mut next = vec![0i32; cols];
+        let mut got = 0usize;
+        while let Ok((x0, vals)) = rx.recv() {
+            let w = width.min(cols - x0);
+            next[x0..x0 + w].copy_from_slice(&vals[..w]);
+            got += 1;
+            metrics.blocks += 1;
+        }
+        if got != nblocks {
+            // A lane dropped its sender without replying: the job was
+            // skipped (poisoned pool) or failed.  Harvest the real
+            // error rather than reporting a channel failure.
+            pool.wait_idle()?;
+            bail!("pathfinder: wave returned {got} of {nblocks} blocks");
+        }
+        acc = next;
+        base += fused;
+        metrics.cell_updates += cols as u64 * fused as u64;
+    }
+    pool.wait_idle()?;
     metrics.wall = wall_t.elapsed();
     Ok((acc, metrics))
 }

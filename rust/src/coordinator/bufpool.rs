@@ -1,35 +1,55 @@
-//! Reusable tile arenas for the marshalling path.
+//! Reusable tensor arenas for the marshalling path.
 //!
 //! Every block of every pass needs a freshly filled `Vec<f32>` for the
-//! halo'd input tile (and one comes back per output).  Allocating those
-//! per block is the host-side anti-pattern the thesis's deep pipelines
-//! avoid on hardware; the pool recycles buffers by size instead, so a
+//! halo'd input tile (and one comes back per output), plus a tiny
+//! `Vec<i32>` boundary-restoration descriptor.  Allocating those per
+//! block is the host-side anti-pattern the thesis's deep pipelines
+//! avoid on hardware; the pools recycle buffers by size instead, so a
 //! steady-state pass performs **zero** heap allocations for tile
 //! extraction (after the first pass warms the shelves).
 //!
-//! Shelves are keyed by capacity in a `BTreeMap`, and `take(len)` hands
-//! out the smallest buffer whose capacity covers `len`, so tile inputs
-//! (`tile²`/`tile³` cells) and recycled kernel outputs (`block²`/`block³`
-//! cells) coexist in one pool.  Hit/miss counters feed the
-//! `pool_hits`/`pool_misses` fields of
+//! [`BufferPool`] is generic over the element type: [`TilePool`]
+//! (`f32` tiles and kernel outputs) and the `i32` descriptor pool
+//! inside [`TensorPools`] share the implementation.  Shelves are keyed
+//! by capacity in a `BTreeMap`, and `take(len)` hands out the smallest
+//! buffer whose capacity covers `len`, so tile inputs (`tile²`/`tile³`
+//! cells) and recycled kernel outputs (`block²`/`block³` cells) coexist
+//! in one pool.  Hit/miss counters feed the `pool_hits`/`pool_misses`
+//! (and `desc_pool_hits`/`desc_pool_misses`) fields of
 //! [`crate::coordinator::metrics::Metrics`].
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-/// Thread-safe recycling pool of `Vec<f32>` buffers.
-#[derive(Debug, Default)]
-pub struct TilePool {
-    shelves: Mutex<BTreeMap<usize, Vec<Vec<f32>>>>,
+use crate::runtime::Tensor;
+
+/// Thread-safe recycling pool of `Vec<T>` buffers.
+#[derive(Debug)]
+pub struct BufferPool<T> {
+    shelves: Mutex<BTreeMap<usize, Vec<Vec<T>>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
 
-impl TilePool {
+/// Recycling pool for `f32` tile buffers (the dominant marshalling
+/// allocation).
+pub type TilePool = BufferPool<f32>;
+
+impl<T> Default for BufferPool<T> {
+    fn default() -> Self {
+        BufferPool {
+            shelves: Mutex::new(BTreeMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+}
+
+impl<T> BufferPool<T> {
     /// Fetch a cleared buffer with capacity ≥ `len` (allocating one only
     /// on a pool miss).
-    pub fn take(&self, len: usize) -> Vec<f32> {
+    pub fn take(&self, len: usize) -> Vec<T> {
         let mut shelves = self.shelves.lock().unwrap();
         // Smallest shelf that covers the request.
         if let Some((&cap, stack)) = shelves.range_mut(len..).next() {
@@ -49,7 +69,7 @@ impl TilePool {
     /// Return a buffer for reuse.  Zero-capacity buffers are dropped,
     /// and each shelf is capped so recycled buffers that nothing ever
     /// re-requests (e.g. a one-off tile size) cannot grow without bound.
-    pub fn put(&self, mut v: Vec<f32>) {
+    pub fn put(&self, mut v: Vec<T>) {
         const MAX_PER_SHELF: usize = 256;
         v.clear();
         let cap = v.capacity();
@@ -71,6 +91,33 @@ impl TilePool {
     /// Buffers that had to be freshly allocated.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+}
+
+/// The full marshalling-path pool set: `f32` tiles plus the `i32`
+/// boundary-descriptor buffers — the last per-block allocation on the
+/// extract path besides xla's own output alloc in `Literal::to_vec`.
+#[derive(Debug, Default)]
+pub struct TensorPools {
+    pub tiles: TilePool,
+    pub descs: BufferPool<i32>,
+}
+
+impl TensorPools {
+    /// Return a block's input tensors to their pools for reuse.
+    ///
+    /// Kernel *output* buffers are deliberately not pooled: they are
+    /// `block²`/`block³` cells while every extraction request is
+    /// `tile²`/`tile³` (strictly larger for halo ≥ 1), so they could
+    /// never satisfy a `take` — shelving them would only hold dead
+    /// memory.
+    pub fn recycle(&self, inputs: Vec<Tensor>) {
+        for t in inputs {
+            match t {
+                Tensor::F32(v, _) => self.tiles.put(v),
+                Tensor::I32(v, _) => self.descs.put(v),
+            }
+        }
     }
 }
 
@@ -128,6 +175,30 @@ mod tests {
         }
         assert_eq!(p.misses(), 1, "single in-flight buffer allocated once");
         assert_eq!(p.hits(), 7);
+    }
+
+    #[test]
+    fn i32_descriptor_pool_reuses() {
+        let p: BufferPool<i32> = BufferPool::default();
+        let mut d = p.take(4);
+        d.extend_from_slice(&[1, 2, 3, 4]);
+        p.put(d);
+        let d2 = p.take(4);
+        assert!(d2.is_empty() && d2.capacity() >= 4);
+        assert_eq!((p.hits(), p.misses()), (1, 1));
+    }
+
+    #[test]
+    fn tensor_pools_recycle_by_dtype() {
+        let pools = TensorPools::default();
+        pools.recycle(vec![
+            Tensor::F32(Vec::with_capacity(16), vec![4, 4]),
+            Tensor::I32(Vec::with_capacity(4), vec![4]),
+        ]);
+        assert!(pools.tiles.take(16).capacity() >= 16);
+        assert!(pools.descs.take(4).capacity() >= 4);
+        assert_eq!(pools.tiles.hits(), 1);
+        assert_eq!(pools.descs.hits(), 1);
     }
 
     #[test]

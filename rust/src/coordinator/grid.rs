@@ -6,6 +6,18 @@
 //! interiors may extend past the grid edge (partial blocks against a
 //! fixed-shape compute unit); out-of-grid cells are synthesized by the
 //! boundary rule on extraction and clipped on write-back.
+//!
+//! Extraction and write-back each exist in two flavours sharing one
+//! core implementation:
+//!
+//! * safe methods on [`Grid2D`]/[`Grid3D`] — exclusive access through
+//!   normal borrows (the single-threaded and test paths);
+//! * `unsafe` methods on [`GridWriter2D`]/[`GridWriter3D`] — raw
+//!   read/write handles shared across extractor and lane threads by the
+//!   cross-pass pass driver, where *both* grid buffers are concurrently
+//!   read (tile extraction for pass `p`) and written (write-back for
+//!   pass `p±1`) in disjoint, dependency-ordered regions (see
+//!   [`crate::coordinator::passdriver`]).
 
 /// Out-of-grid cell synthesis rule.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -14,6 +26,98 @@ pub enum Boundary {
     Zero,
     /// Out-of-bound indices clamp to the nearest edge (Rodinia-style).
     Clamp,
+}
+
+/// Core of 2D boundary-synthesized reads over a raw buffer.
+///
+/// # Safety
+///
+/// `ptr` must point to a live `ny * nx` f32 buffer and no thread may be
+/// concurrently writing the cell being read.
+#[inline]
+unsafe fn read_raw_2d(ptr: *const f32, ny: usize, nx: usize, y: isize, x: isize, b: Boundary) -> f32 {
+    match b {
+        Boundary::Zero => {
+            if y < 0 || x < 0 || y >= ny as isize || x >= nx as isize {
+                0.0
+            } else {
+                *ptr.add(y as usize * nx + x as usize)
+            }
+        }
+        Boundary::Clamp => {
+            let yc = y.clamp(0, ny as isize - 1) as usize;
+            let xc = x.clamp(0, nx as isize - 1) as usize;
+            *ptr.add(yc * nx + xc)
+        }
+    }
+}
+
+/// Core of 2D halo'd tile extraction over a raw buffer; the interior
+/// origin is (y0, x0) with `halo` cells on every side.
+///
+/// # Safety
+///
+/// `ptr` must point to a live `ny * nx` f32 buffer, and no thread may be
+/// concurrently writing any cell the tile reads (out-of-grid cells are
+/// synthesized, in-grid cells are copied).
+#[allow(clippy::too_many_arguments)]
+unsafe fn extract_raw_2d(
+    ptr: *const f32,
+    ny: usize,
+    nx: usize,
+    y0: isize,
+    x0: isize,
+    tile_h: usize,
+    tile_w: usize,
+    halo: usize,
+    b: Boundary,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(tile_h * tile_w);
+    let ys = y0 - halo as isize;
+    let xs = x0 - halo as isize;
+    for ty in 0..tile_h {
+        let y = ys + ty as isize;
+        // fast path: full in-grid row
+        if y >= 0 && (y as usize) < ny && xs >= 0 && xs as usize + tile_w <= nx {
+            let row = y as usize * nx + xs as usize;
+            // SAFETY: the row span is in-bounds and (per this function's
+            // contract) not under concurrent mutation.
+            out.extend_from_slice(std::slice::from_raw_parts(ptr.add(row), tile_w));
+        } else {
+            for tx in 0..tile_w {
+                out.push(read_raw_2d(ptr, ny, nx, y, xs + tx as isize, b));
+            }
+        }
+    }
+}
+
+/// Core of 2D interior write-back: a (bh, bw) block at (y0, x0),
+/// clipped to the grid (partial edge blocks).
+///
+/// # Safety
+///
+/// `ptr` must point to a live `ny * nx` f32 buffer and no other thread
+/// may concurrently access the target cells.
+#[allow(clippy::too_many_arguments)]
+unsafe fn write_raw_2d(
+    ptr: *mut f32,
+    ny: usize,
+    nx: usize,
+    y0: usize,
+    x0: usize,
+    bh: usize,
+    bw: usize,
+    block: &[f32],
+) {
+    debug_assert_eq!(block.len(), bh * bw);
+    let h = bh.min(ny.saturating_sub(y0));
+    let w = bw.min(nx.saturating_sub(x0));
+    for by in 0..h {
+        let src = &block[by * bw..by * bw + w];
+        std::ptr::copy_nonoverlapping(src.as_ptr(), ptr.add((y0 + by) * nx + x0), w);
+    }
 }
 
 /// Row-major 2D grid of f32.
@@ -47,24 +151,13 @@ impl Grid2D {
     /// Read with boundary synthesis at signed coordinates.
     #[inline]
     pub fn read(&self, y: isize, x: isize, b: Boundary) -> f32 {
-        match b {
-            Boundary::Zero => {
-                if y < 0 || x < 0 || y >= self.ny as isize || x >= self.nx as isize {
-                    0.0
-                } else {
-                    self.at(y as usize, x as usize)
-                }
-            }
-            Boundary::Clamp => {
-                let yc = y.clamp(0, self.ny as isize - 1) as usize;
-                let xc = x.clamp(0, self.nx as isize - 1) as usize;
-                self.at(yc, xc)
-            }
-        }
+        // SAFETY: &self guarantees exclusive-from-writers access.
+        unsafe { read_raw_2d(self.data.as_ptr(), self.ny, self.nx, y, x, b) }
     }
 
     /// Extract the (tile_h, tile_w) tile whose *interior origin* is
     /// (y0, x0) with `halo` cells on every side, into `out`.
+    #[allow(clippy::too_many_arguments)]
     pub fn extract_tile_into(
         &self,
         y0: isize,
@@ -75,25 +168,9 @@ impl Grid2D {
         b: Boundary,
         out: &mut Vec<f32>,
     ) {
-        out.clear();
-        out.reserve(tile_h * tile_w);
-        let ys = y0 - halo as isize;
-        let xs = x0 - halo as isize;
-        for ty in 0..tile_h {
-            let y = ys + ty as isize;
-            // fast path: full in-grid row
-            if y >= 0
-                && (y as usize) < self.ny
-                && xs >= 0
-                && xs as usize + tile_w <= self.nx
-            {
-                let row = y as usize * self.nx + xs as usize;
-                out.extend_from_slice(&self.data[row..row + tile_w]);
-            } else {
-                for tx in 0..tile_w {
-                    out.push(self.read(y, xs + tx as isize, b));
-                }
-            }
+        // SAFETY: &self guarantees no concurrent writer.
+        unsafe {
+            extract_raw_2d(self.data.as_ptr(), self.ny, self.nx, y0, x0, tile_h, tile_w, halo, b, out)
         }
     }
 
@@ -114,6 +191,7 @@ impl Grid2D {
     /// [`Grid2D::extract_tile`] into a buffer recycled from `pool` —
     /// the steady-state (zero-allocation) marshalling path of the
     /// multi-lane engine.
+    #[allow(clippy::too_many_arguments)]
     pub fn extract_tile_pooled(
         &self,
         y0: isize,
@@ -129,39 +207,49 @@ impl Grid2D {
         out
     }
 
-    /// Shared write handle over this grid's storage for lane-parallel
-    /// writeback.
+    /// Shared read/write handle over this grid's storage for
+    /// lane-parallel writeback and cross-pass pipelined extraction.
     ///
     /// # Safety
     ///
-    /// The grid must outlive every use of the returned writer, and
-    /// concurrent [`GridWriter2D::write_block`] calls must target
+    /// The grid must outlive every use of the returned handle, and
+    /// concurrent accesses must never overlap: writes target
     /// pairwise-disjoint block origins (which the block plans guarantee:
     /// origins lie on a `block`-spaced lattice and each write covers at
-    /// most `block × block` cells from its origin).  The caller must not
-    /// read or write the grid through any other path until the writers
-    /// are quiesced.
+    /// most `block × block` cells from its origin), and a cell may only
+    /// be read once every write to it has been ordered-before the read
+    /// (the pass driver's dependency table provides that ordering).  The
+    /// caller must not access the grid through any other path until the
+    /// handles are quiesced.
     pub unsafe fn shared_writer(&mut self) -> GridWriter2D {
         GridWriter2D { ptr: self.data.as_mut_ptr(), ny: self.ny, nx: self.nx }
+    }
+
+    /// Read-only raw view of this grid for concurrent extraction (e.g.
+    /// the aux/power grid, which no pass ever writes).
+    ///
+    /// # Safety
+    ///
+    /// The grid must outlive every use of the view, nothing may mutate
+    /// the grid while the view is live, and the caller must never call
+    /// [`GridWriter2D::write_block`] on a handle obtained this way.
+    pub unsafe fn shared_view(&self) -> GridWriter2D {
+        GridWriter2D { ptr: self.data.as_ptr() as *mut f32, ny: self.ny, nx: self.nx }
     }
 
     /// Write a (bh, bw) interior block at (y0, x0), clipping out-of-grid
     /// parts (partial edge blocks).
     pub fn write_block(&mut self, y0: usize, x0: usize, bh: usize, bw: usize, block: &[f32]) {
-        debug_assert_eq!(block.len(), bh * bw);
-        let h = bh.min(self.ny.saturating_sub(y0));
-        let w = bw.min(self.nx.saturating_sub(x0));
-        for by in 0..h {
-            let src = by * bw;
-            let dst = (y0 + by) * self.nx + x0;
-            self.data[dst..dst + w].copy_from_slice(&block[src..src + w]);
-        }
+        // SAFETY: &mut self guarantees exclusive access.
+        unsafe { write_raw_2d(self.data.as_mut_ptr(), self.ny, self.nx, y0, x0, bh, bw, block) }
     }
 }
 
-/// Write-only view of a [`Grid2D`] shared across execute lanes; created
-/// by the unsafe [`Grid2D::shared_writer`], whose contract (disjoint
-/// block writes, grid outlives the writer) makes these writes sound.
+/// Raw read/write handle over a [`Grid2D`] shared across extractor and
+/// execute-lane threads; created by the unsafe [`Grid2D::shared_writer`]
+/// (read/write) or [`Grid2D::shared_view`] (read-only), whose contracts
+/// (disjoint block writes, dependency-ordered reads, grid outlives the
+/// handle) make these accesses sound.
 #[derive(Debug, Clone, Copy)]
 pub struct GridWriter2D {
     ptr: *mut f32,
@@ -169,29 +257,157 @@ pub struct GridWriter2D {
     nx: usize,
 }
 
-// SAFETY: the `shared_writer` contract guarantees disjoint target cells
-// across threads and a live backing allocation.
+// SAFETY: the `shared_writer`/`shared_view` contracts guarantee
+// non-overlapping concurrent accesses and a live backing allocation.
 unsafe impl Send for GridWriter2D {}
 unsafe impl Sync for GridWriter2D {}
 
 impl GridWriter2D {
     /// Same clipping semantics as [`Grid2D::write_block`].
+    ///
+    /// (Kept callable from safe code for backwards compatibility: the
+    /// unsafety was discharged when the handle was created.)
     pub fn write_block(&self, y0: usize, x0: usize, bh: usize, bw: usize, block: &[f32]) {
-        debug_assert_eq!(block.len(), bh * bw);
-        let h = bh.min(self.ny.saturating_sub(y0));
-        let w = bw.min(self.nx.saturating_sub(x0));
-        for by in 0..h {
-            let src = &block[by * bw..by * bw + w];
-            // SAFETY: rows y0+by < ny and columns x0..x0+w < nx index
-            // inside the grid allocation; disjointness across threads is
-            // the `shared_writer` contract.
-            unsafe {
-                std::ptr::copy_nonoverlapping(
-                    src.as_ptr(),
-                    self.ptr.add((y0 + by) * self.nx + x0),
-                    w,
-                );
+        // SAFETY: rows y0+by < ny and columns x0..x0+w < nx index inside
+        // the grid allocation; disjointness across threads is the
+        // `shared_writer` contract.
+        unsafe { write_raw_2d(self.ptr, self.ny, self.nx, y0, x0, bh, bw, block) }
+    }
+
+    /// Same semantics as [`Grid2D::extract_tile_into`].
+    ///
+    /// # Safety
+    ///
+    /// No thread may be concurrently writing any in-grid cell of the
+    /// requested tile (the pass driver's dependency table orders every
+    /// predecessor write-back before this read becomes runnable).
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn extract_tile_into(
+        &self,
+        y0: isize,
+        x0: isize,
+        tile_h: usize,
+        tile_w: usize,
+        halo: usize,
+        b: Boundary,
+        out: &mut Vec<f32>,
+    ) {
+        extract_raw_2d(self.ptr, self.ny, self.nx, y0, x0, tile_h, tile_w, halo, b, out)
+    }
+}
+
+/// Core of 3D boundary-synthesized reads over a raw buffer.
+///
+/// # Safety
+///
+/// `ptr` must point to a live `nz * ny * nx` f32 buffer and no thread
+/// may be concurrently writing the cell being read.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+unsafe fn read_raw_3d(
+    ptr: *const f32,
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    z: isize,
+    y: isize,
+    x: isize,
+    b: Boundary,
+) -> f32 {
+    match b {
+        Boundary::Zero => {
+            if z < 0 || y < 0 || x < 0
+                || z >= nz as isize || y >= ny as isize || x >= nx as isize
+            {
+                0.0
+            } else {
+                *ptr.add((z as usize * ny + y as usize) * nx + x as usize)
             }
+        }
+        Boundary::Clamp => {
+            let zc = z.clamp(0, nz as isize - 1) as usize;
+            let yc = y.clamp(0, ny as isize - 1) as usize;
+            let xc = x.clamp(0, nx as isize - 1) as usize;
+            *ptr.add((zc * ny + yc) * nx + xc)
+        }
+    }
+}
+
+/// Core of cubic-tile extraction over a raw 3D buffer; interior origin
+/// (z0, y0, x0).
+///
+/// # Safety
+///
+/// Same contract as [`extract_raw_2d`], over a `nz * ny * nx` buffer.
+#[allow(clippy::too_many_arguments)]
+unsafe fn extract_raw_3d(
+    ptr: *const f32,
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    z0: isize,
+    y0: isize,
+    x0: isize,
+    tile: usize,
+    halo: usize,
+    b: Boundary,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(tile * tile * tile);
+    let zs = z0 - halo as isize;
+    let ys = y0 - halo as isize;
+    let xs = x0 - halo as isize;
+    for tz in 0..tile {
+        let z = zs + tz as isize;
+        for ty in 0..tile {
+            let y = ys + ty as isize;
+            if z >= 0 && (z as usize) < nz
+                && y >= 0 && (y as usize) < ny
+                && xs >= 0 && xs as usize + tile <= nx
+            {
+                let row = (z as usize * ny + y as usize) * nx + xs as usize;
+                // SAFETY: in-bounds row span, no concurrent mutation per
+                // this function's contract.
+                out.extend_from_slice(std::slice::from_raw_parts(ptr.add(row), tile));
+            } else {
+                for tx in 0..tile {
+                    out.push(read_raw_3d(ptr, nz, ny, nx, z, y, xs + tx as isize, b));
+                }
+            }
+        }
+    }
+}
+
+/// Core of cubic interior write-back at (z0, y0, x0), clipped.
+///
+/// # Safety
+///
+/// Same contract as [`write_raw_2d`], over a `nz * ny * nx` buffer.
+#[allow(clippy::too_many_arguments)]
+unsafe fn write_raw_3d(
+    ptr: *mut f32,
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    z0: usize,
+    y0: usize,
+    x0: usize,
+    bs: usize,
+    block: &[f32],
+) {
+    debug_assert_eq!(block.len(), bs * bs * bs);
+    let d = bs.min(nz.saturating_sub(z0));
+    let h = bs.min(ny.saturating_sub(y0));
+    let w = bs.min(nx.saturating_sub(x0));
+    for bz in 0..d {
+        for by in 0..h {
+            let src = &block[(bz * bs + by) * bs..(bz * bs + by) * bs + w];
+            std::ptr::copy_nonoverlapping(
+                src.as_ptr(),
+                ptr.add(((z0 + bz) * ny + (y0 + by)) * nx + x0),
+                w,
+            );
         }
     }
 }
@@ -229,25 +445,12 @@ impl Grid3D {
 
     #[inline]
     pub fn read(&self, z: isize, y: isize, x: isize, b: Boundary) -> f32 {
-        match b {
-            Boundary::Zero => {
-                if z < 0 || y < 0 || x < 0
-                    || z >= self.nz as isize || y >= self.ny as isize || x >= self.nx as isize
-                {
-                    0.0
-                } else {
-                    self.at(z as usize, y as usize, x as usize)
-                }
-            }
-            Boundary::Clamp => self.at(
-                z.clamp(0, self.nz as isize - 1) as usize,
-                y.clamp(0, self.ny as isize - 1) as usize,
-                x.clamp(0, self.nx as isize - 1) as usize,
-            ),
-        }
+        // SAFETY: &self guarantees exclusive-from-writers access.
+        unsafe { read_raw_3d(self.data.as_ptr(), self.nz, self.ny, self.nx, z, y, x, b) }
     }
 
     /// Extract a cubic tile with halo; interior origin (z0, y0, x0).
+    #[allow(clippy::too_many_arguments)]
     pub fn extract_tile_into(
         &self,
         z0: isize,
@@ -258,32 +461,17 @@ impl Grid3D {
         b: Boundary,
         out: &mut Vec<f32>,
     ) {
-        out.clear();
-        out.reserve(tile * tile * tile);
-        let zs = z0 - halo as isize;
-        let ys = y0 - halo as isize;
-        let xs = x0 - halo as isize;
-        for tz in 0..tile {
-            let z = zs + tz as isize;
-            for ty in 0..tile {
-                let y = ys + ty as isize;
-                if z >= 0 && (z as usize) < self.nz
-                    && y >= 0 && (y as usize) < self.ny
-                    && xs >= 0 && xs as usize + tile <= self.nx
-                {
-                    let row = (z as usize * self.ny + y as usize) * self.nx + xs as usize;
-                    out.extend_from_slice(&self.data[row..row + tile]);
-                } else {
-                    for tx in 0..tile {
-                        out.push(self.read(z, y, xs + tx as isize, b));
-                    }
-                }
-            }
+        // SAFETY: &self guarantees no concurrent writer.
+        unsafe {
+            extract_raw_3d(
+                self.data.as_ptr(), self.nz, self.ny, self.nx, z0, y0, x0, tile, halo, b, out,
+            )
         }
     }
 
     /// [`Grid3D::extract_tile_owned`] into a buffer recycled from
     /// `pool` — the steady-state (zero-allocation) marshalling path.
+    #[allow(clippy::too_many_arguments)]
     pub fn extract_tile_pooled(
         &self,
         z0: isize,
@@ -299,13 +487,15 @@ impl Grid3D {
         out
     }
 
-    /// Shared write handle for lane-parallel writeback.
+    /// Shared read/write handle for lane-parallel writeback and
+    /// cross-pass pipelined extraction.
     ///
     /// # Safety
     ///
     /// Same contract as [`Grid2D::shared_writer`]: the grid outlives
-    /// every use, concurrent writes target disjoint block origins, and
-    /// no other access happens until the writers are quiesced.
+    /// every use, concurrent writes target disjoint block origins,
+    /// reads are ordered after the writes that produced their cells,
+    /// and no other access happens until the handles are quiesced.
     pub unsafe fn shared_writer(&mut self) -> GridWriter3D {
         GridWriter3D {
             ptr: self.data.as_mut_ptr(),
@@ -315,24 +505,32 @@ impl Grid3D {
         }
     }
 
+    /// Read-only raw view for concurrent extraction (aux grids).
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`Grid2D::shared_view`].
+    pub unsafe fn shared_view(&self) -> GridWriter3D {
+        GridWriter3D {
+            ptr: self.data.as_ptr() as *mut f32,
+            nz: self.nz,
+            ny: self.ny,
+            nx: self.nx,
+        }
+    }
+
     /// Write a cubic interior block at (z0, y0, x0), clipped to the grid.
     pub fn write_block(&mut self, z0: usize, y0: usize, x0: usize, bs: usize, block: &[f32]) {
-        debug_assert_eq!(block.len(), bs * bs * bs);
-        let d = bs.min(self.nz.saturating_sub(z0));
-        let h = bs.min(self.ny.saturating_sub(y0));
-        let w = bs.min(self.nx.saturating_sub(x0));
-        for bz in 0..d {
-            for by in 0..h {
-                let src = (bz * bs + by) * bs;
-                let dst = ((z0 + bz) * self.ny + (y0 + by)) * self.nx + x0;
-                self.data[dst..dst + w].copy_from_slice(&block[src..src + w]);
-            }
+        // SAFETY: &mut self guarantees exclusive access.
+        unsafe {
+            write_raw_3d(self.data.as_mut_ptr(), self.nz, self.ny, self.nx, z0, y0, x0, bs, block)
         }
     }
 }
 
-/// Write-only view of a [`Grid3D`] shared across execute lanes; see
-/// [`Grid3D::shared_writer`] for the soundness contract.
+/// Raw read/write handle over a [`Grid3D`] shared across extractor and
+/// execute-lane threads; see [`Grid3D::shared_writer`] for the
+/// soundness contract.
 #[derive(Debug, Clone, Copy)]
 pub struct GridWriter3D {
     ptr: *mut f32,
@@ -348,24 +546,28 @@ unsafe impl Sync for GridWriter3D {}
 impl GridWriter3D {
     /// Same clipping semantics as [`Grid3D::write_block`].
     pub fn write_block(&self, z0: usize, y0: usize, x0: usize, bs: usize, block: &[f32]) {
-        debug_assert_eq!(block.len(), bs * bs * bs);
-        let d = bs.min(self.nz.saturating_sub(z0));
-        let h = bs.min(self.ny.saturating_sub(y0));
-        let w = bs.min(self.nx.saturating_sub(x0));
-        for bz in 0..d {
-            for by in 0..h {
-                let src = &block[(bz * bs + by) * bs..(bz * bs + by) * bs + w];
-                // SAFETY: target indices are in-grid; disjointness across
-                // threads is the `shared_writer` contract.
-                unsafe {
-                    std::ptr::copy_nonoverlapping(
-                        src.as_ptr(),
-                        self.ptr.add(((z0 + bz) * self.ny + (y0 + by)) * self.nx + x0),
-                        w,
-                    );
-                }
-            }
-        }
+        // SAFETY: target indices are in-grid; disjointness across
+        // threads is the `shared_writer` contract.
+        unsafe { write_raw_3d(self.ptr, self.nz, self.ny, self.nx, z0, y0, x0, bs, block) }
+    }
+
+    /// Same semantics as [`Grid3D::extract_tile_into`].
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`GridWriter2D::extract_tile_into`].
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn extract_tile_into(
+        &self,
+        z0: isize,
+        y0: isize,
+        x0: isize,
+        tile: usize,
+        halo: usize,
+        b: Boundary,
+        out: &mut Vec<f32>,
+    ) {
+        extract_raw_3d(self.ptr, self.nz, self.ny, self.nx, z0, y0, x0, tile, halo, b, out)
     }
 }
 
@@ -482,6 +684,25 @@ mod tests {
             }
         });
         assert_eq!(src, dst);
+    }
+
+    #[test]
+    fn handle_extract_matches_grid_extract() {
+        let g = Grid2D::from_fn(9, 7, |y, x| (y * 7 + x) as f32);
+        let view = unsafe { g.shared_view() };
+        for (y0, x0) in [(0isize, 0isize), (4, 3), (8, 6), (-1, 5)] {
+            let want = g.extract_tile(y0, x0, 5, 5, 2, Boundary::Clamp);
+            let mut got = Vec::new();
+            unsafe { view.extract_tile_into(y0, x0, 5, 5, 2, Boundary::Clamp, &mut got) };
+            assert_eq!(want, got, "origin ({y0},{x0})");
+        }
+
+        let g3 = Grid3D::from_fn(5, 4, 6, |z, y, x| (z * 24 + y * 6 + x) as f32);
+        let view3 = unsafe { g3.shared_view() };
+        let want = g3.extract_tile_owned(1, 0, 2, 4, 1, Boundary::Zero);
+        let mut got = Vec::new();
+        unsafe { view3.extract_tile_into(1, 0, 2, 4, 1, Boundary::Zero, &mut got) };
+        assert_eq!(want, got);
     }
 }
 

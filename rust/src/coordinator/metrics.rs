@@ -22,6 +22,10 @@ pub struct Metrics {
     pub pool_hits: u64,
     /// Tile buffers that had to be freshly allocated (pool warm-up).
     pub pool_misses: u64,
+    /// i32 boundary-descriptor buffers served from the recycle pool.
+    pub desc_pool_hits: u64,
+    /// i32 boundary-descriptor buffers freshly allocated (warm-up).
+    pub desc_pool_misses: u64,
 }
 
 impl Metrics {

@@ -6,15 +6,21 @@
 //! * [`grid`] — 2D/3D grids, halo extraction with the benchmark's
 //!   boundary rule, interior write-back (including the lane-shared
 //!   writers used for unordered writeback);
-//! * [`bufpool`] — recycled tile arenas so steady-state passes allocate
-//!   nothing on the marshalling path;
-//! * [`scheduler`] — the block-streaming engines: the single-runtime
-//!   pipelined path (PJRT execution pinned to the coordinator thread —
-//!   the client is `Rc`-based) and the extractor fan-out that feeds the
-//!   multi-lane [`crate::runtime::pool::RuntimePool`];
+//! * [`bufpool`] — recycled tile/descriptor arenas so steady-state
+//!   passes allocate nothing on the marshalling path;
+//! * [`scheduler`] — the flat block-streaming engines: the
+//!   single-runtime pipelined path (PJRT execution pinned to the
+//!   coordinator thread — the client is `Rc`-based) and the extractor
+//!   fan-out that feeds the multi-lane
+//!   [`crate::runtime::pool::RuntimePool`];
+//! * [`passdriver`] — the cross-pass pipelined pass driver: a
+//!   dependency table over the block-origin lattice makes a pass-`p+1`
+//!   block runnable as soon as its `r·T` halo-overlapping pass-`p`
+//!   predecessors have written back — no per-pass barrier;
 //! * [`stencil_runner`] — temporal-block streaming for the Ch. 5 stencil
-//!   workloads (diffusion/hotspot, 2D/3D), single-runtime and
-//!   lane-parallel variants;
+//!   workloads (diffusion/hotspot, 2D/3D): thin configuration shims
+//!   (block plans, tile extraction, write-back) over the pass driver,
+//!   single-runtime and lane-parallel variants;
 //! * [`apps`] — full-application runners for the Ch. 4 dynamic-programming
 //!   and linear-algebra benchmarks (Pathfinder, NW, SRAD, LUD);
 //! * [`reference`] — native-Rust oracles used by the integration tests
@@ -25,9 +31,11 @@ pub mod apps;
 pub mod bufpool;
 pub mod grid;
 pub mod metrics;
+pub mod passdriver;
 pub mod reference;
 pub mod scheduler;
 pub mod stencil_runner;
 
 pub use grid::{Boundary, Grid2D, Grid3D};
 pub use metrics::Metrics;
+pub use passdriver::PassMode;

@@ -1,0 +1,964 @@
+//! Cross-pass pipelined pass driver: dependency-tracked async writeback.
+//!
+//! The thesis's headline stencil result comes from *combining* spatial
+//! and temporal blocking so the accelerator never drains between time
+//! steps (§5.3; see also arXiv:1802.00438).  PR 1's lane engine still
+//! inserted a full `wait_idle` barrier after every pass — the lanes
+//! idled exactly where the paper's deep pipeline keeps flowing.  This
+//! module removes that barrier by making cross-pass dependencies
+//! explicit:
+//!
+//! > a block of pass `p+1` becomes runnable as soon as the blocks of
+//! > pass `p` that overlap its `r·T`-wide halo neighborhood have
+//! > written back.
+//!
+//! [`DepTable`] tracks that rule with per-block completion counters
+//! over the block-origin lattice; [`ReadyQueue`] holds the runnable
+//! (pass, block) frontier.  Because the two grid buffers alternate
+//! roles every pass (pass `p` reads buffer `p % 2` and writes buffer
+//! `(p+1) % 2`), the same neighbor rule also covers the
+//! write-after-read hazard: the pass-`p` blocks that *read* the cells a
+//! pass-`p+1` block will overwrite are exactly its halo neighbors, and
+//! they extracted (copied) their tiles before completing.  By
+//! induction the rule stays sound at any pipeline depth with just two
+//! buffers.
+//!
+//! The driver itself is generic over a [`StencilSpace`] — the
+//! Grid/Writer abstraction the runners configure (tile extraction,
+//! interior write-back, buffer pooling) — and comes in two backends:
+//!
+//! * [`drive_single`] — one [`Runtime`]: execution pinned to the
+//!   caller's thread, one extractor thread feeding dependency-ready
+//!   tiles through a bounded channel (the pipelined path of PR 1,
+//!   now free to cross pass boundaries);
+//! * [`drive_pool`] — a [`RuntimePool`]: M extractor workers pull
+//!   ready blocks, lanes execute and write back, and each job's
+//!   completion callback ([`RuntimePool::submit_tracked`]) advances
+//!   the dependency table — no per-pass barrier anywhere.
+//!
+//! Results are bit-identical to the barrier schedule for any lane
+//! count: each block's inputs are fully determined by its predecessor
+//! blocks, interiors are disjoint, and per-block compute is identical.
+//! [`PassMode::Barrier`] keeps the old schedule available (every
+//! pass-`p+1` block waits for *all* of pass `p`) as the baseline the
+//! CI perf gate compares against.
+//!
+//! Memory ordering: a completing thread write-backs the block, then
+//! decrements successor counters with `AcqRel` RMWs, and the thread
+//! whose decrement hits zero pushes the successor through the ready
+//! queue's mutex.  The RMW chain plus the mutex hand-off order every
+//! predecessor's grid writes before any extraction of the successor's
+//! tile.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::scheduler::panic_text;
+use crate::runtime::pool::IdleGuard;
+use crate::runtime::{Runtime, RuntimePool, Tensor};
+
+/// Inter-pass scheduling regime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PassMode {
+    /// Every pass-`p+1` block waits for *all* pass-`p` blocks — the
+    /// PR 1 `wait_idle`-per-pass schedule, kept as the CI baseline.
+    Barrier,
+    /// A pass-`p+1` block runs as soon as its `r·T` halo-overlapping
+    /// pass-`p` predecessors have written back (default).
+    Pipelined,
+}
+
+/// The Grid/Writer configuration a pass driver runs over: how to cut a
+/// workload into blocks, extract a block's kernel inputs, and write a
+/// block's output interior — plus the buffer pools behind both.
+///
+/// Implementations are dimension- and workload-specific shims (see
+/// `stencil_runner::Space2D/Space3D`); the driver owns everything else:
+/// dependency tracking, lane feeding, double-buffer alternation and
+/// metrics finalization.
+pub trait StencilSpace: Send + Sync {
+    /// Raw shared handle over one grid buffer (read + write); the
+    /// driver holds one per double-buffer half.
+    type Handle: Copy + Send + Sync + 'static;
+
+    /// Blocks per pass.
+    fn nblocks(&self) -> usize;
+
+    /// Block-origin lattice extents, padded to 3 axes with leading 1s
+    /// (a 2D workload reports `[1, nby, nbx]`).
+    fn lattice(&self) -> [usize; 3];
+
+    /// Per-axis dependency reach in lattice units:
+    /// `ceil(halo / block)` (0 on degenerate axes).
+    fn reach(&self) -> [usize; 3];
+
+    /// Extract block `block`'s kernel input tensors from `src`.
+    ///
+    /// # Safety
+    ///
+    /// The caller must guarantee (via the dependency table) that no
+    /// thread is concurrently writing any cell the tile reads, and
+    /// that the handle's grid is live.
+    unsafe fn extract(&self, src: Self::Handle, block: usize) -> Vec<Tensor>;
+
+    /// Write block `block`'s kernel output interior into `dst`.
+    ///
+    /// # Safety
+    ///
+    /// Concurrent writes target pairwise-disjoint interiors (the block
+    /// plan guarantees this) and the handle's grid must be live.
+    unsafe fn write(&self, dst: Self::Handle, block: usize, out: &[f32]);
+
+    /// Return recyclable input buffers to the space's pools.
+    fn recycle(&self, inputs: Vec<Tensor>);
+
+    /// (tile hits, tile misses, descriptor hits, descriptor misses).
+    fn pool_counters(&self) -> (u64, u64, u64, u64);
+}
+
+/// Per-block completion counters over the block-origin lattice: block
+/// `i` of pass `p+1` is runnable once `remaining[p][i]` predecessors of
+/// pass `p` have completed.
+pub struct DepTable {
+    dims: [usize; 3],
+    reach: [usize; 3],
+    nblocks: usize,
+    passes: usize,
+    barrier: bool,
+    /// `remaining[p * nblocks + i]`: incomplete pass-`p` predecessors
+    /// of block `i` in pass `p+1` (slot `p` gates pass `p+1`).
+    remaining: Vec<AtomicU32>,
+}
+
+impl DepTable {
+    pub fn new(dims: [usize; 3], reach: [usize; 3], passes: usize, mode: PassMode) -> DepTable {
+        let nblocks = dims[0] * dims[1] * dims[2];
+        let mut t = DepTable {
+            dims,
+            reach,
+            nblocks,
+            passes,
+            barrier: mode == PassMode::Barrier,
+            remaining: Vec::new(),
+        };
+        if passes > 1 {
+            t.remaining.reserve(passes.saturating_sub(1) * nblocks);
+            for _p in 1..passes {
+                for i in 0..nblocks {
+                    t.remaining.push(AtomicU32::new(t.pred_count(i) as u32));
+                }
+            }
+        }
+        t
+    }
+
+    fn coord(&self, i: usize) -> [usize; 3] {
+        [
+            i / (self.dims[1] * self.dims[2]),
+            (i / self.dims[2]) % self.dims[1],
+            i % self.dims[2],
+        ]
+    }
+
+    /// Visit the lattice neighborhood of block `i`: the blocks whose
+    /// interiors overlap `i`'s `r·T`-halo'd tile (clipped to the
+    /// lattice).  The relation is symmetric, so the same set is both
+    /// `i`'s predecessors in the previous pass and the successors `i`
+    /// unblocks in the next.
+    fn neighborhood(&self, i: usize, mut f: impl FnMut(usize)) {
+        if self.barrier {
+            for j in 0..self.nblocks {
+                f(j);
+            }
+            return;
+        }
+        let c = self.coord(i);
+        let lo = |a: usize| c[a].saturating_sub(self.reach[a]);
+        let hi = |a: usize| (c[a] + self.reach[a]).min(self.dims[a] - 1);
+        for z in lo(0)..=hi(0) {
+            for y in lo(1)..=hi(1) {
+                for x in lo(2)..=hi(2) {
+                    f((z * self.dims[1] + y) * self.dims[2] + x);
+                }
+            }
+        }
+    }
+
+    /// Number of predecessors of block `i` (= its clipped neighborhood
+    /// size; the neighbor relation is symmetric).
+    fn pred_count(&self, i: usize) -> usize {
+        if self.barrier {
+            return self.nblocks;
+        }
+        let c = self.coord(i);
+        let mut n = 1usize;
+        for a in 0..3 {
+            let lo = c[a].saturating_sub(self.reach[a]);
+            let hi = (c[a] + self.reach[a]).min(self.dims[a] - 1);
+            n *= hi - lo + 1;
+        }
+        n
+    }
+
+    /// Record the completion (write-back done) of `block` in `pass`;
+    /// appends every pass-`p+1` block this makes runnable to `ready`.
+    pub fn complete(&self, pass: usize, block: usize, ready: &mut Vec<(usize, usize)>) {
+        if pass + 1 >= self.passes {
+            return;
+        }
+        let base = pass * self.nblocks;
+        self.neighborhood(block, |j| {
+            // AcqRel: the RMW chain orders every predecessor's grid
+            // write-back before the final decrement, whose thread then
+            // publishes `j` through the ready queue's mutex.
+            if self.remaining[base + j].fetch_sub(1, Ordering::AcqRel) == 1 {
+                ready.push((pass + 1, j));
+            }
+        });
+    }
+}
+
+/// The runnable (pass, block) frontier.  `pop` blocks until an item is
+/// ready, every item has been dispatched, or the run aborts.
+pub struct ReadyQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    total: usize,
+}
+
+struct QueueState {
+    ready: VecDeque<(usize, usize)>,
+    dispatched: usize,
+    aborted: bool,
+}
+
+impl ReadyQueue {
+    pub fn new(total: usize, seed: impl IntoIterator<Item = (usize, usize)>) -> ReadyQueue {
+        ReadyQueue {
+            state: Mutex::new(QueueState {
+                ready: seed.into_iter().collect(),
+                dispatched: 0,
+                aborted: false,
+            }),
+            cv: Condvar::new(),
+            total,
+        }
+    }
+
+    pub fn push_all(&self, items: &[(usize, usize)]) {
+        if items.is_empty() {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.ready.extend(items.iter().copied());
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Next runnable item, or `None` once all `total` items have been
+    /// dispatched (or the run aborted).
+    pub fn pop(&self) -> Option<(usize, usize)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.aborted {
+                return None;
+            }
+            if let Some(item) = st.ready.pop_front() {
+                st.dispatched += 1;
+                if st.dispatched >= self.total {
+                    // Wake peers parked on an empty queue so they can
+                    // observe completion and exit.
+                    self.cv.notify_all();
+                }
+                return Some(item);
+            }
+            if st.dispatched >= self.total {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Abandon the run: wakes and releases every `pop`per.
+    pub fn abort(&self) {
+        self.state.lock().unwrap().aborted = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Fold the driver-side counters and runtime-stat deltas into a
+/// [`Metrics`].
+#[allow(clippy::too_many_arguments)]
+fn finalize_metrics<S: StencilSpace>(
+    space: &S,
+    wall: Instant,
+    blocks: u64,
+    writeback: Duration,
+    cell_updates: u64,
+    execute_ms: f64,
+    marshal_ms: f64,
+) -> Metrics {
+    let (pool_hits, pool_misses, desc_pool_hits, desc_pool_misses) = space.pool_counters();
+    Metrics {
+        blocks,
+        cell_updates,
+        extract: Duration::from_secs_f64(marshal_ms.max(0.0) / 1e3),
+        execute: Duration::from_secs_f64(execute_ms.max(0.0) / 1e3),
+        writeback,
+        wall: wall.elapsed(),
+        pool_hits,
+        pool_misses,
+        desc_pool_hits,
+        desc_pool_misses,
+    }
+}
+
+/// Dependency-ordered pass streaming with a caller-provided executor —
+/// the core of [`drive_single`], factored out so the scheduling
+/// machinery is testable without PJRT artifacts.  `exec` runs on the
+/// calling thread (the PJRT client is `Rc`-based); one extractor thread
+/// feeds ready tiles through a bounded channel of depth `lookahead`.
+///
+/// Returns `(blocks completed, writeback time)`.
+pub fn drive_local<S: StencilSpace>(
+    mut exec: impl FnMut(usize, &[Tensor]) -> crate::Result<Vec<f32>>,
+    space: &S,
+    handles: [S::Handle; 2],
+    passes: usize,
+    lookahead: usize,
+) -> crate::Result<(u64, Duration)> {
+    let nblocks = space.nblocks();
+    let total = passes.saturating_mul(nblocks);
+    if total == 0 {
+        return Ok((0, Duration::ZERO));
+    }
+    let table = DepTable::new(space.lattice(), space.reach(), passes, PassMode::Pipelined);
+    let queue = ReadyQueue::new(total, (0..nblocks).map(|i| (0usize, i)));
+    let mut writeback = Duration::ZERO;
+    let mut blocks = 0u64;
+    let mut newly = Vec::new();
+
+    // Small plans — or a single-core host, where a marshalling thread
+    // can only steal cycles from execution — run sequentially.
+    // Completions are synchronous here, so whenever work remains the
+    // ready queue is non-empty and `pop` never parks.
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if total <= 2 || lookahead <= 1 || cores <= 1 {
+        while let Some((pass, block)) = queue.pop() {
+            // SAFETY: dependency order — every cell this tile reads was
+            // written by an already-completed predecessor (or the seed).
+            let inputs = unsafe { space.extract(handles[pass % 2], block) };
+            let out = exec(block, &inputs)?;
+            let t0 = Instant::now();
+            // SAFETY: disjoint interiors on the block lattice.
+            unsafe { space.write(handles[(pass + 1) % 2], block, &out) };
+            writeback += t0.elapsed();
+            blocks += 1;
+            newly.clear();
+            table.complete(pass, block, &mut newly);
+            queue.push_all(&newly);
+            space.recycle(inputs);
+        }
+        return Ok((blocks, writeback));
+    }
+
+    std::thread::scope(|sc| -> crate::Result<()> {
+        let (tx, rx) = mpsc::sync_channel::<(usize, usize, Vec<Tensor>)>(lookahead);
+        let queue_ref = &queue;
+        let feeder = sc.spawn(move || {
+            while let Some((pass, block)) = queue_ref.pop() {
+                // SAFETY: dependency order, as above — `pop` only hands
+                // out blocks whose predecessors have written back.
+                let inputs = unsafe { space.extract(handles[pass % 2], block) };
+                if tx.send((pass, block, inputs)).is_err() {
+                    return; // consumer dropped (error path)
+                }
+            }
+        });
+        let mut result: crate::Result<()> = Ok(());
+        let mut feeder_died = false;
+        for _ in 0..total {
+            match rx.recv() {
+                Ok((pass, block, inputs)) => match exec(block, &inputs) {
+                    Ok(out) => {
+                        let t0 = Instant::now();
+                        // SAFETY: disjoint interiors.
+                        unsafe { space.write(handles[(pass + 1) % 2], block, &out) };
+                        writeback += t0.elapsed();
+                        blocks += 1;
+                        newly.clear();
+                        table.complete(pass, block, &mut newly);
+                        queue.push_all(&newly);
+                        space.recycle(inputs);
+                    }
+                    Err(e) => {
+                        result = Err(e);
+                        break;
+                    }
+                },
+                // Feeder gone before sending everything: it panicked.
+                Err(_) => {
+                    feeder_died = true;
+                    break;
+                }
+            }
+        }
+        // Unblock a feeder parked on the ready queue or a full channel,
+        // then join it so a panic converts to an error instead of being
+        // resumed by the scope.
+        queue.abort();
+        drop(rx);
+        match feeder.join() {
+            Err(p) => {
+                let e = anyhow!("extractor thread panicked: {}", panic_text(p.as_ref()));
+                if result.is_ok() {
+                    result = Err(e);
+                }
+            }
+            Ok(()) if feeder_died && result.is_ok() => {
+                result = Err(anyhow!("extractor stopped after fewer than {total} blocks"));
+            }
+            Ok(()) => {}
+        }
+        result
+    })?;
+    Ok((blocks, writeback))
+}
+
+/// Run `passes` dependency-pipelined passes on a single [`Runtime`] and
+/// finalize the [`Metrics`] (the caller compiles the artifact outside
+/// the timed region first).
+pub fn drive_single<S: StencilSpace>(
+    rt: &Runtime,
+    artifact: &str,
+    space: &S,
+    handles: [S::Handle; 2],
+    passes: usize,
+    cell_updates: u64,
+) -> crate::Result<Metrics> {
+    let stats0 = rt.stats();
+    let wall = Instant::now();
+    let (blocks, writeback) = drive_local(
+        |_block, inputs| rt.execute_f32(artifact, inputs),
+        space,
+        handles,
+        passes,
+        4,
+    )?;
+    let stats = rt.stats();
+    Ok(finalize_metrics(
+        space,
+        wall,
+        blocks,
+        writeback,
+        cell_updates,
+        stats.execute_ms - stats0.execute_ms,
+        stats.marshal_ms - stats0.marshal_ms,
+    ))
+}
+
+/// Run `passes` passes on a [`RuntimePool`]: `extractors` workers pull
+/// dependency-ready blocks, the lanes execute and write back, and each
+/// job's completion callback advances the dependency table — there is
+/// no per-pass barrier; the single [`RuntimePool::wait_idle`] at the
+/// end only closes out the run.  (The caller warms the artifact on
+/// every lane outside the timed region first.)
+#[allow(clippy::too_many_arguments)]
+pub fn drive_pool<S: StencilSpace>(
+    pool: &RuntimePool,
+    artifact: &str,
+    space: &Arc<S>,
+    handles: [S::Handle; 2],
+    passes: usize,
+    mode: PassMode,
+    extractors: usize,
+    cell_updates: u64,
+) -> crate::Result<Metrics>
+where
+    S: 'static,
+{
+    let stats0 = pool.stats();
+    let wall = Instant::now();
+    let nblocks = space.nblocks();
+    let total = passes.saturating_mul(nblocks);
+    let done_blocks = Arc::new(AtomicU64::new(0));
+    let wb_nanos = Arc::new(AtomicU64::new(0));
+
+    if total > 0 {
+        let table = Arc::new(DepTable::new(space.lattice(), space.reach(), passes, mode));
+        let queue = Arc::new(ReadyQueue::new(total, (0..nblocks).map(|i| (0usize, i))));
+        let artifact_arc: Arc<str> = Arc::from(artifact);
+        let extractors = extractors.clamp(1, nblocks);
+        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+        // SAFETY-relevant: jobs borrow the caller's grids through raw
+        // handles; the IdleGuard drains the lanes before this frame's
+        // grids can be freed, even on an unwinding exit.
+        let guard = IdleGuard::new(pool);
+        std::thread::scope(|sc| {
+            for _ in 0..extractors {
+                sc.spawn(|| {
+                    while let Some((pass, block)) = queue.pop() {
+                        let src = handles[pass % 2];
+                        let dst = handles[(pass + 1) % 2];
+                        // Catch extraction panics here so the other
+                        // workers and the lanes stop promptly instead
+                        // of draining the whole remaining plan.
+                        let extracted = catch_unwind(AssertUnwindSafe(|| {
+                            // SAFETY: dependency order via the ready
+                            // queue — predecessors have written back.
+                            unsafe { space.extract(src, block) }
+                        }));
+                        let inputs = match extracted {
+                            Ok(inputs) => inputs,
+                            Err(p) => {
+                                queue.abort();
+                                first_err.lock().unwrap().get_or_insert(anyhow!(
+                                    "extractor worker panicked: {}",
+                                    panic_text(p.as_ref())
+                                ));
+                                return;
+                            }
+                        };
+                        let artifact = artifact_arc.clone();
+                        let space_j = space.clone();
+                        let done_j = done_blocks.clone();
+                        let wb_j = wb_nanos.clone();
+                        let table_j = table.clone();
+                        let queue_j = queue.clone();
+                        pool.submit_tracked(
+                            move |_lane, rt| {
+                                let out = rt.execute_f32(&artifact, &inputs)?;
+                                let t0 = Instant::now();
+                                // SAFETY: disjoint interiors on the
+                                // block lattice.
+                                unsafe { space_j.write(dst, block, &out) };
+                                wb_j.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                                done_j.fetch_add(1, Ordering::Relaxed);
+                                space_j.recycle(inputs);
+                                Ok(())
+                            },
+                            move |ok| {
+                                if ok {
+                                    let mut newly = Vec::new();
+                                    table_j.complete(pass, block, &mut newly);
+                                    queue_j.push_all(&newly);
+                                } else {
+                                    // Failed or skipped job: its
+                                    // successors can never run; release
+                                    // the extractors.
+                                    queue_j.abort();
+                                }
+                            },
+                        );
+                    }
+                });
+            }
+        });
+        // Drain the lanes (the only wait_idle of the whole run), then
+        // surface extractor-side and lane-side failures in that order.
+        let idle = pool.wait_idle();
+        drop(guard);
+        if let Some(e) = first_err.into_inner().unwrap() {
+            return Err(e);
+        }
+        idle?;
+    }
+
+    let stats = pool.stats();
+    Ok(finalize_metrics(
+        space.as_ref(),
+        wall,
+        done_blocks.load(Ordering::Relaxed),
+        Duration::from_nanos(wb_nanos.load(Ordering::Relaxed)),
+        cell_updates,
+        stats.execute_ms - stats0.execute_ms,
+        stats.marshal_ms - stats0.marshal_ms,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::bufpool::TensorPools;
+    use crate::coordinator::grid::{Boundary, Grid2D, GridWriter2D};
+    use std::collections::HashSet;
+
+    // ---------- DepTable scheduling-invariant tests ----------
+
+    /// Simulation harness: processes items popped off a ReadyQueue one
+    /// at a time (choosing among the currently-ready set by `pick`),
+    /// asserting before each completion that every halo-overlapping
+    /// predecessor already completed.
+    fn simulate(
+        dims: [usize; 3],
+        reach: [usize; 3],
+        passes: usize,
+        mode: PassMode,
+        mut pick: impl FnMut(usize) -> usize,
+    ) {
+        let nblocks = dims[0] * dims[1] * dims[2];
+        let table = DepTable::new(dims, reach, passes, mode);
+        let mut ready: Vec<(usize, usize)> = (0..nblocks).map(|i| (0, i)).collect();
+        let mut completed: HashSet<(usize, usize)> = HashSet::new();
+        let mut dispatched = 0usize;
+        while !ready.is_empty() {
+            let idx = pick(ready.len()) % ready.len();
+            let (pass, block) = ready.swap_remove(idx);
+            dispatched += 1;
+            // The invariant: every predecessor in the halo neighborhood
+            // (or the whole previous pass, in Barrier mode) completed.
+            if pass > 0 {
+                table.neighborhood(block, |j| {
+                    assert!(
+                        completed.contains(&(pass - 1, j)),
+                        "block (p={pass}, i={block}) scheduled before \
+                         predecessor (p={}, i={j}) completed",
+                        pass - 1
+                    );
+                });
+            }
+            assert!(completed.insert((pass, block)), "double-scheduled");
+            let mut newly = Vec::new();
+            table.complete(pass, block, &mut newly);
+            ready.extend(newly);
+        }
+        assert_eq!(dispatched, passes * nblocks, "not every block ran");
+    }
+
+    #[test]
+    fn dep_table_exhaustive_small_grids() {
+        // Exhaustive over pick-order variation for a family of small
+        // lattices: every (dims, reach, passes) runs under many
+        // deterministic orderings (LIFO, FIFO, and rotating offsets).
+        let cases: &[([usize; 3], [usize; 3], usize)] = &[
+            ([1, 2, 2], [0, 1, 1], 2),
+            ([1, 2, 2], [0, 1, 1], 3),
+            ([1, 3, 4], [0, 1, 1], 3),
+            ([1, 4, 1], [0, 1, 0], 4),
+            ([2, 2, 2], [1, 1, 1], 3),
+            ([3, 3, 3], [1, 1, 1], 2),
+            ([1, 3, 3], [0, 2, 2], 3), // halo wider than one block
+            ([1, 3, 3], [0, 0, 0], 3), // halo 0: self-dependency only
+            ([1, 1, 1], [0, 1, 1], 5), // single block
+        ];
+        for &(dims, reach, passes) in cases {
+            for order in 0..7usize {
+                simulate(dims, reach, passes, PassMode::Pipelined, |len| match order {
+                    0 => 0,              // FIFO
+                    1 => len - 1,        // LIFO
+                    k => (k * 131) % len // rotating picks
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn dep_table_randomized_orders() {
+        let mut rng = crate::testutil::Rng::new(42);
+        for _ in 0..25 {
+            let dims = [1, rng.usize_in(1, 4), rng.usize_in(1, 4)];
+            let reach = [0, rng.usize_in(0, 2), rng.usize_in(0, 2)];
+            let passes = rng.usize_in(1, 4);
+            let mut r2 = crate::testutil::Rng::new(rng.next_u64());
+            simulate(dims, reach, passes, PassMode::Pipelined, move |len| {
+                r2.usize_in(0, len - 1)
+            });
+        }
+    }
+
+    #[test]
+    fn dep_table_barrier_mode_waits_for_whole_pass() {
+        let dims = [1, 2, 3];
+        let nblocks = 6;
+        let table = DepTable::new(dims, [0, 1, 1], 2, PassMode::Barrier);
+        let mut newly = Vec::new();
+        for i in 0..nblocks - 1 {
+            table.complete(0, i, &mut newly);
+            assert!(newly.is_empty(), "pass 1 released after only {} completions", i + 1);
+        }
+        table.complete(0, nblocks - 1, &mut newly);
+        let ready: HashSet<usize> = newly.iter().map(|&(p, i)| {
+            assert_eq!(p, 1);
+            i
+        }).collect();
+        assert_eq!(ready.len(), nblocks, "all pass-1 blocks release together");
+    }
+
+    #[test]
+    fn dep_table_interior_block_needs_nine_neighbors_2d() {
+        // 3x3 lattice, reach 1: the center block of pass 1 must wait
+        // for all 9 pass-0 blocks; a corner only for its 4 neighbors.
+        let table = DepTable::new([1, 3, 3], [0, 1, 1], 2, PassMode::Pipelined);
+        assert_eq!(table.pred_count(4), 9); // center
+        assert_eq!(table.pred_count(0), 4); // corner
+        assert_eq!(table.pred_count(1), 6); // edge
+    }
+
+    #[test]
+    fn dep_table_completion_counts_match_pred_counts() {
+        // Sum of decrements each pass-1 block receives over a full
+        // pass-0 sweep equals its initial predecessor count (the
+        // neighbor relation is symmetric).
+        let dims = [2, 3, 4];
+        let nblocks = 24;
+        for reach in [[0, 0, 0], [1, 1, 1], [0, 1, 2]] {
+            let table = DepTable::new(dims, reach, 2, PassMode::Pipelined);
+            let mut newly = Vec::new();
+            for i in 0..nblocks {
+                table.complete(0, i, &mut newly);
+            }
+            let set: HashSet<usize> = newly.iter().map(|&(_, i)| i).collect();
+            assert_eq!(set.len(), nblocks, "reach {reach:?}: every block released exactly once");
+        }
+    }
+
+    #[test]
+    fn ready_queue_counts_and_aborts() {
+        let q = ReadyQueue::new(3, [(0usize, 0usize), (0, 1)]);
+        assert_eq!(q.pop(), Some((0, 0)));
+        q.push_all(&[(1, 0)]);
+        assert_eq!(q.pop(), Some((0, 1)));
+        assert_eq!(q.pop(), Some((1, 0)));
+        assert_eq!(q.pop(), None, "all dispatched");
+
+        let q = ReadyQueue::new(5, [(0usize, 0usize)]);
+        q.abort();
+        assert_eq!(q.pop(), None, "aborted queue releases poppers");
+    }
+
+    #[test]
+    fn ready_queue_releases_parked_threads_on_final_dispatch() {
+        let q = std::sync::Arc::new(ReadyQueue::new(2, [(0usize, 0usize), (0, 1)]));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let q = q.clone();
+                s.spawn(move || while q.pop().is_some() {});
+            }
+        }); // must not hang
+    }
+
+    // ---------- drive_local end-to-end (fake kernel, no artifacts) ----------
+
+    /// Minimal 2D StencilSpace over raw grid handles: block lattice,
+    /// halo extraction, interior write-back — enough to run the real
+    /// driver with a native-Rust kernel.
+    struct TestSpace2D {
+        origins: Vec<(usize, usize)>,
+        lattice: [usize; 3],
+        reach: [usize; 3],
+        ny: usize,
+        nx: usize,
+        block: usize,
+        halo: usize,
+        tile: usize,
+        pools: TensorPools,
+    }
+
+    impl TestSpace2D {
+        fn new(ny: usize, nx: usize, block: usize, halo: usize) -> TestSpace2D {
+            let mut origins = Vec::new();
+            let mut y0 = 0;
+            while y0 < ny {
+                let mut x0 = 0;
+                while x0 < nx {
+                    origins.push((y0, x0));
+                    x0 += block;
+                }
+                y0 += block;
+            }
+            let nby = ny.div_ceil(block);
+            let nbx = nx.div_ceil(block);
+            let reach_b = halo.div_ceil(block);
+            TestSpace2D {
+                origins,
+                lattice: [1, nby, nbx],
+                reach: [0, reach_b, reach_b],
+                ny,
+                nx,
+                block,
+                halo,
+                tile: block + 2 * halo,
+                pools: TensorPools::default(),
+            }
+        }
+    }
+
+    impl StencilSpace for TestSpace2D {
+        type Handle = GridWriter2D;
+
+        fn nblocks(&self) -> usize {
+            self.origins.len()
+        }
+        fn lattice(&self) -> [usize; 3] {
+            self.lattice
+        }
+        fn reach(&self) -> [usize; 3] {
+            self.reach
+        }
+        unsafe fn extract(&self, src: GridWriter2D, block: usize) -> Vec<Tensor> {
+            let (y0, x0) = self.origins[block];
+            let mut t = self.pools.tiles.take(self.tile * self.tile);
+            src.extract_tile_into(
+                y0 as isize, x0 as isize, self.tile, self.tile, self.halo,
+                Boundary::Zero, &mut t,
+            );
+            vec![Tensor::F32(t, vec![self.tile, self.tile])]
+        }
+        unsafe fn write(&self, dst: GridWriter2D, block: usize, out: &[f32]) {
+            let (y0, x0) = self.origins[block];
+            dst.write_block(y0, x0, self.block, self.block, out);
+        }
+        fn recycle(&self, inputs: Vec<Tensor>) {
+            self.pools.recycle(inputs);
+        }
+        fn pool_counters(&self) -> (u64, u64, u64, u64) {
+            (
+                self.pools.tiles.hits(),
+                self.pools.tiles.misses(),
+                self.pools.descs.hits(),
+                self.pools.descs.misses(),
+            )
+        }
+    }
+
+    /// The fake compute unit: one T=1 five-point average over the
+    /// halo'd tile, returning the block interior.  Deterministic f32
+    /// arithmetic, so any valid schedule must be bitwise identical.
+    fn blur_kernel(tile: usize, halo: usize, block: usize, t: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; block * block];
+        for by in 0..block {
+            for bx in 0..block {
+                let y = by + halo;
+                let x = bx + halo;
+                let c = t[y * tile + x];
+                let up = t[(y - 1) * tile + x];
+                let dn = t[(y + 1) * tile + x];
+                let lf = t[y * tile + x - 1];
+                let rt = t[y * tile + x + 1];
+                out[by * block + bx] = 0.2 * (c + up + dn + lf + rt);
+            }
+        }
+        out
+    }
+
+    /// Reference: the same kernel applied pass-by-pass with a full
+    /// barrier (plain double-buffered sweep).
+    fn blur_reference(mut g: Grid2D, passes: usize) -> Grid2D {
+        for _ in 0..passes {
+            let mut next = Grid2D::zeros(g.ny, g.nx);
+            for y in 0..g.ny {
+                for x in 0..g.nx {
+                    let r = |yy: isize, xx: isize| g.read(yy, xx, Boundary::Zero);
+                    let y = y as isize;
+                    let x = x as isize;
+                    next.data[(y * g.nx as isize + x) as usize] = 0.2
+                        * (r(y, x) + r(y - 1, x) + r(y + 1, x) + r(y, x - 1) + r(y, x + 1));
+                }
+            }
+            g = next;
+        }
+        g
+    }
+
+    fn run_driver_case(ny: usize, nx: usize, block: usize, passes: usize, lookahead: usize) {
+        let halo = 1; // r·T = 1 for the five-point blur
+        let mut rng = crate::testutil::Rng::new(7);
+        let init = Grid2D { ny, nx, data: rng.vec_f32(ny * nx, 0.0, 1.0) };
+        let want = blur_reference(init.clone(), passes);
+
+        let space = TestSpace2D::new(ny, nx, block, halo);
+        let mut cur = init;
+        let mut next = Grid2D::zeros(ny, nx);
+        let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
+        let tile = space.tile;
+        let (blocks, _) = drive_local(
+            |_b, inputs| Ok(blur_kernel(tile, halo, block, inputs[0].as_f32())),
+            &space,
+            handles,
+            passes,
+            lookahead,
+        )
+        .unwrap();
+        assert_eq!(blocks as usize, passes * space.nblocks());
+        let got = if passes % 2 == 0 { cur } else { next };
+        assert_eq!(got.data, want.data, "{ny}x{nx} block={block} passes={passes}");
+    }
+
+    #[test]
+    fn drive_local_matches_barrier_reference_bitwise() {
+        // Pipelined cross-pass schedule == plain barriered sweep,
+        // bitwise, across geometries (including partial edge blocks).
+        run_driver_case(8, 8, 4, 3, 4);
+        run_driver_case(12, 10, 4, 4, 4); // partial blocks
+        run_driver_case(6, 6, 2, 5, 4); // deep pipeline, many small blocks
+        run_driver_case(4, 4, 4, 2, 4); // single-block lattice
+        run_driver_case(9, 7, 3, 3, 2); // odd geometry, small lookahead
+    }
+
+    #[test]
+    fn drive_local_sequential_fallback_matches() {
+        // lookahead 1 forces the sequential path.
+        run_driver_case(8, 8, 4, 3, 1);
+    }
+
+    #[test]
+    fn drive_local_steady_state_reuses_tiles() {
+        let space = TestSpace2D::new(8, 8, 4, 1);
+        let mut cur = Grid2D::from_fn(8, 8, |y, x| (y * 8 + x) as f32);
+        let mut next = Grid2D::zeros(8, 8);
+        let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
+        let tile = space.tile;
+        drive_local(
+            |_b, inputs| Ok(blur_kernel(tile, 1, 4, inputs[0].as_f32())),
+            &space,
+            handles,
+            4,
+            1, // sequential: one tile in flight
+        )
+        .unwrap();
+        let (hits, misses, _, _) = space.pool_counters();
+        assert_eq!(misses, 1, "steady state allocates exactly the in-flight tile");
+        assert_eq!(hits, 4 * space.nblocks() as u64 - 1);
+    }
+
+    #[test]
+    fn drive_local_error_propagates_and_stops() {
+        let space = TestSpace2D::new(8, 8, 4, 1);
+        let mut cur = Grid2D::zeros(8, 8);
+        let mut next = Grid2D::zeros(8, 8);
+        let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
+        let mut n = 0;
+        let r = drive_local(
+            |_b, _inputs| {
+                n += 1;
+                if n == 3 {
+                    anyhow::bail!("boom")
+                }
+                Ok(vec![0.0; 16])
+            },
+            &space,
+            handles,
+            4,
+            4,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn drive_local_zero_passes_is_noop() {
+        let space = TestSpace2D::new(8, 8, 4, 1);
+        let mut cur = Grid2D::zeros(8, 8);
+        let mut next = Grid2D::zeros(8, 8);
+        let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
+        let (blocks, _) =
+            drive_local(|_b, _i| Ok(vec![0.0; 16]), &space, handles, 0, 4).unwrap();
+        assert_eq!(blocks, 0);
+    }
+}

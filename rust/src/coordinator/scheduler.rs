@@ -1,4 +1,15 @@
-//! Block-streaming schedulers.
+//! Flat (single-pass) block-streaming schedulers.
+//!
+//! Cross-pass scheduling — dependency-tracked pipelining over *all*
+//! passes of a workload — lives in
+//! [`crate::coordinator::passdriver`], which superseded these engines
+//! on the stencil paths in PR 2.  The two generic engines below
+//! currently have no production caller: they are retained (fully
+//! tested, pure logic) as the streaming building blocks for the
+//! remaining Ch. 4 lane-parallel work (LUD internal blocks, SRAD
+//! reduction tiles — see ROADMAP), which needs exactly this
+//! independent-block fan-out rather than the pass driver's dependency
+//! table.
 //!
 //! Two regimes:
 //!

@@ -8,32 +8,43 @@
 //! must be a multiple of `T` (the bitstream's temporal depth is fixed at
 //! compile time, exactly as in the thesis).
 //!
+//! Since PR 2 every runner is a thin configuration shim — a block plan
+//! plus tile-extraction/write-back callbacks ([`Space2D`]/[`Space3D`])
+//! — over the generic [`passdriver`] engine, which owns dependency
+//! tracking, lane feeding, double-buffer alternation and metrics.
+//! Passes are **cross-pass pipelined**: a block of pass `p+1` starts as
+//! soon as its `r·T` halo-overlapping pass-`p` predecessor blocks have
+//! written back, so the lanes never drain between passes (no
+//! `wait_idle` barrier — the deep-pipeline behaviour of the thesis's
+//! combined spatial/temporal blocking).
+//!
 //! Each workload has two entry points:
 //!
 //! * `run_stencil{2d,3d}` — single [`Runtime`]: execution pinned to the
-//!   caller's thread, one extractor thread pipelining tiles ahead of it;
+//!   caller's thread, one extractor thread pipelining dependency-ready
+//!   tiles ahead of it (across pass boundaries);
 //! * `run_stencil{2d,3d}_lanes` — [`RuntimePool`]: M extractor workers
 //!   feed N execute lanes through the pool's bounded queue, and each
 //!   lane writes its own block back (unordered — interiors are
 //!   disjoint, so only metrics, not correctness, depend on order).
 //!   Results are bit-identical to the single-runtime path for any lane
-//!   count (see the lane-invariance integration tests).
+//!   count (see the lane-invariance integration tests); the `_mode`
+//!   variants expose the [`PassMode::Barrier`] baseline schedule for
+//!   the CI perf gate.
 //!
-//! Both paths marshal through a [`TilePool`], so steady-state passes
-//! allocate nothing for tile extraction (`Metrics::pool_hits` /
-//! `pool_misses` expose the reuse rate).
+//! Both paths marshal through the [`TensorPools`] arenas (f32 tiles
+//! *and* the i32 boundary descriptors), so steady-state passes allocate
+//! nothing for tile extraction (`Metrics::pool_hits` / `pool_misses` /
+//! `desc_pool_hits` / `desc_pool_misses` expose the reuse rates).
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail};
 
-use crate::coordinator::bufpool::TilePool;
-use crate::coordinator::grid::{Boundary, Grid2D, Grid3D};
-use crate::coordinator::metrics::{Metrics, Timed};
-use crate::coordinator::scheduler::{feed_blocks, run_pipelined};
-use crate::runtime::pool::IdleGuard;
+use crate::coordinator::bufpool::TensorPools;
+use crate::coordinator::grid::{Boundary, Grid2D, Grid3D, GridWriter2D, GridWriter3D};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::passdriver::{self, PassMode, StencilSpace};
 use crate::runtime::{Runtime, RuntimePool, Tensor};
 
 /// Out-of-grid cell counts per tile side: [top, bottom] for an axis.
@@ -116,24 +127,226 @@ fn block_origins_3d(nz: usize, ny: usize, nx: usize, block: usize) -> Vec<(usize
     origins
 }
 
-/// Return a block's f32 input buffers to the tile pool for reuse.
-///
-/// Kernel *output* buffers are deliberately not pooled: they are
-/// `block²`/`block³` cells while every extraction request is
-/// `tile²`/`tile³` (strictly larger for halo ≥ 1), so they could never
-/// satisfy a `take` — shelving them would only hold dead memory.
-fn recycle_inputs(pool: &TilePool, inputs: Vec<Tensor>) {
-    for t in inputs {
-        if let Tensor::F32(v, _) = t {
-            pool.put(v);
-        }
-    }
-}
-
 /// How many extractor workers to pair with `lanes` execute lanes: halo
 /// extraction runs at memcpy rate, so half the lane count saturates it.
 fn extractor_count(lanes: usize) -> usize {
     (lanes + 1) / 2
+}
+
+/// 2D stencil configuration for the pass driver: the block plan, the
+/// `r·T` halo'd extraction (main grid + optional aux + optional
+/// per-step scalar + i32 boundary descriptor) and interior write-back.
+struct Space2D {
+    origins: Vec<(usize, usize)>,
+    lattice: [usize; 3],
+    reach: [usize; 3],
+    ny: usize,
+    nx: usize,
+    block: usize,
+    halo: usize,
+    tile: usize,
+    boundary: Boundary,
+    /// Raw read view of the aux (e.g. power) grid — never written.
+    aux: Option<GridWriter2D>,
+    /// Run-time scalar operand, replicated per block (SRAD's q0²).
+    scalar: Option<Vec<f32>>,
+    pools: TensorPools,
+}
+
+impl Space2D {
+    fn new(
+        ny: usize,
+        nx: usize,
+        m: &StencilMeta,
+        aux: Option<GridWriter2D>,
+        scalar: Option<Vec<f32>>,
+    ) -> Space2D {
+        let origins = block_origins_2d(ny, nx, m.block);
+        let reach_b = m.halo.div_ceil(m.block);
+        Space2D {
+            origins,
+            lattice: [1, ny.div_ceil(m.block), nx.div_ceil(m.block)],
+            reach: [0, reach_b, reach_b],
+            ny,
+            nx,
+            block: m.block,
+            halo: m.halo,
+            tile: m.tile,
+            boundary: m.boundary,
+            aux,
+            scalar,
+            pools: TensorPools::default(),
+        }
+    }
+}
+
+impl StencilSpace for Space2D {
+    type Handle = GridWriter2D;
+
+    fn nblocks(&self) -> usize {
+        self.origins.len()
+    }
+
+    fn lattice(&self) -> [usize; 3] {
+        self.lattice
+    }
+
+    fn reach(&self) -> [usize; 3] {
+        self.reach
+    }
+
+    unsafe fn extract(&self, src: GridWriter2D, block: usize) -> Vec<Tensor> {
+        let (y0, x0) = self.origins[block];
+        let mut inputs = Vec::with_capacity(4);
+        let mut t = self.pools.tiles.take(self.tile * self.tile);
+        src.extract_tile_into(
+            y0 as isize, x0 as isize, self.tile, self.tile, self.halo, self.boundary, &mut t,
+        );
+        inputs.push(Tensor::F32(t, vec![self.tile, self.tile]));
+        if let Some(aux) = &self.aux {
+            let mut p = self.pools.tiles.take(self.tile * self.tile);
+            aux.extract_tile_into(
+                y0 as isize, x0 as isize, self.tile, self.tile, self.halo, self.boundary, &mut p,
+            );
+            inputs.push(Tensor::F32(p, vec![self.tile, self.tile]));
+        }
+        if let Some(s) = &self.scalar {
+            let mut v = self.pools.tiles.take(s.len());
+            v.extend_from_slice(s);
+            inputs.push(Tensor::F32(v, vec![s.len()]));
+        }
+        // per-step boundary restoration descriptor (see the
+        // physical-boundary contract in kernels/stencil2d.py)
+        let (t0, t1) = oob_axis(y0, self.block, self.halo, self.ny);
+        let (l0, l1) = oob_axis(x0, self.block, self.halo, self.nx);
+        let mut d = self.pools.descs.take(4);
+        d.extend_from_slice(&[t0, t1, l0, l1]);
+        inputs.push(Tensor::I32(d, vec![4]));
+        inputs
+    }
+
+    unsafe fn write(&self, dst: GridWriter2D, block: usize, out: &[f32]) {
+        let (y0, x0) = self.origins[block];
+        dst.write_block(y0, x0, self.block, self.block, out);
+    }
+
+    fn recycle(&self, inputs: Vec<Tensor>) {
+        self.pools.recycle(inputs);
+    }
+
+    fn pool_counters(&self) -> (u64, u64, u64, u64) {
+        (
+            self.pools.tiles.hits(),
+            self.pools.tiles.misses(),
+            self.pools.descs.hits(),
+            self.pools.descs.misses(),
+        )
+    }
+}
+
+/// 3D counterpart of [`Space2D`] (cubic tiles, 6-entry descriptor).
+struct Space3D {
+    origins: Vec<(usize, usize, usize)>,
+    lattice: [usize; 3],
+    reach: [usize; 3],
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    block: usize,
+    halo: usize,
+    tile: usize,
+    boundary: Boundary,
+    aux: Option<GridWriter3D>,
+    pools: TensorPools,
+}
+
+impl Space3D {
+    fn new(
+        nz: usize,
+        ny: usize,
+        nx: usize,
+        m: &StencilMeta,
+        aux: Option<GridWriter3D>,
+    ) -> Space3D {
+        let origins = block_origins_3d(nz, ny, nx, m.block);
+        let reach_b = m.halo.div_ceil(m.block);
+        Space3D {
+            origins,
+            lattice: [
+                nz.div_ceil(m.block),
+                ny.div_ceil(m.block),
+                nx.div_ceil(m.block),
+            ],
+            reach: [reach_b, reach_b, reach_b],
+            nz,
+            ny,
+            nx,
+            block: m.block,
+            halo: m.halo,
+            tile: m.tile,
+            boundary: m.boundary,
+            aux,
+            pools: TensorPools::default(),
+        }
+    }
+}
+
+impl StencilSpace for Space3D {
+    type Handle = GridWriter3D;
+
+    fn nblocks(&self) -> usize {
+        self.origins.len()
+    }
+
+    fn lattice(&self) -> [usize; 3] {
+        self.lattice
+    }
+
+    fn reach(&self) -> [usize; 3] {
+        self.reach
+    }
+
+    unsafe fn extract(&self, src: GridWriter3D, block: usize) -> Vec<Tensor> {
+        let (z0, y0, x0) = self.origins[block];
+        let mut inputs = Vec::with_capacity(3);
+        let mut t = self.pools.tiles.take(self.tile * self.tile * self.tile);
+        src.extract_tile_into(
+            z0 as isize, y0 as isize, x0 as isize, self.tile, self.halo, self.boundary, &mut t,
+        );
+        inputs.push(Tensor::F32(t, vec![self.tile, self.tile, self.tile]));
+        if let Some(aux) = &self.aux {
+            let mut p = self.pools.tiles.take(self.tile * self.tile * self.tile);
+            aux.extract_tile_into(
+                z0 as isize, y0 as isize, x0 as isize, self.tile, self.halo, self.boundary, &mut p,
+            );
+            inputs.push(Tensor::F32(p, vec![self.tile, self.tile, self.tile]));
+        }
+        let (z0o, z1o) = oob_axis(z0, self.block, self.halo, self.nz);
+        let (y0o, y1o) = oob_axis(y0, self.block, self.halo, self.ny);
+        let (x0o, x1o) = oob_axis(x0, self.block, self.halo, self.nx);
+        let mut d = self.pools.descs.take(6);
+        d.extend_from_slice(&[z0o, z1o, y0o, y1o, x0o, x1o]);
+        inputs.push(Tensor::I32(d, vec![6]));
+        inputs
+    }
+
+    unsafe fn write(&self, dst: GridWriter3D, block: usize, out: &[f32]) {
+        let (z0, y0, x0) = self.origins[block];
+        dst.write_block(z0, y0, x0, self.block, out);
+    }
+
+    fn recycle(&self, inputs: Vec<Tensor>) {
+        self.pools.recycle(inputs);
+    }
+
+    fn pool_counters(&self) -> (u64, u64, u64, u64) {
+        (
+            self.pools.tiles.hits(),
+            self.pools.tiles.misses(),
+            self.pools.descs.hits(),
+            self.pools.descs.misses(),
+        )
+    }
 }
 
 /// Run `steps` time steps of a 2D stencil artifact over `grid`.
@@ -153,85 +366,79 @@ pub fn run_stencil2d(
         .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
         .clone();
     let m = stencil_meta(&spec, aux.is_some(), steps)?;
-    let (block, halo, tile) = (m.block, m.halo, m.tile);
-    let boundary = m.boundary;
-    let passes = steps / m.t_fused;
+    let passes = (steps / m.t_fused) as usize;
 
     // Compile up front, outside the timed region (the analogue of FPGA
     // reprogramming, which the thesis also excludes from kernel timing,
     // §4.2.4).
     rt.executable(artifact)?;
-    let stats0 = rt.stats();
 
-    let tile_pool = TilePool::default();
-    let mut metrics = Metrics::default();
-    let wall = Instant::now();
     let mut cur = grid;
     let mut next = Grid2D::zeros(cur.ny, cur.nx);
+    let cell_updates = (cur.ny * cur.nx) as u64 * steps;
+    // SAFETY: the aux grid is never written; cur/next outlive the drive
+    // call, which quiesces every handle before returning.
+    let space = Space2D::new(cur.ny, cur.nx, &m, aux.map(|a| unsafe { a.shared_view() }), None);
+    let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
+    let metrics = passdriver::drive_single(rt, artifact, &space, handles, passes, cell_updates)?;
+    // Pass p writes buffer (p+1) % 2, so the final grid's parity is
+    // `passes % 2` (0 passes leaves the input untouched in `cur`).
+    Ok((if passes % 2 == 0 { cur } else { next }, metrics))
+}
 
-    // block origins (fixed across passes)
-    let origins = block_origins_2d(cur.ny, cur.nx, block);
+/// Lane-parallel variant of [`run_stencil2d`] with an explicit
+/// [`PassMode`]: `Pipelined` (the default of [`run_stencil2d_lanes`])
+/// lets pass-`p+1` blocks start as soon as their halo-overlapping
+/// pass-`p` predecessors wrote back; `Barrier` reproduces the PR 1
+/// drain-between-passes schedule (the CI perf-gate baseline).
+pub fn run_stencil2d_lanes_mode(
+    pool: &RuntimePool,
+    artifact: &str,
+    grid: Grid2D,
+    aux: Option<&Grid2D>,
+    steps: u64,
+    mode: PassMode,
+) -> crate::Result<(Grid2D, Metrics)> {
+    let spec = pool
+        .registry()
+        .get(artifact)
+        .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
+        .clone();
+    let m = stencil_meta(&spec, aux.is_some(), steps)?;
+    let passes = (steps / m.t_fused) as usize;
 
-    for _ in 0..passes {
-        let cur_ref = &cur;
-        let next_ref = &mut next;
-        let pool_ref = &tile_pool;
-        let mut writeback = Duration::ZERO;
-        let mut blocks = 0u64;
-        run_pipelined(
-            origins.len(),
-            4,
-            |id| {
-                let (y0, x0) = origins[id];
-                let mut inputs = Vec::with_capacity(3);
-                let t = cur_ref.extract_tile_pooled(
-                    y0 as isize, x0 as isize, tile, tile, halo, boundary, pool_ref);
-                inputs.push(Tensor::F32(t, vec![tile, tile]));
-                if let Some(a) = aux {
-                    let p = a.extract_tile_pooled(
-                        y0 as isize, x0 as isize, tile, tile, halo, boundary, pool_ref);
-                    inputs.push(Tensor::F32(p, vec![tile, tile]));
-                }
-                // per-step boundary restoration descriptor (see the
-                // physical-boundary contract in kernels/stencil2d.py)
-                let (t0, t1) = oob_axis(y0, block, halo, cur_ref.ny);
-                let (l0, l1) = oob_axis(x0, block, halo, cur_ref.nx);
-                inputs.push(Tensor::I32(vec![t0, t1, l0, l1], vec![4]));
-                inputs
-            },
-            |id, inputs| {
-                let out = rt.execute_f32(artifact, &inputs)?;
-                let (y0, x0) = origins[id];
-                {
-                    let _t = Timed::new(&mut writeback);
-                    next_ref.write_block(y0, x0, block, block, &out);
-                }
-                blocks += 1;
-                recycle_inputs(pool_ref, inputs);
-                Ok(())
-            },
-        )?;
-        metrics.writeback += writeback;
-        metrics.blocks += blocks;
-        std::mem::swap(&mut cur, &mut next);
-    }
+    // Compile on every lane outside the timed region.
+    pool.warmup_artifact(artifact)?;
 
-    metrics.cell_updates = (cur.ny * cur.nx) as u64 * steps;
-    metrics.wall = wall.elapsed();
-    let stats = rt.stats();
-    metrics.execute =
-        Duration::from_secs_f64((stats.execute_ms - stats0.execute_ms) / 1e3);
-    metrics.extract =
-        Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms) / 1e3);
-    metrics.pool_hits = tile_pool.hits();
-    metrics.pool_misses = tile_pool.misses();
-    Ok((cur, metrics))
+    let mut cur = grid;
+    let mut next = Grid2D::zeros(cur.ny, cur.nx);
+    let cell_updates = (cur.ny * cur.nx) as u64 * steps;
+    // SAFETY: as in run_stencil2d; additionally every lane-side write
+    // targets a distinct origin on the block lattice (disjoint
+    // interiors) and the driver's IdleGuard drains the lanes before
+    // this frame's grids can be freed, even on an unwinding exit.
+    let space = Arc::new(Space2D::new(
+        cur.ny, cur.nx, &m, aux.map(|a| unsafe { a.shared_view() }), None,
+    ));
+    let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
+    let metrics = passdriver::drive_pool(
+        pool,
+        artifact,
+        &space,
+        handles,
+        passes,
+        mode,
+        extractor_count(pool.lanes()),
+        cell_updates,
+    )?;
+    Ok((if passes % 2 == 0 { cur } else { next }, metrics))
 }
 
 /// Lane-parallel variant of [`run_stencil2d`]: extractor workers feed
 /// the pool's execute lanes through its bounded job queue; each lane
 /// runs the compute unit on its own PJRT client and writes its block
-/// back itself, off the other lanes' critical path.  Bit-identical to
+/// back itself, off the other lanes' critical path.  Passes are
+/// cross-pass pipelined (no drain between passes).  Bit-identical to
 /// the single-runtime path for any lane count.
 pub fn run_stencil2d_lanes(
     pool: &RuntimePool,
@@ -240,100 +447,7 @@ pub fn run_stencil2d_lanes(
     aux: Option<&Grid2D>,
     steps: u64,
 ) -> crate::Result<(Grid2D, Metrics)> {
-    let spec = pool
-        .registry()
-        .get(artifact)
-        .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
-        .clone();
-    let m = stencil_meta(&spec, aux.is_some(), steps)?;
-    let (block, halo, tile) = (m.block, m.halo, m.tile);
-    let boundary = m.boundary;
-    let passes = steps / m.t_fused;
-
-    // Compile on every lane outside the timed region.
-    pool.warmup_artifact(artifact)?;
-    let stats0 = pool.stats();
-
-    let tile_pool = Arc::new(TilePool::default());
-    let artifact_arc: Arc<str> = Arc::from(artifact);
-    let origins = Arc::new(block_origins_2d(grid.ny, grid.nx, block));
-    let blocks_done = Arc::new(AtomicU64::new(0));
-    let wb_nanos = Arc::new(AtomicU64::new(0));
-    let extractors = extractor_count(pool.lanes());
-
-    let mut metrics = Metrics::default();
-    let wall = Instant::now();
-    let mut cur = grid;
-    let mut next = Grid2D::zeros(cur.ny, cur.nx);
-
-    for _ in 0..passes {
-        // SAFETY: every job writes a distinct origin on the block
-        // lattice (disjoint interiors), `next` is not touched below
-        // until the lanes are drained, and the IdleGuard drains them
-        // even on an unwinding exit from this frame.
-        let writer = unsafe { next.shared_writer() };
-        let cur_ref = &cur;
-        let guard = IdleGuard::new(pool);
-        let fed = feed_blocks(
-            origins.len(),
-            extractors,
-            |id| {
-                let (y0, x0) = origins[id];
-                let mut inputs = Vec::with_capacity(3);
-                let t = cur_ref.extract_tile_pooled(
-                    y0 as isize, x0 as isize, tile, tile, halo, boundary, &tile_pool);
-                inputs.push(Tensor::F32(t, vec![tile, tile]));
-                if let Some(a) = aux {
-                    let p = a.extract_tile_pooled(
-                        y0 as isize, x0 as isize, tile, tile, halo, boundary, &tile_pool);
-                    inputs.push(Tensor::F32(p, vec![tile, tile]));
-                }
-                let (t0, t1) = oob_axis(y0, block, halo, cur_ref.ny);
-                let (l0, l1) = oob_axis(x0, block, halo, cur_ref.nx);
-                inputs.push(Tensor::I32(vec![t0, t1, l0, l1], vec![4]));
-                inputs
-            },
-            |id, inputs| {
-                let artifact = artifact_arc.clone();
-                let origins = origins.clone();
-                let tile_pool = tile_pool.clone();
-                let blocks_done = blocks_done.clone();
-                let wb_nanos = wb_nanos.clone();
-                pool.submit(move |_lane, rt| {
-                    let out = rt.execute_f32(&artifact, &inputs)?;
-                    let (y0, x0) = origins[id];
-                    let t0 = Instant::now();
-                    writer.write_block(y0, x0, block, block, &out);
-                    wb_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                    blocks_done.fetch_add(1, Ordering::Relaxed);
-                    recycle_inputs(&tile_pool, inputs);
-                    Ok(())
-                });
-                Ok(())
-            },
-        );
-        // Drain the lanes before touching `next` (pass barrier), then
-        // surface extractor-side and lane-side failures in that order.
-        let idle = pool.wait_idle();
-        drop(guard);
-        fed?;
-        idle?;
-        std::mem::swap(&mut cur, &mut next);
-    }
-
-    metrics.blocks = blocks_done.load(Ordering::Relaxed);
-    metrics.writeback = Duration::from_nanos(wb_nanos.load(Ordering::Relaxed));
-    metrics.cell_updates = (cur.ny * cur.nx) as u64 * steps;
-    metrics.wall = wall.elapsed();
-    let stats = pool.stats();
-    // Aggregate lane-seconds: with N lanes this can exceed wall time.
-    metrics.execute =
-        Duration::from_secs_f64((stats.execute_ms - stats0.execute_ms) / 1e3);
-    metrics.extract =
-        Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms) / 1e3);
-    metrics.pool_hits = tile_pool.hits();
-    metrics.pool_misses = tile_pool.misses();
-    Ok((cur, metrics))
+    run_stencil2d_lanes_mode(pool, artifact, grid, aux, steps, PassMode::Pipelined)
 }
 
 /// Run `steps` time steps of a 3D stencil artifact over `grid`.
@@ -350,74 +464,61 @@ pub fn run_stencil3d(
         .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
         .clone();
     let m = stencil_meta(&spec, aux.is_some(), steps)?;
-    let (block, halo, tile) = (m.block, m.halo, m.tile);
-    let boundary = m.boundary;
-    let passes = steps / m.t_fused;
+    let passes = (steps / m.t_fused) as usize;
 
     rt.executable(artifact)?;
-    let stats0 = rt.stats();
 
-    let tile_pool = TilePool::default();
-    let mut metrics = Metrics::default();
-    let wall = Instant::now();
     let mut cur = grid;
     let mut next = Grid3D::zeros(cur.nz, cur.ny, cur.nx);
+    let cell_updates = (cur.nz * cur.ny * cur.nx) as u64 * steps;
+    // SAFETY: as in run_stencil2d.
+    let space = Space3D::new(
+        cur.nz, cur.ny, cur.nx, &m, aux.map(|a| unsafe { a.shared_view() }),
+    );
+    let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
+    let metrics = passdriver::drive_single(rt, artifact, &space, handles, passes, cell_updates)?;
+    Ok((if passes % 2 == 0 { cur } else { next }, metrics))
+}
 
-    let origins = block_origins_3d(cur.nz, cur.ny, cur.nx, block);
+/// Lane-parallel variant of [`run_stencil3d`] with an explicit
+/// [`PassMode`]; see [`run_stencil2d_lanes_mode`].
+pub fn run_stencil3d_lanes_mode(
+    pool: &RuntimePool,
+    artifact: &str,
+    grid: Grid3D,
+    aux: Option<&Grid3D>,
+    steps: u64,
+    mode: PassMode,
+) -> crate::Result<(Grid3D, Metrics)> {
+    let spec = pool
+        .registry()
+        .get(artifact)
+        .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
+        .clone();
+    let m = stencil_meta(&spec, aux.is_some(), steps)?;
+    let passes = (steps / m.t_fused) as usize;
 
-    for _ in 0..passes {
-        let cur_ref = &cur;
-        let next_ref = &mut next;
-        let pool_ref = &tile_pool;
-        let mut writeback = Duration::ZERO;
-        let mut blocks = 0u64;
-        run_pipelined(
-            origins.len(),
-            4,
-            |id| {
-                let (z0, y0, x0) = origins[id];
-                let mut inputs = Vec::with_capacity(3);
-                let t = cur_ref.extract_tile_pooled(
-                    z0 as isize, y0 as isize, x0 as isize, tile, halo, boundary, pool_ref);
-                inputs.push(Tensor::F32(t, vec![tile, tile, tile]));
-                if let Some(a) = aux {
-                    let p = a.extract_tile_pooled(
-                        z0 as isize, y0 as isize, x0 as isize, tile, halo, boundary, pool_ref);
-                    inputs.push(Tensor::F32(p, vec![tile, tile, tile]));
-                }
-                let (z0o, z1o) = oob_axis(z0, block, halo, cur_ref.nz);
-                let (y0o, y1o) = oob_axis(y0, block, halo, cur_ref.ny);
-                let (x0o, x1o) = oob_axis(x0, block, halo, cur_ref.nx);
-                inputs.push(Tensor::I32(vec![z0o, z1o, y0o, y1o, x0o, x1o], vec![6]));
-                inputs
-            },
-            |id, inputs| {
-                let out = rt.execute_f32(artifact, &inputs)?;
-                let (z0, y0, x0) = origins[id];
-                {
-                    let _t = Timed::new(&mut writeback);
-                    next_ref.write_block(z0, y0, x0, block, &out);
-                }
-                blocks += 1;
-                recycle_inputs(pool_ref, inputs);
-                Ok(())
-            },
-        )?;
-        metrics.writeback += writeback;
-        metrics.blocks += blocks;
-        std::mem::swap(&mut cur, &mut next);
-    }
+    pool.warmup_artifact(artifact)?;
 
-    metrics.cell_updates = (cur.nz * cur.ny * cur.nx) as u64 * steps;
-    metrics.wall = wall.elapsed();
-    let stats = rt.stats();
-    metrics.execute =
-        Duration::from_secs_f64((stats.execute_ms - stats0.execute_ms) / 1e3);
-    metrics.extract =
-        Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms) / 1e3);
-    metrics.pool_hits = tile_pool.hits();
-    metrics.pool_misses = tile_pool.misses();
-    Ok((cur, metrics))
+    let mut cur = grid;
+    let mut next = Grid3D::zeros(cur.nz, cur.ny, cur.nx);
+    let cell_updates = (cur.nz * cur.ny * cur.nx) as u64 * steps;
+    // SAFETY: as in run_stencil2d_lanes_mode.
+    let space = Arc::new(Space3D::new(
+        cur.nz, cur.ny, cur.nx, &m, aux.map(|a| unsafe { a.shared_view() }),
+    ));
+    let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
+    let metrics = passdriver::drive_pool(
+        pool,
+        artifact,
+        &space,
+        handles,
+        passes,
+        mode,
+        extractor_count(pool.lanes()),
+        cell_updates,
+    )?;
+    Ok((if passes % 2 == 0 { cur } else { next }, metrics))
 }
 
 /// Lane-parallel variant of [`run_stencil3d`]; see
@@ -429,95 +530,7 @@ pub fn run_stencil3d_lanes(
     aux: Option<&Grid3D>,
     steps: u64,
 ) -> crate::Result<(Grid3D, Metrics)> {
-    let spec = pool
-        .registry()
-        .get(artifact)
-        .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
-        .clone();
-    let m = stencil_meta(&spec, aux.is_some(), steps)?;
-    let (block, halo, tile) = (m.block, m.halo, m.tile);
-    let boundary = m.boundary;
-    let passes = steps / m.t_fused;
-
-    pool.warmup_artifact(artifact)?;
-    let stats0 = pool.stats();
-
-    let tile_pool = Arc::new(TilePool::default());
-    let artifact_arc: Arc<str> = Arc::from(artifact);
-    let origins = Arc::new(block_origins_3d(grid.nz, grid.ny, grid.nx, block));
-    let blocks_done = Arc::new(AtomicU64::new(0));
-    let wb_nanos = Arc::new(AtomicU64::new(0));
-    let extractors = extractor_count(pool.lanes());
-
-    let mut metrics = Metrics::default();
-    let wall = Instant::now();
-    let mut cur = grid;
-    let mut next = Grid3D::zeros(cur.nz, cur.ny, cur.nx);
-
-    for _ in 0..passes {
-        // SAFETY: same contract as run_stencil2d_lanes — disjoint block
-        // writes, lanes drained (IdleGuard) before `next` is reused.
-        let writer = unsafe { next.shared_writer() };
-        let cur_ref = &cur;
-        let guard = IdleGuard::new(pool);
-        let fed = feed_blocks(
-            origins.len(),
-            extractors,
-            |id| {
-                let (z0, y0, x0) = origins[id];
-                let mut inputs = Vec::with_capacity(3);
-                let t = cur_ref.extract_tile_pooled(
-                    z0 as isize, y0 as isize, x0 as isize, tile, halo, boundary, &tile_pool);
-                inputs.push(Tensor::F32(t, vec![tile, tile, tile]));
-                if let Some(a) = aux {
-                    let p = a.extract_tile_pooled(
-                        z0 as isize, y0 as isize, x0 as isize, tile, halo, boundary, &tile_pool);
-                    inputs.push(Tensor::F32(p, vec![tile, tile, tile]));
-                }
-                let (z0o, z1o) = oob_axis(z0, block, halo, cur_ref.nz);
-                let (y0o, y1o) = oob_axis(y0, block, halo, cur_ref.ny);
-                let (x0o, x1o) = oob_axis(x0, block, halo, cur_ref.nx);
-                inputs.push(Tensor::I32(vec![z0o, z1o, y0o, y1o, x0o, x1o], vec![6]));
-                inputs
-            },
-            |id, inputs| {
-                let artifact = artifact_arc.clone();
-                let origins = origins.clone();
-                let tile_pool = tile_pool.clone();
-                let blocks_done = blocks_done.clone();
-                let wb_nanos = wb_nanos.clone();
-                pool.submit(move |_lane, rt| {
-                    let out = rt.execute_f32(&artifact, &inputs)?;
-                    let (z0, y0, x0) = origins[id];
-                    let t0 = Instant::now();
-                    writer.write_block(z0, y0, x0, block, &out);
-                    wb_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                    blocks_done.fetch_add(1, Ordering::Relaxed);
-                    recycle_inputs(&tile_pool, inputs);
-                    Ok(())
-                });
-                Ok(())
-            },
-        );
-        let idle = pool.wait_idle();
-        drop(guard);
-        fed?;
-        idle?;
-        std::mem::swap(&mut cur, &mut next);
-    }
-
-    metrics.blocks = blocks_done.load(Ordering::Relaxed);
-    metrics.writeback = Duration::from_nanos(wb_nanos.load(Ordering::Relaxed));
-    metrics.cell_updates = (cur.nz * cur.ny * cur.nx) as u64 * steps;
-    metrics.wall = wall.elapsed();
-    let stats = pool.stats();
-    metrics.execute =
-        Duration::from_secs_f64((stats.execute_ms - stats0.execute_ms) / 1e3);
-    metrics.extract =
-        Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms) / 1e3);
-    metrics.pool_hits = tile_pool.hits();
-    metrics.pool_misses = tile_pool.misses();
-    Ok((cur, metrics))
+    run_stencil3d_lanes_mode(pool, artifact, grid, aux, steps, PassMode::Pipelined)
 }
 
 /// One pass of a 2D stencil artifact that takes a run-time scalar operand
@@ -536,52 +549,30 @@ pub fn run_stencil2d_with_scalar(
         .clone();
     let block = spec.meta_u64("block")? as usize;
     let halo = spec.meta_u64("halo")? as usize;
-    let t_fused = spec.meta_u64("steps")? as usize;
-    let boundary = boundary_of(&spec);
-    let tile = block + 2 * halo;
-
-    let tile_pool = TilePool::default();
-    let mut metrics = Metrics::default();
-    let wall = Instant::now();
-    let cur = grid;
-    let mut next = Grid2D::zeros(cur.ny, cur.nx);
-
-    let origins = block_origins_2d(cur.ny, cur.nx, block);
+    let t_fused = spec.meta_u64("steps")?;
+    let m = StencilMeta {
+        block,
+        halo,
+        tile: block + 2 * halo,
+        t_fused,
+        boundary: boundary_of(&spec),
+    };
 
     rt.executable(artifact)?;
-    let cur_ref = &cur;
-    let next_ref = &mut next;
-    let pool_ref = &tile_pool;
-    let mut blocks = 0u64;
-    run_pipelined(
-        origins.len(),
-        4,
-        |id| {
-            let (y0, x0) = origins[id];
-            let t = cur_ref.extract_tile_pooled(
-                y0 as isize, x0 as isize, tile, tile, halo, boundary, pool_ref);
-            let (t0, t1) = oob_axis(y0, block, halo, cur_ref.ny);
-            let (l0, l1) = oob_axis(x0, block, halo, cur_ref.nx);
-            vec![
-                Tensor::F32(t, vec![tile, tile]),
-                Tensor::F32(vec![scalar; t_fused], vec![t_fused]),
-                Tensor::I32(vec![t0, t1, l0, l1], vec![4]),
-            ]
-        },
-        |id, inputs| {
-            let out = rt.execute_f32(artifact, &inputs)?;
-            let (y0, x0) = origins[id];
-            next_ref.write_block(y0, x0, block, block, &out);
-            blocks += 1;
-            recycle_inputs(pool_ref, inputs);
-            Ok(())
-        },
-    )?;
-    metrics.blocks += blocks;
-    metrics.cell_updates = (cur.ny * cur.nx) as u64 * t_fused as u64;
-    metrics.wall = wall.elapsed();
-    metrics.pool_hits = tile_pool.hits();
-    metrics.pool_misses = tile_pool.misses();
+
+    let mut cur = grid;
+    let mut next = Grid2D::zeros(cur.ny, cur.nx);
+    let cell_updates = (cur.ny * cur.nx) as u64 * t_fused;
+    // SAFETY: as in run_stencil2d.
+    let space = Space2D::new(
+        cur.ny,
+        cur.nx,
+        &m,
+        None,
+        Some(vec![scalar; t_fused as usize]),
+    );
+    let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
+    let metrics = passdriver::drive_single(rt, artifact, &space, handles, 1, cell_updates)?;
     Ok((next, metrics))
 }
 
@@ -674,5 +665,44 @@ mod tests {
         assert_eq!(extractor_count(2), 1);
         assert_eq!(extractor_count(4), 2);
         assert_eq!(extractor_count(8), 4);
+    }
+
+    fn meta(block: usize, halo: usize) -> StencilMeta {
+        StencilMeta {
+            block,
+            halo,
+            tile: block + 2 * halo,
+            t_fused: 4,
+            boundary: Boundary::Zero,
+        }
+    }
+
+    #[test]
+    fn space2d_lattice_covers_partial_blocks() {
+        // 300x520 with block 256: 2x3 lattice, reach 1 (halo 4 < block).
+        let s = Space2D::new(300, 520, &meta(256, 4), None, None);
+        assert_eq!(s.lattice(), [1, 2, 3]);
+        assert_eq!(s.reach(), [0, 1, 1]);
+        assert_eq!(s.nblocks(), 6);
+        assert_eq!(s.origins.len(), s.lattice[1] * s.lattice[2]);
+    }
+
+    #[test]
+    fn space2d_reach_scales_with_wide_halos() {
+        // halo 9 over block 4: dependencies reach ceil(9/4) = 3 blocks.
+        let s = Space2D::new(16, 16, &meta(4, 9), None, None);
+        assert_eq!(s.reach(), [0, 3, 3]);
+        // halo 0: self-dependency only.
+        let s0 = Space2D::new(16, 16, &meta(4, 0), None, None);
+        assert_eq!(s0.reach(), [0, 0, 0]);
+    }
+
+    #[test]
+    fn space3d_lattice_matches_origin_plan() {
+        let s = Space3D::new(48, 48, 48, &meta(32, 2), None);
+        assert_eq!(s.lattice(), [2, 2, 2]);
+        assert_eq!(s.reach(), [1, 1, 1]);
+        assert_eq!(s.nblocks(), 8);
+        assert_eq!(s.origins.len(), 8);
     }
 }

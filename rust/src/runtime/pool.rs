@@ -14,6 +14,14 @@
 //! jobs poison the pool until the next [`RuntimePool::wait_idle`], which
 //! reports the first failure; remaining queued jobs of the failed batch
 //! are drained without running.
+//!
+//! [`RuntimePool::submit_tracked`] attaches a **per-job completion
+//! callback**: the callback fires exactly once per job — after the job
+//! body runs, or when a poisoned pool drains (skips) the job — with a
+//! success flag, *before* the job is counted out of the in-flight set.
+//! The cross-pass pass driver uses this to advance its dependency table
+//! without a global [`RuntimePool::wait_idle`] barrier between passes
+//! (see [`crate::coordinator::passdriver`]).
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -26,8 +34,18 @@ use anyhow::{anyhow, Context};
 
 use super::{Registry, Runtime, RuntimeStats, Tensor};
 
-/// A unit of pool work.  Takes the lane index and that lane's runtime.
-type Job = Box<dyn FnOnce(usize, &Runtime) -> crate::Result<()> + Send + 'static>;
+/// A pool job body.  Takes the lane index and that lane's runtime.
+type RunFn = Box<dyn FnOnce(usize, &Runtime) -> crate::Result<()> + Send + 'static>;
+
+/// A per-job completion callback; receives `true` iff the job body ran
+/// and returned `Ok` (a skipped job on a poisoned pool reports `false`).
+type DoneFn = Box<dyn FnOnce(bool) + Send + 'static>;
+
+/// A unit of pool work: the body plus an optional completion callback.
+struct Job {
+    run: RunFn,
+    done: Option<DoneFn>,
+}
 
 struct QueueState {
     jobs: VecDeque<Job>,
@@ -145,6 +163,23 @@ impl RuntimePool {
     where
         F: FnOnce(usize, &Runtime) -> crate::Result<()> + Send + 'static,
     {
+        self.enqueue(Job { run: Box::new(job), done: None });
+    }
+
+    /// Enqueue a job with a completion callback.  `on_done(ok)` fires
+    /// exactly once — after the job body returns, or with `ok = false`
+    /// when a poisoned pool drains the job without running it — and is
+    /// ordered before the job leaves the in-flight count (so
+    /// [`RuntimePool::wait_idle`] also waits for every callback).
+    pub fn submit_tracked<F, C>(&self, job: F, on_done: C)
+    where
+        F: FnOnce(usize, &Runtime) -> crate::Result<()> + Send + 'static,
+        C: FnOnce(bool) + Send + 'static,
+    {
+        self.enqueue(Job { run: Box::new(job), done: Some(Box::new(on_done)) });
+    }
+
+    fn enqueue(&self, job: Job) {
         let mut st = self.shared.state.lock().unwrap();
         while st.jobs.len() >= self.shared.queue_cap && !st.closed {
             st = self.shared.space.wait(st).unwrap();
@@ -152,7 +187,7 @@ impl RuntimePool {
         if st.closed {
             return; // pool shutting down; job dropped
         }
-        st.jobs.push_back(Box::new(job));
+        st.jobs.push_back(job);
         drop(st);
         self.shared.job_ready.notify_one();
     }
@@ -297,17 +332,31 @@ fn lane_main(
                 st = shared.job_ready.wait(st).unwrap();
             }
         };
-        let Some(job) = job else { return };
+        let Some(Job { run, done }) = job else { return };
         shared.space.notify_one();
 
+        let mut ok = false;
         if !shared.poisoned.load(Ordering::Acquire) {
-            match catch_unwind(AssertUnwindSafe(|| job(lane, &rt))) {
-                Ok(Ok(())) => {}
+            match catch_unwind(AssertUnwindSafe(|| run(lane, &rt))) {
+                Ok(Ok(())) => ok = true,
                 Ok(Err(e)) => shared.record_error(e),
                 Err(p) => shared.record_error(anyhow!(
                     "lane {lane} job panicked: {}",
                     crate::coordinator::scheduler::panic_text(p.as_ref())
                 )),
+            }
+        }
+        // The completion callback fires exactly once per job — also for
+        // jobs a poisoned pool drained without running (ok = false) —
+        // and before the in_flight decrement below, so wait_idle also
+        // waits for callbacks.  A panicking callback must not kill the
+        // lane thread: convert it to a pool error like any job failure.
+        if let Some(done) = done {
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| done(ok))) {
+                shared.record_error(anyhow!(
+                    "lane {lane} completion callback panicked: {}",
+                    crate::coordinator::scheduler::panic_text(p.as_ref())
+                ));
             }
         }
 

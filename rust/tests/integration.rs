@@ -8,7 +8,7 @@
 //! blocking, write-back and reassembly.
 
 use fpga_hpc::coordinator::grid::{Grid2D, Grid3D};
-use fpga_hpc::coordinator::{apps, reference, stencil_runner};
+use fpga_hpc::coordinator::{apps, reference, stencil_runner, PassMode};
 use fpga_hpc::runtime::{Runtime, RuntimePool, Tensor};
 use fpga_hpc::testutil::{assert_allclose, max_abs_diff, Rng};
 
@@ -230,6 +230,108 @@ fn lane_count_invariance_diffusion3d() {
     let (single, _) =
         stencil_runner::run_stencil3d(&rt, "diffusion3d_r1", grid, None, steps).unwrap();
     assert_eq!(one.data, single.data, "pooled vs single-runtime path differ");
+}
+
+#[test]
+fn pipelined_matches_barrier_bitwise_at_lanes_1_2_4() {
+    // The cross-pass pipelined schedule must be bitwise identical to
+    // the drain-between-passes baseline at every lane count: per-block
+    // compute is deterministic, interiors are disjoint, and the
+    // dependency table only reorders execution, never inputs.  Hotspot
+    // exercises the aux (power) stream through the shared read view.
+    let temp = rand_grid2d(512, 512, 121, 60.0, 90.0);
+    let power = rand_grid2d(512, 512, 122, 0.0, 1.0);
+    let steps = 16; // 4 passes of T=4: real cross-pass overlap
+    let rt = runtime();
+    let (single, _) =
+        stencil_runner::run_stencil2d(&rt, "hotspot2d", temp.clone(), Some(&power), steps)
+            .unwrap();
+    for lanes in [1usize, 2, 4] {
+        let pool = RuntimePool::open("artifacts", lanes).unwrap();
+        let (bar, mb) = stencil_runner::run_stencil2d_lanes_mode(
+            &pool, "hotspot2d", temp.clone(), Some(&power), steps, PassMode::Barrier,
+        )
+        .unwrap();
+        let (pipe, mp) = stencil_runner::run_stencil2d_lanes_mode(
+            &pool, "hotspot2d", temp.clone(), Some(&power), steps, PassMode::Pipelined,
+        )
+        .unwrap();
+        assert_eq!(bar.data, pipe.data, "lanes={lanes}: barrier vs pipelined differ");
+        assert_eq!(pipe.data, single.data, "lanes={lanes}: pipelined vs single-runtime differ");
+        assert_eq!(mb.blocks, mp.blocks, "lanes={lanes}: block counts differ");
+    }
+}
+
+#[test]
+fn pipelined_matches_barrier_bitwise_3d() {
+    let grid = rand_grid3d(64, 64, 64, 131, 0.0, 1.0);
+    let steps = 8; // 4 passes of T=2
+    let pool = RuntimePool::open("artifacts", 4).unwrap();
+    let (bar, _) = stencil_runner::run_stencil3d_lanes_mode(
+        &pool, "diffusion3d_r1", grid.clone(), None, steps, PassMode::Barrier,
+    )
+    .unwrap();
+    let (pipe, _) = stencil_runner::run_stencil3d_lanes_mode(
+        &pool, "diffusion3d_r1", grid.clone(), None, steps, PassMode::Pipelined,
+    )
+    .unwrap();
+    assert_eq!(bar.data, pipe.data, "3D barrier vs pipelined differ");
+    let rt = runtime();
+    let (single, _) =
+        stencil_runner::run_stencil3d(&rt, "diffusion3d_r1", grid, None, steps).unwrap();
+    assert_eq!(pipe.data, single.data, "3D pipelined vs single-runtime differ");
+}
+
+#[test]
+fn pipelined_partial_blocks_match_reference() {
+    // Odd geometry: partial edge blocks keep their clipping semantics
+    // under the dependency-pipelined schedule.
+    let rt = runtime();
+    let coeffs = coeffs_of(&rt, "diffusion2d_r1");
+    let grid = rand_grid2d(300, 520, 141, 0.0, 1.0);
+    let steps = 16;
+    let pool = RuntimePool::open("artifacts", 4).unwrap();
+    let (out, _) =
+        stencil_runner::run_stencil2d_lanes(&pool, "diffusion2d_r1", grid.clone(), None, steps)
+            .unwrap();
+    let want = reference::diffusion2d(grid, &coeffs, steps as usize);
+    assert!(max_abs_diff(&out.data, &want.data) < 1e-5);
+}
+
+#[test]
+fn pathfinder_lanes_matches_reference() {
+    let mut rng = Rng::new(57);
+    let rows = 17; // 1 + 2 fused chunks of 8
+    let cols = 5_000; // partial final block (width 4096)
+    let wall: Vec<Vec<i32>> = (0..rows).map(|_| rng.vec_i32(cols, 0, 10)).collect();
+    let want = reference::pathfinder(&wall);
+    for lanes in [1usize, 4] {
+        let pool = RuntimePool::open("artifacts", lanes).unwrap();
+        let (got, metrics) = apps::run_pathfinder_lanes(&pool, &wall).unwrap();
+        assert_eq!(got, want, "lanes={lanes}");
+        assert!(metrics.blocks >= 4);
+    }
+}
+
+#[test]
+fn descriptor_pool_reuses_in_steady_state() {
+    // The i32 boundary descriptors come from their own keyed pool:
+    // after warm-up, passes allocate no descriptor buffers either.
+    let rt = runtime();
+    let grid = rand_grid2d(1024, 1024, 103, 0.0, 1.0);
+    let (_, m) = stencil_runner::run_stencil2d(&rt, "diffusion2d_r1", grid, None, 8).unwrap();
+    let blocks_per_pass = m.blocks / 2;
+    assert!(blocks_per_pass > 0);
+    assert!(
+        m.desc_pool_misses <= blocks_per_pass,
+        "descriptor misses {} exceed pass-1 requests {blocks_per_pass}",
+        m.desc_pool_misses
+    );
+    assert!(
+        m.desc_pool_hits >= blocks_per_pass,
+        "pass 2 descriptors should be pool hits, got {} of {blocks_per_pass}",
+        m.desc_pool_hits
+    );
 }
 
 #[test]
