@@ -3,16 +3,20 @@
 //! Measures per-block PJRT execution, literal marshalling, halo
 //! extraction and the streamed end-to-end cell-update throughput for the
 //! 2D/3D stencil compute units — the numbers the §Perf optimization loop
-//! in EXPERIMENTS.md tracks.  The scheduler-lanes sweep at the end runs
-//! the same streamed workload through the multi-lane engine at 1/2/4
-//! lanes under **both** inter-pass schedules — `barrier` (drain between
-//! passes, the PR 1 baseline) and `pipelined` (dependency-tracked
-//! cross-pass writeback) — and writes `BENCH_runtime.json` for
-//! trajectory tracking; CI gates on pipelined-vs-barrier at lanes=4.
+//! in EXPERIMENTS.md tracks.  The scheduler-lanes sweep runs the same
+//! streamed workload through the multi-lane engine at 1/2/4 lanes under
+//! **both** inter-pass schedules — `barrier` (drain between passes, the
+//! PR 1 baseline) and `pipelined` (dependency-tracked cross-pass
+//! writeback).  The wavefront-apps sweep at the end does the same for
+//! the Ch. 4 apps (Pathfinder / NW / SRAD / LUD) at lanes=4 on the wave
+//! pass driver — `barrier` (wave-serial) vs `pipelined`
+//! (dependency-edge overlap).  Everything lands in `BENCH_runtime.json`
+//! for trajectory tracking; CI gates each pipelined/barrier pair at
+//! lanes=4.
 
 use fpga_hpc::benchutil::{write_bench_json, BenchRow, Bencher};
 use fpga_hpc::coordinator::grid::{Boundary, Grid2D};
-use fpga_hpc::coordinator::{stencil_runner, PassMode};
+use fpga_hpc::coordinator::{apps, stencil_runner, PassMode};
 use fpga_hpc::runtime::{Runtime, RuntimePool, Tensor};
 use fpga_hpc::testutil::Rng;
 
@@ -119,6 +123,82 @@ fn main() {
             pipe / bar.max(1e-12)
         );
     }
+
+    // --- wavefront-apps sweep: the Ch. 4 apps on the wave pass driver,
+    // --- wave-serial barrier vs dependency-edge pipelined, lanes=4 ---
+    println!("\n=== wavefront-apps sweep (lanes=4, barrier vs pipelined) ===\n");
+    let lanes = 4usize;
+    let pool = RuntimePool::open("artifacts", lanes).expect("pool open");
+
+    let mut rng = Rng::new(5);
+    let pf_rows = 257; // 1 + 32 fused chunks of 8
+    let pf_cols = 16_384; // 4 column blocks of 4096
+    let pf_wall: Vec<Vec<i32>> = (0..pf_rows).map(|_| rng.vec_i32(pf_cols, 0, 10)).collect();
+    let nw_n = 512; // 8x8 blocks of 64: 15 anti-diagonal waves
+    let nw_ref: Vec<Vec<i32>> = (0..=nw_n).map(|_| rng.vec_i32(nw_n + 1, -5, 15)).collect();
+    let srad_img = Grid2D { ny: 512, nx: 512, data: rng.vec_f32(512 * 512, 0.5, 2.0) };
+    let srad_steps = 4u64;
+    let lud_n = 512; // 8x8 blocks of 64: 24 waves
+    let lud_a: Vec<Vec<f32>> = (0..lud_n)
+        .map(|i| {
+            (0..lud_n)
+                .map(|j| rng.f32_in(-1.0, 1.0) + if i == j { lud_n as f32 } else { 0.0 })
+                .collect()
+        })
+        .collect();
+
+    const MODES: [(PassMode, &str); 2] =
+        [(PassMode::Barrier, "barrier"), (PassMode::Pipelined, "pipelined")];
+    fn app_row(name: &str, tag: &str, lanes: usize, m: &fpga_hpc::coordinator::Metrics) -> BenchRow {
+        println!("{name} lanes={lanes} {tag}: {}", m.summary());
+        BenchRow {
+            name: format!("app_{name}_{tag}"),
+            lanes,
+            gcells_per_sec: m.gcell_per_sec(),
+            wall_secs: m.wall.as_secs_f64(),
+            blocks: m.blocks,
+            pool_hits: m.pool_hits,
+            pool_misses: m.pool_misses,
+        }
+    }
+
+    // one unmeasured run per app first: lane compile caches + allocator
+    apps::run_pathfinder_lanes(&pool, &pf_wall).unwrap();
+    for (mode, tag) in MODES {
+        let (_, m) = apps::run_pathfinder_lanes_mode(&pool, &pf_wall, mode).unwrap();
+        rows.push(app_row("pathfinder", tag, lanes, &m));
+    }
+    apps::run_nw_lanes(&pool, &nw_ref, 10).unwrap();
+    for (mode, tag) in MODES {
+        let (_, m) = apps::run_nw_lanes_mode(&pool, &nw_ref, 10, mode).unwrap();
+        rows.push(app_row("nw", tag, lanes, &m));
+    }
+    apps::run_srad_lanes(&pool, srad_img.clone(), srad_steps).unwrap();
+    for (mode, tag) in MODES {
+        let (_, m) =
+            apps::run_srad_lanes_mode(&pool, srad_img.clone(), srad_steps, mode).unwrap();
+        rows.push(app_row("srad", tag, lanes, &m));
+    }
+    apps::run_lud_lanes(&pool, &lud_a).unwrap();
+    for (mode, tag) in MODES {
+        let (_, m) = apps::run_lud_lanes_mode(&pool, &lud_a, mode).unwrap();
+        rows.push(app_row("lud", tag, lanes, &m));
+    }
+
+    for app in ["pathfinder", "nw", "srad", "lud"] {
+        let get = |tag: &str| {
+            rows.iter()
+                .find(|r| r.lanes == lanes && r.name == format!("app_{app}_{tag}"))
+                .map(|r| r.gcells_per_sec)
+        };
+        if let (Some(bar), Some(pipe)) = (get("barrier"), get("pipelined")) {
+            println!(
+                "{app}: pipelined vs barrier at lanes=4: {:.2}x (CI gates at >= 0.90x)",
+                pipe / bar.max(1e-12)
+            );
+        }
+    }
+
     write_bench_json("BENCH_runtime.json", &rows).expect("writing BENCH_runtime.json");
     println!("wrote BENCH_runtime.json");
 }

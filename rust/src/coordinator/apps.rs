@@ -1,17 +1,66 @@
 //! Full-application runners for the Ch. 4 dynamic-programming and
 //! linear-algebra benchmarks, composed from the AOT compute units the
 //! way the thesis's host code drives its bitstreams.
+//!
+//! Each app has a single-[`Runtime`] runner (`run_*`, execution on the
+//! caller's thread) and a lane-parallel runner (`run_*_lanes`) on the
+//! [`RuntimePool`].  Since PR 3 every lane runner goes through the
+//! **wavefront pass driver** ([`passdriver::drive_wave_pool`]): the
+//! workload is described as a [`WaveSpace`] — topologically ordered
+//! waves of blocks with explicit dependency edges — and a block runs
+//! as soon as its predecessors have written back.  There is no
+//! result-count or `wait_idle` barrier between waves, so the lanes
+//! stay fed across wave boundaries exactly like the thesis's deep
+//! pipelines across time steps:
+//!
+//! * **Pathfinder** — wave `w` = one fused-row chunk; a column block
+//!   of wave `w+1` needs only the span-overlapping blocks of wave `w`
+//!   (clamp-indexed reads reach `fused` cells past the block edge).
+//! * **NW** — anti-diagonal waves over the score-matrix block lattice;
+//!   block `(bi, bj)` needs `(bi-1, bj)` and `(bi, bj-1)` (the corner
+//!   dependency is transitively ordered through either).
+//! * **SRAD** — alternating reduction / stencil waves with a
+//!   **two-stage edge**: every stencil block of step `s` needs *all*
+//!   reduction tiles of step `s` (q0 is a global statistic), while a
+//!   reduction tile of step `s+1` needs only the stencil blocks of
+//!   step `s` whose interiors overlap it — so the next step's
+//!   reduction runs concurrently with the current stencil tail.
+//! * **LUD** — per step `k`, diagonal → perimeter → internal waves;
+//!   perimeter and internal blocks fan out across the lanes, and a
+//!   step-`k+1` block starts as soon as its own step-`k` inputs are
+//!   final (not when the whole step drains).
+//!
+//! Every lane runner is bit-identical to its single-runtime
+//! counterpart and to its own [`PassMode::Barrier`] schedule for any
+//! lane count: block inputs are fixed by the dependency order, write
+//! targets are disjoint, and per-block compute is deterministic.
+
+use std::cell::UnsafeCell;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail};
 
-use crate::coordinator::grid::Grid2D;
+use crate::coordinator::bufpool::TensorPools;
+use crate::coordinator::grid::{Boundary, Grid2D, GridWriter2D};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::passdriver::{self, PassMode, WaveGraph, WaveSpace};
+use crate::coordinator::stencil_runner::{block_origins_2d, boundary_of, extractor_count, oob_axis};
 use crate::runtime::{Runtime, RuntimePool, Tensor};
+
+/// Clamp-indexed span copy: append `n` values of `src` starting at
+/// signed offset `x0`, indices clamped into the row (Pathfinder's
+/// boundary rule).  Shared by the single-runtime and wavefront
+/// runners so their bit-identity contract rests on one gather.
+fn clamp_span(src: &[i32], x0: isize, n: usize, out: &mut Vec<i32>) {
+    let last = src.len() as isize - 1;
+    for j in 0..n as isize {
+        out.push(src[(x0 + j).clamp(0, last) as usize]);
+    }
+}
 
 /// Gather one Pathfinder block's kernel inputs: the halo'd previous
 /// cost row and the fused wall rows over the same (clamp-indexed)
-/// span.  Shared by the single-runtime and lane-parallel runners so
-/// their bit-identity contract rests on one implementation.
+/// span.
 fn pathfinder_block_inputs(
     acc: &[i32],
     wall: &[Vec<i32>],
@@ -20,19 +69,13 @@ fn pathfinder_block_inputs(
     width: usize,
     fused: usize,
 ) -> (Vec<i32>, Vec<i32>) {
-    let cols = acc.len();
     let padded = width + 2 * fused;
-    let clamp = |j: isize| -> usize { j.clamp(0, cols as isize - 1) as usize };
+    let xs = x0 as isize - fused as isize;
     let mut prev = Vec::with_capacity(padded);
-    for j in 0..padded {
-        prev.push(acc[clamp(x0 as isize + j as isize - fused as isize)]);
-    }
+    clamp_span(acc, xs, padded, &mut prev);
     let mut rows_block = Vec::with_capacity(fused * padded);
     for t in 0..fused {
-        let row = &wall[base + t];
-        for j in 0..padded {
-            rows_block.push(row[clamp(x0 as isize + j as isize - fused as isize)]);
-        }
+        clamp_span(&wall[base + t], xs, padded, &mut rows_block);
     }
     (prev, rows_block)
 }
@@ -84,89 +127,6 @@ pub fn run_pathfinder(rt: &Runtime, wall: &[Vec<i32>]) -> crate::Result<(Vec<i32
         base += fused;
         metrics.cell_updates += cols as u64 * fused as u64;
     }
-    metrics.wall = wall_t.elapsed();
-    Ok((acc, metrics))
-}
-
-/// Lane-parallel Pathfinder: the first Ch. 4 app on the
-/// [`RuntimePool`].  Within one wave (a fused-row chunk) the
-/// column-blocks are independent — each reads only the previous
-/// accumulated row — so every block of the wave is submitted to the
-/// pool at once and executes on whichever lane frees up first; the
-/// caller assembles the next row as results stream back (the wave
-/// barrier is the result count, not a pool drain).  Waves themselves
-/// are sequential: wave `w+1` consumes the row wave `w` produced.
-/// Bit-identical to [`run_pathfinder`] for any lane count (integer
-/// arithmetic, disjoint output spans).
-pub fn run_pathfinder_lanes(
-    pool: &RuntimePool,
-    wall: &[Vec<i32>],
-) -> crate::Result<(Vec<i32>, Metrics)> {
-    let spec = pool
-        .registry()
-        .get("pathfinder")
-        .ok_or_else(|| anyhow!("missing pathfinder artifact"))?
-        .clone();
-    let width = spec.meta_u64("width")? as usize;
-    let fused = spec.meta_u64("fused_rows")? as usize;
-    let rows = wall.len();
-    let cols = wall[0].len();
-    if (rows - 1) % fused != 0 {
-        bail!("pathfinder: rows-1 = {} not a multiple of fused {fused}", rows - 1);
-    }
-    // Compile on every lane outside the timed region.
-    pool.warmup_artifact("pathfinder")?;
-
-    let mut metrics = Metrics::default();
-    let wall_t = std::time::Instant::now();
-    let padded = width + 2 * fused;
-    let nblocks = cols.div_ceil(width);
-
-    let mut acc: Vec<i32> = wall[0].clone();
-    let mut base = 1usize;
-    while base < rows {
-        // Extract every block's inputs on the caller thread (cheap
-        // integer gathers), then fan the wave out across the lanes.
-        let (tx, rx) = std::sync::mpsc::channel::<(usize, Vec<i32>)>();
-        for bi in 0..nblocks {
-            let x0 = bi * width;
-            let (prev, rows_block) = pathfinder_block_inputs(&acc, wall, base, x0, width, fused);
-            let tx = tx.clone();
-            pool.submit(move |_lane, rt| {
-                let out = rt.execute(
-                    "pathfinder",
-                    &[
-                        Tensor::I32(prev, vec![padded]),
-                        Tensor::I32(rows_block, vec![fused, padded]),
-                    ],
-                )?;
-                let _ = tx.send((x0, out[0].as_i32().to_vec()));
-                Ok(())
-            });
-        }
-        drop(tx);
-
-        // The wave barrier: all `nblocks` results, in any order.
-        let mut next = vec![0i32; cols];
-        let mut got = 0usize;
-        while let Ok((x0, vals)) = rx.recv() {
-            let w = width.min(cols - x0);
-            next[x0..x0 + w].copy_from_slice(&vals[..w]);
-            got += 1;
-            metrics.blocks += 1;
-        }
-        if got != nblocks {
-            // A lane dropped its sender without replying: the job was
-            // skipped (poisoned pool) or failed.  Harvest the real
-            // error rather than reporting a channel failure.
-            pool.wait_idle()?;
-            bail!("pathfinder: wave returned {got} of {nblocks} blocks");
-        }
-        acc = next;
-        base += fused;
-        metrics.cell_updates += cols as u64 * fused as u64;
-    }
-    pool.wait_idle()?;
     metrics.wall = wall_t.elapsed();
     Ok((acc, metrics))
 }
@@ -276,6 +236,9 @@ pub fn run_srad(
                 let v = out[0].as_f32();
                 total += v[0] as f64;
                 total2 += v[1] as f64;
+                // Count the reduction invocation like any streamed
+                // block, matching run_srad_lanes' accounting.
+                metrics.blocks += 1;
                 x0 += rblock;
             }
             y0 += rblock;
@@ -369,4 +332,1191 @@ pub fn run_lud(rt: &Runtime, a: &[Vec<f32>]) -> crate::Result<(Vec<Vec<f32>>, Me
     }
     metrics.wall = wall_t.elapsed();
     Ok((m, metrics))
+}
+
+// ---------------------------------------------------------------------------
+// Wavefront spaces: the Ch. 4 apps on the dependency-tracked pass driver
+// ---------------------------------------------------------------------------
+
+/// Raw shared slice handle over a buffer owned by the runner's stack
+/// frame — the wavefront analogue of [`GridWriter2D`] for the i32 rows
+/// and flat matrices the Ch. 4 apps stream.
+///
+/// Soundness contract (the creator's obligation, same as
+/// `Grid2D::shared_writer`): the buffer outlives every use (the wave
+/// driver's `IdleGuard` drains the lanes before the owning frame
+/// returns), concurrent writes target pairwise-disjoint spans, and a
+/// cell is only read once the write that produced it is
+/// dependency-ordered before the read.
+struct RawSlice<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+// SAFETY: the creation contract above guarantees non-overlapping
+// concurrent accesses over a live allocation.
+unsafe impl<T: Send> Send for RawSlice<T> {}
+unsafe impl<T: Send> Sync for RawSlice<T> {}
+
+impl<T> RawSlice<T> {
+    fn new(v: &mut [T]) -> RawSlice<T> {
+        RawSlice { ptr: v.as_mut_ptr(), len: v.len() }
+    }
+
+    /// Read `n` elements starting at `at`.
+    ///
+    /// # Safety
+    ///
+    /// In-bounds span, no concurrent writer over it (dependency order).
+    unsafe fn read(&self, at: usize, n: usize) -> &[T] {
+        debug_assert!(at + n <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(at), n)
+    }
+
+    /// Overwrite `src.len()` elements starting at `at`.
+    ///
+    /// # Safety
+    ///
+    /// In-bounds span, disjoint from every concurrent access.
+    unsafe fn write(&self, at: usize, src: &[T])
+    where
+        T: Copy,
+    {
+        debug_assert!(at + src.len() <= self.len);
+        std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.add(at), src.len());
+    }
+}
+
+/// Interior-mutable cell written by at most one lane (disjointness via
+/// the wave plan); used for SRAD's per-tile reduction partials.
+struct SyncCell<T>(UnsafeCell<T>);
+
+// SAFETY: the wave plan guarantees one writer per cell and
+// dependency-ordered readers.
+unsafe impl<T: Send> Sync for SyncCell<T> {}
+
+/// Pathfinder as a [`WaveSpace`]: wave `w` is fused-row chunk `w`,
+/// block `i` is column block `i`.  The accumulated cost row
+/// double-buffers (wave `w` reads buffer `w % 2`, writes
+/// `(w+1) % 2`); clamp-indexed reads reach `fused` cells past the
+/// block span, so a block of wave `w+1` depends on the wave-`w` blocks
+/// within `ceil(fused/width)` lattice steps — the 1D instance of the
+/// stencil driver's `r·T` halo-overlap rule, which also discharges the
+/// write-after-read hazard of the two row buffers (the pass-`w` blocks
+/// that read what a pass-`w+1` block overwrites are exactly its span
+/// neighbors).
+struct PathfinderSpace {
+    artifact: Arc<str>,
+    /// Wall rows `1..rows`, flattened row-major ((rows-1) × cols).
+    wall: Vec<i32>,
+    cols: usize,
+    width: usize,
+    fused: usize,
+    padded: usize,
+    nwaves: usize,
+    nblocks: usize,
+    /// `ceil(fused/width)` — dependency reach on the column lattice.
+    reach: usize,
+    /// Cost-row double buffer (each `cols` long).
+    rows_bufs: [RawSlice<i32>; 2],
+}
+
+impl WaveGraph for PathfinderSpace {
+    fn waves(&self) -> usize {
+        self.nwaves
+    }
+
+    fn wave_len(&self, _w: usize) -> usize {
+        self.nblocks
+    }
+
+    fn visit_preds(&self, w: usize, i: usize, f: &mut dyn FnMut(usize, usize)) {
+        if w == 0 {
+            return;
+        }
+        let lo = i.saturating_sub(self.reach);
+        let hi = (i + self.reach).min(self.nblocks - 1);
+        for j in lo..=hi {
+            f(w - 1, j);
+        }
+    }
+}
+
+impl WaveSpace for PathfinderSpace {
+    fn artifact(&self, _w: usize, _i: usize) -> Arc<str> {
+        self.artifact.clone()
+    }
+
+    unsafe fn extract(&self, w: usize, i: usize) -> Vec<Tensor> {
+        let x0 = i * self.width;
+        let xs = x0 as isize - self.fused as isize;
+        // Read only the clamped window [lo, hi): every clamp target of
+        // the padded span lies inside it, and cells beyond it may be
+        // concurrently rewritten by already-released wave-(w+1) blocks
+        // (the span-overlap rule only orders this block's own window).
+        let lo = xs.max(0) as usize;
+        let hi = ((xs + self.padded as isize) as usize).min(self.cols);
+        // SAFETY: dependency order — the wave-(w-1) blocks overlapping
+        // this window wrote back (wave 0 reads the seeded row), and no
+        // wave-(w+1) writer can touch it before this block completes.
+        let acc = self.rows_bufs[w % 2].read(lo, hi - lo);
+        let mut prev = Vec::with_capacity(self.padded);
+        clamp_span(acc, xs - lo as isize, self.padded, &mut prev);
+        let mut rows_block = Vec::with_capacity(self.fused * self.padded);
+        for t in 0..self.fused {
+            let row = &self.wall[(w * self.fused + t) * self.cols..][..self.cols];
+            clamp_span(row, xs, self.padded, &mut rows_block);
+        }
+        vec![
+            Tensor::I32(prev, vec![self.padded]),
+            Tensor::I32(rows_block, vec![self.fused, self.padded]),
+        ]
+    }
+
+    unsafe fn write(&self, w: usize, i: usize, out: &[Tensor]) {
+        let x0 = i * self.width;
+        let keep = self.width.min(self.cols - x0);
+        // SAFETY: disjoint column spans on the block lattice.
+        self.rows_bufs[(w + 1) % 2].write(x0, &out[0].as_i32()[..keep]);
+    }
+
+    fn cell_updates(&self, _w: usize, i: usize) -> u64 {
+        let x0 = i * self.width;
+        (self.width.min(self.cols - x0) * self.fused) as u64
+    }
+}
+
+/// Lane-parallel Pathfinder on the wavefront pass driver: every
+/// column block of wave `w+1` is dispatched as soon as its
+/// span-overlapping wave-`w` predecessors have written back — the
+/// lanes never drain between fused-row chunks (the result-count wave
+/// barrier of the PR 2 runner is gone).  Bit-identical to
+/// [`run_pathfinder`] for any lane count and either [`PassMode`]
+/// (integer arithmetic, disjoint output spans, inputs fixed by the
+/// dependency order).
+pub fn run_pathfinder_lanes_mode(
+    pool: &RuntimePool,
+    wall: &[Vec<i32>],
+    mode: PassMode,
+) -> crate::Result<(Vec<i32>, Metrics)> {
+    let spec = pool
+        .registry()
+        .get("pathfinder")
+        .ok_or_else(|| anyhow!("missing pathfinder artifact"))?
+        .clone();
+    let width = spec.meta_u64("width")? as usize;
+    let fused = spec.meta_u64("fused_rows")? as usize;
+    let rows = wall.len();
+    let cols = wall[0].len();
+    if (rows - 1) % fused != 0 {
+        bail!("pathfinder: rows-1 = {} not a multiple of fused {fused}", rows - 1);
+    }
+    // Compile on every lane outside the timed region.
+    pool.warmup_artifact("pathfinder")?;
+
+    let nwaves = (rows - 1) / fused;
+    let mut flat = Vec::with_capacity((rows - 1) * cols);
+    for row in &wall[1..] {
+        flat.extend_from_slice(row);
+    }
+    let mut bufs = [wall[0].clone(), vec![0i32; cols]];
+    let [b0, b1] = &mut bufs;
+    let space = Arc::new(PathfinderSpace {
+        artifact: Arc::from("pathfinder"),
+        wall: flat,
+        cols,
+        width,
+        fused,
+        padded: width + 2 * fused,
+        nwaves,
+        nblocks: cols.div_ceil(width),
+        reach: fused.div_ceil(width),
+        // SAFETY: `bufs` outlives the drive call, which quiesces every
+        // lane (IdleGuard) before returning.
+        rows_bufs: [RawSlice::new(b0), RawSlice::new(b1)],
+    });
+    let metrics =
+        passdriver::drive_wave_pool(pool, &space, mode, extractor_count(pool.lanes()))?;
+    drop(space);
+    let [b0, b1] = bufs;
+    Ok((if nwaves % 2 == 0 { b0 } else { b1 }, metrics))
+}
+
+/// Lane-parallel Pathfinder with the default [`PassMode::Pipelined`]
+/// schedule; see [`run_pathfinder_lanes_mode`].
+pub fn run_pathfinder_lanes(
+    pool: &RuntimePool,
+    wall: &[Vec<i32>],
+) -> crate::Result<(Vec<i32>, Metrics)> {
+    run_pathfinder_lanes_mode(pool, wall, PassMode::Pipelined)
+}
+
+/// Needleman-Wunsch as a [`WaveSpace`]: wave `d` holds the score-block
+/// anti-diagonal `bi + bj = d`; block `(bi, bj)` depends on
+/// `(bi-1, bj)` and `(bi, bj-1)` in wave `d-1` (the corner value from
+/// `(bi-1, bj-1)` is transitively ordered through either neighbor, and
+/// score cells are single-assignment, so there is no write-after-read
+/// hazard at all).
+struct NwSpace {
+    artifact: Arc<str>,
+    /// Blocks per side of the interior lattice.
+    nb: usize,
+    b: usize,
+    /// Row stride of the (n+1)×(n+1) matrices.
+    stride: usize,
+    /// Flattened reference matrix ((n+1)², read-only).
+    refm: Vec<i32>,
+    /// Flattened score matrix ((n+1)², borders pre-initialised).
+    score: RawSlice<i32>,
+}
+
+impl NwSpace {
+    /// First `bi` on anti-diagonal `d`.
+    fn lo(&self, d: usize) -> usize {
+        d.saturating_sub(self.nb - 1)
+    }
+
+    /// Decode wave-local index `i` into block coordinates `(bi, bj)`.
+    fn block_of(&self, d: usize, i: usize) -> (usize, usize) {
+        let bi = self.lo(d) + i;
+        (bi, d - bi)
+    }
+}
+
+impl WaveGraph for NwSpace {
+    fn waves(&self) -> usize {
+        2 * self.nb - 1
+    }
+
+    fn wave_len(&self, d: usize) -> usize {
+        d.min(self.nb - 1) - self.lo(d) + 1
+    }
+
+    fn visit_preds(&self, d: usize, i: usize, f: &mut dyn FnMut(usize, usize)) {
+        let (bi, bj) = self.block_of(d, i);
+        if d == 0 {
+            return;
+        }
+        let plo = self.lo(d - 1);
+        if bi > 0 {
+            f(d - 1, bi - 1 - plo); // up: (bi-1, bj)
+        }
+        if bj > 0 {
+            f(d - 1, bi - plo); // left: (bi, bj-1)
+        }
+    }
+}
+
+impl WaveSpace for NwSpace {
+    fn artifact(&self, _w: usize, _i: usize) -> Arc<str> {
+        self.artifact.clone()
+    }
+
+    unsafe fn extract(&self, d: usize, i: usize) -> Vec<Tensor> {
+        let (bi, bj) = self.block_of(d, i);
+        let b = self.b;
+        let (r0, c0) = (1 + bi * b, 1 + bj * b);
+        // SAFETY: dependency order — the up/left/corner spans were
+        // written by predecessor blocks (or are initialised borders).
+        let top = self.score.read((r0 - 1) * self.stride + c0, b).to_vec();
+        let mut left = Vec::with_capacity(b);
+        for k in 0..b {
+            left.push(self.score.read((r0 + k) * self.stride + (c0 - 1), 1)[0]);
+        }
+        let corner = vec![self.score.read((r0 - 1) * self.stride + (c0 - 1), 1)[0]];
+        let mut refb = Vec::with_capacity(b * b);
+        for k in 0..b {
+            refb.extend_from_slice(&self.refm[(r0 + k) * self.stride + c0..][..b]);
+        }
+        vec![
+            Tensor::I32(top, vec![b]),
+            Tensor::I32(left, vec![b]),
+            Tensor::I32(corner, vec![1]),
+            Tensor::I32(refb, vec![b, b]),
+        ]
+    }
+
+    unsafe fn write(&self, d: usize, i: usize, out: &[Tensor]) {
+        let (bi, bj) = self.block_of(d, i);
+        let b = self.b;
+        let (r0, c0) = (1 + bi * b, 1 + bj * b);
+        let vals = out[0].as_i32();
+        for k in 0..b {
+            // SAFETY: disjoint b×b interiors on the block lattice.
+            self.score.write((r0 + k) * self.stride + c0, &vals[k * b..(k + 1) * b]);
+        }
+    }
+
+    fn cell_updates(&self, _w: usize, _i: usize) -> u64 {
+        (self.b * self.b) as u64
+    }
+}
+
+/// Lane-parallel Needleman-Wunsch on the wavefront pass driver:
+/// anti-diagonal waves of independent blocks fan out across the lanes,
+/// and a block of the next diagonal starts as soon as its up/left
+/// neighbors have written back — no drain between diagonals.
+/// Bit-identical to [`run_nw`] for any lane count and either
+/// [`PassMode`] (integer arithmetic, single-assignment score cells).
+pub fn run_nw_lanes_mode(
+    pool: &RuntimePool,
+    reference: &[Vec<i32>],
+    penalty: i32,
+    mode: PassMode,
+) -> crate::Result<(Vec<Vec<i32>>, Metrics)> {
+    let spec = pool
+        .registry()
+        .get("nw")
+        .ok_or_else(|| anyhow!("missing nw artifact"))?
+        .clone();
+    let b = spec.meta_u64("block")? as usize;
+    let baked_penalty = spec.meta_u64("penalty")? as i32;
+    if penalty != baked_penalty {
+        bail!("nw: penalty {penalty} != artifact's baked {baked_penalty}");
+    }
+    let n = reference.len() - 1;
+    if n == 0 || n % b != 0 {
+        bail!("nw: interior size {n} not a (non-zero) multiple of block {b}");
+    }
+    pool.warmup_artifact("nw")?;
+
+    let stride = n + 1;
+    let mut refm = Vec::with_capacity(stride * stride);
+    for row in reference {
+        refm.extend_from_slice(row);
+    }
+    let mut score = vec![0i32; stride * stride];
+    for j in 0..=n {
+        score[j] = -(j as i32) * penalty;
+    }
+    for i in 0..=n {
+        score[i * stride] = -(i as i32) * penalty;
+    }
+
+    let space = Arc::new(NwSpace {
+        artifact: Arc::from("nw"),
+        nb: n / b,
+        b,
+        stride,
+        refm,
+        // SAFETY: `score` outlives the drive call, which quiesces every
+        // lane (IdleGuard) before returning.
+        score: RawSlice::new(&mut score),
+    });
+    let metrics =
+        passdriver::drive_wave_pool(pool, &space, mode, extractor_count(pool.lanes()))?;
+    drop(space);
+    Ok((
+        score.chunks(stride).map(|r| r.to_vec()).collect(),
+        metrics,
+    ))
+}
+
+/// Lane-parallel NW with the default [`PassMode::Pipelined`] schedule;
+/// see [`run_nw_lanes_mode`].
+pub fn run_nw_lanes(
+    pool: &RuntimePool,
+    reference: &[Vec<i32>],
+    penalty: i32,
+) -> crate::Result<(Vec<Vec<i32>>, Metrics)> {
+    run_nw_lanes_mode(pool, reference, penalty, PassMode::Pipelined)
+}
+
+/// SRAD as a [`WaveSpace`]: wave `2s` holds step `s`'s partial
+/// reduction tiles, wave `2s+1` its stencil blocks, with the
+/// **two-stage dependency edge** the ROADMAP called for:
+///
+/// * stencil block of step `s` → **all** reduction tiles of step `s`
+///   (q0 is a global statistic of the whole image);
+/// * reduction tile of step `s+1` → only the step-`s` stencil blocks
+///   whose written interiors overlap the tile.
+///
+/// The second edge is what buys overlap: step `s+1`'s reduction starts
+/// while the stencil tail of step `s` is still executing.  The full
+/// first edge also chains every step-`s` stencil block before every
+/// step-`s+1` stencil block, which discharges both the halo'd reads
+/// and the write-after-read hazard of the two image buffers (step `s`
+/// reads buffer `s % 2`, writes `(s+1) % 2`).
+///
+/// q0 is recomputed from the per-tile partials on each stencil
+/// extraction, always summing in tile-index order — the same f64
+/// additions in the same order as [`run_srad`], so the scalar (and the
+/// run) is bit-identical to the single-runtime path regardless of
+/// completion order.
+struct SradSpace {
+    red_artifact: Arc<str>,
+    sten_artifact: Arc<str>,
+    steps: usize,
+    ny: usize,
+    nx: usize,
+    cells: f64,
+    /// Reduction tiling (zero-padded partial sums).
+    rblock: usize,
+    rorigins: Vec<(usize, usize)>,
+    /// Stencil tiling (r·T halo, boundary rule from the artifact).
+    sblock: usize,
+    halo: usize,
+    tile: usize,
+    t_fused: usize,
+    boundary: Boundary,
+    sorigins: Vec<(usize, usize)>,
+    /// Stencil lattice width (blocks per row).
+    snbx: usize,
+    /// Image double buffer: step `s` reads `bufs[s % 2]`, writes
+    /// `bufs[(s+1) % 2]`.
+    bufs: [GridWriter2D; 2],
+    /// Per-(step, tile) reduction partials `(sum, sumsq)`.
+    partials: Vec<SyncCell<(f64, f64)>>,
+    pools: TensorPools,
+}
+
+impl SradSpace {
+    /// q0² for step `s` from the step's tile partials, summed in tile
+    /// order (deterministic regardless of completion order).
+    ///
+    /// # Safety
+    ///
+    /// Every reduction tile of step `s` must have written back.
+    unsafe fn q0(&self, s: usize) -> f32 {
+        let base = s * self.rorigins.len();
+        let mut total = 0f64;
+        let mut total2 = 0f64;
+        for t in 0..self.rorigins.len() {
+            let (a, b) = *self.partials[base + t].0.get();
+            total += a;
+            total2 += b;
+        }
+        let mean = total / self.cells;
+        let var = total2 / self.cells - mean * mean;
+        (var / (mean * mean)) as f32
+    }
+}
+
+impl WaveGraph for SradSpace {
+    fn waves(&self) -> usize {
+        2 * self.steps
+    }
+
+    fn wave_len(&self, w: usize) -> usize {
+        if w % 2 == 0 {
+            self.rorigins.len()
+        } else {
+            self.sorigins.len()
+        }
+    }
+
+    fn visit_preds(&self, w: usize, i: usize, f: &mut dyn FnMut(usize, usize)) {
+        if w == 0 {
+            return;
+        }
+        if w % 2 == 1 {
+            // Stencil of step s: every reduction tile of step s.
+            for t in 0..self.rorigins.len() {
+                f(w - 1, t);
+            }
+        } else {
+            // Reduction tile of step s ≥ 1: the step-(s-1) stencil
+            // blocks whose clipped interiors overlap the tile's
+            // in-grid rect (out-of-grid tile cells read zero-padding
+            // nobody writes).
+            let (y0, x0) = self.rorigins[i];
+            let y1 = (y0 + self.rblock).min(self.ny) - 1;
+            let x1 = (x0 + self.rblock).min(self.nx) - 1;
+            for by in y0 / self.sblock..=y1 / self.sblock {
+                for bx in x0 / self.sblock..=x1 / self.sblock {
+                    f(w - 1, by * self.snbx + bx);
+                }
+            }
+        }
+    }
+}
+
+impl WaveSpace for SradSpace {
+    fn artifact(&self, w: usize, _i: usize) -> Arc<str> {
+        if w % 2 == 0 {
+            self.red_artifact.clone()
+        } else {
+            self.sten_artifact.clone()
+        }
+    }
+
+    unsafe fn extract(&self, w: usize, i: usize) -> Vec<Tensor> {
+        let s = w / 2;
+        let src = self.bufs[s % 2];
+        if w % 2 == 0 {
+            // Reduction tile: rblock×rblock, no halo, zero padding
+            // (sum-neutral) — same extraction as run_srad.
+            let (y0, x0) = self.rorigins[i];
+            let mut t = self.pools.tiles.take(self.rblock * self.rblock);
+            // SAFETY: dependency order — step s-1's stencil blocks
+            // wrote every in-grid cell this tile reads.
+            src.extract_tile_into(
+                y0 as isize, x0 as isize, self.rblock, self.rblock, 0, Boundary::Zero, &mut t,
+            );
+            vec![Tensor::F32(t, vec![self.rblock, self.rblock])]
+        } else {
+            // Stencil block: the same inputs Space2D builds for the
+            // scalar-carrying srad artifact — halo'd tile, per-step
+            // scalar, boundary-restoration descriptor.
+            let q0 = self.q0(s);
+            let (y0, x0) = self.sorigins[i];
+            let mut inputs = Vec::with_capacity(3);
+            let mut t = self.pools.tiles.take(self.tile * self.tile);
+            // SAFETY: dependency order, as above (all step-s reduction
+            // tiles completed after all step-(s-1) stencil blocks).
+            src.extract_tile_into(
+                y0 as isize, x0 as isize, self.tile, self.tile, self.halo,
+                self.boundary, &mut t,
+            );
+            inputs.push(Tensor::F32(t, vec![self.tile, self.tile]));
+            let mut v = self.pools.tiles.take(self.t_fused);
+            v.resize(self.t_fused, q0);
+            inputs.push(Tensor::F32(v, vec![self.t_fused]));
+            let (t0, t1) = oob_axis(y0, self.sblock, self.halo, self.ny);
+            let (l0, l1) = oob_axis(x0, self.sblock, self.halo, self.nx);
+            let mut d = self.pools.descs.take(4);
+            d.extend_from_slice(&[t0, t1, l0, l1]);
+            inputs.push(Tensor::I32(d, vec![4]));
+            inputs
+        }
+    }
+
+    unsafe fn write(&self, w: usize, i: usize, out: &[Tensor]) {
+        let s = w / 2;
+        if w % 2 == 0 {
+            let v = out[0].as_f32();
+            // SAFETY: one writer per partial cell (the wave plan).
+            *self.partials[s * self.rorigins.len() + i].0.get() = (v[0] as f64, v[1] as f64);
+        } else {
+            let (y0, x0) = self.sorigins[i];
+            // SAFETY: disjoint interiors on the stencil block lattice.
+            self.bufs[(s + 1) % 2].write_block(y0, x0, self.sblock, self.sblock, out[0].as_f32());
+        }
+    }
+
+    fn cell_updates(&self, w: usize, i: usize) -> u64 {
+        if w % 2 == 0 {
+            return 0;
+        }
+        // One step's clipped interior per stencil block — summing to
+        // `cells` per wave pair, matching run_srad's per-invocation
+        // accounting (independent of the artifact's fused depth).
+        let (y0, x0) = self.sorigins[i];
+        let h = self.sblock.min(self.ny - y0);
+        let ww = self.sblock.min(self.nx - x0);
+        (h * ww) as u64
+    }
+
+    fn recycle(&self, inputs: Vec<Tensor>) {
+        self.pools.recycle(inputs);
+    }
+
+    fn pool_counters(&self) -> (u64, u64, u64, u64) {
+        (
+            self.pools.tiles.hits(),
+            self.pools.tiles.misses(),
+            self.pools.descs.hits(),
+            self.pools.descs.misses(),
+        )
+    }
+}
+
+/// Lane-parallel SRAD on the wavefront pass driver: `steps` iterations
+/// of (tile-partial reduction → fused stencil) with the reduction
+/// tiles of step `s+1` overlapping the stencil tail of step `s` — the
+/// per-step reduction → stencil serialization of [`run_srad`] is gone.
+/// Bit-identical to [`run_srad`] for any lane count and either
+/// [`PassMode`] (q0 partials are summed in tile order, stencil inputs
+/// are fixed by the dependency order, interiors are disjoint).
+pub fn run_srad_lanes_mode(
+    pool: &RuntimePool,
+    img: Grid2D,
+    steps: u64,
+    mode: PassMode,
+) -> crate::Result<(Grid2D, Metrics)> {
+    let red_spec = pool
+        .registry()
+        .get("sum_sumsq")
+        .ok_or_else(|| anyhow!("missing sum_sumsq artifact"))?
+        .clone();
+    let rblock = red_spec.meta_u64("block")? as usize;
+    let sten_spec = pool
+        .registry()
+        .get("srad")
+        .ok_or_else(|| anyhow!("missing srad artifact"))?
+        .clone();
+    let sblock = sten_spec.meta_u64("block")? as usize;
+    let halo = sten_spec.meta_u64("halo")? as usize;
+    let t_fused = sten_spec.meta_u64("steps")? as usize;
+    pool.warmup_artifacts(&["sum_sumsq", "srad"])?;
+
+    let steps = steps as usize;
+    let (ny, nx) = (img.ny, img.nx);
+    let rorigins = block_origins_2d(ny, nx, rblock);
+    let sorigins = block_origins_2d(ny, nx, sblock);
+    let nrtiles = rorigins.len();
+
+    let mut cur = img;
+    let mut next = Grid2D::zeros(ny, nx);
+    let space = Arc::new(SradSpace {
+        red_artifact: Arc::from("sum_sumsq"),
+        sten_artifact: Arc::from("srad"),
+        steps,
+        ny,
+        nx,
+        cells: (ny * nx) as f64,
+        rblock,
+        rorigins,
+        sblock,
+        halo,
+        tile: sblock + 2 * halo,
+        t_fused,
+        boundary: boundary_of(&sten_spec),
+        sorigins,
+        snbx: nx.div_ceil(sblock),
+        // SAFETY: cur/next outlive the drive call, which quiesces
+        // every lane (IdleGuard) before returning; all concurrent
+        // accesses are dependency-ordered or disjoint (see SradSpace).
+        bufs: unsafe { [cur.shared_writer(), next.shared_writer()] },
+        partials: (0..steps * nrtiles)
+            .map(|_| SyncCell(UnsafeCell::new((0.0, 0.0))))
+            .collect(),
+        pools: TensorPools::default(),
+    });
+    let metrics =
+        passdriver::drive_wave_pool(pool, &space, mode, extractor_count(pool.lanes()))?;
+    drop(space);
+    Ok((if steps % 2 == 0 { cur } else { next }, metrics))
+}
+
+/// Lane-parallel SRAD with the default [`PassMode::Pipelined`]
+/// schedule; see [`run_srad_lanes_mode`].
+pub fn run_srad_lanes(
+    pool: &RuntimePool,
+    img: Grid2D,
+    steps: u64,
+) -> crate::Result<(Grid2D, Metrics)> {
+    run_srad_lanes_mode(pool, img, steps, PassMode::Pipelined)
+}
+
+/// Blocked LUD as a [`WaveSpace`]: step `k` unrolls into three waves —
+/// diagonal (wave `3k`, one block), perimeter row/col (wave `3k+1`,
+/// fanning across the lanes) and internal Schur updates (wave `3k+2`,
+/// the embarrassingly parallel bulk).  Edges follow the factorization
+/// exactly: the diagonal needs internal `(k,k)` of step `k-1`; a
+/// perimeter block needs the diagonal plus its own step-`k-1` internal
+/// update; an internal block needs its row/col perimeter blocks plus
+/// its own previous update — so a step-`k+1` block starts as soon as
+/// *its* inputs are final, not when step `k` drains.  In-place block
+/// writes are single-writer-at-a-time and every read of a rewritten
+/// block is one of these direct edges, so the schedule is race-free at
+/// any pipeline depth.
+struct LudSpace {
+    diagonal: Arc<str>,
+    perim_row: Arc<str>,
+    perim_col: Arc<str>,
+    internal: Arc<str>,
+    nb: usize,
+    b: usize,
+    n: usize,
+    /// Flattened n×n matrix, factorized in place.
+    m: RawSlice<f32>,
+}
+
+/// What a LUD wave-local index means for step `k`.
+enum LudBlock {
+    Diagonal,
+    /// Perimeter row block `(k, j)`.
+    Row(usize),
+    /// Perimeter col block `(j, k)`.
+    Col(usize),
+    /// Internal block `(i, j)`.
+    Internal(usize, usize),
+}
+
+impl LudSpace {
+    fn decode(&self, w: usize, i: usize) -> (usize, LudBlock) {
+        let k = w / 3;
+        let kind = match w % 3 {
+            0 => LudBlock::Diagonal,
+            1 => {
+                let j = k + 1 + i / 2;
+                if i % 2 == 0 {
+                    LudBlock::Row(j)
+                } else {
+                    LudBlock::Col(j)
+                }
+            }
+            _ => {
+                let r = self.nb - k - 1;
+                LudBlock::Internal(k + 1 + i / r, k + 1 + i % r)
+            }
+        };
+        (k, kind)
+    }
+
+    /// Wave-local index of internal block `(i, j)` in step `k`'s
+    /// internal wave.
+    fn internal_idx(&self, k: usize, i: usize, j: usize) -> usize {
+        (i - k - 1) * (self.nb - k - 1) + (j - k - 1)
+    }
+
+    /// Read block `(r, c)` as a b×b tile.
+    ///
+    /// # Safety
+    ///
+    /// Dependency order: the block's last writer has completed.
+    unsafe fn get(&self, r: usize, c: usize) -> Vec<f32> {
+        let b = self.b;
+        let mut out = Vec::with_capacity(b * b);
+        for row in 0..b {
+            out.extend_from_slice(self.m.read((r * b + row) * self.n + c * b, b));
+        }
+        out
+    }
+
+    /// Overwrite block `(r, c)`.
+    ///
+    /// # Safety
+    ///
+    /// Disjoint from every concurrent access (wave plan).
+    unsafe fn put(&self, r: usize, c: usize, vals: &[f32]) {
+        let b = self.b;
+        for row in 0..b {
+            self.m.write((r * b + row) * self.n + c * b, &vals[row * b..(row + 1) * b]);
+        }
+    }
+}
+
+impl WaveGraph for LudSpace {
+    fn waves(&self) -> usize {
+        3 * self.nb
+    }
+
+    fn wave_len(&self, w: usize) -> usize {
+        let k = w / 3;
+        let r = self.nb - k - 1;
+        match w % 3 {
+            0 => 1,
+            1 => 2 * r,
+            _ => r * r,
+        }
+    }
+
+    fn visit_preds(&self, w: usize, i: usize, f: &mut dyn FnMut(usize, usize)) {
+        let (k, kind) = self.decode(w, i);
+        match kind {
+            LudBlock::Diagonal => {
+                if k > 0 {
+                    // internal (k, k) of step k-1
+                    f(w - 1, self.internal_idx(k - 1, k, k));
+                }
+            }
+            LudBlock::Row(j) => {
+                f(w - 1, 0); // diagonal k
+                if k > 0 {
+                    // internal (k, j) of step k-1 (wave 3k-1 = w-2)
+                    f(w - 2, self.internal_idx(k - 1, k, j));
+                }
+            }
+            LudBlock::Col(j) => {
+                f(w - 1, 0);
+                if k > 0 {
+                    f(w - 2, self.internal_idx(k - 1, j, k));
+                }
+            }
+            LudBlock::Internal(bi, bj) => {
+                // perimeter row (k, bj) and col (bi, k) of this step
+                f(w - 1, 2 * (bj - k - 1));
+                f(w - 1, 2 * (bi - k - 1) + 1);
+                if k > 0 {
+                    // internal (bi, bj) of step k-1 (wave 3k-1 = w-3)
+                    f(w - 3, self.internal_idx(k - 1, bi, bj));
+                }
+            }
+        }
+    }
+}
+
+impl WaveSpace for LudSpace {
+    fn artifact(&self, w: usize, i: usize) -> Arc<str> {
+        match self.decode(w, i).1 {
+            LudBlock::Diagonal => self.diagonal.clone(),
+            LudBlock::Row(_) => self.perim_row.clone(),
+            LudBlock::Col(_) => self.perim_col.clone(),
+            LudBlock::Internal(..) => self.internal.clone(),
+        }
+    }
+
+    unsafe fn extract(&self, w: usize, i: usize) -> Vec<Tensor> {
+        let b = self.b;
+        let shape = vec![b, b];
+        let (k, kind) = self.decode(w, i);
+        // SAFETY of every `get`: dependency order — each read block's
+        // final-for-this-step writer is a declared predecessor.
+        match kind {
+            LudBlock::Diagonal => vec![Tensor::F32(self.get(k, k), shape)],
+            LudBlock::Row(j) => vec![
+                Tensor::F32(self.get(k, k), shape.clone()),
+                Tensor::F32(self.get(k, j), shape),
+            ],
+            LudBlock::Col(j) => vec![
+                Tensor::F32(self.get(k, k), shape.clone()),
+                Tensor::F32(self.get(j, k), shape),
+            ],
+            LudBlock::Internal(bi, bj) => vec![
+                Tensor::F32(self.get(bi, bj), shape.clone()),
+                Tensor::F32(self.get(bi, k), shape.clone()),
+                Tensor::F32(self.get(k, bj), shape),
+            ],
+        }
+    }
+
+    unsafe fn write(&self, w: usize, i: usize, out: &[Tensor]) {
+        let (k, kind) = self.decode(w, i);
+        let vals = out[0].as_f32();
+        // SAFETY: one writer per block per wave; later rewrites are
+        // dependency-ordered behind this one.
+        match kind {
+            LudBlock::Diagonal => self.put(k, k, vals),
+            LudBlock::Row(j) => self.put(k, j, vals),
+            LudBlock::Col(j) => self.put(j, k, vals),
+            LudBlock::Internal(bi, bj) => self.put(bi, bj, vals),
+        }
+    }
+
+    fn cell_updates(&self, w: usize, _i: usize) -> u64 {
+        // Match run_lud's accounting: only the internal Schur updates
+        // count as cell updates.
+        if w % 3 == 2 {
+            (self.b * self.b) as u64
+        } else {
+            0
+        }
+    }
+}
+
+/// Lane-parallel blocked LUD on the wavefront pass driver: each step's
+/// perimeter and internal blocks fan out across the lanes, and blocks
+/// of step `k+1` start as soon as their own step-`k` inputs are final
+/// — no drain between factorization steps.  Bit-identical to
+/// [`run_lud`] for any lane count and either [`PassMode`] (per-block
+/// compute is deterministic and all reads are dependency-ordered).
+pub fn run_lud_lanes_mode(
+    pool: &RuntimePool,
+    a: &[Vec<f32>],
+    mode: PassMode,
+) -> crate::Result<(Vec<Vec<f32>>, Metrics)> {
+    let spec = pool
+        .registry()
+        .get("lud_internal")
+        .ok_or_else(|| anyhow!("missing lud artifacts"))?
+        .clone();
+    let b = spec.meta_u64("block")? as usize;
+    let n = a.len();
+    if n == 0 || n % b != 0 {
+        bail!("lud: size {n} not a (non-zero) multiple of block {b}");
+    }
+    pool.warmup_artifacts(&[
+        "lud_diagonal",
+        "lud_perimeter_row",
+        "lud_perimeter_col",
+        "lud_internal",
+    ])?;
+
+    let mut m = Vec::with_capacity(n * n);
+    for row in a {
+        m.extend_from_slice(row);
+    }
+    let space = Arc::new(LudSpace {
+        diagonal: Arc::from("lud_diagonal"),
+        perim_row: Arc::from("lud_perimeter_row"),
+        perim_col: Arc::from("lud_perimeter_col"),
+        internal: Arc::from("lud_internal"),
+        nb: n / b,
+        b,
+        n,
+        // SAFETY: `m` outlives the drive call, which quiesces every
+        // lane (IdleGuard) before returning.
+        m: RawSlice::new(&mut m),
+    });
+    let metrics =
+        passdriver::drive_wave_pool(pool, &space, mode, extractor_count(pool.lanes()))?;
+    drop(space);
+    Ok((m.chunks(n).map(|r| r.to_vec()).collect(), metrics))
+}
+
+/// Lane-parallel LUD with the default [`PassMode::Pipelined`]
+/// schedule; see [`run_lud_lanes_mode`].
+pub fn run_lud_lanes(
+    pool: &RuntimePool,
+    a: &[Vec<f32>],
+) -> crate::Result<(Vec<Vec<f32>>, Metrics)> {
+    run_lud_lanes_mode(pool, a, PassMode::Pipelined)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    /// Every declared edge must point from a strictly earlier wave to
+    /// an in-range block — the WaveTable's structural contract.
+    fn check_graph(g: &dyn WaveGraph) {
+        for w in 0..g.waves() {
+            for i in 0..g.wave_len(w) {
+                g.visit_preds(w, i, &mut |v, j| {
+                    assert!(v < w, "pred wave {v} not before ({w},{i})");
+                    assert!(j < g.wave_len(v), "pred ({v},{j}) out of range");
+                });
+            }
+        }
+    }
+
+    fn pathfinder_space(cols: usize, width: usize, fused: usize, nwaves: usize) -> PathfinderSpace {
+        PathfinderSpace {
+            artifact: Arc::from("pathfinder"),
+            wall: vec![0; nwaves * fused * cols],
+            cols,
+            width,
+            fused,
+            padded: width + 2 * fused,
+            nwaves,
+            nblocks: cols.div_ceil(width),
+            reach: fused.div_ceil(width),
+            rows_bufs: [RawSlice::new(&mut []), RawSlice::new(&mut [])],
+        }
+    }
+
+    #[test]
+    fn pathfinder_graph_span_overlap_edges() {
+        let s = pathfinder_space(5000, 1024, 8, 3);
+        check_graph(&s);
+        assert_eq!(s.nblocks, 5); // partial final block
+        assert_eq!(s.reach, 1);
+        // interior block: three span-overlapping predecessors
+        let mut preds = Vec::new();
+        s.visit_preds(1, 2, &mut |v, j| preds.push((v, j)));
+        assert_eq!(preds, vec![(0, 1), (0, 2), (0, 3)]);
+        // edge blocks clip
+        preds.clear();
+        s.visit_preds(2, 0, &mut |v, j| preds.push((v, j)));
+        assert_eq!(preds, vec![(1, 0), (1, 1)]);
+        preds.clear();
+        s.visit_preds(1, 4, &mut |v, j| preds.push((v, j)));
+        assert_eq!(preds, vec![(0, 3), (0, 4)]);
+        // wave 0 seeds
+        preds.clear();
+        s.visit_preds(0, 2, &mut |v, j| preds.push((v, j)));
+        assert!(preds.is_empty());
+    }
+
+    #[test]
+    fn pathfinder_graph_wide_fused_reaches_further() {
+        // fused > width: clamp reads span multiple neighbor blocks.
+        let s = pathfinder_space(64, 16, 24, 2);
+        assert_eq!(s.reach, 2);
+        check_graph(&s);
+        let mut preds = Vec::new();
+        s.visit_preds(1, 1, &mut |v, j| preds.push((v, j)));
+        assert_eq!(preds, vec![(0, 0), (0, 1), (0, 2), (0, 3)]);
+    }
+
+    fn nw_space(n: usize, b: usize) -> NwSpace {
+        NwSpace {
+            artifact: Arc::from("nw"),
+            nb: n / b,
+            b,
+            stride: n + 1,
+            refm: vec![0; (n + 1) * (n + 1)],
+            score: RawSlice::new(&mut []),
+        }
+    }
+
+    #[test]
+    fn nw_graph_antidiagonal_structure() {
+        let s = nw_space(256, 64); // 4x4 block lattice, 7 diagonals
+        check_graph(&s);
+        assert_eq!(s.waves(), 7);
+        let lens: Vec<usize> = (0..s.waves()).map(|d| s.wave_len(d)).collect();
+        assert_eq!(lens, vec![1, 2, 3, 4, 3, 2, 1]);
+        assert_eq!(lens.iter().sum::<usize>(), 16);
+        // every block appears exactly once with bi+bj = d
+        let mut seen = HashSet::new();
+        for d in 0..s.waves() {
+            for i in 0..s.wave_len(d) {
+                let (bi, bj) = s.block_of(d, i);
+                assert_eq!(bi + bj, d);
+                assert!(seen.insert((bi, bj)));
+            }
+        }
+        assert_eq!(seen.len(), 16);
+        // interior block depends on up + left in the previous diagonal
+        let mut preds = Vec::new();
+        s.visit_preds(3, 1, &mut |v, j| preds.push((v, j)));
+        let (bi, bj) = s.block_of(3, 1);
+        assert_eq!((bi, bj), (1, 2));
+        assert_eq!(preds.len(), 2);
+        for &(v, j) in &preds {
+            assert_eq!(v, 2);
+            let (pi, pj) = s.block_of(v, j);
+            assert!((pi, pj) == (0, 2) || (pi, pj) == (1, 1), "got ({pi},{pj})");
+        }
+        // top-row block: only the left neighbor
+        let mut preds = Vec::new();
+        s.visit_preds(2, 0, &mut |v, j| preds.push((v, j)));
+        assert_eq!(s.block_of(2, 0), (0, 2));
+        assert_eq!(preds.len(), 1);
+        assert_eq!(s.block_of(preds[0].0, preds[0].1), (0, 1));
+    }
+
+    fn srad_space(ny: usize, nx: usize, rblock: usize, sblock: usize, steps: usize) -> SradSpace {
+        let rorigins = block_origins_2d(ny, nx, rblock);
+        let nrtiles = rorigins.len();
+        // graph-only space: the grid handles are never dereferenced
+        let mut dummy = Grid2D::zeros(1, 1);
+        let h = unsafe { dummy.shared_writer() };
+        SradSpace {
+            red_artifact: Arc::from("sum_sumsq"),
+            sten_artifact: Arc::from("srad"),
+            steps,
+            ny,
+            nx,
+            cells: (ny * nx) as f64,
+            rblock,
+            rorigins,
+            sblock,
+            halo: 2,
+            tile: sblock + 4,
+            t_fused: 1,
+            boundary: Boundary::Clamp,
+            sorigins: block_origins_2d(ny, nx, sblock),
+            snbx: nx.div_ceil(sblock),
+            bufs: [h, h],
+            partials: (0..steps * nrtiles)
+                .map(|_| SyncCell(UnsafeCell::new((0.0, 0.0))))
+                .collect(),
+            pools: TensorPools::default(),
+        }
+    }
+
+    #[test]
+    fn srad_graph_two_stage_edges() {
+        // 64x48 image, reduction tiles 16 (4x3 = 12), stencil blocks
+        // 32 (2x2 = 4, partial in x).
+        let s = srad_space(64, 48, 16, 32, 2);
+        check_graph(&s);
+        assert_eq!(s.waves(), 4);
+        assert_eq!(s.wave_len(0), 12);
+        assert_eq!(s.wave_len(1), 4);
+        // full edge: every stencil block needs all 12 tiles
+        let mut preds = Vec::new();
+        s.visit_preds(1, 3, &mut |v, j| preds.push((v, j)));
+        assert_eq!(preds, (0..12).map(|t| (0usize, t)).collect::<Vec<_>>());
+        // span edge: tile (16..32, 16..32) sits inside stencil block
+        // (0, 0) only — index 1*3+1 = 4 on the 4x3 tile lattice
+        let mut preds = Vec::new();
+        s.visit_preds(2, 4, &mut |v, j| preds.push((v, j)));
+        assert_eq!(s.rorigins[4], (16, 16));
+        assert_eq!(preds, vec![(1, 0)]);
+        // tile (48.., 32..) straddles stencil rows/cols: block (1,1)
+        let mut preds = Vec::new();
+        let t = s.rorigins.iter().position(|&o| o == (48, 32)).unwrap();
+        s.visit_preds(2, t, &mut |v, j| preds.push((v, j)));
+        assert_eq!(preds, vec![(1, 3)]);
+        // tile spanning two stencil columns: origin (0, 16) overlaps
+        // blocks (0,0) and (0,0)… tile [0..16)x[16..32) is inside
+        // column 0 of the stencil lattice; take (32, 16) instead,
+        // rows 32..48 → stencil row 1, cols 16..32 → stencil col 0.
+        let mut preds = Vec::new();
+        let t = s.rorigins.iter().position(|&o| o == (32, 16)).unwrap();
+        s.visit_preds(2, t, &mut |v, j| preds.push((v, j)));
+        assert_eq!(preds, vec![(1, 2)]);
+    }
+
+    #[test]
+    fn srad_graph_tile_straddling_blocks_depends_on_all() {
+        // Reduction tiles wider than stencil blocks: tile 32 over
+        // blocks 16 → each interior tile needs a 2x2 block patch.
+        let s = srad_space(64, 64, 32, 16, 2);
+        check_graph(&s);
+        let mut preds = Vec::new();
+        let t = s.rorigins.iter().position(|&o| o == (32, 32)).unwrap();
+        s.visit_preds(2, t, &mut |v, j| preds.push((v, j)));
+        let nbx = 4; // 64/16
+        let want: Vec<(usize, usize)> = [(2usize, 2usize), (2, 3), (3, 2), (3, 3)]
+            .iter()
+            .map(|&(by, bx)| (1usize, by * nbx + bx))
+            .collect();
+        assert_eq!(preds, want);
+    }
+
+    fn lud_space(n: usize, b: usize) -> LudSpace {
+        LudSpace {
+            diagonal: Arc::from("lud_diagonal"),
+            perim_row: Arc::from("lud_perimeter_row"),
+            perim_col: Arc::from("lud_perimeter_col"),
+            internal: Arc::from("lud_internal"),
+            nb: n / b,
+            b,
+            n,
+            m: RawSlice::new(&mut []),
+        }
+    }
+
+    #[test]
+    fn lud_graph_cascade_edges() {
+        let s = lud_space(256, 64); // nb = 4
+        check_graph(&s);
+        assert_eq!(s.waves(), 12);
+        let lens: Vec<usize> = (0..s.waves()).map(|w| s.wave_len(w)).collect();
+        assert_eq!(lens, vec![1, 6, 9, 1, 4, 4, 1, 2, 1, 1, 0, 0]);
+        // diagonal of step 1 needs internal (1,1) of step 0 (index 0)
+        let mut preds = Vec::new();
+        s.visit_preds(3, 0, &mut |v, j| preds.push((v, j)));
+        assert_eq!(preds, vec![(2, 0)]);
+        // perimeter row (1, 3) of step 1: diagonal 1 + internal (1,3)@0
+        let mut preds = Vec::new();
+        s.visit_preds(4, 2 * (3 - 1 - 1), &mut |v, j| preds.push((v, j)));
+        assert_eq!(preds, vec![(3, 0), (2, s.internal_idx(0, 1, 3))]);
+        // internal (2,3) of step 1: perim row (1,3), perim col (2,1),
+        // internal (2,3)@0
+        let mut preds = Vec::new();
+        let q = (2 - 1 - 1) * 2 + (3 - 1 - 1); // r = 2 at step 1
+        s.visit_preds(5, q, &mut |v, j| preds.push((v, j)));
+        assert_eq!(
+            preds,
+            vec![
+                (4, 2 * (3 - 1 - 1)),
+                (4, 2 * (2 - 1 - 1) + 1),
+                (2, s.internal_idx(0, 2, 3)),
+            ]
+        );
+        // decode round-trips every block of every wave
+        for w in 0..s.waves() {
+            for i in 0..s.wave_len(w) {
+                let (k, kind) = s.decode(w, i);
+                assert_eq!(k, w / 3);
+                match kind {
+                    LudBlock::Diagonal => assert_eq!(w % 3, 0),
+                    LudBlock::Row(j) | LudBlock::Col(j) => {
+                        assert_eq!(w % 3, 1);
+                        assert!(j > k && j < s.nb);
+                    }
+                    LudBlock::Internal(bi, bj) => {
+                        assert_eq!(w % 3, 2);
+                        assert!(bi > k && bj > k && bi < s.nb && bj < s.nb);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clamp_span_matches_scalar_clamp() {
+        let src = vec![10, 20, 30, 40];
+        let mut out = Vec::new();
+        clamp_span(&src, -2, 8, &mut out);
+        assert_eq!(out, vec![10, 10, 10, 20, 30, 40, 40, 40]);
+    }
 }

@@ -26,6 +26,14 @@ pub struct Metrics {
     pub desc_pool_hits: u64,
     /// i32 boundary-descriptor buffers freshly allocated (warm-up).
     pub desc_pool_misses: u64,
+    /// Deepest cross-wave overlap a wavefront run reached: the maximum
+    /// number of waves spanned by in-flight blocks at any dispatch
+    /// (1 = wave-serial; >1 only on the pipelined schedule).  0 when
+    /// the run did not go through the wave driver.
+    pub pipeline_depth_max: u64,
+    /// Blocks that were dispatched while their previous wave was still
+    /// incomplete — the work a per-wave barrier would have serialized.
+    pub overlap_starts: u64,
 }
 
 impl Metrics {
@@ -54,8 +62,16 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
+        let wave = if self.pipeline_depth_max > 0 {
+            format!(
+                " depth={} overlap={}",
+                self.pipeline_depth_max, self.overlap_starts
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "blocks={} updates={} wall={:.3}s (marshal {:.1}% execute {:.1}% writeback {:.1}%) buf-reuse {:.0}% {:.3} GCell/s",
+            "blocks={} updates={} wall={:.3}s (marshal {:.1}% execute {:.1}% writeback {:.1}%) buf-reuse {:.0}%{wave} {:.3} GCell/s",
             self.blocks,
             self.cell_updates,
             self.wall.as_secs_f64(),

@@ -16,13 +16,18 @@
 //! * [`passdriver`] — the cross-pass pipelined pass driver: a
 //!   dependency table over the block-origin lattice makes a pass-`p+1`
 //!   block runnable as soon as its `r·T` halo-overlapping pass-`p`
-//!   predecessors have written back — no per-pass barrier;
+//!   predecessors have written back — no per-pass barrier; since PR 3
+//!   also the **wavefront** generalization (`WaveGraph`/`WaveTable`/
+//!   `WaveSpace`) driving the Ch. 4 apps with explicit per-block
+//!   dependency edges and no per-wave barrier;
 //! * [`stencil_runner`] — temporal-block streaming for the Ch. 5 stencil
 //!   workloads (diffusion/hotspot, 2D/3D): thin configuration shims
 //!   (block plans, tile extraction, write-back) over the pass driver,
 //!   single-runtime and lane-parallel variants;
 //! * [`apps`] — full-application runners for the Ch. 4 dynamic-programming
-//!   and linear-algebra benchmarks (Pathfinder, NW, SRAD, LUD);
+//!   and linear-algebra benchmarks (Pathfinder, NW, SRAD, LUD):
+//!   single-runtime runners plus lane-parallel `_lanes` variants as
+//!   `WaveSpace` shims over the wavefront pass driver;
 //! * [`reference`] — native-Rust oracles used by the integration tests
 //!   and the end-to-end examples;
 //! * [`metrics`] — throughput/latency accounting for the §Perf work.

@@ -49,6 +49,36 @@
 //! queue's mutex.  The RMW chain plus the mutex hand-off order every
 //! predecessor's grid writes before any extraction of the successor's
 //! tile.
+//!
+//! # Wavefronts (the Ch. 4 apps)
+//!
+//! Since PR 3 the same machinery also drives the *wavefront* workloads
+//! — Pathfinder's fused-row waves, NW's anti-diagonals, SRAD's
+//! alternating reduction/stencil stages and LUD's
+//! diagonal/perimeter/internal cascade — through a generalization of
+//! the lattice table:
+//!
+//! * [`WaveGraph`] describes a workload as topologically ordered
+//!   **waves** of blocks with explicit predecessor edges (every edge
+//!   points from an earlier wave to a later one; per-wave block counts
+//!   may vary, unlike the uniform per-pass lattice);
+//! * [`WaveTable`] is the dependency tracker over such a graph — the
+//!   same per-block `AcqRel` completion counters as [`DepTable`]
+//!   (which remains the uniform-lattice specialization), plus
+//!   precomputed CSR successor lists built by reversing the pred
+//!   edges;
+//! * [`WaveSpace`] adds execution: per-block artifact selection,
+//!   input gathering and write-back — heterogeneous per wave (a LUD
+//!   wave of perimeter blocks runs a different compute unit than the
+//!   internal wave behind it);
+//! * [`drive_wave_local`] / [`drive_wave_pool`] are the backends,
+//!   mirroring [`drive_single`] / [`drive_pool`]: a block of wave
+//!   `w` runs as soon as its declared predecessors have written back
+//!   — **no result-count or `wait_idle` barrier between waves**.
+//!
+//! [`PassMode::Barrier`] again keeps the wave-serial baseline (a block
+//! waits for *every* block of *every* earlier wave), which is what the
+//! CI perf gate compares the pipelined schedule against.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -316,6 +346,7 @@ fn finalize_metrics<S: StencilSpace>(
         pool_misses,
         desc_pool_hits,
         desc_pool_misses,
+        ..Metrics::default()
     }
 }
 
@@ -581,6 +612,517 @@ where
         stats.execute_ms - stats0.execute_ms,
         stats.marshal_ms - stats0.marshal_ms,
     ))
+}
+
+// ---------------------------------------------------------------------------
+// Wavefront generalization: arbitrary per-wave block counts + explicit
+// dependency edges (the Ch. 4 apps)
+// ---------------------------------------------------------------------------
+
+/// A workload cut into topologically ordered **waves** of blocks.
+///
+/// Wave `w` may have any number of blocks (unlike the uniform per-pass
+/// lattice of [`DepTable`]); every dependency edge declared by
+/// [`WaveGraph::visit_preds`] must point from a strictly earlier wave
+/// to a later one.  Blocks with no predecessors (typically all of wave
+/// 0) seed the ready frontier.
+pub trait WaveGraph: Send + Sync {
+    /// Number of waves (empty waves are allowed, e.g. LUD's tail step).
+    fn waves(&self) -> usize;
+
+    /// Blocks in wave `w`.
+    fn wave_len(&self, w: usize) -> usize;
+
+    /// Visit every predecessor `(v, j)` of block `(w, i)`: the blocks
+    /// whose write-back must be ordered before `(w, i)`'s extraction.
+    /// Must satisfy `v < w` and be deterministic (it is called more
+    /// than once while the table is built).
+    fn visit_preds(&self, w: usize, i: usize, f: &mut dyn FnMut(usize, usize));
+}
+
+/// Per-block completion counters over an arbitrary [`WaveGraph`] — the
+/// generalization of [`DepTable`] beyond the uniform block-origin
+/// lattice.  Successor lists are precomputed (CSR) by reversing the
+/// graph's predecessor edges; completion uses the same `AcqRel` RMW
+/// chain, so every predecessor's write-back happens-before the
+/// successor's extraction once it pops off the [`ReadyQueue`].
+pub struct WaveTable {
+    /// `offsets[w]` = global id of the first block of wave `w`
+    /// (`offsets[waves]` = total block count).
+    offsets: Vec<usize>,
+    /// Incomplete-predecessor counters, indexed by global block id.
+    remaining: Vec<AtomicU32>,
+    /// CSR successor lists (pipelined mode only; empty under barrier).
+    succ_off: Vec<usize>,
+    succs: Vec<u32>,
+    barrier: bool,
+}
+
+impl WaveTable {
+    pub fn new(graph: &dyn WaveGraph, mode: PassMode) -> WaveTable {
+        let waves = graph.waves();
+        let mut offsets = Vec::with_capacity(waves + 1);
+        let mut total = 0usize;
+        for w in 0..waves {
+            offsets.push(total);
+            total += graph.wave_len(w);
+        }
+        offsets.push(total);
+
+        let barrier = mode == PassMode::Barrier;
+        let mut remaining: Vec<AtomicU32> = Vec::with_capacity(total);
+        let mut succ_off = Vec::new();
+        let mut succs = Vec::new();
+        if barrier {
+            // A block waits for every block of every earlier wave: the
+            // wave-serial baseline (equivalent to a wait_idle between
+            // waves), still correct for any graph because edges only
+            // point backwards across waves.
+            for w in 0..waves {
+                for _ in 0..graph.wave_len(w) {
+                    remaining.push(AtomicU32::new(offsets[w] as u32));
+                }
+            }
+        } else {
+            // Two CSR passes over the pred edges: count per source,
+            // prefix-sum, fill — giving each block its successor list.
+            let mut counts = vec![0usize; total];
+            let mut preds = vec![0u32; total];
+            for w in 0..waves {
+                for i in 0..graph.wave_len(w) {
+                    let mut np = 0u32;
+                    graph.visit_preds(w, i, &mut |v, j| {
+                        debug_assert!(v < w, "pred ({v},{j}) of ({w},{i}) not in an earlier wave");
+                        counts[offsets[v] + j] += 1;
+                        np += 1;
+                    });
+                    preds[offsets[w] + i] = np;
+                }
+            }
+            succ_off = Vec::with_capacity(total + 1);
+            let mut acc = 0usize;
+            for c in &counts {
+                succ_off.push(acc);
+                acc += c;
+            }
+            succ_off.push(acc);
+            succs = vec![0u32; acc];
+            let mut fill = succ_off.clone();
+            for w in 0..waves {
+                for i in 0..graph.wave_len(w) {
+                    let id = (offsets[w] + i) as u32;
+                    graph.visit_preds(w, i, &mut |v, j| {
+                        let src = offsets[v] + j;
+                        succs[fill[src]] = id;
+                        fill[src] += 1;
+                    });
+                }
+            }
+            for p in preds {
+                remaining.push(AtomicU32::new(p));
+            }
+        }
+        WaveTable { offsets, remaining, succ_off, succs, barrier }
+    }
+
+    /// Total blocks across all waves.
+    pub fn total(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Map a global block id back to its `(wave, index)` pair.
+    fn coord(&self, id: usize) -> (usize, usize) {
+        // partition_point returns the first wave whose offset exceeds
+        // `id`; its predecessor is the wave containing `id`.
+        let w = self.offsets.partition_point(|&o| o <= id) - 1;
+        (w, id - self.offsets[w])
+    }
+
+    /// The initially runnable frontier: every block whose predecessor
+    /// count is zero (all of wave 0, plus any later block with no
+    /// declared dependencies).
+    pub fn seed(&self) -> Vec<(usize, usize)> {
+        (0..self.total())
+            .filter(|&id| self.remaining[id].load(Ordering::Relaxed) == 0)
+            .map(|id| self.coord(id))
+            .collect()
+    }
+
+    /// Record the completion (write-back done) of block `(w, i)`;
+    /// appends every block this makes runnable to `ready`.
+    pub fn complete(&self, w: usize, i: usize, ready: &mut Vec<(usize, usize)>) {
+        // AcqRel, as in DepTable::complete: the RMW chain orders every
+        // predecessor's write-back before the final decrement, whose
+        // thread publishes the successor through the queue's mutex.
+        if self.barrier {
+            for id in self.offsets[w + 1]..self.total() {
+                if self.remaining[id].fetch_sub(1, Ordering::AcqRel) == 1 {
+                    ready.push(self.coord(id));
+                }
+            }
+        } else {
+            let id = self.offsets[w] + i;
+            for &s in &self.succs[self.succ_off[id]..self.succ_off[id + 1]] {
+                if self.remaining[s as usize].fetch_sub(1, Ordering::AcqRel) == 1 {
+                    ready.push(self.coord(s as usize));
+                }
+            }
+        }
+    }
+}
+
+/// Execution configuration over a [`WaveGraph`]: which compute unit a
+/// block runs, how its inputs are gathered and where its outputs land.
+/// Implementations live next to the app runners
+/// (see `coordinator::apps`).
+pub trait WaveSpace: WaveGraph {
+    /// Artifact executed for block `(w, i)`.  The caller warms every
+    /// distinct artifact on every lane before driving.
+    fn artifact(&self, w: usize, i: usize) -> Arc<str>;
+
+    /// Gather block `(w, i)`'s kernel input tensors.
+    ///
+    /// # Safety
+    ///
+    /// The caller must guarantee (via the wave table) that every
+    /// predecessor of `(w, i)` has written back and that no thread is
+    /// concurrently writing any cell this read touches.
+    unsafe fn extract(&self, w: usize, i: usize) -> Vec<Tensor>;
+
+    /// Write block `(w, i)`'s kernel outputs back.
+    ///
+    /// # Safety
+    ///
+    /// Concurrent writes must target pairwise-disjoint regions (the
+    /// wave plan guarantees this) and every shared buffer must be live.
+    unsafe fn write(&self, w: usize, i: usize, out: &[Tensor]);
+
+    /// Valid cell updates block `(w, i)` contributes (metrics).
+    fn cell_updates(&self, w: usize, i: usize) -> u64;
+
+    /// Return recyclable input buffers to the space's pools.
+    fn recycle(&self, inputs: Vec<Tensor>) {
+        drop(inputs);
+    }
+
+    /// (tile hits, tile misses, descriptor hits, descriptor misses).
+    fn pool_counters(&self) -> (u64, u64, u64, u64) {
+        (0, 0, 0, 0)
+    }
+}
+
+/// Pipeline-shape accounting for a wave run: how deep the cross-wave
+/// overlap actually got (the numbers behind
+/// [`Metrics::pipeline_depth_max`] / [`Metrics::overlap_starts`]).
+struct DepthTracker {
+    state: Mutex<DepthState>,
+}
+
+struct DepthState {
+    /// Completed blocks per wave.
+    done: Vec<usize>,
+    /// Total blocks per wave.
+    lens: Vec<usize>,
+    /// First wave with incomplete blocks.
+    oldest: usize,
+    max_depth: usize,
+    overlap: usize,
+}
+
+impl DepthTracker {
+    fn new(graph: &dyn WaveGraph) -> DepthTracker {
+        let lens: Vec<usize> = (0..graph.waves()).map(|w| graph.wave_len(w)).collect();
+        // Leading empty waves are trivially "complete".
+        let mut oldest = 0;
+        while oldest < lens.len() && lens[oldest] == 0 {
+            oldest += 1;
+        }
+        DepthTracker {
+            state: Mutex::new(DepthState {
+                done: vec![0; lens.len()],
+                lens,
+                oldest,
+                max_depth: 0,
+                overlap: 0,
+            }),
+        }
+    }
+
+    /// Block `(w, _)` is being dispatched (its inputs are about to be
+    /// extracted).
+    fn dispatched(&self, w: usize) {
+        let mut st = self.state.lock().unwrap();
+        if w > 0 && st.done[w - 1] < st.lens[w - 1] {
+            st.overlap += 1;
+        }
+        let depth = w + 1 - st.oldest;
+        st.max_depth = st.max_depth.max(depth);
+    }
+
+    /// Block `(w, _)` has written back.
+    fn completed(&self, w: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.done[w] += 1;
+        while st.oldest < st.lens.len() && st.done[st.oldest] >= st.lens[st.oldest] {
+            st.oldest += 1;
+        }
+    }
+
+    fn finish(&self) -> (u64, u64) {
+        let st = self.state.lock().unwrap();
+        (st.max_depth as u64, st.overlap as u64)
+    }
+}
+
+/// Raw per-run counters returned by [`drive_wave_local`].
+pub struct WaveRunStats {
+    pub blocks: u64,
+    pub cell_updates: u64,
+    pub writeback: Duration,
+    pub pipeline_depth_max: u64,
+    pub overlap_starts: u64,
+}
+
+/// Dependency-ordered wave streaming with a caller-provided executor —
+/// the wavefront counterpart of [`drive_local`], factored out so the
+/// scheduling machinery is testable with a native-Rust kernel (no PJRT
+/// artifacts).  `exec(w, i, inputs)` runs on the calling thread; one
+/// extractor thread feeds ready blocks through a bounded channel of
+/// depth `lookahead`.
+pub fn drive_wave_local<S: WaveSpace>(
+    mut exec: impl FnMut(usize, usize, &[Tensor]) -> crate::Result<Vec<Tensor>>,
+    space: &S,
+    mode: PassMode,
+    lookahead: usize,
+) -> crate::Result<WaveRunStats> {
+    let table = WaveTable::new(space, mode);
+    let total = table.total();
+    let depth = DepthTracker::new(space);
+    let mut stats = WaveRunStats {
+        blocks: 0,
+        cell_updates: 0,
+        writeback: Duration::ZERO,
+        pipeline_depth_max: 0,
+        overlap_starts: 0,
+    };
+    if total == 0 {
+        return Ok(stats);
+    }
+    let queue = ReadyQueue::new(total, table.seed());
+    let mut newly = Vec::new();
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if total <= 2 || lookahead <= 1 || cores <= 1 {
+        while let Some((w, i)) = queue.pop() {
+            depth.dispatched(w);
+            // SAFETY: dependency order — every predecessor of (w, i)
+            // wrote back before the queue handed it out.
+            let inputs = unsafe { space.extract(w, i) };
+            let out = exec(w, i, &inputs)?;
+            let t0 = Instant::now();
+            // SAFETY: disjoint write targets per the wave plan.
+            unsafe { space.write(w, i, &out) };
+            stats.writeback += t0.elapsed();
+            stats.blocks += 1;
+            stats.cell_updates += space.cell_updates(w, i);
+            depth.completed(w);
+            newly.clear();
+            table.complete(w, i, &mut newly);
+            queue.push_all(&newly);
+            space.recycle(inputs);
+        }
+        let (d, o) = depth.finish();
+        stats.pipeline_depth_max = d;
+        stats.overlap_starts = o;
+        return Ok(stats);
+    }
+
+    std::thread::scope(|sc| -> crate::Result<()> {
+        let (tx, rx) = mpsc::sync_channel::<(usize, usize, Vec<Tensor>)>(lookahead);
+        let queue_ref = &queue;
+        let space_ref = space;
+        let depth_ref = &depth;
+        let feeder = sc.spawn(move || {
+            while let Some((w, i)) = queue_ref.pop() {
+                depth_ref.dispatched(w);
+                // SAFETY: dependency order, as above.
+                let inputs = unsafe { space_ref.extract(w, i) };
+                if tx.send((w, i, inputs)).is_err() {
+                    return; // consumer dropped (error path)
+                }
+            }
+        });
+        let mut result: crate::Result<()> = Ok(());
+        let mut feeder_died = false;
+        for _ in 0..total {
+            match rx.recv() {
+                Ok((w, i, inputs)) => match exec(w, i, &inputs) {
+                    Ok(out) => {
+                        let t0 = Instant::now();
+                        // SAFETY: disjoint write targets.
+                        unsafe { space.write(w, i, &out) };
+                        stats.writeback += t0.elapsed();
+                        stats.blocks += 1;
+                        stats.cell_updates += space.cell_updates(w, i);
+                        depth.completed(w);
+                        newly.clear();
+                        table.complete(w, i, &mut newly);
+                        queue.push_all(&newly);
+                        space.recycle(inputs);
+                    }
+                    Err(e) => {
+                        result = Err(e);
+                        break;
+                    }
+                },
+                Err(_) => {
+                    feeder_died = true;
+                    break;
+                }
+            }
+        }
+        queue.abort();
+        drop(rx);
+        match feeder.join() {
+            Err(p) => {
+                let e = anyhow!("extractor thread panicked: {}", panic_text(p.as_ref()));
+                if result.is_ok() {
+                    result = Err(e);
+                }
+            }
+            Ok(()) if feeder_died && result.is_ok() => {
+                result = Err(anyhow!("extractor stopped after fewer than {total} blocks"));
+            }
+            Ok(()) => {}
+        }
+        result
+    })?;
+    let (d, o) = depth.finish();
+    stats.pipeline_depth_max = d;
+    stats.overlap_starts = o;
+    Ok(stats)
+}
+
+/// Run a wavefront workload on a [`RuntimePool`]: `extractors` workers
+/// pull dependency-ready blocks off the wave table, the lanes execute
+/// each block's artifact and write back, and each job's completion
+/// callback advances the table — no result-count or `wait_idle`
+/// barrier between waves; the single [`RuntimePool::wait_idle`] at the
+/// end only closes out the run.  (The caller warms every distinct
+/// artifact on every lane outside the timed region first.)
+pub fn drive_wave_pool<S: WaveSpace + 'static>(
+    pool: &RuntimePool,
+    space: &Arc<S>,
+    mode: PassMode,
+    extractors: usize,
+) -> crate::Result<Metrics> {
+    let stats0 = pool.stats();
+    let wall = Instant::now();
+    let table = Arc::new(WaveTable::new(space.as_ref(), mode));
+    let total = table.total();
+    let done_blocks = Arc::new(AtomicU64::new(0));
+    let cells = Arc::new(AtomicU64::new(0));
+    let wb_nanos = Arc::new(AtomicU64::new(0));
+    let depth = Arc::new(DepthTracker::new(space.as_ref()));
+
+    if total > 0 {
+        let queue = Arc::new(ReadyQueue::new(total, table.seed()));
+        let extractors = extractors.clamp(1, total);
+        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+        // SAFETY-relevant: jobs reach the caller's buffers through raw
+        // handles inside the space; the IdleGuard drains the lanes
+        // before those buffers can be freed, even on an unwinding exit.
+        let guard = IdleGuard::new(pool);
+        std::thread::scope(|sc| {
+            for _ in 0..extractors {
+                sc.spawn(|| {
+                    while let Some((w, i)) = queue.pop() {
+                        depth.dispatched(w);
+                        // Catch extraction panics here so the other
+                        // workers and the lanes stop promptly.
+                        let extracted = catch_unwind(AssertUnwindSafe(|| {
+                            // SAFETY: dependency order via the ready
+                            // queue — predecessors have written back.
+                            unsafe { space.extract(w, i) }
+                        }));
+                        let inputs = match extracted {
+                            Ok(inputs) => inputs,
+                            Err(p) => {
+                                queue.abort();
+                                first_err.lock().unwrap().get_or_insert(anyhow!(
+                                    "wave extractor panicked: {}",
+                                    panic_text(p.as_ref())
+                                ));
+                                return;
+                            }
+                        };
+                        let artifact = space.artifact(w, i);
+                        let space_j = space.clone();
+                        let done_j = done_blocks.clone();
+                        let cells_j = cells.clone();
+                        let wb_j = wb_nanos.clone();
+                        let table_j = table.clone();
+                        let queue_j = queue.clone();
+                        let depth_j = depth.clone();
+                        pool.submit_tracked(
+                            move |_lane, rt| {
+                                let out = rt.execute(&artifact, &inputs)?;
+                                let t0 = Instant::now();
+                                // SAFETY: disjoint write targets per
+                                // the wave plan.
+                                unsafe { space_j.write(w, i, &out) };
+                                wb_j.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                                done_j.fetch_add(1, Ordering::Relaxed);
+                                cells_j.fetch_add(space_j.cell_updates(w, i), Ordering::Relaxed);
+                                space_j.recycle(inputs);
+                                Ok(())
+                            },
+                            move |ok| {
+                                if ok {
+                                    depth_j.completed(w);
+                                    let mut newly = Vec::new();
+                                    table_j.complete(w, i, &mut newly);
+                                    queue_j.push_all(&newly);
+                                } else {
+                                    // Failed or skipped job: successors
+                                    // can never run; release the
+                                    // extractors.
+                                    queue_j.abort();
+                                }
+                            },
+                        );
+                    }
+                });
+            }
+        });
+        // Drain the lanes (the only wait_idle of the whole run), then
+        // surface extractor-side and lane-side failures in that order.
+        let idle = pool.wait_idle();
+        drop(guard);
+        if let Some(e) = first_err.into_inner().unwrap() {
+            return Err(e);
+        }
+        idle?;
+    }
+
+    let stats = pool.stats();
+    let (pool_hits, pool_misses, desc_pool_hits, desc_pool_misses) = space.pool_counters();
+    let (depth_max, overlap) = depth.finish();
+    Ok(Metrics {
+        blocks: done_blocks.load(Ordering::Relaxed),
+        cell_updates: cells.load(Ordering::Relaxed),
+        extract: Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms).max(0.0) / 1e3),
+        execute: Duration::from_secs_f64((stats.execute_ms - stats0.execute_ms).max(0.0) / 1e3),
+        writeback: Duration::from_nanos(wb_nanos.load(Ordering::Relaxed)),
+        wall: wall.elapsed(),
+        pool_hits,
+        pool_misses,
+        desc_pool_hits,
+        desc_pool_misses,
+        pipeline_depth_max: depth_max,
+        overlap_starts: overlap,
+    })
 }
 
 #[cfg(test)]
@@ -960,5 +1502,437 @@ mod tests {
         let (blocks, _) =
             drive_local(|_b, _i| Ok(vec![0.0; 16]), &space, handles, 0, 4).unwrap();
         assert_eq!(blocks, 0);
+    }
+
+    // ---------- WaveTable scheduling-invariant tests ----------
+
+    /// Synthetic wave graph built from explicit pred lists:
+    /// `preds[w][i]` = the predecessors of block (w, i).
+    struct TestGraph {
+        preds: Vec<Vec<Vec<(usize, usize)>>>,
+    }
+
+    impl WaveGraph for TestGraph {
+        fn waves(&self) -> usize {
+            self.preds.len()
+        }
+        fn wave_len(&self, w: usize) -> usize {
+            self.preds[w].len()
+        }
+        fn visit_preds(&self, w: usize, i: usize, f: &mut dyn FnMut(usize, usize)) {
+            for &(v, j) in &self.preds[w][i] {
+                f(v, j);
+            }
+        }
+    }
+
+    /// Simulation harness for the wave table (the wavefront analogue
+    /// of `simulate`): dispatches ready blocks in an arbitrary order,
+    /// asserting before each completion that every declared
+    /// predecessor already completed — and, in Barrier mode, every
+    /// block of every earlier wave.
+    fn simulate_waves(graph: &TestGraph, mode: PassMode, mut pick: impl FnMut(usize) -> usize) {
+        let table = WaveTable::new(graph, mode);
+        let total = table.total();
+        let mut ready = table.seed();
+        let mut completed: HashSet<(usize, usize)> = HashSet::new();
+        let mut dispatched = 0usize;
+        while !ready.is_empty() {
+            let idx = pick(ready.len()) % ready.len();
+            let (w, i) = ready.swap_remove(idx);
+            dispatched += 1;
+            graph.visit_preds(w, i, &mut |v, j| {
+                assert!(
+                    completed.contains(&(v, j)),
+                    "block (w={w}, i={i}) scheduled before predecessor (w={v}, i={j})"
+                );
+            });
+            if mode == PassMode::Barrier {
+                for v in 0..w {
+                    for j in 0..graph.wave_len(v) {
+                        assert!(
+                            completed.contains(&(v, j)),
+                            "barrier: (w={w}, i={i}) before wave-{v} block {j}"
+                        );
+                    }
+                }
+            }
+            assert!(completed.insert((w, i)), "double-scheduled");
+            let mut newly = Vec::new();
+            table.complete(w, i, &mut newly);
+            ready.extend(newly);
+        }
+        assert_eq!(dispatched, total, "not every block ran");
+    }
+
+    /// A 1D wavefront (Pathfinder-shaped): `waves` uniform waves of
+    /// `n` blocks, span-overlap reach `r`.
+    fn lattice1d_graph(waves: usize, n: usize, r: usize) -> TestGraph {
+        let mut preds = vec![vec![Vec::new(); n]];
+        for _ in 1..waves {
+            let mut wave = Vec::with_capacity(n);
+            for i in 0..n {
+                let lo = i.saturating_sub(r);
+                let hi = (i + r).min(n - 1);
+                wave.push((lo..=hi).map(|j| (preds.len() - 1, j)).collect());
+            }
+            preds.push(wave);
+        }
+        TestGraph { preds }
+    }
+
+    /// A LUD-shaped graph: 3 waves per step (diagonal 1, perimeter
+    /// 2r, internal r²) with the factorization's non-consecutive
+    /// (wave-skipping) edges.
+    fn lud_graph(nb: usize) -> TestGraph {
+        let mut preds: Vec<Vec<Vec<(usize, usize)>>> = Vec::new();
+        for k in 0..nb {
+            let rprev = nb - k; // internal extent of step k-1
+            let idx_prev = |i: usize, j: usize| (i - k) * rprev + (j - k);
+            // diagonal wave 3k
+            let mut dia = vec![Vec::new()];
+            if k > 0 {
+                dia[0].push((3 * k - 1, idx_prev(k, k)));
+            }
+            preds.push(dia);
+            // perimeter wave 3k+1
+            let mut perim = Vec::new();
+            for j in k + 1..nb {
+                let mut row = vec![(3 * k, 0)];
+                let mut col = vec![(3 * k, 0)];
+                if k > 0 {
+                    row.push((3 * k - 1, idx_prev(k, j)));
+                    col.push((3 * k - 1, idx_prev(j, k)));
+                }
+                perim.push(row);
+                perim.push(col);
+            }
+            preds.push(perim);
+            // internal wave 3k+2
+            let mut internal = Vec::new();
+            for i in k + 1..nb {
+                for j in k + 1..nb {
+                    let mut p = vec![
+                        (3 * k + 1, 2 * (j - k - 1)),
+                        (3 * k + 1, 2 * (i - k - 1) + 1),
+                    ];
+                    if k > 0 {
+                        p.push((3 * k - 1, idx_prev(i, j)));
+                    }
+                    internal.push(p);
+                }
+            }
+            preds.push(internal);
+        }
+        TestGraph { preds }
+    }
+
+    /// An SRAD-shaped two-stage graph: alternating reduction (full
+    /// edge in) and stencil (span edge out) waves.
+    fn two_stage_graph(steps: usize, ntiles: usize, nblocks: usize) -> TestGraph {
+        let mut preds: Vec<Vec<Vec<(usize, usize)>>> = Vec::new();
+        for s in 0..steps {
+            // reduction wave 2s: overlapping stencil blocks of 2s-1
+            // (synthetically: tiles t depends on blocks t % nblocks and
+            // (t+1) % nblocks — a sparse, non-trivial overlap set).
+            let mut red = Vec::with_capacity(ntiles);
+            for t in 0..ntiles {
+                if s == 0 {
+                    red.push(Vec::new());
+                } else {
+                    red.push(vec![
+                        (2 * s - 1, t % nblocks),
+                        (2 * s - 1, (t + 1) % nblocks),
+                    ]);
+                }
+            }
+            preds.push(red);
+            // stencil wave 2s+1: all reduction tiles of step s
+            let sten: Vec<Vec<(usize, usize)>> =
+                (0..nblocks).map(|_| (0..ntiles).map(|t| (2 * s, t)).collect()).collect();
+            preds.push(sten);
+        }
+        TestGraph { preds }
+    }
+
+    #[test]
+    fn wave_table_invariants_across_graph_shapes_and_orders() {
+        let graphs = [
+            lattice1d_graph(4, 5, 1),
+            lattice1d_graph(3, 1, 1),  // single-block waves
+            lattice1d_graph(5, 4, 0),  // self-column dependency only
+            lud_graph(1),
+            lud_graph(2),
+            lud_graph(4),
+            two_stage_graph(3, 4, 6),
+            two_stage_graph(1, 1, 1),
+        ];
+        for g in &graphs {
+            for mode in [PassMode::Pipelined, PassMode::Barrier] {
+                for order in 0..7usize {
+                    simulate_waves(g, mode, |len| match order {
+                        0 => 0,
+                        1 => len - 1,
+                        k => (k * 131) % len,
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wave_table_randomized_orders() {
+        let mut rng = crate::testutil::Rng::new(97);
+        for _ in 0..20 {
+            let g = match rng.usize_in(0, 2) {
+                0 => lattice1d_graph(rng.usize_in(1, 4), rng.usize_in(1, 5), rng.usize_in(0, 2)),
+                1 => lud_graph(rng.usize_in(1, 4)),
+                _ => two_stage_graph(rng.usize_in(1, 3), rng.usize_in(1, 4), rng.usize_in(1, 5)),
+            };
+            for mode in [PassMode::Pipelined, PassMode::Barrier] {
+                let mut r2 = crate::testutil::Rng::new(rng.next_u64());
+                simulate_waves(&g, mode, move |len| r2.usize_in(0, len - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn wave_table_seed_is_zero_pred_blocks() {
+        // LUD step 0: only the diagonal is initially runnable.
+        let table = WaveTable::new(&lud_graph(3), PassMode::Pipelined);
+        assert_eq!(table.seed(), vec![(0, 0)]);
+        // SRAD step 0: every reduction tile seeds.
+        let table = WaveTable::new(&two_stage_graph(2, 3, 2), PassMode::Pipelined);
+        assert_eq!(table.seed(), vec![(0, 0), (0, 1), (0, 2)]);
+        // Barrier mode: wave 0 seeds regardless of declared edges.
+        let table = WaveTable::new(&two_stage_graph(2, 3, 2), PassMode::Barrier);
+        assert_eq!(table.seed(), vec![(0, 0), (0, 1), (0, 2)]);
+    }
+
+    #[test]
+    fn wave_table_empty_waves_are_skipped() {
+        // LUD's tail step has empty perimeter/internal waves; the run
+        // must still dispatch every non-empty block, in either mode.
+        let g = lud_graph(2); // waves 4 and 5 are empty
+        assert_eq!(g.wave_len(4), 0);
+        assert_eq!(g.wave_len(5), 0);
+        for mode in [PassMode::Pipelined, PassMode::Barrier] {
+            simulate_waves(&g, mode, |_| 0);
+        }
+    }
+
+    #[test]
+    fn wave_table_total_and_coords() {
+        let g = lud_graph(3); // 1+4+4, 1+2+1, 1 = 14 blocks
+        let table = WaveTable::new(&g, PassMode::Pipelined);
+        assert_eq!(table.total(), 14);
+        assert_eq!(table.coord(0), (0, 0));
+        assert_eq!(table.coord(1), (1, 0));
+        assert_eq!(table.coord(5), (2, 0));
+        assert_eq!(table.coord(13), (6, 0));
+    }
+
+    // ---------- drive_wave_local end-to-end (native NW kernel) ----------
+
+    /// Needleman-Wunsch over anti-diagonal waves with a native-Rust
+    /// block kernel: the wavefront counterpart of `TestSpace2D` —
+    /// enough to run the real wave scheduler without artifacts and
+    /// compare bitwise against the serial oracle.
+    struct TestNwSpace {
+        nb: usize,
+        b: usize,
+        stride: usize,
+        refm: Vec<i32>,
+        score_ptr: *mut i32,
+    }
+
+    unsafe impl Send for TestNwSpace {}
+    unsafe impl Sync for TestNwSpace {}
+
+    impl TestNwSpace {
+        fn lo(&self, d: usize) -> usize {
+            d.saturating_sub(self.nb - 1)
+        }
+        fn block_of(&self, d: usize, i: usize) -> (usize, usize) {
+            let bi = self.lo(d) + i;
+            (bi, d - bi)
+        }
+    }
+
+    impl WaveGraph for TestNwSpace {
+        fn waves(&self) -> usize {
+            2 * self.nb - 1
+        }
+        fn wave_len(&self, d: usize) -> usize {
+            d.min(self.nb - 1) - self.lo(d) + 1
+        }
+        fn visit_preds(&self, d: usize, i: usize, f: &mut dyn FnMut(usize, usize)) {
+            let (bi, bj) = self.block_of(d, i);
+            if d == 0 {
+                return;
+            }
+            let plo = self.lo(d - 1);
+            if bi > 0 {
+                f(d - 1, bi - 1 - plo);
+            }
+            if bj > 0 {
+                f(d - 1, bi - plo);
+            }
+        }
+    }
+
+    impl WaveSpace for TestNwSpace {
+        fn artifact(&self, _w: usize, _i: usize) -> Arc<str> {
+            Arc::from("native-nw")
+        }
+        unsafe fn extract(&self, d: usize, i: usize) -> Vec<Tensor> {
+            let (bi, bj) = self.block_of(d, i);
+            let b = self.b;
+            let (r0, c0) = (1 + bi * b, 1 + bj * b);
+            let at = |r: usize, c: usize| *self.score_ptr.add(r * self.stride + c);
+            let top: Vec<i32> = (0..b).map(|k| at(r0 - 1, c0 + k)).collect();
+            let left: Vec<i32> = (0..b).map(|k| at(r0 + k, c0 - 1)).collect();
+            let corner = vec![at(r0 - 1, c0 - 1)];
+            let mut refb = Vec::with_capacity(b * b);
+            for k in 0..b {
+                refb.extend_from_slice(&self.refm[(r0 + k) * self.stride + c0..][..b]);
+            }
+            vec![
+                Tensor::I32(top, vec![b]),
+                Tensor::I32(left, vec![b]),
+                Tensor::I32(corner, vec![1]),
+                Tensor::I32(refb, vec![b, b]),
+            ]
+        }
+        unsafe fn write(&self, d: usize, i: usize, out: &[Tensor]) {
+            let (bi, bj) = self.block_of(d, i);
+            let b = self.b;
+            let (r0, c0) = (1 + bi * b, 1 + bj * b);
+            let vals = out[0].as_i32();
+            for k in 0..b {
+                std::ptr::copy_nonoverlapping(
+                    vals[k * b..].as_ptr(),
+                    self.score_ptr.add((r0 + k) * self.stride + c0),
+                    b,
+                );
+            }
+        }
+        fn cell_updates(&self, _w: usize, _i: usize) -> u64 {
+            (self.b * self.b) as u64
+        }
+    }
+
+    /// The native block kernel: the NW recurrence over one b×b block
+    /// from its top/left/corner borders.
+    fn nw_block_kernel(b: usize, penalty: i32, inputs: &[Tensor]) -> Vec<i32> {
+        let top = inputs[0].as_i32();
+        let left = inputs[1].as_i32();
+        let corner = inputs[2].as_i32()[0];
+        let refb = inputs[3].as_i32();
+        let mut s = vec![0i32; b * b];
+        let get = |s: &[i32], i: isize, j: isize| -> i32 {
+            if i < 0 && j < 0 {
+                corner
+            } else if i < 0 {
+                top[j as usize]
+            } else if j < 0 {
+                left[i as usize]
+            } else {
+                s[i as usize * b + j as usize]
+            }
+        };
+        for i in 0..b {
+            for j in 0..b {
+                let (ii, jj) = (i as isize, j as isize);
+                s[i * b + j] = (get(&s, ii - 1, jj - 1) + refb[i * b + j])
+                    .max(get(&s, ii - 1, jj) - penalty)
+                    .max(get(&s, ii, jj - 1) - penalty);
+            }
+        }
+        s
+    }
+
+    fn run_wave_nw_case(n: usize, b: usize, mode: PassMode, lookahead: usize) {
+        let penalty = 3;
+        let mut rng = crate::testutil::Rng::new(11 + n as u64);
+        let reference: Vec<Vec<i32>> =
+            (0..=n).map(|_| rng.vec_i32(n + 1, -5, 15)).collect();
+        let want = crate::coordinator::reference::nw(&reference, penalty);
+
+        let stride = n + 1;
+        let mut refm = Vec::with_capacity(stride * stride);
+        for row in &reference {
+            refm.extend_from_slice(row);
+        }
+        let mut score = vec![0i32; stride * stride];
+        for j in 0..=n {
+            score[j] = -(j as i32) * penalty;
+        }
+        for i in 0..=n {
+            score[i * stride] = -(i as i32) * penalty;
+        }
+        let space = TestNwSpace {
+            nb: n / b,
+            b,
+            stride,
+            refm,
+            score_ptr: score.as_mut_ptr(),
+        };
+        let stats = drive_wave_local(
+            |_w, _i, inputs| {
+                Ok(vec![Tensor::I32(nw_block_kernel(b, penalty, inputs), vec![b, b])])
+            },
+            &space,
+            mode,
+            lookahead,
+        )
+        .unwrap();
+        assert_eq!(stats.blocks as usize, (n / b) * (n / b));
+        assert_eq!(stats.cell_updates as usize, n * n);
+        let got: Vec<Vec<i32>> = score.chunks(stride).map(|r| r.to_vec()).collect();
+        assert_eq!(got, want, "n={n} b={b} mode={mode:?}");
+        if mode == PassMode::Barrier {
+            assert!(stats.pipeline_depth_max <= 1, "barrier must stay wave-serial");
+            assert_eq!(stats.overlap_starts, 0);
+        } else {
+            assert!(stats.pipeline_depth_max >= 1);
+        }
+    }
+
+    #[test]
+    fn drive_wave_local_nw_matches_oracle_bitwise() {
+        // Pipelined anti-diagonal schedule == serial oracle, bitwise,
+        // across geometries, both modes, threaded and sequential paths.
+        run_wave_nw_case(12, 4, PassMode::Pipelined, 4);
+        run_wave_nw_case(12, 4, PassMode::Barrier, 4);
+        run_wave_nw_case(8, 2, PassMode::Pipelined, 2);
+        run_wave_nw_case(6, 6, PassMode::Pipelined, 4); // single block
+        run_wave_nw_case(10, 2, PassMode::Pipelined, 1); // sequential path
+    }
+
+    #[test]
+    fn drive_wave_local_error_propagates() {
+        let mut score = vec![0i32; 49];
+        let space = TestNwSpace {
+            nb: 3,
+            b: 2,
+            stride: 7,
+            refm: vec![0; 49],
+            score_ptr: score.as_mut_ptr(),
+        };
+        let mut n = 0;
+        let r = drive_wave_local(
+            |_w, _i, _inputs| {
+                n += 1;
+                if n == 3 {
+                    anyhow::bail!("boom")
+                }
+                Ok(vec![Tensor::I32(vec![0; 4], vec![2, 2])])
+            },
+            &space,
+            PassMode::Pipelined,
+            1,
+        );
+        assert!(r.is_err());
     }
 }

@@ -1,15 +1,14 @@
 //! Flat (single-pass) block-streaming schedulers.
 //!
 //! Cross-pass scheduling — dependency-tracked pipelining over *all*
-//! passes of a workload — lives in
+//! passes (or waves) of a workload — lives in
 //! [`crate::coordinator::passdriver`], which superseded these engines
-//! on the stencil paths in PR 2.  The two generic engines below
-//! currently have no production caller: they are retained (fully
-//! tested, pure logic) as the streaming building blocks for the
-//! remaining Ch. 4 lane-parallel work (LUD internal blocks, SRAD
-//! reduction tiles — see ROADMAP), which needs exactly this
-//! independent-block fan-out rather than the pass driver's dependency
-//! table.
+//! on the stencil paths in PR 2 and on the Ch. 4 wavefront apps in
+//! PR 3 (the `WaveSpace` driver now owns the LUD/SRAD/NW/Pathfinder
+//! fan-out these engines were being retained for).  The two generic
+//! engines below have no production caller: they stay as fully tested
+//! pure-logic building blocks for one-shot independent-block streaming
+//! that genuinely needs no dependency table.
 //!
 //! Two regimes:
 //!

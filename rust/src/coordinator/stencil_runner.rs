@@ -48,14 +48,18 @@ use crate::coordinator::passdriver::{self, PassMode, StencilSpace};
 use crate::runtime::{Runtime, RuntimePool, Tensor};
 
 /// Out-of-grid cell counts per tile side: [top, bottom] for an axis.
-/// `o0` is the block's interior origin, `n` the grid extent.
-fn oob_axis(o0: usize, block: usize, halo: usize, n: usize) -> (i32, i32) {
+/// `o0` is the block's interior origin, `n` the grid extent.  Shared
+/// with the SRAD wavefront space in `coordinator::apps`, whose stencil
+/// stage issues the same boundary-restoration descriptors.
+pub(crate) fn oob_axis(o0: usize, block: usize, halo: usize, n: usize) -> (i32, i32) {
     let top = halo.saturating_sub(o0).min(block + 2 * halo) as i32;
     let bottom = (o0 + block + halo).saturating_sub(n).min(block + 2 * halo) as i32;
     (top, bottom)
 }
 
-fn boundary_of(spec: &crate::runtime::ArtifactSpec) -> Boundary {
+/// Boundary rule baked into an artifact's manifest entry.  (Also used
+/// by the SRAD wavefront space in `coordinator::apps`.)
+pub(crate) fn boundary_of(spec: &crate::runtime::ArtifactSpec) -> Boundary {
     match spec.meta_str("boundary") {
         Some("clamp") => Boundary::Clamp,
         _ => Boundary::Zero,
@@ -95,7 +99,10 @@ fn stencil_meta(
     })
 }
 
-fn block_origins_2d(ny: usize, nx: usize, block: usize) -> Vec<(usize, usize)> {
+/// Row-major block-origin plan for a 2D grid.  (Also used by the SRAD
+/// wavefront space in `coordinator::apps` for its reduction and
+/// stencil lattices.)
+pub(crate) fn block_origins_2d(ny: usize, nx: usize, block: usize) -> Vec<(usize, usize)> {
     let mut origins = Vec::new();
     let mut y0 = 0;
     while y0 < ny {
@@ -129,7 +136,8 @@ fn block_origins_3d(nz: usize, ny: usize, nx: usize, block: usize) -> Vec<(usize
 
 /// How many extractor workers to pair with `lanes` execute lanes: halo
 /// extraction runs at memcpy rate, so half the lane count saturates it.
-fn extractor_count(lanes: usize) -> usize {
+/// (Also used by the wavefront app runners in `coordinator::apps`.)
+pub(crate) fn extractor_count(lanes: usize) -> usize {
     (lanes + 1) / 2
 }
 

@@ -240,6 +240,18 @@ impl RuntimePool {
         self.wait_idle()
     }
 
+    /// Compile several artifacts on every lane (see
+    /// [`RuntimePool::warmup_artifact`]) — the wavefront app runners
+    /// use this for workloads that mix compute units (LUD's
+    /// diagonal/perimeter/internal kernels, SRAD's reduction +
+    /// stencil).
+    pub fn warmup_artifacts(&self, artifacts: &[&str]) -> crate::Result<()> {
+        for name in artifacts {
+            self.warmup_artifact(name)?;
+        }
+        Ok(())
+    }
+
     /// Convenience single execution on whichever lane is free first.
     pub fn execute(&self, artifact: &str, inputs: Vec<Tensor>) -> crate::Result<Vec<Tensor>> {
         let (tx, rx) = std::sync::mpsc::channel();

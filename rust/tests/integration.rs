@@ -314,6 +314,119 @@ fn pathfinder_lanes_matches_reference() {
 }
 
 #[test]
+fn pathfinder_wave_pipelined_matches_barrier_at_lanes_1_2_4() {
+    // Deeper run (8 waves) so the pipelined schedule really crosses
+    // wave boundaries; results must be bit-identical to the
+    // wave-serial baseline and the single-runtime runner.
+    let mut rng = Rng::new(59);
+    let rows = 65; // 1 + 8 fused chunks of 8
+    let cols = 9_000; // 3 column blocks, partial tail
+    let wall: Vec<Vec<i32>> = (0..rows).map(|_| rng.vec_i32(cols, 0, 10)).collect();
+    let rt = runtime();
+    let (single, _) = apps::run_pathfinder(&rt, &wall).unwrap();
+    assert_eq!(single, reference::pathfinder(&wall));
+    for lanes in [1usize, 2, 4] {
+        let pool = RuntimePool::open("artifacts", lanes).unwrap();
+        let (bar, mb) =
+            apps::run_pathfinder_lanes_mode(&pool, &wall, PassMode::Barrier).unwrap();
+        let (pipe, mp) =
+            apps::run_pathfinder_lanes_mode(&pool, &wall, PassMode::Pipelined).unwrap();
+        assert_eq!(bar, pipe, "lanes={lanes}: barrier vs pipelined differ");
+        assert_eq!(pipe, single, "lanes={lanes}: pipelined vs single-runtime differ");
+        assert_eq!(mb.blocks, mp.blocks);
+        assert_eq!(mb.cell_updates, mp.cell_updates);
+        assert!(mb.pipeline_depth_max <= 1, "barrier stayed wave-serial");
+        assert_eq!(mb.overlap_starts, 0);
+    }
+}
+
+#[test]
+fn nw_wave_pipelined_matches_barrier_at_lanes_1_2_4() {
+    let mut rng = Rng::new(67);
+    let n = 256; // 4x4 blocks of 64: 7 anti-diagonal waves
+    let reference_matrix: Vec<Vec<i32>> =
+        (0..=n).map(|_| rng.vec_i32(n + 1, -5, 15)).collect();
+    let rt = runtime();
+    let (single, _) = apps::run_nw(&rt, &reference_matrix, 10).unwrap();
+    assert_eq!(single, reference::nw(&reference_matrix, 10));
+    for lanes in [1usize, 2, 4] {
+        let pool = RuntimePool::open("artifacts", lanes).unwrap();
+        let (bar, mb) =
+            apps::run_nw_lanes_mode(&pool, &reference_matrix, 10, PassMode::Barrier).unwrap();
+        let (pipe, mp) =
+            apps::run_nw_lanes_mode(&pool, &reference_matrix, 10, PassMode::Pipelined).unwrap();
+        assert_eq!(bar, pipe, "lanes={lanes}: barrier vs pipelined differ");
+        assert_eq!(pipe, single, "lanes={lanes}: pipelined vs single-runtime differ");
+        assert_eq!(mb.blocks, 16);
+        assert_eq!(mp.blocks, 16);
+    }
+}
+
+#[test]
+fn nw_lanes_rejects_wrong_penalty() {
+    let pool = RuntimePool::open("artifacts", 1).unwrap();
+    let refm = vec![vec![0i32; 65]; 65];
+    assert!(apps::run_nw_lanes(&pool, &refm, 3).is_err());
+}
+
+#[test]
+fn srad_wave_pipelined_matches_barrier_at_lanes_1_2_4() {
+    // The two-stage edge (full reduction→stencil, span stencil→next
+    // reduction) must not change a single bit: q0 partials are summed
+    // in tile order, stencil inputs are fixed by the dependency order.
+    let img = rand_grid2d(512, 512, 79, 0.5, 2.0);
+    let steps = 4;
+    let rt = runtime();
+    let (single, _) = apps::run_srad(&rt, img.clone(), steps).unwrap();
+    for lanes in [1usize, 2, 4] {
+        let pool = RuntimePool::open("artifacts", lanes).unwrap();
+        let (bar, mb) =
+            apps::run_srad_lanes_mode(&pool, img.clone(), steps, PassMode::Barrier).unwrap();
+        let (pipe, mp) =
+            apps::run_srad_lanes_mode(&pool, img.clone(), steps, PassMode::Pipelined).unwrap();
+        assert_eq!(bar.data, pipe.data, "lanes={lanes}: barrier vs pipelined differ");
+        assert_eq!(pipe.data, single.data, "lanes={lanes}: pipelined vs single-runtime differ");
+        assert_eq!(mb.blocks, mp.blocks);
+        assert_eq!(mb.cell_updates, 512 * 512 * steps);
+    }
+    // And the oracle still agrees within tolerance.
+    let pool = RuntimePool::open("artifacts", 4).unwrap();
+    let (got, _) = apps::run_srad_lanes(&pool, img.clone(), steps).unwrap();
+    let want = reference::srad(img, 0.5, steps as usize);
+    assert_allclose(&got.data, &want.data, 1e-3, 1e-3, "srad lanes");
+}
+
+#[test]
+fn lud_wave_pipelined_matches_barrier_at_lanes_1_2_4() {
+    let mut rng = Rng::new(89);
+    let n = 256; // 4x4 blocks of 64: 12 waves
+    let a: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            (0..n)
+                .map(|j| rng.f32_in(-1.0, 1.0) + if i == j { n as f32 } else { 0.0 })
+                .collect()
+        })
+        .collect();
+    let rt = runtime();
+    let (single, _) = apps::run_lud(&rt, &a).unwrap();
+    for lanes in [1usize, 2, 4] {
+        let pool = RuntimePool::open("artifacts", lanes).unwrap();
+        let (bar, mb) = apps::run_lud_lanes_mode(&pool, &a, PassMode::Barrier).unwrap();
+        let (pipe, mp) = apps::run_lud_lanes_mode(&pool, &a, PassMode::Pipelined).unwrap();
+        assert_eq!(bar, pipe, "lanes={lanes}: barrier vs pipelined differ");
+        assert_eq!(pipe, single, "lanes={lanes}: pipelined vs single-runtime differ");
+        assert_eq!(mb.blocks, mp.blocks);
+    }
+    // Accuracy against the f64 oracle (blocked f32 vs f64 accumulation).
+    let pool = RuntimePool::open("artifacts", 4).unwrap();
+    let (got, _) = apps::run_lud_lanes(&pool, &a).unwrap();
+    let want = reference::lud(&a);
+    for i in 0..n {
+        assert_allclose(&got[i], &want[i], 1e-3, 1e-3, &format!("lud lanes row {i}"));
+    }
+}
+
+#[test]
 fn descriptor_pool_reuses_in_steady_state() {
     // The i32 boundary descriptors come from their own keyed pool:
     // after warm-up, passes allocate no descriptor buffers either.
