@@ -3,20 +3,24 @@
 //! Measures per-block PJRT execution, literal marshalling, halo
 //! extraction and the streamed end-to-end cell-update throughput for the
 //! 2D/3D stencil compute units — the numbers the §Perf optimization loop
-//! in EXPERIMENTS.md tracks.  The scheduler-lanes sweep runs the same
-//! streamed workload through the multi-lane engine at 1/2/4 lanes under
-//! **both** inter-pass schedules — `barrier` (drain between passes, the
-//! PR 1 baseline) and `pipelined` (dependency-tracked cross-pass
-//! writeback).  The wavefront-apps sweep at the end does the same for
-//! the Ch. 4 apps (Pathfinder / NW / SRAD / LUD) at lanes=4 on the wave
-//! pass driver — `barrier` (wave-serial) vs `pipelined`
-//! (dependency-edge overlap).  Everything lands in `BENCH_runtime.json`
-//! for trajectory tracking; CI gates each pipelined/barrier pair at
-//! lanes=4.
+//! in EXPERIMENTS.md tracks.  Everything streamed runs through the
+//! `Session` builder API (PR 4): the scheduler-lanes sweep drives the
+//! same workload at 1/2/4 lanes under **both** inter-pass schedules —
+//! `barrier` (drain between passes) and `pipelined` (dependency-tracked
+//! cross-pass writeback) — and the wavefront-apps sweep does the same
+//! for the Ch. 4 apps (Pathfinder / NW / SRAD / LUD) at lanes=4.  The
+//! chain sweep at the end runs SRAD feeding a downstream stencil two
+//! ways: back-to-back barriered (two separate runs, the reference) and
+//! as one **fused** chain (`srad.then(stencil2d)`, a single spliced
+//! wave graph with cross-app seam edges).  Everything lands in
+//! `BENCH_runtime.json` for trajectory tracking; CI gates each
+//! pipelined/barrier pair at lanes=4 and the fused chain at ≥ 0.95× the
+//! back-to-back reference.
 
 use fpga_hpc::benchutil::{write_bench_json, BenchRow, Bencher};
 use fpga_hpc::coordinator::grid::{Boundary, Grid2D};
-use fpga_hpc::coordinator::{apps, stencil_runner, PassMode};
+use fpga_hpc::coordinator::session::{GridInput, Session, Workload};
+use fpga_hpc::coordinator::{Metrics, PassMode};
 use fpga_hpc::runtime::{Runtime, RuntimePool, Tensor};
 use fpga_hpc::testutil::Rng;
 
@@ -65,38 +69,24 @@ fn main() {
         bufpool.put(v);
     });
 
-    b.bench("streamed_diffusion2d_1024_4steps", || {
-        let g = grid.clone();
-        stencil_runner::run_stencil2d(&rt, "diffusion2d_r1", g, None, 4).unwrap()
-    });
-
-    // report end-to-end throughput once
-    let (_, m) =
-        stencil_runner::run_stencil2d(&rt, "diffusion2d_r1", grid.clone(), None, 16).unwrap();
-    println!("\nstreamed diffusion2d 1024^2 x16 steps: {}", m.summary());
-    let stats = rt.stats();
-    println!(
-        "runtime totals: {} executions, execute {:.1}ms, marshal {:.1}ms",
-        stats.executions, stats.execute_ms, stats.marshal_ms
-    );
-
     // --- scheduler-lanes sweep: replicated compute units, barrier vs
-    // --- cross-pass pipelined inter-pass schedules ---
-    println!("\n=== scheduler-lanes sweep (streamed diffusion2d 1024^2 x16) ===\n");
+    // --- cross-pass pipelined inter-pass schedules, via Session ---
+    println!("\n=== scheduler-lanes sweep (streamed diffusion2d 1024^2 x16, Session) ===\n");
     let mut rows = Vec::new();
     for lanes in [1usize, 2, 4] {
         let pool = RuntimePool::open("artifacts", lanes).expect("pool open");
-        pool.warmup_artifact("diffusion2d_r1").unwrap();
         // one unmeasured run to warm per-lane compile caches and the
         // allocator (each run owns its tile pools: pass 1 fills the
         // shelves, later passes extract allocation-free)
-        stencil_runner::run_stencil2d_lanes(&pool, "diffusion2d_r1", grid.clone(), None, 4)
+        Session::over(&pool)
+            .run(Workload::stencil2d("diffusion2d_r1", grid.clone(), None, 4))
             .unwrap();
         for (mode, tag) in [(PassMode::Barrier, "barrier"), (PassMode::Pipelined, "pipelined")] {
-            let (_, m) = stencil_runner::run_stencil2d_lanes_mode(
-                &pool, "diffusion2d_r1", grid.clone(), None, 16, mode,
-            )
-            .unwrap();
+            let report = Session::over(&pool)
+                .with_mode(mode)
+                .run(Workload::stencil2d("diffusion2d_r1", grid.clone(), None, 16))
+                .unwrap();
+            let m = &report.metrics;
             println!("lanes={lanes} {tag}: {}", m.summary());
             rows.push(BenchRow {
                 name: format!("streamed_diffusion2d_1024_16steps_{tag}"),
@@ -111,7 +101,7 @@ fn main() {
     }
     let find = |tag: &str, lanes: usize| {
         rows.iter()
-            .find(|r| r.lanes == lanes && r.name.ends_with(tag))
+            .find(|r: &&BenchRow| r.lanes == lanes && r.name.ends_with(tag))
             .map(|r| r.gcells_per_sec)
     };
     if let (Some(one), Some(four)) = (find("pipelined", 1), find("pipelined", 4)) {
@@ -126,7 +116,7 @@ fn main() {
 
     // --- wavefront-apps sweep: the Ch. 4 apps on the wave pass driver,
     // --- wave-serial barrier vs dependency-edge pipelined, lanes=4 ---
-    println!("\n=== wavefront-apps sweep (lanes=4, barrier vs pipelined) ===\n");
+    println!("\n=== wavefront-apps sweep (lanes=4, barrier vs pipelined, Session) ===\n");
     let lanes = 4usize;
     let pool = RuntimePool::open("artifacts", lanes).expect("pool open");
 
@@ -149,7 +139,7 @@ fn main() {
 
     const MODES: [(PassMode, &str); 2] =
         [(PassMode::Barrier, "barrier"), (PassMode::Pipelined, "pipelined")];
-    fn app_row(name: &str, tag: &str, lanes: usize, m: &fpga_hpc::coordinator::Metrics) -> BenchRow {
+    fn app_row(name: &str, tag: &str, lanes: usize, m: &Metrics) -> BenchRow {
         println!("{name} lanes={lanes} {tag}: {}", m.summary());
         BenchRow {
             name: format!("app_{name}_{tag}"),
@@ -161,28 +151,19 @@ fn main() {
             pool_misses: m.pool_misses,
         }
     }
-
-    // one unmeasured run per app first: lane compile caches + allocator
-    apps::run_pathfinder_lanes(&pool, &pf_wall).unwrap();
-    for (mode, tag) in MODES {
-        let (_, m) = apps::run_pathfinder_lanes_mode(&pool, &pf_wall, mode).unwrap();
-        rows.push(app_row("pathfinder", tag, lanes, &m));
-    }
-    apps::run_nw_lanes(&pool, &nw_ref, 10).unwrap();
-    for (mode, tag) in MODES {
-        let (_, m) = apps::run_nw_lanes_mode(&pool, &nw_ref, 10, mode).unwrap();
-        rows.push(app_row("nw", tag, lanes, &m));
-    }
-    apps::run_srad_lanes(&pool, srad_img.clone(), srad_steps).unwrap();
-    for (mode, tag) in MODES {
-        let (_, m) =
-            apps::run_srad_lanes_mode(&pool, srad_img.clone(), srad_steps, mode).unwrap();
-        rows.push(app_row("srad", tag, lanes, &m));
-    }
-    apps::run_lud_lanes(&pool, &lud_a).unwrap();
-    for (mode, tag) in MODES {
-        let (_, m) = apps::run_lud_lanes_mode(&pool, &lud_a, mode).unwrap();
-        rows.push(app_row("lud", tag, lanes, &m));
+    let workload: &dyn Fn(&str) -> Workload = &|app| match app {
+        "pathfinder" => Workload::pathfinder(pf_wall.clone()),
+        "nw" => Workload::nw(nw_ref.clone(), 10),
+        "srad" => Workload::srad(srad_img.clone(), srad_steps),
+        _ => Workload::lud(lud_a.clone()),
+    };
+    for app in ["pathfinder", "nw", "srad", "lud"] {
+        // one unmeasured run per app first: lane compile caches + allocator
+        Session::over(&pool).run(workload(app)).unwrap();
+        for (mode, tag) in MODES {
+            let report = Session::over(&pool).with_mode(mode).run(workload(app)).unwrap();
+            rows.push(app_row(app, tag, lanes, &report.metrics));
+        }
     }
 
     for app in ["pathfinder", "nw", "srad", "lud"] {
@@ -198,6 +179,61 @@ fn main() {
             );
         }
     }
+
+    // --- fused-chain sweep: SRAD feeding a downstream stencil, one
+    // --- spliced wave graph vs the back-to-back barriered reference ---
+    println!("\n=== fused-chain sweep (srad -> diffusion2d, lanes=4) ===\n");
+    let chain_steps = 16u64;
+    // warm both apps' caches on this pool once
+    Session::over(&pool)
+        .run(
+            Workload::srad(srad_img.clone(), srad_steps)
+                .then(Workload::stencil2d("diffusion2d_r1", GridInput::Upstream, None, chain_steps)),
+        )
+        .unwrap();
+    // Back-to-back barriered reference: two separate runs, the second
+    // only starting after the first fully drained.
+    let barriered = Session::over(&pool).with_mode(PassMode::Barrier);
+    let r1 = barriered.run(Workload::srad(srad_img.clone(), srad_steps)).unwrap();
+    let mid = r1.into_output().into_grid2d().expect("srad yields a grid");
+    let _ = barriered
+        .run(Workload::stencil2d("diffusion2d_r1", mid, None, chain_steps))
+        .unwrap();
+    let back = barriered.metrics(); // cumulative across the two runs
+    println!("back-to-back barriered: {}", back.summary());
+    rows.push(BenchRow {
+        name: "chain_srad_stencil_backtoback".into(),
+        lanes,
+        gcells_per_sec: back.gcell_per_sec(),
+        wall_secs: back.wall.as_secs_f64(),
+        blocks: back.blocks,
+        pool_hits: back.pool_hits,
+        pool_misses: back.pool_misses,
+    });
+    // Fused: one spliced wave graph, seam edges instead of a drain.
+    let report = Session::over(&pool)
+        .run(
+            Workload::srad(srad_img.clone(), srad_steps)
+                .then(Workload::stencil2d("diffusion2d_r1", GridInput::Upstream, None, chain_steps)),
+        )
+        .unwrap();
+    let fused = &report.metrics;
+    println!("fused chain:            {}", fused.summary());
+    rows.push(BenchRow {
+        name: "chain_srad_stencil_fused".into(),
+        lanes,
+        gcells_per_sec: fused.gcell_per_sec(),
+        wall_secs: fused.wall.as_secs_f64(),
+        blocks: fused.blocks,
+        pool_hits: fused.pool_hits,
+        pool_misses: fused.pool_misses,
+    });
+    println!(
+        "fused vs back-to-back: {:.2}x (CI gates at >= 0.95x); fused depth={} overlap={}",
+        fused.gcell_per_sec() / back.gcell_per_sec().max(1e-12),
+        fused.pipeline_depth_max,
+        fused.overlap_starts,
+    );
 
     write_bench_json("BENCH_runtime.json", &rows).expect("writing BENCH_runtime.json");
     println!("wrote BENCH_runtime.json");

@@ -171,10 +171,44 @@ pub fn bench_rows_json(rows: &[BenchRow]) -> String {
     s
 }
 
-/// Write the rows to `path` as JSON (e.g. `BENCH_runtime.json`).
+/// Collapse rows sharing a `(name, lanes)` key.  Exact duplicates
+/// (every measured field identical) merge to one row; rows that share
+/// a key but disagree on any field are two *different* configurations
+/// fighting over the same key — that is a caller bug, so it errors
+/// instead of letting one measurement silently shadow the other in the
+/// trajectory file.
+pub fn merge_bench_rows(rows: &[BenchRow]) -> Result<Vec<BenchRow>, String> {
+    let mut out: Vec<BenchRow> = Vec::with_capacity(rows.len());
+    for r in rows {
+        match out.iter().find(|p| p.name == r.name && p.lanes == r.lanes) {
+            None => out.push(r.clone()),
+            Some(prev) => {
+                let identical = prev.gcells_per_sec == r.gcells_per_sec
+                    && prev.wall_secs == r.wall_secs
+                    && prev.blocks == r.blocks
+                    && prev.pool_hits == r.pool_hits
+                    && prev.pool_misses == r.pool_misses;
+                if !identical {
+                    return Err(format!(
+                        "conflicting bench rows for key '{}' lanes={}: \
+                         {:.6}/{:.6} GCell/s — rename one of the configs",
+                        r.name, r.lanes, prev.gcells_per_sec, r.gcells_per_sec,
+                    ));
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Write the rows to `path` as JSON (e.g. `BENCH_runtime.json`),
+/// merging duplicate `(name, lanes)` keys first (see
+/// [`merge_bench_rows`]); conflicting duplicates fail the write.
 pub fn write_bench_json(path: &str, rows: &[BenchRow]) -> std::io::Result<()> {
+    let rows = merge_bench_rows(rows)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
     let mut f = std::fs::File::create(path)?;
-    f.write_all(bench_rows_json(rows).as_bytes())
+    f.write_all(bench_rows_json(&rows).as_bytes())
 }
 
 #[cfg(test)]
@@ -229,6 +263,48 @@ mod tests {
         // two objects, comma after the first only
         assert_eq!(s.matches("{\"name\"").count(), 2);
         assert_eq!(s.matches("},\n").count(), 1);
+    }
+
+    fn row(name: &str, lanes: usize, gcells: f64) -> BenchRow {
+        BenchRow {
+            name: name.into(),
+            lanes,
+            gcells_per_sec: gcells,
+            wall_secs: 1.0,
+            blocks: 4,
+            pool_hits: 2,
+            pool_misses: 2,
+        }
+    }
+
+    #[test]
+    fn merge_collapses_exact_duplicates() {
+        let rows = vec![row("a", 1, 0.5), row("a", 1, 0.5), row("a", 4, 2.0)];
+        let merged = merge_bench_rows(&rows).unwrap();
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged[0].lanes, 1);
+        assert_eq!(merged[1].lanes, 4);
+    }
+
+    #[test]
+    fn merge_keeps_same_name_distinct_lanes() {
+        let rows = vec![row("a", 1, 0.5), row("a", 2, 0.9)];
+        assert_eq!(merge_bench_rows(&rows).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn merge_rejects_conflicting_duplicate_keys() {
+        let rows = vec![row("a", 4, 0.5), row("a", 4, 0.6)];
+        let err = merge_bench_rows(&rows).unwrap_err();
+        assert!(err.contains("'a' lanes=4"), "got: {err}");
+    }
+
+    #[test]
+    fn write_bench_json_fails_on_conflict() {
+        let rows = vec![row("dup", 1, 1.0), row("dup", 1, 2.0)];
+        let dir = std::env::temp_dir().join("benchutil_conflict_test.json");
+        let r = write_bench_json(dir.to_str().unwrap(), &rows);
+        assert!(r.is_err());
     }
 
     #[test]

@@ -11,9 +11,10 @@
 //! ```
 
 use crate::coordinator::grid::Grid2D;
-use crate::coordinator::{reference, stencil_runner};
+use crate::coordinator::session::{Session, Workload};
+use crate::coordinator::{reference, PassMode};
 use crate::device::{arria_10, stratix_10, stratix_v, FpgaDevice};
-use crate::runtime::{Runtime, RuntimePool};
+use crate::runtime::Runtime;
 use crate::stencil::config::{default_workload, diffusion2d, diffusion3d};
 use crate::stencil::tuner::tune;
 use crate::testutil::Rng;
@@ -28,10 +29,13 @@ USAGE:
   fpga-hpc report --all            print every table and figure
   fpga-hpc tune <d2r1|d2r2|..|d3r4> [sv|a10|s10]
                                    tune one stencil on one device
-  fpga-hpc run diffusion2d [n] [steps] [--lanes N]
-                                   functional streamed run + verification;
+  fpga-hpc run diffusion2d [n] [steps] [--lanes N] [--mode barrier|pipelined]
+                                   functional streamed run + verification
+                                   through the Session builder API;
                                    --lanes N replicates the compute unit
-                                   across N worker threads (default 1)
+                                   across N worker threads (default 1),
+                                   --mode picks the inter-pass schedule
+                                   (default pipelined)
   fpga-hpc sim                     simulate all Rodinia variants
   fpga-hpc list                    list AOT artifacts
 ";
@@ -74,9 +78,10 @@ pub fn run() -> crate::Result<()> {
         "run" => {
             let mut rest: Vec<String> = args[1..].to_vec();
             let lanes = take_lanes_flag(&mut rest)?;
+            let mode = take_mode_flag(&mut rest)?;
             let n: usize = rest.get(1).and_then(|s| s.parse().ok()).unwrap_or(512);
             let steps: u64 = rest.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
-            run_diffusion2d_demo(n, steps, lanes)?;
+            run_diffusion2d_demo(n, steps, lanes, mode)?;
         }
         "sim" => {
             for dev in [stratix_v(), arria_10()] {
@@ -123,6 +128,25 @@ fn take_lanes_flag(args: &mut Vec<String>) -> crate::Result<usize> {
     Ok(lanes)
 }
 
+/// Remove `--mode barrier|pipelined` from `args` (if present) and
+/// return the schedule (default [`PassMode::Pipelined`]).
+fn take_mode_flag(args: &mut Vec<String>) -> crate::Result<PassMode> {
+    let Some(pos) = args.iter().position(|a| a == "--mode") else {
+        return Ok(PassMode::Pipelined);
+    };
+    let val = args
+        .get(pos + 1)
+        .ok_or_else(|| anyhow::anyhow!("--mode requires a value\n{USAGE}"))?
+        .clone();
+    let mode = match val.as_str() {
+        "barrier" => PassMode::Barrier,
+        "pipelined" => PassMode::Pipelined,
+        other => anyhow::bail!("--mode: unknown schedule '{other}' (barrier|pipelined)"),
+    };
+    args.drain(pos..=pos + 1);
+    Ok(mode)
+}
+
 fn parse_device(s: &str) -> crate::Result<FpgaDevice> {
     Ok(match s {
         "sv" => stratix_v(),
@@ -142,23 +166,17 @@ fn parse_stencil(s: &str) -> crate::Result<(crate::stencil::config::StencilShape
     Ok((shape, dims))
 }
 
-fn run_diffusion2d_demo(n: usize, steps: u64, lanes: usize) -> crate::Result<()> {
-    // One engine only: a PJRT client is heavyweight, so don't open a
-    // single-lane Runtime just to read metadata when a pool is in play.
-    enum Engine {
-        Single(Runtime),
-        Pool(RuntimePool),
-    }
-    let engine = if lanes > 1 {
-        Engine::Pool(RuntimePool::open("artifacts", lanes)?)
-    } else {
-        Engine::Single(Runtime::open("artifacts")?)
-    };
-    let registry = match &engine {
-        Engine::Single(rt) => rt.registry(),
-        Engine::Pool(pool) => pool.registry(),
-    };
-    let spec = registry
+fn run_diffusion2d_demo(n: usize, steps: u64, lanes: usize, mode: PassMode) -> crate::Result<()> {
+    // One typed front door for any lane count: the Session owns the
+    // pool, the workload lowers onto the wave driver.
+    let session = Session::builder()
+        .artifacts("artifacts")
+        .lanes(lanes)
+        .mode(mode)
+        .build()?;
+    let spec = session
+        .pool()
+        .registry()
         .get("diffusion2d_r1")
         .ok_or_else(|| anyhow::anyhow!("missing artifact — run `make artifacts`"))?
         .clone();
@@ -169,17 +187,16 @@ fn run_diffusion2d_demo(n: usize, steps: u64, lanes: usize) -> crate::Result<()>
         .collect();
     let rng = std::cell::RefCell::new(Rng::new(42));
     let grid = Grid2D::from_fn(n, n, |_, _| rng.borrow_mut().f32_in(0.0, 1.0));
-    println!("running diffusion2d r=1 on {n}x{n} for {steps} steps ({lanes} lane{})...",
-        if lanes == 1 { "" } else { "s" });
-    let (out, metrics) = match &engine {
-        Engine::Pool(pool) => {
-            stencil_runner::run_stencil2d_lanes(pool, "diffusion2d_r1", grid.clone(), None, steps)?
-        }
-        Engine::Single(rt) => {
-            stencil_runner::run_stencil2d(rt, "diffusion2d_r1", grid.clone(), None, steps)?
-        }
-    };
-    println!("  {}", metrics.summary());
+    println!(
+        "running diffusion2d r=1 on {n}x{n} for {steps} steps ({lanes} lane{}, {mode:?})...",
+        if lanes == 1 { "" } else { "s" }
+    );
+    let report = session.run(Workload::stencil2d("diffusion2d_r1", grid.clone(), None, steps))?;
+    println!("  {}", report.metrics.summary());
+    let out = report
+        .into_output()
+        .into_grid2d()
+        .ok_or_else(|| anyhow::anyhow!("stencil run produced no grid"))?;
     let want = reference::diffusion2d(grid, &coeffs, steps as usize);
     let err = crate::testutil::max_abs_diff(&out.data, &want.data);
     println!("  max |err| vs native reference: {err:.2e}");

@@ -5,7 +5,8 @@
 //! Each app has a single-[`Runtime`] runner (`run_*`, execution on the
 //! caller's thread) and a lane-parallel runner (`run_*_lanes`) on the
 //! [`RuntimePool`].  Since PR 3 every lane runner goes through the
-//! **wavefront pass driver** ([`passdriver::drive_wave_pool`]): the
+//! **wavefront pass driver**
+//! ([`drive_wave_pool`](crate::coordinator::passdriver::drive_wave_pool)): the
 //! workload is described as a [`WaveSpace`] — topologically ordered
 //! waves of blocks with explicit dependency edges — and a block runs
 //! as soon as its predecessors have written back.  There is no
@@ -34,6 +35,16 @@
 //! counterpart and to its own [`PassMode::Barrier`] schedule for any
 //! lane count: block inputs are fixed by the dependency order, write
 //! targets are disjoint, and per-block compute is deterministic.
+//!
+//! Since PR 4 the public front door is
+//! [`coordinator::session`](crate::coordinator::session): the pooled
+//! `run_*_lanes{,_mode}` entry points below are `#[deprecated]` shims
+//! over [`Session`](crate::coordinator::session::Session) (kept one
+//! release), and the `WaveSpace` lowerings in this module are reused
+//! verbatim by the session's workload fragments — which is what makes
+//! the shims bit-identical by construction.  The single-[`Runtime`]
+//! runners remain as the caller-thread reference implementations the
+//! bit-identity tests compare against.
 
 use std::cell::UnsafeCell;
 use std::sync::Arc;
@@ -43,8 +54,8 @@ use anyhow::{anyhow, bail};
 use crate::coordinator::bufpool::TensorPools;
 use crate::coordinator::grid::{Boundary, Grid2D, GridWriter2D};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::passdriver::{self, PassMode, WaveGraph, WaveSpace};
-use crate::coordinator::stencil_runner::{block_origins_2d, boundary_of, extractor_count, oob_axis};
+use crate::coordinator::passdriver::{PassMode, WaveGraph, WaveSpace};
+use crate::coordinator::stencil_runner::oob_axis;
 use crate::runtime::{Runtime, RuntimePool, Tensor};
 
 /// Clamp-indexed span copy: append `n` values of `src` starting at
@@ -84,6 +95,13 @@ fn pathfinder_block_inputs(
 /// (rows × cols, i32), streaming fused-row blocks through the
 /// `pathfinder` artifact.  `(rows - 1)` must be a multiple of the
 /// artifact's fused depth.
+///
+/// Deprecated: run
+/// [`Workload::pathfinder`](crate::coordinator::session::Workload::pathfinder)
+/// through a [`Session`](crate::coordinator::session::Session) — this
+/// single-[`Runtime`] path is kept (one release) as the caller-thread
+/// reference the bit-identity tests pin the pooled engine against.
+#[deprecated(note = "use Session::builder() with Workload::pathfinder (see coordinator::session)")]
 pub fn run_pathfinder(rt: &Runtime, wall: &[Vec<i32>]) -> crate::Result<(Vec<i32>, Metrics)> {
     let spec = rt
         .registry()
@@ -134,6 +152,11 @@ pub fn run_pathfinder(rt: &Runtime, wall: &[Vec<i32>]) -> crate::Result<(Vec<i32
 /// Needleman-Wunsch over an (n+1)×(n+1) score matrix: the first row and
 /// column are gap-initialised, interior computed block by block through
 /// the `nw` artifact.  `n` must be a multiple of the artifact block.
+///
+/// Deprecated: see [`run_pathfinder`] — use
+/// [`Workload::nw`](crate::coordinator::session::Workload::nw) through
+/// a [`Session`](crate::coordinator::session::Session).
+#[deprecated(note = "use Session::builder() with Workload::nw (see coordinator::session)")]
 pub fn run_nw(
     rt: &Runtime,
     reference: &[Vec<i32>],
@@ -201,6 +224,12 @@ pub fn run_nw(
 /// SRAD: `steps` iterations of (tile-partial reduction → fused two-pass
 /// stencil) over a positive image.  Image extents must be multiples of
 /// the artifact block for the reduction tiles.
+///
+/// Deprecated: see [`run_pathfinder`] — use
+/// [`Workload::srad`](crate::coordinator::session::Workload::srad)
+/// through a [`Session`](crate::coordinator::session::Session).
+#[deprecated(note = "use Session::builder() with Workload::srad (see coordinator::session)")]
+#[allow(deprecated)] // drives the deprecated single-Runtime stencil reference path
 pub fn run_srad(
     rt: &Runtime,
     img: Grid2D,
@@ -261,6 +290,11 @@ pub fn run_srad(
 
 /// Blocked LUD: factorize an (n×n) matrix in place using the diagonal /
 /// perimeter / internal artifacts.  `n` must be a multiple of the block.
+///
+/// Deprecated: see [`run_pathfinder`] — use
+/// [`Workload::lud`](crate::coordinator::session::Workload::lud)
+/// through a [`Session`](crate::coordinator::session::Session).
+#[deprecated(note = "use Session::builder() with Workload::lud (see coordinator::session)")]
 pub fn run_lud(rt: &Runtime, a: &[Vec<f32>]) -> crate::Result<(Vec<Vec<f32>>, Metrics)> {
     let spec = rt
         .registry()
@@ -348,7 +382,7 @@ pub fn run_lud(rt: &Runtime, a: &[Vec<f32>]) -> crate::Result<(Vec<Vec<f32>>, Me
 /// returns), concurrent writes target pairwise-disjoint spans, and a
 /// cell is only read once the write that produced it is
 /// dependency-ordered before the read.
-struct RawSlice<T> {
+pub(crate) struct RawSlice<T> {
     ptr: *mut T,
     len: usize,
 }
@@ -359,7 +393,7 @@ unsafe impl<T: Send> Send for RawSlice<T> {}
 unsafe impl<T: Send> Sync for RawSlice<T> {}
 
 impl<T> RawSlice<T> {
-    fn new(v: &mut [T]) -> RawSlice<T> {
+    pub(crate) fn new(v: &mut [T]) -> RawSlice<T> {
         RawSlice { ptr: v.as_mut_ptr(), len: v.len() }
     }
 
@@ -389,7 +423,7 @@ impl<T> RawSlice<T> {
 
 /// Interior-mutable cell written by at most one lane (disjointness via
 /// the wave plan); used for SRAD's per-tile reduction partials.
-struct SyncCell<T>(UnsafeCell<T>);
+pub(crate) struct SyncCell<T>(pub(crate) UnsafeCell<T>);
 
 // SAFETY: the wave plan guarantees one writer per cell and
 // dependency-ordered readers.
@@ -405,20 +439,20 @@ unsafe impl<T: Send> Sync for SyncCell<T> {}
 /// write-after-read hazard of the two row buffers (the pass-`w` blocks
 /// that read what a pass-`w+1` block overwrites are exactly its span
 /// neighbors).
-struct PathfinderSpace {
-    artifact: Arc<str>,
+pub(crate) struct PathfinderSpace {
+    pub(crate) artifact: Arc<str>,
     /// Wall rows `1..rows`, flattened row-major ((rows-1) × cols).
-    wall: Vec<i32>,
-    cols: usize,
-    width: usize,
-    fused: usize,
-    padded: usize,
-    nwaves: usize,
-    nblocks: usize,
+    pub(crate) wall: Vec<i32>,
+    pub(crate) cols: usize,
+    pub(crate) width: usize,
+    pub(crate) fused: usize,
+    pub(crate) padded: usize,
+    pub(crate) nwaves: usize,
+    pub(crate) nblocks: usize,
     /// `ceil(fused/width)` — dependency reach on the column lattice.
-    reach: usize,
+    pub(crate) reach: usize,
     /// Cost-row double buffer (each `cols` long).
-    rows_bufs: [RawSlice<i32>; 2],
+    pub(crate) rows_bufs: [RawSlice<i32>; 2],
 }
 
 impl WaveGraph for PathfinderSpace {
@@ -494,56 +528,33 @@ impl WaveSpace for PathfinderSpace {
 /// [`run_pathfinder`] for any lane count and either [`PassMode`]
 /// (integer arithmetic, disjoint output spans, inputs fixed by the
 /// dependency order).
+/// Deprecated shim: forwards to a borrowed
+/// [`Session`](crate::coordinator::session::Session) running
+/// [`Workload::pathfinder`](crate::coordinator::session::Workload::pathfinder)
+/// — the same [`PathfinderSpace`] lowering, bit-identical for any lane
+/// count and either mode.  (Shim cost: clones `wall` into the by-value
+/// `Workload`; port to `Session` to avoid the copy.)
+#[deprecated(note = "use Session::over(pool).with_mode(mode) with Workload::pathfinder")]
+#[allow(deprecated)]
 pub fn run_pathfinder_lanes_mode(
     pool: &RuntimePool,
     wall: &[Vec<i32>],
     mode: PassMode,
 ) -> crate::Result<(Vec<i32>, Metrics)> {
-    let spec = pool
-        .registry()
-        .get("pathfinder")
-        .ok_or_else(|| anyhow!("missing pathfinder artifact"))?
-        .clone();
-    let width = spec.meta_u64("width")? as usize;
-    let fused = spec.meta_u64("fused_rows")? as usize;
-    let rows = wall.len();
-    let cols = wall[0].len();
-    if (rows - 1) % fused != 0 {
-        bail!("pathfinder: rows-1 = {} not a multiple of fused {fused}", rows - 1);
+    use crate::coordinator::session::{Session, Workload, WorkloadOutput};
+    let report = Session::over(pool)
+        .with_mode(mode)
+        .run(Workload::pathfinder(wall.to_vec()))?;
+    match report.into_parts() {
+        (metrics, Some(WorkloadOutput::Row(row))) => Ok((row, metrics)),
+        _ => Err(anyhow!("pathfinder workload produced no cost-row output")),
     }
-    // Compile on every lane outside the timed region.
-    pool.warmup_artifact("pathfinder")?;
-
-    let nwaves = (rows - 1) / fused;
-    let mut flat = Vec::with_capacity((rows - 1) * cols);
-    for row in &wall[1..] {
-        flat.extend_from_slice(row);
-    }
-    let mut bufs = [wall[0].clone(), vec![0i32; cols]];
-    let [b0, b1] = &mut bufs;
-    let space = Arc::new(PathfinderSpace {
-        artifact: Arc::from("pathfinder"),
-        wall: flat,
-        cols,
-        width,
-        fused,
-        padded: width + 2 * fused,
-        nwaves,
-        nblocks: cols.div_ceil(width),
-        reach: fused.div_ceil(width),
-        // SAFETY: `bufs` outlives the drive call, which quiesces every
-        // lane (IdleGuard) before returning.
-        rows_bufs: [RawSlice::new(b0), RawSlice::new(b1)],
-    });
-    let metrics =
-        passdriver::drive_wave_pool(pool, &space, mode, extractor_count(pool.lanes()))?;
-    drop(space);
-    let [b0, b1] = bufs;
-    Ok((if nwaves % 2 == 0 { b0 } else { b1 }, metrics))
 }
 
 /// Lane-parallel Pathfinder with the default [`PassMode::Pipelined`]
-/// schedule; see [`run_pathfinder_lanes_mode`].
+/// schedule; deprecated shim, see [`run_pathfinder_lanes_mode`].
+#[deprecated(note = "use Session::builder() with Workload::pathfinder")]
+#[allow(deprecated)]
 pub fn run_pathfinder_lanes(
     pool: &RuntimePool,
     wall: &[Vec<i32>],
@@ -557,17 +568,17 @@ pub fn run_pathfinder_lanes(
 /// `(bi-1, bj-1)` is transitively ordered through either neighbor, and
 /// score cells are single-assignment, so there is no write-after-read
 /// hazard at all).
-struct NwSpace {
-    artifact: Arc<str>,
+pub(crate) struct NwSpace {
+    pub(crate) artifact: Arc<str>,
     /// Blocks per side of the interior lattice.
-    nb: usize,
-    b: usize,
+    pub(crate) nb: usize,
+    pub(crate) b: usize,
     /// Row stride of the (n+1)×(n+1) matrices.
-    stride: usize,
+    pub(crate) stride: usize,
     /// Flattened reference matrix ((n+1)², read-only).
-    refm: Vec<i32>,
+    pub(crate) refm: Vec<i32>,
     /// Flattened score matrix ((n+1)², borders pre-initialised).
-    score: RawSlice<i32>,
+    pub(crate) score: RawSlice<i32>,
 }
 
 impl NwSpace {
@@ -658,62 +669,34 @@ impl WaveSpace for NwSpace {
 /// neighbors have written back — no drain between diagonals.
 /// Bit-identical to [`run_nw`] for any lane count and either
 /// [`PassMode`] (integer arithmetic, single-assignment score cells).
+/// Deprecated shim: forwards to a borrowed
+/// [`Session`](crate::coordinator::session::Session) running
+/// [`Workload::nw`](crate::coordinator::session::Workload::nw) — the
+/// same [`NwSpace`] lowering, bit-identical for any lane count and
+/// either mode.  (Shim cost: clones `reference` into the by-value
+/// `Workload`; port to `Session` to avoid the copy.)
+#[deprecated(note = "use Session::over(pool).with_mode(mode) with Workload::nw")]
+#[allow(deprecated)]
 pub fn run_nw_lanes_mode(
     pool: &RuntimePool,
     reference: &[Vec<i32>],
     penalty: i32,
     mode: PassMode,
 ) -> crate::Result<(Vec<Vec<i32>>, Metrics)> {
-    let spec = pool
-        .registry()
-        .get("nw")
-        .ok_or_else(|| anyhow!("missing nw artifact"))?
-        .clone();
-    let b = spec.meta_u64("block")? as usize;
-    let baked_penalty = spec.meta_u64("penalty")? as i32;
-    if penalty != baked_penalty {
-        bail!("nw: penalty {penalty} != artifact's baked {baked_penalty}");
+    use crate::coordinator::session::{Session, Workload, WorkloadOutput};
+    let report = Session::over(pool)
+        .with_mode(mode)
+        .run(Workload::nw(reference.to_vec(), penalty))?;
+    match report.into_parts() {
+        (metrics, Some(WorkloadOutput::ScoreMatrix(m))) => Ok((m, metrics)),
+        _ => Err(anyhow!("nw workload produced no score-matrix output")),
     }
-    let n = reference.len() - 1;
-    if n == 0 || n % b != 0 {
-        bail!("nw: interior size {n} not a (non-zero) multiple of block {b}");
-    }
-    pool.warmup_artifact("nw")?;
-
-    let stride = n + 1;
-    let mut refm = Vec::with_capacity(stride * stride);
-    for row in reference {
-        refm.extend_from_slice(row);
-    }
-    let mut score = vec![0i32; stride * stride];
-    for j in 0..=n {
-        score[j] = -(j as i32) * penalty;
-    }
-    for i in 0..=n {
-        score[i * stride] = -(i as i32) * penalty;
-    }
-
-    let space = Arc::new(NwSpace {
-        artifact: Arc::from("nw"),
-        nb: n / b,
-        b,
-        stride,
-        refm,
-        // SAFETY: `score` outlives the drive call, which quiesces every
-        // lane (IdleGuard) before returning.
-        score: RawSlice::new(&mut score),
-    });
-    let metrics =
-        passdriver::drive_wave_pool(pool, &space, mode, extractor_count(pool.lanes()))?;
-    drop(space);
-    Ok((
-        score.chunks(stride).map(|r| r.to_vec()).collect(),
-        metrics,
-    ))
 }
 
 /// Lane-parallel NW with the default [`PassMode::Pipelined`] schedule;
-/// see [`run_nw_lanes_mode`].
+/// deprecated shim, see [`run_nw_lanes_mode`].
+#[deprecated(note = "use Session::builder() with Workload::nw")]
+#[allow(deprecated)]
 pub fn run_nw_lanes(
     pool: &RuntimePool,
     reference: &[Vec<i32>],
@@ -743,31 +726,31 @@ pub fn run_nw_lanes(
 /// additions in the same order as [`run_srad`], so the scalar (and the
 /// run) is bit-identical to the single-runtime path regardless of
 /// completion order.
-struct SradSpace {
-    red_artifact: Arc<str>,
-    sten_artifact: Arc<str>,
-    steps: usize,
-    ny: usize,
-    nx: usize,
-    cells: f64,
+pub(crate) struct SradSpace {
+    pub(crate) red_artifact: Arc<str>,
+    pub(crate) sten_artifact: Arc<str>,
+    pub(crate) steps: usize,
+    pub(crate) ny: usize,
+    pub(crate) nx: usize,
+    pub(crate) cells: f64,
     /// Reduction tiling (zero-padded partial sums).
-    rblock: usize,
-    rorigins: Vec<(usize, usize)>,
+    pub(crate) rblock: usize,
+    pub(crate) rorigins: Vec<(usize, usize)>,
     /// Stencil tiling (r·T halo, boundary rule from the artifact).
-    sblock: usize,
-    halo: usize,
-    tile: usize,
-    t_fused: usize,
-    boundary: Boundary,
-    sorigins: Vec<(usize, usize)>,
+    pub(crate) sblock: usize,
+    pub(crate) halo: usize,
+    pub(crate) tile: usize,
+    pub(crate) t_fused: usize,
+    pub(crate) boundary: Boundary,
+    pub(crate) sorigins: Vec<(usize, usize)>,
     /// Stencil lattice width (blocks per row).
-    snbx: usize,
+    pub(crate) snbx: usize,
     /// Image double buffer: step `s` reads `bufs[s % 2]`, writes
     /// `bufs[(s+1) % 2]`.
-    bufs: [GridWriter2D; 2],
+    pub(crate) bufs: [GridWriter2D; 2],
     /// Per-(step, tile) reduction partials `(sum, sumsq)`.
-    partials: Vec<SyncCell<(f64, f64)>>,
-    pools: TensorPools,
+    pub(crate) partials: Vec<SyncCell<(f64, f64)>>,
+    pub(crate) pools: TensorPools,
 }
 
 impl SradSpace {
@@ -907,7 +890,7 @@ impl WaveSpace for SradSpace {
         (h * ww) as u64
     }
 
-    fn recycle(&self, inputs: Vec<Tensor>) {
+    fn recycle(&self, _w: usize, _i: usize, inputs: Vec<Tensor>) {
         self.pools.recycle(inputs);
     }
 
@@ -928,69 +911,33 @@ impl WaveSpace for SradSpace {
 /// Bit-identical to [`run_srad`] for any lane count and either
 /// [`PassMode`] (q0 partials are summed in tile order, stencil inputs
 /// are fixed by the dependency order, interiors are disjoint).
+/// Deprecated shim: forwards to a borrowed
+/// [`Session`](crate::coordinator::session::Session) running
+/// [`Workload::srad`](crate::coordinator::session::Workload::srad) —
+/// the same [`SradSpace`] lowering (two-stage edge included),
+/// bit-identical for any lane count and either mode.
+#[deprecated(note = "use Session::over(pool).with_mode(mode) with Workload::srad")]
+#[allow(deprecated)]
 pub fn run_srad_lanes_mode(
     pool: &RuntimePool,
     img: Grid2D,
     steps: u64,
     mode: PassMode,
 ) -> crate::Result<(Grid2D, Metrics)> {
-    let red_spec = pool
-        .registry()
-        .get("sum_sumsq")
-        .ok_or_else(|| anyhow!("missing sum_sumsq artifact"))?
-        .clone();
-    let rblock = red_spec.meta_u64("block")? as usize;
-    let sten_spec = pool
-        .registry()
-        .get("srad")
-        .ok_or_else(|| anyhow!("missing srad artifact"))?
-        .clone();
-    let sblock = sten_spec.meta_u64("block")? as usize;
-    let halo = sten_spec.meta_u64("halo")? as usize;
-    let t_fused = sten_spec.meta_u64("steps")? as usize;
-    pool.warmup_artifacts(&["sum_sumsq", "srad"])?;
-
-    let steps = steps as usize;
-    let (ny, nx) = (img.ny, img.nx);
-    let rorigins = block_origins_2d(ny, nx, rblock);
-    let sorigins = block_origins_2d(ny, nx, sblock);
-    let nrtiles = rorigins.len();
-
-    let mut cur = img;
-    let mut next = Grid2D::zeros(ny, nx);
-    let space = Arc::new(SradSpace {
-        red_artifact: Arc::from("sum_sumsq"),
-        sten_artifact: Arc::from("srad"),
-        steps,
-        ny,
-        nx,
-        cells: (ny * nx) as f64,
-        rblock,
-        rorigins,
-        sblock,
-        halo,
-        tile: sblock + 2 * halo,
-        t_fused,
-        boundary: boundary_of(&sten_spec),
-        sorigins,
-        snbx: nx.div_ceil(sblock),
-        // SAFETY: cur/next outlive the drive call, which quiesces
-        // every lane (IdleGuard) before returning; all concurrent
-        // accesses are dependency-ordered or disjoint (see SradSpace).
-        bufs: unsafe { [cur.shared_writer(), next.shared_writer()] },
-        partials: (0..steps * nrtiles)
-            .map(|_| SyncCell(UnsafeCell::new((0.0, 0.0))))
-            .collect(),
-        pools: TensorPools::default(),
-    });
-    let metrics =
-        passdriver::drive_wave_pool(pool, &space, mode, extractor_count(pool.lanes()))?;
-    drop(space);
-    Ok((if steps % 2 == 0 { cur } else { next }, metrics))
+    use crate::coordinator::session::{Session, Workload, WorkloadOutput};
+    let report = Session::over(pool)
+        .with_mode(mode)
+        .run(Workload::srad(img, steps))?;
+    match report.into_parts() {
+        (metrics, Some(WorkloadOutput::Grid2D(g))) => Ok((g, metrics)),
+        _ => Err(anyhow!("srad workload produced no 2D grid output")),
+    }
 }
 
 /// Lane-parallel SRAD with the default [`PassMode::Pipelined`]
-/// schedule; see [`run_srad_lanes_mode`].
+/// schedule; deprecated shim, see [`run_srad_lanes_mode`].
+#[deprecated(note = "use Session::builder() with Workload::srad")]
+#[allow(deprecated)]
 pub fn run_srad_lanes(
     pool: &RuntimePool,
     img: Grid2D,
@@ -1011,16 +958,16 @@ pub fn run_srad_lanes(
 /// writes are single-writer-at-a-time and every read of a rewritten
 /// block is one of these direct edges, so the schedule is race-free at
 /// any pipeline depth.
-struct LudSpace {
-    diagonal: Arc<str>,
-    perim_row: Arc<str>,
-    perim_col: Arc<str>,
-    internal: Arc<str>,
-    nb: usize,
-    b: usize,
-    n: usize,
+pub(crate) struct LudSpace {
+    pub(crate) diagonal: Arc<str>,
+    pub(crate) perim_row: Arc<str>,
+    pub(crate) perim_col: Arc<str>,
+    pub(crate) internal: Arc<str>,
+    pub(crate) nb: usize,
+    pub(crate) b: usize,
+    pub(crate) n: usize,
     /// Flattened n×n matrix, factorized in place.
-    m: RawSlice<f32>,
+    pub(crate) m: RawSlice<f32>,
 }
 
 /// What a LUD wave-local index means for step `k`.
@@ -1202,52 +1149,33 @@ impl WaveSpace for LudSpace {
 /// — no drain between factorization steps.  Bit-identical to
 /// [`run_lud`] for any lane count and either [`PassMode`] (per-block
 /// compute is deterministic and all reads are dependency-ordered).
+/// Deprecated shim: forwards to a borrowed
+/// [`Session`](crate::coordinator::session::Session) running
+/// [`Workload::lud`](crate::coordinator::session::Workload::lud) — the
+/// same [`LudSpace`] lowering, bit-identical for any lane count and
+/// either mode.  (Shim cost: clones `a` into the by-value `Workload`;
+/// port to `Session` to avoid the copy.)
+#[deprecated(note = "use Session::over(pool).with_mode(mode) with Workload::lud")]
+#[allow(deprecated)]
 pub fn run_lud_lanes_mode(
     pool: &RuntimePool,
     a: &[Vec<f32>],
     mode: PassMode,
 ) -> crate::Result<(Vec<Vec<f32>>, Metrics)> {
-    let spec = pool
-        .registry()
-        .get("lud_internal")
-        .ok_or_else(|| anyhow!("missing lud artifacts"))?
-        .clone();
-    let b = spec.meta_u64("block")? as usize;
-    let n = a.len();
-    if n == 0 || n % b != 0 {
-        bail!("lud: size {n} not a (non-zero) multiple of block {b}");
+    use crate::coordinator::session::{Session, Workload, WorkloadOutput};
+    let report = Session::over(pool)
+        .with_mode(mode)
+        .run(Workload::lud(a.to_vec()))?;
+    match report.into_parts() {
+        (metrics, Some(WorkloadOutput::Matrix(m))) => Ok((m, metrics)),
+        _ => Err(anyhow!("lud workload produced no matrix output")),
     }
-    pool.warmup_artifacts(&[
-        "lud_diagonal",
-        "lud_perimeter_row",
-        "lud_perimeter_col",
-        "lud_internal",
-    ])?;
-
-    let mut m = Vec::with_capacity(n * n);
-    for row in a {
-        m.extend_from_slice(row);
-    }
-    let space = Arc::new(LudSpace {
-        diagonal: Arc::from("lud_diagonal"),
-        perim_row: Arc::from("lud_perimeter_row"),
-        perim_col: Arc::from("lud_perimeter_col"),
-        internal: Arc::from("lud_internal"),
-        nb: n / b,
-        b,
-        n,
-        // SAFETY: `m` outlives the drive call, which quiesces every
-        // lane (IdleGuard) before returning.
-        m: RawSlice::new(&mut m),
-    });
-    let metrics =
-        passdriver::drive_wave_pool(pool, &space, mode, extractor_count(pool.lanes()))?;
-    drop(space);
-    Ok((m.chunks(n).map(|r| r.to_vec()).collect(), metrics))
 }
 
 /// Lane-parallel LUD with the default [`PassMode::Pipelined`]
-/// schedule; see [`run_lud_lanes_mode`].
+/// schedule; deprecated shim, see [`run_lud_lanes_mode`].
+#[deprecated(note = "use Session::builder() with Workload::lud")]
+#[allow(deprecated)]
 pub fn run_lud_lanes(
     pool: &RuntimePool,
     a: &[Vec<f32>],
@@ -1258,6 +1186,7 @@ pub fn run_lud_lanes(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::stencil_runner::block_origins_2d;
     use std::collections::HashSet;
 
     /// Every declared edge must point from a strictly earlier wave to

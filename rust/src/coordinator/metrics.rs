@@ -61,6 +61,57 @@ impl Metrics {
         self.pool_hits as f64 / total as f64
     }
 
+    /// Point-in-time copy of the counters (e.g. a [`Session`]'s
+    /// cumulative totals before they keep growing).
+    ///
+    /// [`Session`]: crate::coordinator::session::Session
+    pub fn snapshot(&self) -> Metrics {
+        self.clone()
+    }
+
+    /// Zero every counter.  A shared accumulator (the per-[`Session`]
+    /// totals) resets between measurement windows instead of bleeding
+    /// one run's counts into the next.
+    ///
+    /// [`Session`]: crate::coordinator::session::Session
+    pub fn reset(&mut self) {
+        *self = Metrics::default();
+    }
+
+    /// Fold another run's counters into this accumulator: counts and
+    /// durations add, `pipeline_depth_max` keeps the deepest run.
+    pub fn merge(&mut self, other: &Metrics) {
+        // Exhaustive destructure (no `..`): adding a Metrics field
+        // without deciding how it accumulates is a compile error here,
+        // not a silently-zero counter in every session total.
+        let Metrics {
+            blocks,
+            cell_updates,
+            extract,
+            execute,
+            writeback,
+            wall,
+            pool_hits,
+            pool_misses,
+            desc_pool_hits,
+            desc_pool_misses,
+            pipeline_depth_max,
+            overlap_starts,
+        } = other;
+        self.blocks += blocks;
+        self.cell_updates += cell_updates;
+        self.extract += *extract;
+        self.execute += *execute;
+        self.writeback += *writeback;
+        self.wall += *wall;
+        self.pool_hits += pool_hits;
+        self.pool_misses += pool_misses;
+        self.desc_pool_hits += desc_pool_hits;
+        self.desc_pool_misses += desc_pool_misses;
+        self.pipeline_depth_max = self.pipeline_depth_max.max(*pipeline_depth_max);
+        self.overlap_starts += overlap_starts;
+    }
+
     pub fn summary(&self) -> String {
         let wave = if self.pipeline_depth_max > 0 {
             format!(
@@ -111,6 +162,45 @@ mod tests {
             std::thread::sleep(Duration::from_millis(2));
         }
         assert!(d >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn merge_sums_counts_and_keeps_max_depth() {
+        let mut a = Metrics {
+            blocks: 3,
+            cell_updates: 100,
+            wall: Duration::from_secs(1),
+            pool_hits: 5,
+            pipeline_depth_max: 2,
+            overlap_starts: 4,
+            ..Default::default()
+        };
+        let b = Metrics {
+            blocks: 7,
+            cell_updates: 50,
+            wall: Duration::from_secs(2),
+            pool_hits: 1,
+            pipeline_depth_max: 5,
+            overlap_starts: 1,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.blocks, 10);
+        assert_eq!(a.cell_updates, 150);
+        assert_eq!(a.wall, Duration::from_secs(3));
+        assert_eq!(a.pool_hits, 6);
+        assert_eq!(a.pipeline_depth_max, 5, "depth keeps the max, not the sum");
+        assert_eq!(a.overlap_starts, 5);
+    }
+
+    #[test]
+    fn snapshot_then_reset_leaves_zeroes() {
+        let mut m = Metrics { blocks: 9, ..Default::default() };
+        let snap = m.snapshot();
+        m.reset();
+        assert_eq!(snap.blocks, 9);
+        assert_eq!(m.blocks, 0);
+        assert_eq!(m.wall, Duration::ZERO);
     }
 
     #[test]

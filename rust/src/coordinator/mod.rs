@@ -28,6 +28,14 @@
 //!   and linear-algebra benchmarks (Pathfinder, NW, SRAD, LUD):
 //!   single-runtime runners plus lane-parallel `_lanes` variants as
 //!   `WaveSpace` shims over the wavefront pass driver;
+//! * [`session`] — **the public front door** (PR 4): a typed
+//!   [`Session`](session::Session) builder owning the pool and
+//!   metrics, first-class [`Workload`](session::Workload) descriptors
+//!   that lower onto the wave driver, and a
+//!   [`Chain`](session::Chain) combinator splicing heterogeneous
+//!   workloads into one fused wave graph (cross-app seam edges, no
+//!   inter-app drain).  Every `run_*` free function in [`apps`] and
+//!   [`stencil_runner`] is now a `#[deprecated]` shim over it;
 //! * [`reference`] — native-Rust oracles used by the integration tests
 //!   and the end-to-end examples;
 //! * [`metrics`] — throughput/latency accounting for the §Perf work.
@@ -39,8 +47,12 @@ pub mod metrics;
 pub mod passdriver;
 pub mod reference;
 pub mod scheduler;
+pub mod session;
 pub mod stencil_runner;
 
 pub use grid::{Boundary, Grid2D, Grid3D};
 pub use metrics::Metrics;
 pub use passdriver::PassMode;
+pub use session::{
+    Chain, GridInput, RunReport, Session, SessionBuilder, Workload, WorkloadOutput,
+};

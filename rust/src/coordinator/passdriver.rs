@@ -25,16 +25,16 @@
 //!
 //! The driver itself is generic over a [`StencilSpace`] — the
 //! Grid/Writer abstraction the runners configure (tile extraction,
-//! interior write-back, buffer pooling) — and comes in two backends:
-//!
-//! * [`drive_single`] — one [`Runtime`]: execution pinned to the
-//!   caller's thread, one extractor thread feeding dependency-ready
-//!   tiles through a bounded channel (the pipelined path of PR 1,
-//!   now free to cross pass boundaries);
-//! * [`drive_pool`] — a [`RuntimePool`]: M extractor workers pull
-//!   ready blocks, lanes execute and write back, and each job's
-//!   completion callback ([`RuntimePool::submit_tracked`]) advances
-//!   the dependency table — no per-pass barrier anywhere.
+//! interior write-back, buffer pooling).  [`drive_single`] is its
+//! remaining backend — one [`Runtime`]: execution pinned to the
+//! caller's thread, one extractor thread feeding dependency-ready
+//! tiles through a bounded channel (the pipelined path of PR 1, now
+//! free to cross pass boundaries) — used by the single-runtime
+//! reference runners.  The pooled stencil path lowers onto the
+//! wavefront driver below since PR 4 (one wave per pass, the same
+//! halo edges expressed as an explicit graph; see
+//! `coordinator::session`), so the old lattice-specialized pool
+//! backend (`drive_pool`) is gone.
 //!
 //! Results are bit-identical to the barrier schedule for any lane
 //! count: each block's inputs are fully determined by its predecessor
@@ -71,10 +71,10 @@
 //!   input gathering and write-back — heterogeneous per wave (a LUD
 //!   wave of perimeter blocks runs a different compute unit than the
 //!   internal wave behind it);
-//! * [`drive_wave_local`] / [`drive_wave_pool`] are the backends,
-//!   mirroring [`drive_single`] / [`drive_pool`]: a block of wave
-//!   `w` runs as soon as its declared predecessors have written back
-//!   — **no result-count or `wait_idle` barrier between waves**.
+//! * [`drive_wave_local`] / [`drive_wave_pool`] are the backends
+//!   (caller-thread vs. lane-pool execution): a block of wave `w`
+//!   runs as soon as its declared predecessors have written back —
+//!   **no result-count or `wait_idle` barrier between waves**.
 //!
 //! [`PassMode::Barrier`] again keeps the wave-serial baseline (a block
 //! waits for *every* block of *every* earlier wave), which is what the
@@ -494,126 +494,6 @@ pub fn drive_single<S: StencilSpace>(
     ))
 }
 
-/// Run `passes` passes on a [`RuntimePool`]: `extractors` workers pull
-/// dependency-ready blocks, the lanes execute and write back, and each
-/// job's completion callback advances the dependency table — there is
-/// no per-pass barrier; the single [`RuntimePool::wait_idle`] at the
-/// end only closes out the run.  (The caller warms the artifact on
-/// every lane outside the timed region first.)
-#[allow(clippy::too_many_arguments)]
-pub fn drive_pool<S: StencilSpace>(
-    pool: &RuntimePool,
-    artifact: &str,
-    space: &Arc<S>,
-    handles: [S::Handle; 2],
-    passes: usize,
-    mode: PassMode,
-    extractors: usize,
-    cell_updates: u64,
-) -> crate::Result<Metrics>
-where
-    S: 'static,
-{
-    let stats0 = pool.stats();
-    let wall = Instant::now();
-    let nblocks = space.nblocks();
-    let total = passes.saturating_mul(nblocks);
-    let done_blocks = Arc::new(AtomicU64::new(0));
-    let wb_nanos = Arc::new(AtomicU64::new(0));
-
-    if total > 0 {
-        let table = Arc::new(DepTable::new(space.lattice(), space.reach(), passes, mode));
-        let queue = Arc::new(ReadyQueue::new(total, (0..nblocks).map(|i| (0usize, i))));
-        let artifact_arc: Arc<str> = Arc::from(artifact);
-        let extractors = extractors.clamp(1, nblocks);
-        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-
-        // SAFETY-relevant: jobs borrow the caller's grids through raw
-        // handles; the IdleGuard drains the lanes before this frame's
-        // grids can be freed, even on an unwinding exit.
-        let guard = IdleGuard::new(pool);
-        std::thread::scope(|sc| {
-            for _ in 0..extractors {
-                sc.spawn(|| {
-                    while let Some((pass, block)) = queue.pop() {
-                        let src = handles[pass % 2];
-                        let dst = handles[(pass + 1) % 2];
-                        // Catch extraction panics here so the other
-                        // workers and the lanes stop promptly instead
-                        // of draining the whole remaining plan.
-                        let extracted = catch_unwind(AssertUnwindSafe(|| {
-                            // SAFETY: dependency order via the ready
-                            // queue — predecessors have written back.
-                            unsafe { space.extract(src, block) }
-                        }));
-                        let inputs = match extracted {
-                            Ok(inputs) => inputs,
-                            Err(p) => {
-                                queue.abort();
-                                first_err.lock().unwrap().get_or_insert(anyhow!(
-                                    "extractor worker panicked: {}",
-                                    panic_text(p.as_ref())
-                                ));
-                                return;
-                            }
-                        };
-                        let artifact = artifact_arc.clone();
-                        let space_j = space.clone();
-                        let done_j = done_blocks.clone();
-                        let wb_j = wb_nanos.clone();
-                        let table_j = table.clone();
-                        let queue_j = queue.clone();
-                        pool.submit_tracked(
-                            move |_lane, rt| {
-                                let out = rt.execute_f32(&artifact, &inputs)?;
-                                let t0 = Instant::now();
-                                // SAFETY: disjoint interiors on the
-                                // block lattice.
-                                unsafe { space_j.write(dst, block, &out) };
-                                wb_j.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                                done_j.fetch_add(1, Ordering::Relaxed);
-                                space_j.recycle(inputs);
-                                Ok(())
-                            },
-                            move |ok| {
-                                if ok {
-                                    let mut newly = Vec::new();
-                                    table_j.complete(pass, block, &mut newly);
-                                    queue_j.push_all(&newly);
-                                } else {
-                                    // Failed or skipped job: its
-                                    // successors can never run; release
-                                    // the extractors.
-                                    queue_j.abort();
-                                }
-                            },
-                        );
-                    }
-                });
-            }
-        });
-        // Drain the lanes (the only wait_idle of the whole run), then
-        // surface extractor-side and lane-side failures in that order.
-        let idle = pool.wait_idle();
-        drop(guard);
-        if let Some(e) = first_err.into_inner().unwrap() {
-            return Err(e);
-        }
-        idle?;
-    }
-
-    let stats = pool.stats();
-    Ok(finalize_metrics(
-        space.as_ref(),
-        wall,
-        done_blocks.load(Ordering::Relaxed),
-        Duration::from_nanos(wb_nanos.load(Ordering::Relaxed)),
-        cell_updates,
-        stats.execute_ms - stats0.execute_ms,
-        stats.marshal_ms - stats0.marshal_ms,
-    ))
-}
-
 // ---------------------------------------------------------------------------
 // Wavefront generalization: arbitrary per-wave block counts + explicit
 // dependency edges (the Ch. 4 apps)
@@ -800,14 +680,41 @@ pub trait WaveSpace: WaveGraph {
     /// Valid cell updates block `(w, i)` contributes (metrics).
     fn cell_updates(&self, w: usize, i: usize) -> u64;
 
-    /// Return recyclable input buffers to the space's pools.
-    fn recycle(&self, inputs: Vec<Tensor>) {
+    /// Return block `(w, i)`'s recyclable input buffers to the space's
+    /// pools.  The block id routes the buffers back to the right
+    /// per-fragment pool when spaces are spliced
+    /// (see `coordinator::session`).
+    fn recycle(&self, w: usize, i: usize, inputs: Vec<Tensor>) {
+        let _ = (w, i);
         drop(inputs);
     }
 
     /// (tile hits, tile misses, descriptor hits, descriptor misses).
     fn pool_counters(&self) -> (u64, u64, u64, u64) {
         (0, 0, 0, 0)
+    }
+
+    /// True when block `(w, i)`'s artifact has a single f32 output and
+    /// the space wants [`Runtime::execute_f32`]'s decompose fast path;
+    /// the pool driver then writes back through
+    /// [`WaveSpace::write_f32`] instead of [`WaveSpace::write`].  The
+    /// stencil fragments opt in (their compute units are all
+    /// single-f32-output), keeping the lane hot path identical to the
+    /// pre-Session `drive_pool` engine.
+    fn wants_f32(&self, w: usize, i: usize) -> bool {
+        let _ = (w, i);
+        false
+    }
+
+    /// Write block `(w, i)`'s single-f32-output kernel result back —
+    /// only called when [`WaveSpace::wants_f32`] returned true.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`WaveSpace::write`].
+    unsafe fn write_f32(&self, w: usize, i: usize, out: &[f32]) {
+        let _ = (w, i, out);
+        unreachable!("write_f32 called on a space that never opts into wants_f32");
     }
 }
 
@@ -929,7 +836,7 @@ pub fn drive_wave_local<S: WaveSpace>(
             newly.clear();
             table.complete(w, i, &mut newly);
             queue.push_all(&newly);
-            space.recycle(inputs);
+            space.recycle(w, i, inputs);
         }
         let (d, o) = depth.finish();
         stats.pipeline_depth_max = d;
@@ -968,7 +875,7 @@ pub fn drive_wave_local<S: WaveSpace>(
                         newly.clear();
                         table.complete(w, i, &mut newly);
                         queue.push_all(&newly);
-                        space.recycle(inputs);
+                        space.recycle(w, i, inputs);
                     }
                     Err(e) => {
                         result = Err(e);
@@ -1058,6 +965,7 @@ pub fn drive_wave_pool<S: WaveSpace + 'static>(
                             }
                         };
                         let artifact = space.artifact(w, i);
+                        let fast_f32 = space.wants_f32(w, i);
                         let space_j = space.clone();
                         let done_j = done_blocks.clone();
                         let cells_j = cells.clone();
@@ -1067,15 +975,26 @@ pub fn drive_wave_pool<S: WaveSpace + 'static>(
                         let depth_j = depth.clone();
                         pool.submit_tracked(
                             move |_lane, rt| {
-                                let out = rt.execute(&artifact, &inputs)?;
-                                let t0 = Instant::now();
-                                // SAFETY: disjoint write targets per
-                                // the wave plan.
-                                unsafe { space_j.write(w, i, &out) };
+                                let t0;
+                                if fast_f32 {
+                                    // Single-f32-output decompose fast
+                                    // path (no Tensor wrapping).
+                                    let out = rt.execute_f32(&artifact, &inputs)?;
+                                    t0 = Instant::now();
+                                    // SAFETY: disjoint write targets
+                                    // per the wave plan.
+                                    unsafe { space_j.write_f32(w, i, &out) };
+                                } else {
+                                    let out = rt.execute(&artifact, &inputs)?;
+                                    t0 = Instant::now();
+                                    // SAFETY: disjoint write targets
+                                    // per the wave plan.
+                                    unsafe { space_j.write(w, i, &out) };
+                                }
                                 wb_j.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                                 done_j.fetch_add(1, Ordering::Relaxed);
                                 cells_j.fetch_add(space_j.cell_updates(w, i), Ordering::Relaxed);
-                                space_j.recycle(inputs);
+                                space_j.recycle(w, i, inputs);
                                 Ok(())
                             },
                             move |ok| {

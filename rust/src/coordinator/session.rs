@@ -1,0 +1,1851 @@
+//! The typed front door of the execution engine: a [`Session`] owns
+//! the lane pool and cumulative [`Metrics`], first-class [`Workload`]
+//! descriptors *lower* onto the wavefront pass driver instead of
+//! hand-wiring it, and a [`Chain`] splices several workloads into one
+//! fused [`WaveGraph`] so chained apps never drain the lanes between
+//! stages.
+//!
+//! ```no_run
+//! use fpga_hpc::coordinator::session::{GridInput, Session, Workload};
+//! use fpga_hpc::coordinator::{Grid2D, PassMode};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let session = Session::builder()
+//!     .artifacts("artifacts")
+//!     .lanes(4)
+//!     .mode(PassMode::Pipelined)
+//!     .build()?;
+//!
+//! // One workload…
+//! let img = Grid2D::zeros(512, 512);
+//! let report = session.run(Workload::srad(img.clone(), 4))?;
+//! println!("{}", report.metrics.summary());
+//!
+//! // …or a fused chain: the stencil consumes SRAD's output *in place*
+//! // and its first blocks start while SRAD's tail is still executing.
+//! let report = session.run(
+//!     Workload::srad(img, 4)
+//!         .then(Workload::stencil2d("diffusion2d_r1", GridInput::Upstream, None, 16)),
+//! )?;
+//! assert!(report.metrics.pipeline_depth_max > 1);
+//! # Ok(()) }
+//! ```
+//!
+//! # Lowering
+//!
+//! Every workload becomes a *fragment*: a [`WaveSpace`] (topologically
+//! ordered waves of blocks with explicit dependency edges) plus the
+//! seam metadata a [`Chain`] needs.  The Ch. 4 apps reuse the exact
+//! spaces the deprecated `run_*_lanes` runners drove (`coordinator::
+//! apps`), so results are bit-identical to the old entry points; the
+//! Ch. 5 stencils lower each *pass* to one wave whose edges are the
+//! `r·T` halo-overlap rule — the same schedule `DepTable` enforced,
+//! now expressed as an explicit graph so stencils can splice into
+//! heterogeneous chains.
+//!
+//! # Fusion (the `Chain` seam rule)
+//!
+//! `a.then(b)` with `b` built over [`GridInput::Upstream`] aliases
+//! `b`'s input buffer onto `a`'s output buffer and adds **cross-app
+//! pred edges**: a first-wave block of `b` depends only on the tail
+//! blocks of `a` that are the *final writers* of the cells its piped
+//! read rectangle covers — the heterogeneous generalization of the
+//! stencil driver's halo-overlap rule.  Everything downstream of `b`'s
+//! first wave is ordered transitively, including the write-after-read
+//! hazard of `b` re-using `a`'s buffer as one half of its double
+//! buffer (the same induction that makes two buffers sound inside one
+//! app; see the runtime README's seam diagram).  Chained stages
+//! without a piped input (`pathfinder.then(nw)`) share the fused graph
+//! with no seam edges at all: the lanes interleave both apps freely.
+//! Either way there is **no inter-app `wait_idle`** — one `WaveTable`
+//! spans the whole chain, and [`PassMode::Barrier`] degrades it to the
+//! back-to-back wave-serial reference the tests and the CI perf gate
+//! compare against.
+
+use std::cell::UnsafeCell;
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure};
+
+use crate::coordinator::apps::{
+    LudSpace, NwSpace, PathfinderSpace, RawSlice, SradSpace, SyncCell,
+};
+use crate::coordinator::bufpool::TensorPools;
+use crate::coordinator::grid::{Boundary, Grid2D, Grid3D, GridWriter2D, GridWriter3D};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::passdriver::{self, PassMode, StencilSpace, WaveGraph, WaveSpace};
+use crate::coordinator::stencil_runner::{
+    block_origins_2d, boundary_of, extractor_count, scalar_stencil_meta, stencil_meta, Space2D,
+    Space3D, StencilMeta,
+};
+use crate::runtime::{Registry, RuntimePool, Tensor};
+
+// ---------------------------------------------------------------------------
+// Public descriptor types
+// ---------------------------------------------------------------------------
+
+/// Where a 2D-grid workload takes its input from.
+#[derive(Debug, Clone)]
+pub enum GridInput {
+    /// An owned initial grid (standalone runs and chain heads).
+    Init(Grid2D),
+    /// Splice onto the previous chain stage's output grid, in place:
+    /// the stage reads the upstream buffer directly and its first wave
+    /// is gated only by the upstream tail blocks its reads overlap.
+    Upstream,
+}
+
+impl From<Grid2D> for GridInput {
+    fn from(g: Grid2D) -> GridInput {
+        GridInput::Init(g)
+    }
+}
+
+/// A first-class workload descriptor.  Constructors capture the inputs;
+/// nothing executes until [`Session::run`] lowers the descriptor onto
+/// the wavefront pass driver.
+#[derive(Debug)]
+pub struct Workload(WorkloadKind);
+
+#[derive(Debug)]
+enum WorkloadKind {
+    Stencil2d { artifact: String, grid: GridInput, aux: Option<Grid2D>, steps: u64 },
+    Stencil2dScalar { artifact: String, grid: GridInput, scalar: f32 },
+    Stencil3d { artifact: String, grid: Grid3D, aux: Option<Grid3D>, steps: u64 },
+    Pathfinder { wall: Vec<Vec<i32>> },
+    Nw { reference: Vec<Vec<i32>>, penalty: i32 },
+    Srad { img: GridInput, steps: u64 },
+    Lud { a: Vec<Vec<f32>> },
+}
+
+impl Workload {
+    /// `steps` time steps of a 2D stencil artifact (diffusion2d_r*,
+    /// hotspot2d); `aux` is the optional second input stream
+    /// (Hotspot's power grid).  `steps` must be a multiple of the
+    /// artifact's fused depth `T`.
+    pub fn stencil2d(
+        artifact: impl Into<String>,
+        grid: impl Into<GridInput>,
+        aux: Option<Grid2D>,
+        steps: u64,
+    ) -> Workload {
+        Workload(WorkloadKind::Stencil2d {
+            artifact: artifact.into(),
+            grid: grid.into(),
+            aux,
+            steps,
+        })
+    }
+
+    /// One pass of a 2D stencil artifact that takes a run-time scalar
+    /// operand (SRAD's q0² shape-`[T]` input); advances the grid by the
+    /// artifact's fused step count.
+    pub fn stencil2d_with_scalar(
+        artifact: impl Into<String>,
+        grid: impl Into<GridInput>,
+        scalar: f32,
+    ) -> Workload {
+        Workload(WorkloadKind::Stencil2dScalar {
+            artifact: artifact.into(),
+            grid: grid.into(),
+            scalar,
+        })
+    }
+
+    /// `steps` time steps of a 3D stencil artifact (diffusion3d_r*,
+    /// hotspot3d).  3D grids do not currently splice onto upstream
+    /// stages (no [`GridInput`]), but a 3D stage can still ride in a
+    /// chain as an independent workload.
+    pub fn stencil3d(
+        artifact: impl Into<String>,
+        grid: Grid3D,
+        aux: Option<Grid3D>,
+        steps: u64,
+    ) -> Workload {
+        Workload(WorkloadKind::Stencil3d {
+            artifact: artifact.into(),
+            grid,
+            aux,
+            steps,
+        })
+    }
+
+    /// Pathfinder: min-cost accumulation from row 0 down through
+    /// `wall` (rows × cols); `(rows - 1)` must be a multiple of the
+    /// artifact's fused depth.
+    pub fn pathfinder(wall: Vec<Vec<i32>>) -> Workload {
+        Workload(WorkloadKind::Pathfinder { wall })
+    }
+
+    /// Needleman-Wunsch over an (n+1)×(n+1) reference matrix; `n` must
+    /// be a multiple of the artifact block and `penalty` must match the
+    /// artifact's baked value.
+    pub fn nw(reference: Vec<Vec<i32>>, penalty: i32) -> Workload {
+        Workload(WorkloadKind::Nw { reference, penalty })
+    }
+
+    /// SRAD: `steps` iterations of (tile-partial reduction → fused
+    /// stencil) over a positive image, with the two-stage dependency
+    /// edge overlapping step `s+1`'s reduction with step `s`'s stencil
+    /// tail.
+    pub fn srad(img: impl Into<GridInput>, steps: u64) -> Workload {
+        Workload(WorkloadKind::Srad { img: img.into(), steps })
+    }
+
+    /// Blocked LU factorization of an n×n matrix; `n` must be a
+    /// multiple of the artifact block.
+    pub fn lud(a: Vec<Vec<f32>>) -> Workload {
+        Workload(WorkloadKind::Lud { a })
+    }
+
+    /// Chain this workload with a downstream one; see [`Chain`].
+    pub fn then(self, next: Workload) -> Chain {
+        Chain { stages: vec![self, next] }
+    }
+
+    fn wants_upstream(&self) -> bool {
+        matches!(
+            &self.0,
+            WorkloadKind::Stencil2d { grid: GridInput::Upstream, .. }
+                | WorkloadKind::Stencil2dScalar { grid: GridInput::Upstream, .. }
+                | WorkloadKind::Srad { img: GridInput::Upstream, .. }
+        )
+    }
+}
+
+/// An ordered sequence of workloads fused into **one** wave graph: the
+/// stages share a single dependency table, so a downstream stage's
+/// blocks start as soon as their declared predecessors (its own waves
+/// plus any cross-app seam edges) have written back — no inter-app
+/// `wait_idle`, no drain between stages.
+#[derive(Debug)]
+pub struct Chain {
+    stages: Vec<Workload>,
+}
+
+impl Chain {
+    /// Append another stage to the chain.
+    pub fn then(mut self, next: Workload) -> Chain {
+        self.stages.push(next);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+}
+
+impl From<Workload> for Chain {
+    fn from(w: Workload) -> Chain {
+        Chain { stages: vec![w] }
+    }
+}
+
+/// A finished stage's result.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadOutput {
+    /// The stage's output grid was spliced into the next stage, which
+    /// (re)used its buffer in place — there is no separate result to
+    /// report (ask the *last* stage of the chain for the final grid).
+    Piped,
+    Grid2D(Grid2D),
+    Grid3D(Grid3D),
+    /// Pathfinder's accumulated cost row.
+    Row(Vec<i32>),
+    /// NW's (n+1)×(n+1) score matrix.
+    ScoreMatrix(Vec<Vec<i32>>),
+    /// LUD's factorized matrix.
+    Matrix(Vec<Vec<f32>>),
+}
+
+impl WorkloadOutput {
+    pub fn into_grid2d(self) -> Option<Grid2D> {
+        match self {
+            WorkloadOutput::Grid2D(g) => Some(g),
+            _ => None,
+        }
+    }
+
+    pub fn into_grid3d(self) -> Option<Grid3D> {
+        match self {
+            WorkloadOutput::Grid3D(g) => Some(g),
+            _ => None,
+        }
+    }
+
+    pub fn into_row(self) -> Option<Vec<i32>> {
+        match self {
+            WorkloadOutput::Row(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn into_score_matrix(self) -> Option<Vec<Vec<i32>>> {
+        match self {
+            WorkloadOutput::ScoreMatrix(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn into_matrix(self) -> Option<Vec<Vec<f32>>> {
+        match self {
+            WorkloadOutput::Matrix(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// What one [`Session::run`] call produced: per-run [`Metrics`] (no
+/// bleed-through from earlier runs on the same session/pool), the
+/// end-to-end elapsed time (including artifact warmup and lowering,
+/// which `metrics.wall` excludes), and one output per chain stage.
+#[derive(Debug)]
+pub struct RunReport {
+    pub metrics: Metrics,
+    pub elapsed: Duration,
+    pub outputs: Vec<WorkloadOutput>,
+}
+
+impl RunReport {
+    /// The final stage's output.
+    pub fn output(&self) -> &WorkloadOutput {
+        self.outputs.last().expect("a run has at least one stage")
+    }
+
+    /// Consume the report, keeping only the final stage's output.
+    pub fn into_output(mut self) -> WorkloadOutput {
+        self.outputs.pop().expect("a run has at least one stage")
+    }
+
+    /// (metrics, final output) — the shape the deprecated `run_*`
+    /// shims return.
+    pub(crate) fn into_parts(mut self) -> (Metrics, Option<WorkloadOutput>) {
+        let out = self.outputs.pop();
+        (self.metrics, out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session + builder
+// ---------------------------------------------------------------------------
+
+/// Builder for an owning [`Session`]; see [`Session::builder`].
+#[derive(Debug, Clone)]
+pub struct SessionBuilder {
+    dir: PathBuf,
+    lanes: usize,
+    mode: PassMode,
+    extractors: Option<usize>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            dir: PathBuf::from("artifacts"),
+            lanes: 1,
+            mode: PassMode::Pipelined,
+            extractors: None,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Artifact directory (default `artifacts`).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.dir = dir.into();
+        self
+    }
+
+    /// Execute lanes — replicated compute units, one PJRT client each
+    /// (default 1; clamped to ≥ 1).
+    pub fn lanes(mut self, lanes: usize) -> Self {
+        self.lanes = lanes.max(1);
+        self
+    }
+
+    /// Inter-wave schedule (default [`PassMode::Pipelined`]).
+    pub fn mode(mut self, mode: PassMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Tile-extractor workers feeding the lanes (default
+    /// `ceil(lanes / 2)` — halo extraction runs at memcpy rate).
+    pub fn extractors(mut self, n: usize) -> Self {
+        self.extractors = Some(n.max(1));
+        self
+    }
+
+    /// Open the artifact directory and spin up the lane pool.
+    pub fn build(self) -> crate::Result<Session<'static>> {
+        let pool = RuntimePool::open(&self.dir, self.lanes)?;
+        Ok(Session {
+            engine: Engine::Owned(pool),
+            mode: self.mode,
+            extractors: self.extractors,
+            totals: Mutex::new(Metrics::default()),
+        })
+    }
+}
+
+enum Engine<'p> {
+    Owned(RuntimePool),
+    Borrowed(&'p RuntimePool),
+}
+
+/// The unified execution surface: owns (or borrows) the
+/// [`RuntimePool`], lowers [`Workload`]s / [`Chain`]s onto the
+/// wavefront pass driver, and accumulates cumulative [`Metrics`]
+/// across runs (snapshot with [`Session::metrics`], zero with
+/// [`Session::reset_metrics`]) while every [`Session::run`] still
+/// returns a fresh per-run [`RunReport`].
+pub struct Session<'p> {
+    engine: Engine<'p>,
+    mode: PassMode,
+    extractors: Option<usize>,
+    totals: Mutex<Metrics>,
+}
+
+impl Session<'static> {
+    /// Start configuring an owning session:
+    /// `Session::builder().lanes(4).mode(PassMode::Pipelined).build()?`.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+}
+
+impl<'p> Session<'p> {
+    /// Borrow an existing pool (tests, benches and the deprecated
+    /// `run_*` shims share one pool across many sessions this way).
+    pub fn over(pool: &'p RuntimePool) -> Session<'p> {
+        Session {
+            engine: Engine::Borrowed(pool),
+            mode: PassMode::Pipelined,
+            extractors: None,
+            totals: Mutex::new(Metrics::default()),
+        }
+    }
+
+    /// Override the inter-wave schedule.
+    pub fn with_mode(mut self, mode: PassMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Override the extractor-worker count.
+    pub fn with_extractors(mut self, n: usize) -> Self {
+        self.extractors = Some(n.max(1));
+        self
+    }
+
+    pub fn mode(&self) -> PassMode {
+        self.mode
+    }
+
+    pub fn pool(&self) -> &RuntimePool {
+        match &self.engine {
+            Engine::Owned(p) => p,
+            Engine::Borrowed(p) => p,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.pool().lanes()
+    }
+
+    /// Snapshot of the cumulative metrics across every run of this
+    /// session.
+    pub fn metrics(&self) -> Metrics {
+        self.totals.lock().unwrap().snapshot()
+    }
+
+    /// Zero the cumulative metrics.
+    pub fn reset_metrics(&self) {
+        self.totals.lock().unwrap().reset()
+    }
+
+    /// Lower the chain onto one fused wave graph, warm every distinct
+    /// artifact on every lane (outside the timed region), and drive
+    /// the whole thing through the dependency-tracked scheduler —
+    /// one `WaveTable`, one closing `wait_idle`, no barrier anywhere
+    /// between stages.
+    pub fn run(&self, chain: impl Into<Chain>) -> crate::Result<RunReport> {
+        let t0 = Instant::now();
+        let chain = chain.into();
+        ensure!(!chain.stages.is_empty(), "cannot run an empty chain");
+        let pool = self.pool();
+
+        let mut artifacts: Vec<String> = Vec::new();
+        let mut frags: Vec<Box<dyn Fragment>> = Vec::new();
+        let mut piped = Vec::with_capacity(chain.stages.len());
+        for stage in chain.stages {
+            let wants = stage.wants_upstream();
+            let frag = stage.lower(pool.registry(), frags.last().map(|f| f.as_ref()), &mut artifacts)?;
+            piped.push(wants);
+            frags.push(frag);
+        }
+
+        // Compile every distinct artifact on every lane, outside the
+        // timed region (the analogue of FPGA reprogramming, §4.2.4).
+        let mut seen = HashSet::new();
+        artifacts.retain(|n| seen.insert(n.clone()));
+        let names: Vec<&str> = artifacts.iter().map(String::as_str).collect();
+        pool.warmup_artifacts(&names)?;
+
+        let space = Arc::new(FusedSpace::splice(frags, piped));
+        let extractors = self
+            .extractors
+            .unwrap_or_else(|| extractor_count(pool.lanes()));
+        let metrics = passdriver::drive_wave_pool(pool, &space, self.mode, extractors)?;
+        // The drive has quiesced every lane; copying outputs through
+        // the raw handles is race-free now.
+        let outputs = space.outputs();
+        self.totals.lock().unwrap().merge(&metrics);
+        Ok(RunReport { metrics, elapsed: t0.elapsed(), outputs })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fragments: lowered workloads + the seam metadata Chain splices on
+// ---------------------------------------------------------------------------
+
+/// Half-open cell rectangle (rows `y0..y1`, cols `x0..x1`) in a 2D
+/// grid's coordinates, already clipped to the grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Rect {
+    pub y0: usize,
+    pub y1: usize,
+    pub x0: usize,
+    pub x1: usize,
+}
+
+impl Rect {
+    fn clipped(y0: isize, y1: isize, x0: isize, x1: isize, ny: usize, nx: usize) -> Rect {
+        Rect {
+            y0: y0.max(0) as usize,
+            y1: (y1.max(0) as usize).min(ny),
+            x0: x0.max(0) as usize,
+            x1: (x1.max(0) as usize).min(nx),
+        }
+    }
+
+    fn intersects(&self, y0: usize, y1: usize, x0: usize, x1: usize) -> bool {
+        self.y0 < y1 && y0 < self.y1 && self.x0 < x1 && x0 < self.x1
+    }
+}
+
+/// The 2D grid buffer a downstream stage may splice onto.
+#[derive(Clone, Copy)]
+pub(crate) struct OutGrid {
+    pub handle: GridWriter2D,
+    pub ny: usize,
+    pub nx: usize,
+}
+
+/// A lowered workload: a [`WaveSpace`] fragment plus the seam hooks
+/// [`FusedSpace::splice`] uses to wire cross-app pred edges and hand
+/// grid buffers downstream.
+pub(crate) trait Fragment: WaveSpace {
+    /// The read rectangle of first-wave block `i` **in the piped input
+    /// grid** — only consulted when this stage was built over
+    /// [`GridInput::Upstream`].
+    fn seam_in_rect(&self, i: usize) -> Option<Rect> {
+        let _ = i;
+        None
+    }
+
+    /// Visit the (local wave, index) of every block of this fragment
+    /// that is the *final writer* of any cell of `rect` in its output
+    /// grid.  No-op when the fragment has no grid output.
+    fn seam_out(&self, rect: Rect, f: &mut dyn FnMut(usize, usize)) {
+        let _ = (rect, f);
+    }
+
+    /// The grid buffer holding this fragment's final output, for a
+    /// downstream [`GridInput::Upstream`] stage to alias.
+    fn out_grid(&self) -> Option<OutGrid> {
+        None
+    }
+
+    /// Copy the final result out.  Only called after the drive has
+    /// quiesced every lane (no writer is live on any handle).
+    fn output(&self) -> WorkloadOutput;
+}
+
+/// How a stencil-shaped fragment gets its input buffer.
+pub(crate) enum StencilInput {
+    Own(Grid2D),
+    Piped(OutGrid),
+}
+
+fn resolve_grid_input(
+    g: GridInput,
+    upstream: Option<&dyn Fragment>,
+) -> crate::Result<StencilInput> {
+    match g {
+        GridInput::Init(grid) => Ok(StencilInput::Own(grid)),
+        GridInput::Upstream => {
+            let up = upstream.ok_or_else(|| {
+                anyhow!("GridInput::Upstream needs an upstream stage in the chain")
+            })?;
+            let out = up
+                .out_grid()
+                .ok_or_else(|| anyhow!("upstream stage produces no 2D grid to splice onto"))?;
+            Ok(StencilInput::Piped(out))
+        }
+    }
+}
+
+/// Visit the clipped lattice neighborhood of block `i` — the blocks
+/// within `reach` lattice steps on every axis (the `r·T` halo-overlap
+/// rule `DepTable` enforces, expressed as explicit edges).
+fn visit_lattice_neighborhood(
+    dims: [usize; 3],
+    reach: [usize; 3],
+    i: usize,
+    f: &mut dyn FnMut(usize),
+) {
+    let c = [
+        i / (dims[1] * dims[2]),
+        (i / dims[2]) % dims[1],
+        i % dims[2],
+    ];
+    let lo = |a: usize| c[a].saturating_sub(reach[a]);
+    let hi = |a: usize| (c[a] + reach[a]).min(dims[a] - 1);
+    for z in lo(0)..=hi(0) {
+        for y in lo(1)..=hi(1) {
+            for x in lo(2)..=hi(2) {
+                f((z * dims[1] + y) * dims[2] + x);
+            }
+        }
+    }
+}
+
+/// Bind a stencil-shaped 2D double buffer: resolve the input handle
+/// (an owned grid, or the upstream output when piped) and allocate the
+/// fragment-owned alternate buffer.  Returns the `[read, write]`
+/// handle pair for wave 0, the extents, and the grids the fragment
+/// must own (heap storage is stable behind struct moves, so the
+/// handles stay valid; the wave driver quiesces every lane before the
+/// fragment — and thus the grids — drop).
+fn double_buffer(input: StencilInput) -> ([GridWriter2D; 2], usize, usize, Vec<Grid2D>) {
+    let mut grids = Vec::with_capacity(2);
+    let (h0, ny, nx) = match input {
+        StencilInput::Own(mut g) => {
+            let (ny, nx) = (g.ny, g.nx);
+            // SAFETY: see above — the grid moves into `grids`, its
+            // heap buffer does not.
+            let h = unsafe { g.shared_writer() };
+            grids.push(g);
+            (h, ny, nx)
+        }
+        StencilInput::Piped(o) => (o.handle, o.ny, o.nx),
+    };
+    let mut next = Grid2D::zeros(ny, nx);
+    // SAFETY: as above.
+    let h1 = unsafe { next.shared_writer() };
+    grids.push(next);
+    ([h0, h1], ny, nx, grids)
+}
+
+/// Copy a full grid out through its raw handle.
+///
+/// Only sound once the drive has quiesced (no concurrent writer).
+fn copy_grid2d(h: GridWriter2D, ny: usize, nx: usize) -> Grid2D {
+    let mut data = Vec::with_capacity(ny * nx);
+    // SAFETY: callers only reach this after drive_wave_pool /
+    // drive_wave_local returned — every lane and extractor is done.
+    unsafe { h.extract_tile_into(0, 0, ny, nx, 0, Boundary::Zero, &mut data) };
+    Grid2D { ny, nx, data }
+}
+
+// ---------- 2D stencil fragment (one wave per pass) ----------
+
+/// A 2D stencil lowered onto the wave driver: wave `p` is pass `p`,
+/// block edges are the `r·T` halo-overlap neighborhood, and the two
+/// grid buffers alternate roles per wave exactly as in the `DepTable`
+/// engine (the symmetric neighbor rule discharges the WAR hazard).
+pub(crate) struct Stencil2dFragment {
+    artifact: Arc<str>,
+    space: Space2D,
+    /// Wave `w` reads `handles[w % 2]`, writes `handles[(w+1) % 2]`;
+    /// `handles[0]` aliases the upstream output when piped.
+    handles: [GridWriter2D; 2],
+    passes: usize,
+    t_fused: u64,
+    dims: [usize; 3],
+    reach: [usize; 3],
+    /// Buffers owned by this fragment (the input grid unless piped,
+    /// plus the alternate buffer).  Heap storage is stable behind
+    /// struct moves, so the raw handles above stay valid.
+    _grids: Vec<Grid2D>,
+    _aux: Option<Grid2D>,
+}
+
+impl Stencil2dFragment {
+    pub(crate) fn build(
+        artifact: Arc<str>,
+        m: &StencilMeta,
+        input: StencilInput,
+        aux: Option<Grid2D>,
+        scalar: Option<Vec<f32>>,
+        passes: usize,
+    ) -> Stencil2dFragment {
+        let (handles, ny, nx, grids) = double_buffer(input);
+        // SAFETY: the aux grid is never written and outlives the drive
+        // (owned by this fragment).
+        let aux_handle = aux.as_ref().map(|a| unsafe { a.shared_view() });
+        let space = Space2D::new(ny, nx, m, aux_handle, scalar);
+        let dims = space.lattice();
+        let reach = space.reach();
+        Stencil2dFragment {
+            artifact,
+            space,
+            handles,
+            passes,
+            t_fused: m.t_fused,
+            dims,
+            reach,
+            _grids: grids,
+            _aux: aux,
+        }
+    }
+}
+
+impl WaveGraph for Stencil2dFragment {
+    fn waves(&self) -> usize {
+        self.passes
+    }
+
+    fn wave_len(&self, _w: usize) -> usize {
+        self.space.nblocks()
+    }
+
+    fn visit_preds(&self, w: usize, i: usize, f: &mut dyn FnMut(usize, usize)) {
+        if w == 0 {
+            return;
+        }
+        visit_lattice_neighborhood(self.dims, self.reach, i, &mut |j| f(w - 1, j));
+    }
+}
+
+impl WaveSpace for Stencil2dFragment {
+    fn artifact(&self, _w: usize, _i: usize) -> Arc<str> {
+        self.artifact.clone()
+    }
+
+    unsafe fn extract(&self, w: usize, i: usize) -> Vec<Tensor> {
+        self.space.extract(self.handles[w % 2], i)
+    }
+
+    unsafe fn write(&self, w: usize, i: usize, out: &[Tensor]) {
+        self.space.write(self.handles[(w + 1) % 2], i, out[0].as_f32());
+    }
+
+    fn cell_updates(&self, _w: usize, i: usize) -> u64 {
+        let (y0, x0) = self.space.origins[i];
+        let h = self.space.block.min(self.space.ny - y0);
+        let w_ = self.space.block.min(self.space.nx - x0);
+        (h * w_) as u64 * self.t_fused
+    }
+
+    fn recycle(&self, _w: usize, _i: usize, inputs: Vec<Tensor>) {
+        StencilSpace::recycle(&self.space, inputs);
+    }
+
+    fn pool_counters(&self) -> (u64, u64, u64, u64) {
+        StencilSpace::pool_counters(&self.space)
+    }
+
+    fn wants_f32(&self, _w: usize, _i: usize) -> bool {
+        true
+    }
+
+    unsafe fn write_f32(&self, w: usize, i: usize, out: &[f32]) {
+        self.space.write(self.handles[(w + 1) % 2], i, out);
+    }
+}
+
+impl Fragment for Stencil2dFragment {
+    fn seam_in_rect(&self, i: usize) -> Option<Rect> {
+        let (y0, x0) = self.space.origins[i];
+        let h = self.space.halo as isize;
+        Some(Rect::clipped(
+            y0 as isize - h,
+            (y0 + self.space.block) as isize + h,
+            x0 as isize - h,
+            (x0 + self.space.block) as isize + h,
+            self.space.ny,
+            self.space.nx,
+        ))
+    }
+
+    fn seam_out(&self, rect: Rect, f: &mut dyn FnMut(usize, usize)) {
+        if self.passes == 0 {
+            return; // nothing ran; downstream reads the seeded buffer
+        }
+        for (idx, &(y0, x0)) in self.space.origins.iter().enumerate() {
+            let y1 = (y0 + self.space.block).min(self.space.ny);
+            let x1 = (x0 + self.space.block).min(self.space.nx);
+            if rect.intersects(y0, y1, x0, x1) {
+                f(self.passes - 1, idx);
+            }
+        }
+    }
+
+    fn out_grid(&self) -> Option<OutGrid> {
+        Some(OutGrid {
+            handle: self.handles[self.passes % 2],
+            ny: self.space.ny,
+            nx: self.space.nx,
+        })
+    }
+
+    fn output(&self) -> WorkloadOutput {
+        WorkloadOutput::Grid2D(copy_grid2d(
+            self.handles[self.passes % 2],
+            self.space.ny,
+            self.space.nx,
+        ))
+    }
+}
+
+// ---------- 3D stencil fragment ----------
+
+/// 3D counterpart of [`Stencil2dFragment`]; never pipes (no 3D seam),
+/// but still shares a fused graph with its chain neighbors.
+pub(crate) struct Stencil3dFragment {
+    artifact: Arc<str>,
+    space: Space3D,
+    handles: [GridWriter3D; 2],
+    passes: usize,
+    t_fused: u64,
+    dims: [usize; 3],
+    reach: [usize; 3],
+    grids: [Grid3D; 2],
+    _aux: Option<Grid3D>,
+}
+
+impl Stencil3dFragment {
+    pub(crate) fn build(
+        artifact: Arc<str>,
+        m: &StencilMeta,
+        mut grid: Grid3D,
+        aux: Option<Grid3D>,
+        passes: usize,
+    ) -> Stencil3dFragment {
+        let (nz, ny, nx) = (grid.nz, grid.ny, grid.nx);
+        // SAFETY: both grids move into `grids` below; heap storage is
+        // stable and the drive quiesces before the fragment drops.
+        let h0 = unsafe { grid.shared_writer() };
+        let mut next = Grid3D::zeros(nz, ny, nx);
+        let h1 = unsafe { next.shared_writer() };
+        // SAFETY: the aux grid is never written.
+        let aux_handle = aux.as_ref().map(|a| unsafe { a.shared_view() });
+        let space = Space3D::new(nz, ny, nx, m, aux_handle);
+        let dims = space.lattice();
+        let reach = space.reach();
+        Stencil3dFragment {
+            artifact,
+            space,
+            handles: [h0, h1],
+            passes,
+            t_fused: m.t_fused,
+            dims,
+            reach,
+            grids: [grid, next],
+            _aux: aux,
+        }
+    }
+}
+
+impl WaveGraph for Stencil3dFragment {
+    fn waves(&self) -> usize {
+        self.passes
+    }
+
+    fn wave_len(&self, _w: usize) -> usize {
+        self.space.nblocks()
+    }
+
+    fn visit_preds(&self, w: usize, i: usize, f: &mut dyn FnMut(usize, usize)) {
+        if w == 0 {
+            return;
+        }
+        visit_lattice_neighborhood(self.dims, self.reach, i, &mut |j| f(w - 1, j));
+    }
+}
+
+impl WaveSpace for Stencil3dFragment {
+    fn artifact(&self, _w: usize, _i: usize) -> Arc<str> {
+        self.artifact.clone()
+    }
+
+    unsafe fn extract(&self, w: usize, i: usize) -> Vec<Tensor> {
+        self.space.extract(self.handles[w % 2], i)
+    }
+
+    unsafe fn write(&self, w: usize, i: usize, out: &[Tensor]) {
+        self.space.write(self.handles[(w + 1) % 2], i, out[0].as_f32());
+    }
+
+    fn cell_updates(&self, _w: usize, i: usize) -> u64 {
+        let (z0, y0, x0) = self.space.origins[i];
+        let d = self.space.block.min(self.space.nz - z0);
+        let h = self.space.block.min(self.space.ny - y0);
+        let w_ = self.space.block.min(self.space.nx - x0);
+        (d * h * w_) as u64 * self.t_fused
+    }
+
+    fn recycle(&self, _w: usize, _i: usize, inputs: Vec<Tensor>) {
+        StencilSpace::recycle(&self.space, inputs);
+    }
+
+    fn pool_counters(&self) -> (u64, u64, u64, u64) {
+        StencilSpace::pool_counters(&self.space)
+    }
+
+    fn wants_f32(&self, _w: usize, _i: usize) -> bool {
+        true
+    }
+
+    unsafe fn write_f32(&self, w: usize, i: usize, out: &[f32]) {
+        self.space.write(self.handles[(w + 1) % 2], i, out);
+    }
+}
+
+impl Fragment for Stencil3dFragment {
+    fn output(&self) -> WorkloadOutput {
+        WorkloadOutput::Grid3D(self.grids[self.passes % 2].clone())
+    }
+}
+
+// ---------- app fragments (spaces reused from coordinator::apps) ----------
+
+/// Delegate the graph + execution traits to the wrapped app space.
+macro_rules! delegate_wave_impls {
+    ($ty:ty) => {
+        impl WaveGraph for $ty {
+            fn waves(&self) -> usize {
+                self.space.waves()
+            }
+            fn wave_len(&self, w: usize) -> usize {
+                self.space.wave_len(w)
+            }
+            fn visit_preds(&self, w: usize, i: usize, f: &mut dyn FnMut(usize, usize)) {
+                self.space.visit_preds(w, i, f)
+            }
+        }
+        impl WaveSpace for $ty {
+            fn artifact(&self, w: usize, i: usize) -> Arc<str> {
+                self.space.artifact(w, i)
+            }
+            unsafe fn extract(&self, w: usize, i: usize) -> Vec<Tensor> {
+                self.space.extract(w, i)
+            }
+            unsafe fn write(&self, w: usize, i: usize, out: &[Tensor]) {
+                self.space.write(w, i, out)
+            }
+            fn cell_updates(&self, w: usize, i: usize) -> u64 {
+                self.space.cell_updates(w, i)
+            }
+            fn recycle(&self, w: usize, i: usize, inputs: Vec<Tensor>) {
+                self.space.recycle(w, i, inputs)
+            }
+            fn pool_counters(&self) -> (u64, u64, u64, u64) {
+                self.space.pool_counters()
+            }
+        }
+    };
+}
+
+/// Pathfinder, owning its cost-row double buffer.
+pub(crate) struct PathfinderFragment {
+    space: PathfinderSpace,
+    bufs: [Vec<i32>; 2],
+}
+
+delegate_wave_impls!(PathfinderFragment);
+
+impl Fragment for PathfinderFragment {
+    fn output(&self) -> WorkloadOutput {
+        WorkloadOutput::Row(self.bufs[self.space.nwaves % 2].clone())
+    }
+}
+
+/// Needleman-Wunsch, owning the flattened score matrix.
+pub(crate) struct NwFragment {
+    space: NwSpace,
+    score: Vec<i32>,
+    stride: usize,
+}
+
+delegate_wave_impls!(NwFragment);
+
+impl Fragment for NwFragment {
+    fn output(&self) -> WorkloadOutput {
+        WorkloadOutput::ScoreMatrix(
+            self.score.chunks(self.stride).map(|r| r.to_vec()).collect(),
+        )
+    }
+}
+
+/// SRAD, owning its image double buffer (first half absent when
+/// piped).  Seam rules: first-wave reads are the reduction tiles'
+/// rects; final writers are the last stencil wave's blocks.
+pub(crate) struct SradFragment {
+    space: SradSpace,
+    _grids: Vec<Grid2D>,
+}
+
+delegate_wave_impls!(SradFragment);
+
+impl Fragment for SradFragment {
+    fn seam_in_rect(&self, i: usize) -> Option<Rect> {
+        let (y0, x0) = self.space.rorigins[i];
+        Some(Rect::clipped(
+            y0 as isize,
+            (y0 + self.space.rblock) as isize,
+            x0 as isize,
+            (x0 + self.space.rblock) as isize,
+            self.space.ny,
+            self.space.nx,
+        ))
+    }
+
+    fn seam_out(&self, rect: Rect, f: &mut dyn FnMut(usize, usize)) {
+        if self.space.steps == 0 {
+            return;
+        }
+        let last = 2 * self.space.steps - 1; // final stencil wave
+        for (idx, &(y0, x0)) in self.space.sorigins.iter().enumerate() {
+            let y1 = (y0 + self.space.sblock).min(self.space.ny);
+            let x1 = (x0 + self.space.sblock).min(self.space.nx);
+            if rect.intersects(y0, y1, x0, x1) {
+                f(last, idx);
+            }
+        }
+    }
+
+    fn out_grid(&self) -> Option<OutGrid> {
+        Some(OutGrid {
+            handle: self.space.bufs[self.space.steps % 2],
+            ny: self.space.ny,
+            nx: self.space.nx,
+        })
+    }
+
+    fn output(&self) -> WorkloadOutput {
+        WorkloadOutput::Grid2D(copy_grid2d(
+            self.space.bufs[self.space.steps % 2],
+            self.space.ny,
+            self.space.nx,
+        ))
+    }
+}
+
+/// Blocked LUD, owning the flattened matrix it factorizes in place.
+pub(crate) struct LudFragment {
+    space: LudSpace,
+    m: Vec<f32>,
+    n: usize,
+}
+
+delegate_wave_impls!(LudFragment);
+
+impl Fragment for LudFragment {
+    fn output(&self) -> WorkloadOutput {
+        WorkloadOutput::Matrix(self.m.chunks(self.n).map(|r| r.to_vec()).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lowering: Workload -> Fragment
+// ---------------------------------------------------------------------------
+
+impl Workload {
+    /// Lower this descriptor to a wave fragment, appending the
+    /// artifact names it executes to `artifacts` (for lane warmup).
+    fn lower(
+        self,
+        reg: &Registry,
+        upstream: Option<&dyn Fragment>,
+        artifacts: &mut Vec<String>,
+    ) -> crate::Result<Box<dyn Fragment>> {
+        match self.0 {
+            WorkloadKind::Stencil2d { artifact, grid, aux, steps } => {
+                let spec = reg
+                    .get(&artifact)
+                    .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
+                    .clone();
+                let m = stencil_meta(&spec, aux.is_some(), steps)?;
+                let passes = (steps / m.t_fused) as usize;
+                artifacts.push(artifact.clone());
+                let input = resolve_grid_input(grid, upstream)?;
+                Ok(Box::new(Stencil2dFragment::build(
+                    Arc::from(artifact.as_str()),
+                    &m,
+                    input,
+                    aux,
+                    None,
+                    passes,
+                )))
+            }
+            WorkloadKind::Stencil2dScalar { artifact, grid, scalar } => {
+                let spec = reg
+                    .get(&artifact)
+                    .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
+                    .clone();
+                let m = scalar_stencil_meta(&spec)?;
+                artifacts.push(artifact.clone());
+                let input = resolve_grid_input(grid, upstream)?;
+                Ok(Box::new(Stencil2dFragment::build(
+                    Arc::from(artifact.as_str()),
+                    &m,
+                    input,
+                    None,
+                    Some(vec![scalar; m.t_fused as usize]),
+                    1,
+                )))
+            }
+            WorkloadKind::Stencil3d { artifact, grid, aux, steps } => {
+                let spec = reg
+                    .get(&artifact)
+                    .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
+                    .clone();
+                let m = stencil_meta(&spec, aux.is_some(), steps)?;
+                let passes = (steps / m.t_fused) as usize;
+                artifacts.push(artifact.clone());
+                Ok(Box::new(Stencil3dFragment::build(
+                    Arc::from(artifact.as_str()),
+                    &m,
+                    grid,
+                    aux,
+                    passes,
+                )))
+            }
+            WorkloadKind::Pathfinder { wall } => {
+                let spec = reg
+                    .get("pathfinder")
+                    .ok_or_else(|| anyhow!("missing pathfinder artifact"))?
+                    .clone();
+                let width = spec.meta_u64("width")? as usize;
+                let fused = spec.meta_u64("fused_rows")? as usize;
+                let rows = wall.len();
+                ensure!(
+                    rows >= 1 && !wall[0].is_empty(),
+                    "pathfinder: wall must have at least one non-empty row"
+                );
+                let cols = wall[0].len();
+                if (rows - 1) % fused != 0 {
+                    bail!("pathfinder: rows-1 = {} not a multiple of fused {fused}", rows - 1);
+                }
+                artifacts.push("pathfinder".into());
+                let nwaves = (rows - 1) / fused;
+                let mut flat = Vec::with_capacity((rows - 1) * cols);
+                for row in &wall[1..] {
+                    flat.extend_from_slice(row);
+                }
+                let mut bufs = [wall[0].clone(), vec![0i32; cols]];
+                let [b0, b1] = &mut bufs;
+                let space = PathfinderSpace {
+                    artifact: Arc::from("pathfinder"),
+                    wall: flat,
+                    cols,
+                    width,
+                    fused,
+                    padded: width + 2 * fused,
+                    nwaves,
+                    nblocks: cols.div_ceil(width),
+                    reach: fused.div_ceil(width),
+                    // SAFETY: `bufs` moves into the fragment below; the
+                    // heap rows never move, and the wave driver
+                    // quiesces every lane before the fragment drops.
+                    rows_bufs: [RawSlice::new(b0), RawSlice::new(b1)],
+                };
+                Ok(Box::new(PathfinderFragment { space, bufs }))
+            }
+            WorkloadKind::Nw { reference, penalty } => {
+                let spec = reg
+                    .get("nw")
+                    .ok_or_else(|| anyhow!("missing nw artifact"))?
+                    .clone();
+                let b = spec.meta_u64("block")? as usize;
+                let baked = spec.meta_u64("penalty")? as i32;
+                if penalty != baked {
+                    bail!("nw: penalty {penalty} != artifact's baked {baked}");
+                }
+                ensure!(!reference.is_empty(), "nw: empty reference matrix");
+                let n = reference.len() - 1;
+                if n == 0 || n % b != 0 {
+                    bail!("nw: interior size {n} not a (non-zero) multiple of block {b}");
+                }
+                artifacts.push("nw".into());
+                let stride = n + 1;
+                let mut refm = Vec::with_capacity(stride * stride);
+                for row in &reference {
+                    refm.extend_from_slice(row);
+                }
+                let mut score = vec![0i32; stride * stride];
+                for j in 0..=n {
+                    score[j] = -(j as i32) * penalty;
+                }
+                for i in 0..=n {
+                    score[i * stride] = -(i as i32) * penalty;
+                }
+                let space = NwSpace {
+                    artifact: Arc::from("nw"),
+                    nb: n / b,
+                    b,
+                    stride,
+                    refm,
+                    // SAFETY: `score` moves into the fragment; heap
+                    // stable, driver quiesces before drop.
+                    score: RawSlice::new(&mut score),
+                };
+                Ok(Box::new(NwFragment { space, score, stride }))
+            }
+            WorkloadKind::Srad { img, steps } => {
+                let red_spec = reg
+                    .get("sum_sumsq")
+                    .ok_or_else(|| anyhow!("missing sum_sumsq artifact"))?
+                    .clone();
+                let rblock = red_spec.meta_u64("block")? as usize;
+                let sten_spec = reg
+                    .get("srad")
+                    .ok_or_else(|| anyhow!("missing srad artifact"))?
+                    .clone();
+                let sblock = sten_spec.meta_u64("block")? as usize;
+                let halo = sten_spec.meta_u64("halo")? as usize;
+                let t_fused = sten_spec.meta_u64("steps")? as usize;
+                artifacts.push("sum_sumsq".into());
+                artifacts.push("srad".into());
+                let input = resolve_grid_input(img, upstream)?;
+                let steps = steps as usize;
+                let (bufs, ny, nx, grids) = double_buffer(input);
+                let rorigins = block_origins_2d(ny, nx, rblock);
+                let nrtiles = rorigins.len();
+                let space = SradSpace {
+                    red_artifact: Arc::from("sum_sumsq"),
+                    sten_artifact: Arc::from("srad"),
+                    steps,
+                    ny,
+                    nx,
+                    cells: (ny * nx) as f64,
+                    rblock,
+                    rorigins,
+                    sblock,
+                    halo,
+                    tile: sblock + 2 * halo,
+                    t_fused,
+                    boundary: boundary_of(&sten_spec),
+                    sorigins: block_origins_2d(ny, nx, sblock),
+                    snbx: nx.div_ceil(sblock),
+                    bufs,
+                    partials: (0..steps * nrtiles)
+                        .map(|_| SyncCell(UnsafeCell::new((0.0, 0.0))))
+                        .collect(),
+                    pools: TensorPools::default(),
+                };
+                Ok(Box::new(SradFragment { space, _grids: grids }))
+            }
+            WorkloadKind::Lud { a } => {
+                let spec = reg
+                    .get("lud_internal")
+                    .ok_or_else(|| anyhow!("missing lud artifacts"))?
+                    .clone();
+                let b = spec.meta_u64("block")? as usize;
+                let n = a.len();
+                if n == 0 || n % b != 0 {
+                    bail!("lud: size {n} not a (non-zero) multiple of block {b}");
+                }
+                for name in ["lud_diagonal", "lud_perimeter_row", "lud_perimeter_col", "lud_internal"] {
+                    artifacts.push(name.into());
+                }
+                let mut m = Vec::with_capacity(n * n);
+                for row in &a {
+                    m.extend_from_slice(row);
+                }
+                let space = LudSpace {
+                    diagonal: Arc::from("lud_diagonal"),
+                    perim_row: Arc::from("lud_perimeter_row"),
+                    perim_col: Arc::from("lud_perimeter_col"),
+                    internal: Arc::from("lud_internal"),
+                    nb: n / b,
+                    b,
+                    n,
+                    // SAFETY: `m` moves into the fragment; heap stable,
+                    // driver quiesces before drop.
+                    m: RawSlice::new(&mut m),
+                };
+                Ok(Box::new(LudFragment { space, m, n }))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FusedSpace: the spliced graph a Chain runs as
+// ---------------------------------------------------------------------------
+
+/// Several fragments spliced into one [`WaveGraph`]/[`WaveSpace`]:
+/// fragment `k`'s waves occupy the global range
+/// `starts[k] .. starts[k] + frags[k].waves()`, its own edges shift by
+/// `starts[k]`, and piped stages gain precomputed **seam edges** from
+/// their first-wave blocks to the upstream fragment's final writers.
+pub(crate) struct FusedSpace {
+    frags: Vec<Box<dyn Fragment>>,
+    starts: Vec<usize>,
+    total_waves: usize,
+    /// `seams[k][i]`: extra global (wave, index) predecessors of
+    /// fragment `k`'s first-wave block `i` (empty vec when stage `k`
+    /// is not piped).
+    seams: Vec<Vec<Vec<(usize, usize)>>>,
+    /// `piped[k]`: stage `k` consumes stage `k-1`'s output in place.
+    piped: Vec<bool>,
+}
+
+impl FusedSpace {
+    /// Splice fragments into one graph, wiring the cross-app seam
+    /// edges of every piped stage (`piped[0]` must be false — the
+    /// lowering rejects `GridInput::Upstream` on a chain head).
+    ///
+    /// Seam edges target the **effective producer**: a zero-wave piped
+    /// stage writes nothing and merely forwards its upstream's buffer
+    /// through `out_grid`, so the splice walks past such stages until
+    /// it finds the fragment whose blocks actually wrote the shared
+    /// buffer — otherwise a downstream stage would race the real
+    /// writer under [`PassMode::Pipelined`].
+    pub(crate) fn splice(frags: Vec<Box<dyn Fragment>>, piped: Vec<bool>) -> FusedSpace {
+        debug_assert_eq!(frags.len(), piped.len());
+        debug_assert!(!piped.first().copied().unwrap_or(false));
+        let mut starts = Vec::with_capacity(frags.len());
+        let mut total = 0usize;
+        for f in &frags {
+            starts.push(total);
+            total += f.waves();
+        }
+        let mut seams: Vec<Vec<Vec<(usize, usize)>>> = Vec::with_capacity(frags.len());
+        for (k, frag) in frags.iter().enumerate() {
+            if !piped[k] || frag.waves() == 0 {
+                seams.push(Vec::new());
+                continue;
+            }
+            // Walk past zero-wave piped forwarders to the fragment
+            // that last wrote (or seeded) the buffer this stage reads.
+            let mut p = k - 1;
+            while p > 0 && piped[p] && frags[p].waves() == 0 {
+                p -= 1;
+            }
+            let up = &frags[p];
+            let up_start = starts[p];
+            let mut per_block = Vec::with_capacity(frag.wave_len(0));
+            for i in 0..frag.wave_len(0) {
+                let mut preds = Vec::new();
+                if let Some(rect) = frag.seam_in_rect(i) {
+                    up.seam_out(rect, &mut |w, j| preds.push((up_start + w, j)));
+                }
+                per_block.push(preds);
+            }
+            seams.push(per_block);
+        }
+        FusedSpace { frags, starts, total_waves: total, seams, piped }
+    }
+
+    /// Map a global wave to (fragment, local wave).
+    fn locate(&self, w: usize) -> (usize, usize) {
+        let k = self.starts.partition_point(|&s| s <= w) - 1;
+        (k, w - self.starts[k])
+    }
+
+    /// One output per stage, in chain order; stages whose grid was
+    /// consumed in place by the next stage report
+    /// [`WorkloadOutput::Piped`].  Only sound after the drive has
+    /// quiesced.
+    pub(crate) fn outputs(&self) -> Vec<WorkloadOutput> {
+        (0..self.frags.len())
+            .map(|k| {
+                if self.piped.get(k + 1).copied().unwrap_or(false) {
+                    WorkloadOutput::Piped
+                } else {
+                    self.frags[k].output()
+                }
+            })
+            .collect()
+    }
+}
+
+impl WaveGraph for FusedSpace {
+    fn waves(&self) -> usize {
+        self.total_waves
+    }
+
+    fn wave_len(&self, w: usize) -> usize {
+        let (k, lw) = self.locate(w);
+        self.frags[k].wave_len(lw)
+    }
+
+    fn visit_preds(&self, w: usize, i: usize, f: &mut dyn FnMut(usize, usize)) {
+        let (k, lw) = self.locate(w);
+        let start = self.starts[k];
+        self.frags[k].visit_preds(lw, i, &mut |v, j| f(v + start, j));
+        if lw == 0 {
+            if let Some(per_block) = self.seams[k].get(i) {
+                for &(v, j) in per_block {
+                    f(v, j);
+                }
+            }
+        }
+    }
+}
+
+impl WaveSpace for FusedSpace {
+    fn artifact(&self, w: usize, i: usize) -> Arc<str> {
+        let (k, lw) = self.locate(w);
+        self.frags[k].artifact(lw, i)
+    }
+
+    unsafe fn extract(&self, w: usize, i: usize) -> Vec<Tensor> {
+        let (k, lw) = self.locate(w);
+        self.frags[k].extract(lw, i)
+    }
+
+    unsafe fn write(&self, w: usize, i: usize, out: &[Tensor]) {
+        let (k, lw) = self.locate(w);
+        self.frags[k].write(lw, i, out)
+    }
+
+    fn cell_updates(&self, w: usize, i: usize) -> u64 {
+        let (k, lw) = self.locate(w);
+        self.frags[k].cell_updates(lw, i)
+    }
+
+    fn recycle(&self, w: usize, i: usize, inputs: Vec<Tensor>) {
+        let (k, lw) = self.locate(w);
+        self.frags[k].recycle(lw, i, inputs)
+    }
+
+    fn pool_counters(&self) -> (u64, u64, u64, u64) {
+        let mut t = (0u64, 0u64, 0u64, 0u64);
+        for f in &self.frags {
+            let c = f.pool_counters();
+            t.0 += c.0;
+            t.1 += c.1;
+            t.2 += c.2;
+            t.3 += c.3;
+        }
+        t
+    }
+
+    fn wants_f32(&self, w: usize, i: usize) -> bool {
+        let (k, lw) = self.locate(w);
+        self.frags[k].wants_f32(lw, i)
+    }
+
+    unsafe fn write_f32(&self, w: usize, i: usize, out: &[f32]) {
+        let (k, lw) = self.locate(w);
+        self.frags[k].write_f32(lw, i, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::passdriver::drive_wave_local;
+
+    fn blur_meta() -> StencilMeta {
+        StencilMeta {
+            block: 4,
+            halo: 1,
+            tile: 6,
+            t_fused: 1,
+            boundary: Boundary::Zero,
+        }
+    }
+
+    fn blur_frag(input: StencilInput, passes: usize) -> Stencil2dFragment {
+        Stencil2dFragment::build(Arc::from("blur"), &blur_meta(), input, None, None, passes)
+    }
+
+    /// T=1 five-point average over a halo'd 6x6 tile -> 4x4 interior
+    /// (same kernel as the passdriver scheduling tests).
+    fn blur_kernel(t: &[f32]) -> Vec<f32> {
+        let (tile, halo, block) = (6usize, 1usize, 4usize);
+        let mut out = vec![0.0f32; block * block];
+        for by in 0..block {
+            for bx in 0..block {
+                let y = by + halo;
+                let x = bx + halo;
+                out[by * block + bx] = 0.2
+                    * (t[y * tile + x]
+                        + t[(y - 1) * tile + x]
+                        + t[(y + 1) * tile + x]
+                        + t[y * tile + x - 1]
+                        + t[y * tile + x + 1]);
+            }
+        }
+        out
+    }
+
+    fn blur_reference(mut g: Grid2D, passes: usize) -> Grid2D {
+        for _ in 0..passes {
+            let mut next = Grid2D::zeros(g.ny, g.nx);
+            for y in 0..g.ny as isize {
+                for x in 0..g.nx as isize {
+                    let r = |yy: isize, xx: isize| g.read(yy, xx, Boundary::Zero);
+                    next.data[(y * g.nx as isize + x) as usize] = 0.2
+                        * (r(y, x) + r(y - 1, x) + r(y + 1, x) + r(y, x - 1) + r(y, x + 1));
+                }
+            }
+            g = next;
+        }
+        g
+    }
+
+    fn rand_grid(ny: usize, nx: usize, seed: u64) -> Grid2D {
+        let mut rng = crate::testutil::Rng::new(seed);
+        Grid2D { ny, nx, data: rng.vec_f32(ny * nx, 0.0, 1.0) }
+    }
+
+    /// Structural contract of any fused graph: every edge points to a
+    /// strictly earlier wave and an in-range block.
+    fn check_fused_graph(g: &FusedSpace) {
+        for w in 0..g.waves() {
+            for i in 0..g.wave_len(w) {
+                g.visit_preds(w, i, &mut |v, j| {
+                    assert!(v < w, "pred wave {v} not before ({w},{i})");
+                    assert!(j < g.wave_len(v), "pred ({v},{j}) out of range");
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn splice_seam_edges_target_upstream_final_wave() {
+        // 8x8 grid, 4-blocks -> 2x2 lattice.  A runs 2 passes, B is
+        // piped onto A's output: every first-wave block of B reads a
+        // halo'd 6x6 rect that overlaps all four A interiors, so its
+        // seam preds are exactly A's final wave (global wave 1).
+        let a = blur_frag(StencilInput::Own(rand_grid(8, 8, 1)), 2);
+        let out = a.out_grid().unwrap();
+        let b = blur_frag(StencilInput::Piped(out), 3);
+        let fused = FusedSpace::splice(vec![Box::new(a), Box::new(b)], vec![false, true]);
+
+        assert_eq!(fused.waves(), 5);
+        check_fused_graph(&fused);
+        // B's first wave is global wave 2; its blocks have no
+        // intra-fragment preds (local wave 0), only seam edges.
+        for i in 0..4 {
+            let mut preds = Vec::new();
+            fused.visit_preds(2, i, &mut |v, j| preds.push((v, j)));
+            preds.sort_unstable();
+            assert_eq!(
+                preds,
+                vec![(1, 0), (1, 1), (1, 2), (1, 3)],
+                "seam preds of B block {i} must be A's final wave"
+            );
+        }
+        // B's second wave (global 3) has only intra-B halo edges,
+        // shifted to global numbering.
+        let mut preds = Vec::new();
+        fused.visit_preds(3, 0, &mut |v, j| preds.push((v, j)));
+        assert!(preds.iter().all(|&(v, _)| v == 2), "intra-B edges shift to global waves");
+    }
+
+    #[test]
+    fn splice_seam_clips_to_overlapping_tail_blocks_only() {
+        // 16x16 grid, 4-blocks -> 4x4 lattice, halo 1: B's corner
+        // block (0,0) reads rows/cols -1..5, overlapping only A's
+        // interiors (0,0), (0,1), (1,0), (1,1).
+        let a = blur_frag(StencilInput::Own(rand_grid(16, 16, 2)), 1);
+        let out = a.out_grid().unwrap();
+        let b = blur_frag(StencilInput::Piped(out), 1);
+        let fused = FusedSpace::splice(vec![Box::new(a), Box::new(b)], vec![false, true]);
+        check_fused_graph(&fused);
+        let mut preds = Vec::new();
+        fused.visit_preds(1, 0, &mut |v, j| preds.push((v, j)));
+        preds.sort_unstable();
+        assert_eq!(preds, vec![(0, 0), (0, 1), (0, 4), (0, 5)]);
+        // An interior block (lattice (1,1)) overlaps a 3x3 patch.
+        let mut preds = Vec::new();
+        fused.visit_preds(1, 5, &mut |v, j| preds.push((v, j)));
+        assert_eq!(preds.len(), 9);
+    }
+
+    #[test]
+    fn splice_without_piping_adds_no_seam_edges() {
+        let a = blur_frag(StencilInput::Own(rand_grid(8, 8, 3)), 2);
+        let b = blur_frag(StencilInput::Own(rand_grid(8, 8, 4)), 2);
+        let fused = FusedSpace::splice(vec![Box::new(a), Box::new(b)], vec![false, false]);
+        check_fused_graph(&fused);
+        // B's first wave (global 2) has no predecessors at all: it
+        // seeds the ready frontier alongside A's wave 0.
+        for i in 0..4 {
+            let mut preds = Vec::new();
+            fused.visit_preds(2, i, &mut |v, j| preds.push((v, j)));
+            assert!(preds.is_empty(), "independent stage must seed immediately");
+        }
+    }
+
+    #[test]
+    fn fused_piped_chain_matches_sequential_reference_bitwise() {
+        // A (2 passes) feeding B (3 passes) through one spliced graph
+        // must equal 5 sequential blur passes, bitwise — the seam
+        // edges hand B exactly A's final buffer contents.
+        let init = rand_grid(12, 8, 7);
+        let want = blur_reference(init.clone(), 5);
+
+        let a = blur_frag(StencilInput::Own(init), 2);
+        let out = a.out_grid().unwrap();
+        let b = blur_frag(StencilInput::Piped(out), 3);
+        let fused = FusedSpace::splice(vec![Box::new(a), Box::new(b)], vec![false, true]);
+        let stats = drive_wave_local(
+            |_w, _i, inputs| {
+                Ok(vec![Tensor::F32(blur_kernel(inputs[0].as_f32()), vec![4, 4])])
+            },
+            &fused,
+            PassMode::Pipelined,
+            4,
+        )
+        .unwrap();
+        assert_eq!(stats.blocks as usize, 5 * 6, "2+3 passes of 3x2 blocks");
+
+        let outputs = fused.outputs();
+        assert_eq!(outputs.len(), 2);
+        assert_eq!(outputs[0], WorkloadOutput::Piped, "consumed stage reports Piped");
+        let got = outputs[1].clone().into_grid2d().expect("final stage yields a grid");
+        assert_eq!(got.data, want.data, "fused chain != sequential reference");
+    }
+
+    #[test]
+    fn fused_piped_chain_barrier_mode_matches_too() {
+        let init = rand_grid(8, 8, 9);
+        let want = blur_reference(init.clone(), 4);
+        let a = blur_frag(StencilInput::Own(init), 2);
+        let out = a.out_grid().unwrap();
+        let b = blur_frag(StencilInput::Piped(out), 2);
+        let fused = FusedSpace::splice(vec![Box::new(a), Box::new(b)], vec![false, true]);
+        let stats = drive_wave_local(
+            |_w, _i, inputs| {
+                Ok(vec![Tensor::F32(blur_kernel(inputs[0].as_f32()), vec![4, 4])])
+            },
+            &fused,
+            PassMode::Barrier,
+            4,
+        )
+        .unwrap();
+        assert!(stats.pipeline_depth_max <= 1, "barrier stays wave-serial");
+        let got = fused.outputs()[1].clone().into_grid2d().unwrap();
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn fused_independent_chain_overlaps_across_the_seam() {
+        // No seam edges: B's first wave seeds immediately, so even the
+        // sequential fallback dispatches B while A's later waves are
+        // incomplete — pipeline depth must exceed 1 across the seam.
+        let a = blur_frag(StencilInput::Own(rand_grid(8, 8, 11)), 2);
+        let b = blur_frag(StencilInput::Own(rand_grid(8, 8, 12)), 2);
+        let want_a = blur_reference(rand_grid(8, 8, 11), 2);
+        let want_b = blur_reference(rand_grid(8, 8, 12), 2);
+        let fused = FusedSpace::splice(vec![Box::new(a), Box::new(b)], vec![false, false]);
+        let stats = drive_wave_local(
+            |_w, _i, inputs| {
+                Ok(vec![Tensor::F32(blur_kernel(inputs[0].as_f32()), vec![4, 4])])
+            },
+            &fused,
+            PassMode::Pipelined,
+            4,
+        )
+        .unwrap();
+        assert!(
+            stats.pipeline_depth_max > 1,
+            "independent stage must overlap the upstream: depth {} <= 1",
+            stats.pipeline_depth_max
+        );
+        let outputs = fused.outputs();
+        assert_eq!(outputs[0].clone().into_grid2d().unwrap().data, want_a.data);
+        assert_eq!(outputs[1].clone().into_grid2d().unwrap().data, want_b.data);
+    }
+
+    #[test]
+    fn fused_zero_pass_upstream_hands_its_input_through() {
+        // A 0-pass upstream writes nothing: B splices onto the seeded
+        // input buffer with no seam edges, reading A's initial grid.
+        let init = rand_grid(8, 8, 13);
+        let want = blur_reference(init.clone(), 2);
+        let a = blur_frag(StencilInput::Own(init), 0);
+        let out = a.out_grid().unwrap();
+        let b = blur_frag(StencilInput::Piped(out), 2);
+        let fused = FusedSpace::splice(vec![Box::new(a), Box::new(b)], vec![false, true]);
+        assert_eq!(fused.waves(), 2);
+        check_fused_graph(&fused);
+        let _ = drive_wave_local(
+            |_w, _i, inputs| {
+                Ok(vec![Tensor::F32(blur_kernel(inputs[0].as_f32()), vec![4, 4])])
+            },
+            &fused,
+            PassMode::Pipelined,
+            4,
+        )
+        .unwrap();
+        let got = fused.outputs()[1].clone().into_grid2d().unwrap();
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn splice_walks_past_zero_wave_piped_forwarders() {
+        // A (1 pass) -> B (0 passes, piped) -> C (2 passes, piped):
+        // B writes nothing and forwards A's buffer, so C's seam edges
+        // must target A's final wave — not vanish (which would let C
+        // race A's writers under the pipelined schedule).
+        let init = rand_grid(8, 8, 17);
+        let want = blur_reference(init.clone(), 3);
+        let a = blur_frag(StencilInput::Own(init), 1);
+        let b = blur_frag(StencilInput::Piped(a.out_grid().unwrap()), 0);
+        let c = blur_frag(StencilInput::Piped(b.out_grid().unwrap()), 2);
+        let fused = FusedSpace::splice(
+            vec![Box::new(a), Box::new(b), Box::new(c)],
+            vec![false, true, true],
+        );
+        assert_eq!(fused.waves(), 3);
+        check_fused_graph(&fused);
+        // C's first wave is global wave 1; every block must depend on
+        // A's wave 0 (all four blocks overlap at this geometry).
+        for i in 0..4 {
+            let mut preds = Vec::new();
+            fused.visit_preds(1, i, &mut |v, j| preds.push((v, j)));
+            preds.sort_unstable();
+            assert_eq!(
+                preds,
+                vec![(0, 0), (0, 1), (0, 2), (0, 3)],
+                "C block {i} must be seam-ordered behind A's writers"
+            );
+        }
+        let _ = drive_wave_local(
+            |_w, _i, inputs| {
+                Ok(vec![Tensor::F32(blur_kernel(inputs[0].as_f32()), vec![4, 4])])
+            },
+            &fused,
+            PassMode::Pipelined,
+            4,
+        )
+        .unwrap();
+        let outputs = fused.outputs();
+        assert_eq!(outputs[0], WorkloadOutput::Piped);
+        assert_eq!(outputs[1], WorkloadOutput::Piped);
+        let got = outputs[2].clone().into_grid2d().unwrap();
+        assert_eq!(got.data, want.data, "forwarded chain != 3 sequential passes");
+    }
+
+    #[test]
+    fn srad_fragment_seam_rects_and_writers() {
+        // Build a graph-only SradSpace (handles never dereferenced)
+        // and check the seam geometry: in-rects are reduction tiles,
+        // out-writers are final-stencil-wave blocks overlapping.
+        let (ny, nx, rblock, sblock, steps) = (64usize, 48usize, 16usize, 32usize, 2usize);
+        let rorigins = block_origins_2d(ny, nx, rblock);
+        let nrtiles = rorigins.len();
+        let mut dummy = Grid2D::zeros(1, 1);
+        let h = unsafe { dummy.shared_writer() };
+        let space = SradSpace {
+            red_artifact: Arc::from("sum_sumsq"),
+            sten_artifact: Arc::from("srad"),
+            steps,
+            ny,
+            nx,
+            cells: (ny * nx) as f64,
+            rblock,
+            rorigins,
+            sblock,
+            halo: 2,
+            tile: sblock + 4,
+            t_fused: 1,
+            boundary: Boundary::Clamp,
+            sorigins: block_origins_2d(ny, nx, sblock),
+            snbx: nx.div_ceil(sblock),
+            bufs: [h, h],
+            partials: (0..steps * nrtiles)
+                .map(|_| SyncCell(UnsafeCell::new((0.0, 0.0))))
+                .collect(),
+            pools: TensorPools::default(),
+        };
+        let frag = SradFragment { space, _grids: vec![dummy] };
+        // tile 4 on the 4x3 tile lattice has origin (16, 16): inside
+        // stencil block (0, 0) only.
+        assert_eq!(frag.space.rorigins[4], (16, 16));
+        assert_eq!(
+            frag.seam_in_rect(4),
+            Some(Rect { y0: 16, y1: 32, x0: 16, x1: 32 })
+        );
+        let mut writers = Vec::new();
+        frag.seam_out(Rect { y0: 16, y1: 32, x0: 16, x1: 32 }, &mut |w, j| {
+            writers.push((w, j))
+        });
+        assert_eq!(writers, vec![(3, 0)], "final stencil wave is 2*steps-1 = 3");
+        // A rect straddling all four stencil blocks.
+        writers.clear();
+        frag.seam_out(Rect { y0: 30, y1: 34, x0: 30, x1: 34 }, &mut |w, j| {
+            writers.push((w, j))
+        });
+        assert_eq!(writers, vec![(3, 0), (3, 1), (3, 2), (3, 3)]);
+    }
+
+    #[test]
+    fn chain_combinator_orders_stages() {
+        let c = Workload::nw(vec![vec![0; 2]; 2], 10)
+            .then(Workload::lud(vec![vec![0.0; 2]; 2]))
+            .then(Workload::pathfinder(vec![vec![0; 2]; 2]));
+        assert_eq!(c.len(), 3);
+        assert!(!c.is_empty());
+        let single: Chain = Workload::lud(vec![vec![0.0; 2]; 2]).into();
+        assert_eq!(single.len(), 1);
+    }
+
+    #[test]
+    fn upstream_without_a_producer_is_rejected() {
+        assert!(resolve_grid_input(GridInput::Upstream, None).is_err());
+        // And through a fragment that produces no grid:
+        let nw = NwFragment {
+            space: NwSpace {
+                artifact: Arc::from("nw"),
+                nb: 1,
+                b: 2,
+                stride: 3,
+                refm: vec![0; 9],
+                score: RawSlice::new(&mut []),
+            },
+            score: vec![0; 9],
+            stride: 3,
+        };
+        assert!(resolve_grid_input(GridInput::Upstream, Some(&nw)).is_err());
+    }
+
+    #[test]
+    fn session_builder_rejects_missing_artifact_dir() {
+        let r = Session::builder()
+            .artifacts("/nonexistent/definitely/not/here")
+            .lanes(2)
+            .build();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn run_report_accessors() {
+        let report = RunReport {
+            metrics: Metrics::default(),
+            elapsed: Duration::ZERO,
+            outputs: vec![WorkloadOutput::Piped, WorkloadOutput::Row(vec![1, 2])],
+        };
+        assert_eq!(report.output(), &WorkloadOutput::Row(vec![1, 2]));
+        let (_, out) = report.into_parts();
+        assert_eq!(out, Some(WorkloadOutput::Row(vec![1, 2])));
+    }
+}

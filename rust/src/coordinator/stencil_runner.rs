@@ -36,8 +36,13 @@
 //! *and* the i32 boundary descriptors), so steady-state passes allocate
 //! nothing for tile extraction (`Metrics::pool_hits` / `pool_misses` /
 //! `desc_pool_hits` / `desc_pool_misses` expose the reuse rates).
-
-use std::sync::Arc;
+//!
+//! Since PR 4 the public front door is the typed builder API in
+//! [`coordinator::session`](crate::coordinator::session): every pooled
+//! `run_*` entry point here is a `#[deprecated]` shim over
+//! [`Session`](crate::coordinator::session::Session) (kept one release),
+//! and the single-[`Runtime`] runners remain only as the caller-thread
+//! reference implementations the bit-identity tests compare against.
 
 use anyhow::{anyhow, bail};
 
@@ -67,15 +72,16 @@ pub(crate) fn boundary_of(spec: &crate::runtime::ArtifactSpec) -> Boundary {
 }
 
 /// Static stencil parameters baked into an artifact's manifest entry.
-struct StencilMeta {
-    block: usize,
-    halo: usize,
-    tile: usize,
-    t_fused: u64,
-    boundary: Boundary,
+/// (Shared with the `Session` lowering in `coordinator::session`.)
+pub(crate) struct StencilMeta {
+    pub(crate) block: usize,
+    pub(crate) halo: usize,
+    pub(crate) tile: usize,
+    pub(crate) t_fused: u64,
+    pub(crate) boundary: Boundary,
 }
 
-fn stencil_meta(
+pub(crate) fn stencil_meta(
     spec: &crate::runtime::ArtifactSpec,
     has_aux: bool,
     steps: u64,
@@ -90,6 +96,27 @@ fn stencil_meta(
     if steps % t_fused != 0 {
         bail!("{}: steps {steps} not a multiple of fused T={t_fused}", spec.name);
     }
+    Ok(StencilMeta {
+        block,
+        halo,
+        tile: block + 2 * halo,
+        t_fused,
+        boundary: boundary_of(spec),
+    })
+}
+
+/// Manifest parameters of a scalar-carrying stencil artifact (SRAD's
+/// q0² stage): like [`stencil_meta`] but without the aux/step-count
+/// checks — the workload always advances exactly one fused pass.
+/// (Shared with the `Session` lowering in `coordinator::session` so
+/// the deprecated reference path and the builder path can never
+/// desynchronize.)
+pub(crate) fn scalar_stencil_meta(
+    spec: &crate::runtime::ArtifactSpec,
+) -> crate::Result<StencilMeta> {
+    let block = spec.meta_u64("block")? as usize;
+    let halo = spec.meta_u64("halo")? as usize;
+    let t_fused = spec.meta_u64("steps")?;
     Ok(StencilMeta {
         block,
         halo,
@@ -144,14 +171,16 @@ pub(crate) fn extractor_count(lanes: usize) -> usize {
 /// 2D stencil configuration for the pass driver: the block plan, the
 /// `r·T` halo'd extraction (main grid + optional aux + optional
 /// per-step scalar + i32 boundary descriptor) and interior write-back.
-struct Space2D {
-    origins: Vec<(usize, usize)>,
+/// (Shared with the `Session` stencil fragments in
+/// `coordinator::session`, which drive it through the wave scheduler.)
+pub(crate) struct Space2D {
+    pub(crate) origins: Vec<(usize, usize)>,
     lattice: [usize; 3],
     reach: [usize; 3],
-    ny: usize,
-    nx: usize,
-    block: usize,
-    halo: usize,
+    pub(crate) ny: usize,
+    pub(crate) nx: usize,
+    pub(crate) block: usize,
+    pub(crate) halo: usize,
     tile: usize,
     boundary: Boundary,
     /// Raw read view of the aux (e.g. power) grid — never written.
@@ -162,7 +191,7 @@ struct Space2D {
 }
 
 impl Space2D {
-    fn new(
+    pub(crate) fn new(
         ny: usize,
         nx: usize,
         m: &StencilMeta,
@@ -253,14 +282,14 @@ impl StencilSpace for Space2D {
 }
 
 /// 3D counterpart of [`Space2D`] (cubic tiles, 6-entry descriptor).
-struct Space3D {
-    origins: Vec<(usize, usize, usize)>,
+pub(crate) struct Space3D {
+    pub(crate) origins: Vec<(usize, usize, usize)>,
     lattice: [usize; 3],
     reach: [usize; 3],
-    nz: usize,
-    ny: usize,
-    nx: usize,
-    block: usize,
+    pub(crate) nz: usize,
+    pub(crate) ny: usize,
+    pub(crate) nx: usize,
+    pub(crate) block: usize,
     halo: usize,
     tile: usize,
     boundary: Boundary,
@@ -269,7 +298,7 @@ struct Space3D {
 }
 
 impl Space3D {
-    fn new(
+    pub(crate) fn new(
         nz: usize,
         ny: usize,
         nx: usize,
@@ -361,6 +390,13 @@ impl StencilSpace for Space3D {
 ///
 /// `aux` is the optional second input stream (Hotspot's power grid, same
 /// extents).  Returns the final grid and metrics.
+///
+/// Deprecated: build a [`Session`](crate::coordinator::session::Session)
+/// and run [`Workload::stencil2d`](crate::coordinator::session::Workload::stencil2d)
+/// instead.  This single-[`Runtime`] path is kept (one release) as the
+/// caller-thread reference implementation the bit-identity tests pin
+/// the pooled engine against.
+#[deprecated(note = "use Session::builder() with Workload::stencil2d (see coordinator::session)")]
 pub fn run_stencil2d(
     rt: &Runtime,
     artifact: &str,
@@ -395,10 +431,15 @@ pub fn run_stencil2d(
 }
 
 /// Lane-parallel variant of [`run_stencil2d`] with an explicit
-/// [`PassMode`]: `Pipelined` (the default of [`run_stencil2d_lanes`])
-/// lets pass-`p+1` blocks start as soon as their halo-overlapping
-/// pass-`p` predecessors wrote back; `Barrier` reproduces the PR 1
-/// drain-between-passes schedule (the CI perf-gate baseline).
+/// [`PassMode`].  Deprecated shim: forwards to a borrowed
+/// [`Session`](crate::coordinator::session::Session), which lowers the
+/// stencil onto the wavefront pass driver (one wave per pass, the same
+/// `r·T` halo edges) — bit-identical to the pre-Session `drive_pool`
+/// schedule for any lane count and either mode.  (Shim cost: the
+/// by-value `Workload` API makes this clone the aux grid per call —
+/// the old path borrowed it; port to `Session` to avoid the copy.)
+#[deprecated(note = "use Session::over(pool).with_mode(mode) with Workload::stencil2d")]
+#[allow(deprecated)]
 pub fn run_stencil2d_lanes_mode(
     pool: &RuntimePool,
     artifact: &str,
@@ -407,47 +448,21 @@ pub fn run_stencil2d_lanes_mode(
     steps: u64,
     mode: PassMode,
 ) -> crate::Result<(Grid2D, Metrics)> {
-    let spec = pool
-        .registry()
-        .get(artifact)
-        .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
-        .clone();
-    let m = stencil_meta(&spec, aux.is_some(), steps)?;
-    let passes = (steps / m.t_fused) as usize;
-
-    // Compile on every lane outside the timed region.
-    pool.warmup_artifact(artifact)?;
-
-    let mut cur = grid;
-    let mut next = Grid2D::zeros(cur.ny, cur.nx);
-    let cell_updates = (cur.ny * cur.nx) as u64 * steps;
-    // SAFETY: as in run_stencil2d; additionally every lane-side write
-    // targets a distinct origin on the block lattice (disjoint
-    // interiors) and the driver's IdleGuard drains the lanes before
-    // this frame's grids can be freed, even on an unwinding exit.
-    let space = Arc::new(Space2D::new(
-        cur.ny, cur.nx, &m, aux.map(|a| unsafe { a.shared_view() }), None,
-    ));
-    let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
-    let metrics = passdriver::drive_pool(
-        pool,
-        artifact,
-        &space,
-        handles,
-        passes,
-        mode,
-        extractor_count(pool.lanes()),
-        cell_updates,
-    )?;
-    Ok((if passes % 2 == 0 { cur } else { next }, metrics))
+    use crate::coordinator::session::{Session, Workload, WorkloadOutput};
+    let report = Session::over(pool)
+        .with_mode(mode)
+        .run(Workload::stencil2d(artifact, grid, aux.cloned(), steps))?;
+    match report.into_parts() {
+        (metrics, Some(WorkloadOutput::Grid2D(g))) => Ok((g, metrics)),
+        _ => Err(anyhow!("stencil2d workload produced no 2D grid output")),
+    }
 }
 
-/// Lane-parallel variant of [`run_stencil2d`]: extractor workers feed
-/// the pool's execute lanes through its bounded job queue; each lane
-/// runs the compute unit on its own PJRT client and writes its block
-/// back itself, off the other lanes' critical path.  Passes are
-/// cross-pass pipelined (no drain between passes).  Bit-identical to
-/// the single-runtime path for any lane count.
+/// Lane-parallel variant of [`run_stencil2d`]: deprecated shim over
+/// the [`Session`](crate::coordinator::session::Session) API with the
+/// default [`PassMode::Pipelined`] schedule.
+#[deprecated(note = "use Session::builder() with Workload::stencil2d")]
+#[allow(deprecated)]
 pub fn run_stencil2d_lanes(
     pool: &RuntimePool,
     artifact: &str,
@@ -459,6 +474,10 @@ pub fn run_stencil2d_lanes(
 }
 
 /// Run `steps` time steps of a 3D stencil artifact over `grid`.
+///
+/// Deprecated: see [`run_stencil2d`] — kept as the single-[`Runtime`]
+/// reference path for the bit-identity tests.
+#[deprecated(note = "use Session::builder() with Workload::stencil3d (see coordinator::session)")]
 pub fn run_stencil3d(
     rt: &Runtime,
     artifact: &str,
@@ -489,7 +508,11 @@ pub fn run_stencil3d(
 }
 
 /// Lane-parallel variant of [`run_stencil3d`] with an explicit
-/// [`PassMode`]; see [`run_stencil2d_lanes_mode`].
+/// [`PassMode`].  Deprecated shim over the
+/// [`Session`](crate::coordinator::session::Session) API; see
+/// [`run_stencil2d_lanes_mode`] — including its aux-clone shim cost.
+#[deprecated(note = "use Session::over(pool).with_mode(mode) with Workload::stencil3d")]
+#[allow(deprecated)]
 pub fn run_stencil3d_lanes_mode(
     pool: &RuntimePool,
     artifact: &str,
@@ -498,39 +521,21 @@ pub fn run_stencil3d_lanes_mode(
     steps: u64,
     mode: PassMode,
 ) -> crate::Result<(Grid3D, Metrics)> {
-    let spec = pool
-        .registry()
-        .get(artifact)
-        .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
-        .clone();
-    let m = stencil_meta(&spec, aux.is_some(), steps)?;
-    let passes = (steps / m.t_fused) as usize;
-
-    pool.warmup_artifact(artifact)?;
-
-    let mut cur = grid;
-    let mut next = Grid3D::zeros(cur.nz, cur.ny, cur.nx);
-    let cell_updates = (cur.nz * cur.ny * cur.nx) as u64 * steps;
-    // SAFETY: as in run_stencil2d_lanes_mode.
-    let space = Arc::new(Space3D::new(
-        cur.nz, cur.ny, cur.nx, &m, aux.map(|a| unsafe { a.shared_view() }),
-    ));
-    let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
-    let metrics = passdriver::drive_pool(
-        pool,
-        artifact,
-        &space,
-        handles,
-        passes,
-        mode,
-        extractor_count(pool.lanes()),
-        cell_updates,
-    )?;
-    Ok((if passes % 2 == 0 { cur } else { next }, metrics))
+    use crate::coordinator::session::{Session, Workload, WorkloadOutput};
+    let report = Session::over(pool)
+        .with_mode(mode)
+        .run(Workload::stencil3d(artifact, grid, aux.cloned(), steps))?;
+    match report.into_parts() {
+        (metrics, Some(WorkloadOutput::Grid3D(g))) => Ok((g, metrics)),
+        _ => Err(anyhow!("stencil3d workload produced no 3D grid output")),
+    }
 }
 
-/// Lane-parallel variant of [`run_stencil3d`]; see
-/// [`run_stencil2d_lanes`] for the engine layout.
+/// Lane-parallel variant of [`run_stencil3d`]: deprecated shim over
+/// the [`Session`](crate::coordinator::session::Session) API with the
+/// default [`PassMode::Pipelined`] schedule.
+#[deprecated(note = "use Session::builder() with Workload::stencil3d")]
+#[allow(deprecated)]
 pub fn run_stencil3d_lanes(
     pool: &RuntimePool,
     artifact: &str,
@@ -544,6 +549,14 @@ pub fn run_stencil3d_lanes(
 /// One pass of a 2D stencil artifact that takes a run-time scalar operand
 /// (SRAD's q0² reduction result, shape `[steps]`).  Advances the grid by
 /// the artifact's fused step count.
+///
+/// Deprecated: see
+/// [`Workload::stencil2d_with_scalar`](crate::coordinator::session::Workload::stencil2d_with_scalar)
+/// — kept as the single-[`Runtime`] reference path used by [`run_srad`]
+/// (itself deprecated).
+///
+/// [`run_srad`]: crate::coordinator::apps::run_srad
+#[deprecated(note = "use Session with Workload::stencil2d_with_scalar (see coordinator::session)")]
 pub fn run_stencil2d_with_scalar(
     rt: &Runtime,
     artifact: &str,
@@ -555,29 +568,20 @@ pub fn run_stencil2d_with_scalar(
         .get(artifact)
         .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
         .clone();
-    let block = spec.meta_u64("block")? as usize;
-    let halo = spec.meta_u64("halo")? as usize;
-    let t_fused = spec.meta_u64("steps")?;
-    let m = StencilMeta {
-        block,
-        halo,
-        tile: block + 2 * halo,
-        t_fused,
-        boundary: boundary_of(&spec),
-    };
+    let m = scalar_stencil_meta(&spec)?;
 
     rt.executable(artifact)?;
 
     let mut cur = grid;
     let mut next = Grid2D::zeros(cur.ny, cur.nx);
-    let cell_updates = (cur.ny * cur.nx) as u64 * t_fused;
+    let cell_updates = (cur.ny * cur.nx) as u64 * m.t_fused;
     // SAFETY: as in run_stencil2d.
     let space = Space2D::new(
         cur.ny,
         cur.nx,
         &m,
         None,
-        Some(vec![scalar; t_fused as usize]),
+        Some(vec![scalar; m.t_fused as usize]),
     );
     let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
     let metrics = passdriver::drive_single(rt, artifact, &space, handles, 1, cell_updates)?;

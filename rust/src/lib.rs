@@ -15,6 +15,14 @@
 //!   software `PAR` knob).  Python never runs at request time.
 //! * [`coordinator`] — the L3 system: grid decomposition with halos,
 //!   overlapped spatial blocking, temporal-block streaming, metrics.
+//!   Its public execution surface is the [`coordinator::session`]
+//!   builder API (`Session` / `Workload` / `Chain`): one typed front
+//!   door that lowers every workload — stencils and the Ch. 4 apps
+//!   alike — onto the dependency-tracked wave driver, and fuses
+//!   chained workloads into a single wave graph.  The old `run_*`
+//!   free functions are `#[deprecated]` shims over it (kept one
+//!   release); this crate denies `deprecated`, so only those shim
+//!   modules may still reference them.
 //! * [`perfmodel`] — the thesis's general FPGA performance model
 //!   (Eqs. 3-1 … 3-8) plus area / f_max / power models.
 //! * [`device`] — device database (Tables 4-1, 4-2, 5-3, 5-4).
@@ -24,6 +32,11 @@
 //!   optimization levels × kernel models).
 //! * [`baseline`] — CPU/GPU/Xeon Phi roofline comparators.
 //! * [`report`] — regenerates every table and figure of the evaluation.
+
+// The deprecated `run_*` entry points may only be referenced from
+// their own shim modules (scoped `#[allow(deprecated)]`); everything
+// else in the crate must go through `coordinator::session`.
+#![deny(deprecated)]
 
 pub mod baseline;
 pub mod benchutil;

@@ -6,8 +6,16 @@
 //! checks, now covering the *whole* request path: manifest parsing,
 //! literal marshalling, halo extraction, block scheduling, temporal
 //! blocking, write-back and reassembly.
+//!
+//! The deprecated `run_*` entry points are exercised here ON PURPOSE:
+//! they are one-release compatibility shims over the `Session` API and
+//! these tests pin their bit-identity to both the single-`Runtime`
+//! reference paths and the new builder (see the `session_*` and
+//! `fused_*` tests at the end).
+#![allow(deprecated)]
 
 use fpga_hpc::coordinator::grid::{Grid2D, Grid3D};
+use fpga_hpc::coordinator::session::{GridInput, Session, Workload, WorkloadOutput};
 use fpga_hpc::coordinator::{apps, reference, stencil_runner, PassMode};
 use fpga_hpc::runtime::{Runtime, RuntimePool, Tensor};
 use fpga_hpc::testutil::{assert_allclose, max_abs_diff, Rng};
@@ -540,6 +548,272 @@ fn runtime_stats_accumulate() {
     let stats = rt.stats();
     assert_eq!(stats.executions, 1);
     assert!(stats.execute_ms > 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// Session API: the typed front door (PR 4)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn session_runs_every_workload_bit_identical_to_old_entry_points() {
+    // Acceptance: every workload previously reachable via a `run_*`
+    // free function is runnable through Session, bit-identical.  The
+    // single-Runtime runners are the independent references here (the
+    // pooled `run_*_lanes` shims forward to Session already).
+    let rt = runtime();
+    let pool = RuntimePool::open("artifacts", 4).unwrap();
+    let session = Session::over(&pool);
+
+    // stencil2d (aux stream) + stencil3d
+    let temp = rand_grid2d(512, 512, 21, 60.0, 90.0);
+    let power = rand_grid2d(512, 512, 22, 0.0, 1.0);
+    let (single, _) =
+        stencil_runner::run_stencil2d(&rt, "hotspot2d", temp.clone(), Some(&power), 8).unwrap();
+    let got = session
+        .run(Workload::stencil2d("hotspot2d", temp.clone(), Some(power.clone()), 8))
+        .unwrap()
+        .into_output()
+        .into_grid2d()
+        .unwrap();
+    assert_eq!(got.data, single.data, "session hotspot2d != single-runtime");
+
+    let g3 = rand_grid3d(48, 48, 48, 41, 60.0, 90.0);
+    let p3 = rand_grid3d(48, 48, 48, 42, 0.0, 1.0);
+    let (single3, _) =
+        stencil_runner::run_stencil3d(&rt, "hotspot3d", g3.clone(), Some(&p3), 4).unwrap();
+    let got3 = session
+        .run(Workload::stencil3d("hotspot3d", g3, Some(p3), 4))
+        .unwrap()
+        .into_output()
+        .into_grid3d()
+        .unwrap();
+    assert_eq!(got3.data, single3.data, "session hotspot3d != single-runtime");
+
+    // stencil2d_with_scalar (SRAD's inner stage)
+    let img = rand_grid2d(512, 512, 23, 0.5, 2.0);
+    let (single_s, _) =
+        stencil_runner::run_stencil2d_with_scalar(&rt, "srad", img.clone(), 0.25).unwrap();
+    let got_s = session
+        .run(Workload::stencil2d_with_scalar("srad", img.clone(), 0.25))
+        .unwrap()
+        .into_output()
+        .into_grid2d()
+        .unwrap();
+    assert_eq!(got_s.data, single_s.data, "session srad-scalar pass != single-runtime");
+
+    // the four Ch. 4 apps
+    let mut rng = Rng::new(55);
+    let wall: Vec<Vec<i32>> = (0..17).map(|_| rng.vec_i32(5_000, 0, 10)).collect();
+    let (pf_single, _) = apps::run_pathfinder(&rt, &wall).unwrap();
+    let pf = session
+        .run(Workload::pathfinder(wall))
+        .unwrap()
+        .into_output()
+        .into_row()
+        .unwrap();
+    assert_eq!(pf, pf_single, "session pathfinder != single-runtime");
+
+    let refm: Vec<Vec<i32>> = (0..=128).map(|_| rng.vec_i32(129, -5, 15)).collect();
+    let (nw_single, _) = apps::run_nw(&rt, &refm, 10).unwrap();
+    let nw = session
+        .run(Workload::nw(refm, 10))
+        .unwrap()
+        .into_output()
+        .into_score_matrix()
+        .unwrap();
+    assert_eq!(nw, nw_single, "session nw != single-runtime");
+
+    let (srad_single, _) = apps::run_srad(&rt, img.clone(), 2).unwrap();
+    let srad = session
+        .run(Workload::srad(img, 2))
+        .unwrap()
+        .into_output()
+        .into_grid2d()
+        .unwrap();
+    assert_eq!(srad.data, srad_single.data, "session srad != single-runtime");
+
+    let a: Vec<Vec<f32>> = (0..128)
+        .map(|i| {
+            (0..128)
+                .map(|j| rng.f32_in(-1.0, 1.0) + if i == j { 128.0 } else { 0.0 })
+                .collect()
+        })
+        .collect();
+    let (lud_single, _) = apps::run_lud(&rt, &a).unwrap();
+    let lud = session
+        .run(Workload::lud(a))
+        .unwrap()
+        .into_output()
+        .into_matrix()
+        .unwrap();
+    assert_eq!(lud, lud_single, "session lud != single-runtime");
+}
+
+#[test]
+fn session_reports_per_run_metrics_and_accumulates_totals() {
+    // The metrics-bleed fix: two identical runs on one session must
+    // report identical per-run counters (not 1x then 2x), while the
+    // session totals accumulate and reset on demand.
+    let pool = RuntimePool::open("artifacts", 2).unwrap();
+    let session = Session::over(&pool);
+    let grid = rand_grid2d(512, 512, 31, 0.0, 1.0);
+    let r1 = session
+        .run(Workload::stencil2d("diffusion2d_r1", grid.clone(), None, 8))
+        .unwrap();
+    let r2 = session
+        .run(Workload::stencil2d("diffusion2d_r1", grid.clone(), None, 8))
+        .unwrap();
+    assert_eq!(r1.metrics.blocks, r2.metrics.blocks, "per-run blocks must not accumulate");
+    assert_eq!(
+        r1.metrics.cell_updates, r2.metrics.cell_updates,
+        "per-run cell updates must not accumulate"
+    );
+    assert!(r1.elapsed >= r1.metrics.wall, "elapsed includes warmup + lowering");
+    let totals = session.metrics();
+    assert_eq!(totals.blocks, r1.metrics.blocks + r2.metrics.blocks);
+    assert_eq!(totals.cell_updates, r1.metrics.cell_updates * 2);
+    session.reset_metrics();
+    assert_eq!(session.metrics().blocks, 0, "reset zeroes the session totals");
+}
+
+#[test]
+fn fused_srad_stencil_chain_matches_backtoback_at_lanes_1_2_4() {
+    // Acceptance: a heterogeneous chain through a single spliced
+    // WaveGraph with no inter-app wait_idle, bitwise identical to the
+    // back-to-back barriered reference.
+    let img = rand_grid2d(512, 512, 83, 0.5, 2.0);
+    let srad_steps = 2u64;
+    let sten_steps = 16u64;
+
+    // Back-to-back barriered reference (two separate runs).
+    let pool_ref = RuntimePool::open("artifacts", 4).unwrap();
+    let barriered = Session::over(&pool_ref).with_mode(PassMode::Barrier);
+    let mid = barriered
+        .run(Workload::srad(img.clone(), srad_steps))
+        .unwrap()
+        .into_output()
+        .into_grid2d()
+        .unwrap();
+    let want = barriered
+        .run(Workload::stencil2d("diffusion2d_r1", mid, None, sten_steps))
+        .unwrap()
+        .into_output()
+        .into_grid2d()
+        .unwrap();
+
+    for lanes in [1usize, 2, 4] {
+        let pool = RuntimePool::open("artifacts", lanes).unwrap();
+        for mode in [PassMode::Barrier, PassMode::Pipelined] {
+            let report = Session::over(&pool)
+                .with_mode(mode)
+                .run(Workload::srad(img.clone(), srad_steps).then(Workload::stencil2d(
+                    "diffusion2d_r1",
+                    GridInput::Upstream,
+                    None,
+                    sten_steps,
+                )))
+                .unwrap();
+            assert_eq!(report.outputs.len(), 2);
+            assert_eq!(
+                report.outputs[0],
+                WorkloadOutput::Piped,
+                "spliced stage's grid is consumed in place"
+            );
+            let got = report.into_output().into_grid2d().unwrap();
+            assert_eq!(
+                got.data, want.data,
+                "lanes={lanes} {mode:?}: fused chain != back-to-back barriered"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_chain_overlaps_across_the_seam() {
+    // pathfinder.then(nw) shares one wave graph with no seam edges at
+    // all: NW's first anti-diagonal seeds immediately and must be
+    // dispatched while Pathfinder waves are still incomplete — the
+    // fused run reports pipeline depth > 1 across the seam, and both
+    // results stay bitwise identical to their standalone runs.
+    let mut rng = Rng::new(91);
+    let wall: Vec<Vec<i32>> = (0..65).map(|_| rng.vec_i32(9_000, 0, 10)).collect();
+    let refm: Vec<Vec<i32>> = (0..=256).map(|_| rng.vec_i32(257, -5, 15)).collect();
+
+    // Back-to-back barriered reference: two separate wave-serial runs.
+    let pool_ref = RuntimePool::open("artifacts", 4).unwrap();
+    let barriered = Session::over(&pool_ref).with_mode(PassMode::Barrier);
+    let pf_want = barriered
+        .run(Workload::pathfinder(wall.clone()))
+        .unwrap()
+        .into_output()
+        .into_row()
+        .unwrap();
+    let nw_want = barriered
+        .run(Workload::nw(refm.clone(), 10))
+        .unwrap()
+        .into_output()
+        .into_score_matrix()
+        .unwrap();
+    assert_eq!(pf_want, reference::pathfinder(&wall), "barriered pathfinder vs oracle");
+    assert_eq!(nw_want, reference::nw(&refm, 10), "barriered nw vs oracle");
+
+    for lanes in [1usize, 2, 4] {
+        let pool = RuntimePool::open("artifacts", lanes).unwrap();
+        let report = Session::over(&pool)
+            .run(Workload::pathfinder(wall.clone()).then(Workload::nw(refm.clone(), 10)))
+            .unwrap();
+        assert!(
+            report.metrics.pipeline_depth_max > 1,
+            "lanes={lanes}: fused independent chain must overlap across the seam (depth {})",
+            report.metrics.pipeline_depth_max
+        );
+        let mut outputs = report.outputs;
+        let nw_got = outputs.pop().unwrap().into_score_matrix().unwrap();
+        let pf_got = outputs.pop().unwrap().into_row().unwrap();
+        assert_eq!(pf_got, pf_want, "lanes={lanes}: fused pathfinder != back-to-back");
+        assert_eq!(nw_got, nw_want, "lanes={lanes}: fused nw != back-to-back");
+    }
+}
+
+#[test]
+fn fused_piped_chain_reports_depth_and_srad_stencil_accuracy() {
+    // Depth observability on the data-dependent chain: the fused
+    // pipelined run must report cross-wave depth > 1, and the final
+    // grid still tracks the native oracle end to end.
+    let img = rand_grid2d(512, 512, 97, 0.5, 2.0);
+    let pool = RuntimePool::open("artifacts", 4).unwrap();
+    let report = Session::over(&pool)
+        .run(
+            Workload::srad(img.clone(), 2)
+                .then(Workload::stencil2d("diffusion2d_r1", GridInput::Upstream, None, 16)),
+        )
+        .unwrap();
+    assert!(
+        report.metrics.pipeline_depth_max > 1,
+        "pipelined chain stayed wave-serial (depth {})",
+        report.metrics.pipeline_depth_max
+    );
+    let got = report.into_output().into_grid2d().unwrap();
+    let rt = runtime();
+    let coeffs = coeffs_of(&rt, "diffusion2d_r1");
+    let mid = reference::srad(img, 0.5, 2);
+    let want = reference::diffusion2d(mid, &coeffs, 16);
+    // srad tolerance dominates (the stencil only diffuses it further).
+    assert_allclose(&got.data, &want.data, 1e-3, 1e-3, "fused srad->stencil vs oracle");
+}
+
+#[test]
+fn session_rejects_upstream_without_producer() {
+    let pool = RuntimePool::open("artifacts", 1).unwrap();
+    let session = Session::over(&pool);
+    let r = session.run(Workload::stencil2d("diffusion2d_r1", GridInput::Upstream, None, 4));
+    assert!(r.is_err(), "Upstream on a chain head must be rejected");
+    // A 9-row wall (8 = one fused chunk) lowers fine; the error must
+    // come from srad trying to pipe off a grid-less producer.
+    let r = session.run(
+        Workload::pathfinder(vec![vec![0; 64]; 9]).then(Workload::srad(GridInput::Upstream, 1)),
+    );
+    assert!(r.is_err(), "piping from a grid-less producer must be rejected");
 }
 
 #[test]
