@@ -8,8 +8,9 @@
 //! Proves all layers compose:
 //!   L1  pallas hotspot2d kernel (fused steps, clamp-boundary restore)
 //!   L2  jax lowering -> artifacts/hotspot2d.hlo.txt
-//!   L3  rust coordinator: halo extraction, pipelined marshalling, PJRT
-//!       execution, write-back — Python nowhere at run time.
+//!   L3  rust coordinator: Session front door, halo extraction, pipelined
+//!       marshalling, multi-lane PJRT execution, write-back — Python
+//!       nowhere at run time.
 //!
 //! Reports: verification vs the native oracle, wallclock throughput of
 //! the real execution, coordinator overhead, and the simulated timings
@@ -19,10 +20,10 @@
 //! Run: `cargo run --release --example e2e_hotspot`
 
 use fpga_hpc::coordinator::grid::Grid2D;
-use fpga_hpc::coordinator::{reference, stencil_runner};
+use fpga_hpc::coordinator::reference;
+use fpga_hpc::coordinator::session::{Session, Workload};
 use fpga_hpc::device::{arria_10, stratix_v};
-use fpga_hpc::runtime::Runtime;
-use fpga_hpc::stencil::config::{hotspot2d_shape, Workload};
+use fpga_hpc::stencil::config::{hotspot2d_shape, Workload as SimWorkload};
 use fpga_hpc::stencil::tuner::tune;
 use fpga_hpc::testutil::{max_abs_diff, Rng};
 
@@ -31,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     let steps = 96u64;
     println!("=== e2e: Hotspot thermal simulation, {n}x{n} die, {steps} steps ===");
 
-    let rt = Runtime::open("artifacts")?;
+    let session = Session::builder().artifacts("artifacts").lanes(2).build()?;
     let mut rng = Rng::new(2024);
     // initial temperature field ~70-90C with a hot region, uniform power
     let temp = Grid2D::from_fn(n, n, |y, x| {
@@ -41,17 +42,24 @@ fn main() -> anyhow::Result<()> {
     let power = Grid2D { ny: n, nx: n, data: rng.vec_f32(n * n, 0.0, 0.8) };
 
     // --- real execution through the three-layer stack ---
-    let t0 = std::time::Instant::now();
-    let (out, metrics) =
-        stencil_runner::run_stencil2d(&rt, "hotspot2d", temp.clone(), Some(&power), steps)?;
-    let wall = t0.elapsed();
+    let report = session.run(Workload::stencil2d(
+        "hotspot2d",
+        temp.clone(),
+        Some(power.clone()),
+        steps,
+    ))?;
+    anyhow::ensure!(report.ok(), "run reported block faults: {:?}", report.first_fault());
     println!("\n[execution]");
-    println!("  {}", metrics.summary());
+    println!("  {}", report.metrics.summary());
     println!("  wallclock {:.3}s  coordinator overhead {:.1}%",
-        wall.as_secs_f64(), 100.0 * metrics.overhead_frac());
-    let stats = rt.stats();
+        report.elapsed.as_secs_f64(), 100.0 * report.metrics.overhead_frac());
+    let stats = session.pool().stats();
     println!("  runtime: {} executions, compile {:.0}ms, execute {:.0}ms, marshal {:.0}ms",
         stats.executions, stats.compile_ms, stats.execute_ms, stats.marshal_ms);
+    let out = report
+        .into_output()
+        .into_grid2d()
+        .ok_or_else(|| anyhow::anyhow!("stencil run produced no grid"))?;
 
     // --- verification ---
     println!("\n[verification]");
@@ -70,7 +78,7 @@ fn main() -> anyhow::Result<()> {
     // --- simulated FPGA timings for the same workload ---
     println!("\n[simulated FPGAs, same workload]");
     let shape = hotspot2d_shape();
-    let work = Workload { extent: n as u64, steps };
+    let work = SimWorkload { extent: n as u64, steps };
     for dev in [stratix_v(), arria_10()] {
         let res = tune(&shape, &work, &dev);
         println!(

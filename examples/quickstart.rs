@@ -2,23 +2,23 @@
 //!
 //! Loads the AOT-compiled Pallas diffusion kernel (L1/L2, built once by
 //! `make artifacts`), streams a small grid through the Rust coordinator
-//! (L3) with temporal blocking, verifies against the native reference,
-//! and asks the analytic FPGA simulator what the same workload would do
-//! on the thesis's devices.
+//! (L3) via the Session builder API, verifies against the native
+//! reference, and asks the analytic FPGA simulator what the same
+//! workload would do on the thesis's devices.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use fpga_hpc::coordinator::grid::Grid2D;
-use fpga_hpc::coordinator::{reference, stencil_runner};
+use fpga_hpc::coordinator::reference;
+use fpga_hpc::coordinator::session::{Session, Workload};
 use fpga_hpc::device::{arria_10, stratix_v};
-use fpga_hpc::runtime::Runtime;
-use fpga_hpc::stencil::config::{diffusion2d, Workload};
+use fpga_hpc::stencil::config::{diffusion2d, Workload as SimWorkload};
 use fpga_hpc::stencil::tuner::tune;
 use fpga_hpc::testutil::{max_abs_diff, Rng};
 
 fn main() -> anyhow::Result<()> {
     // --- functional path: PJRT execution of the Pallas artifact ---
-    let rt = Runtime::open("artifacts")?;
+    let session = Session::builder().artifacts("artifacts").lanes(2).build()?;
     let n = 512;
     let steps = 8;
     let mut rng = Rng::new(1);
@@ -26,13 +26,17 @@ fn main() -> anyhow::Result<()> {
     let grid = Grid2D { ny: n, nx: n, data };
 
     println!("[1/3] streaming {n}x{n} diffusion grid for {steps} steps through PJRT...");
-    let (out, metrics) =
-        stencil_runner::run_stencil2d(&rt, "diffusion2d_r1", grid.clone(), None, steps)?;
-    println!("      {}", metrics.summary());
+    let report = session.run(Workload::stencil2d("diffusion2d_r1", grid.clone(), None, steps))?;
+    anyhow::ensure!(report.ok(), "run reported block faults: {:?}", report.first_fault());
+    println!("      {}", report.metrics.summary());
 
     println!("[2/3] verifying against the native Rust oracle...");
-    let coeffs: Vec<f32> = rt.registry().get("diffusion2d_r1").unwrap()
+    let coeffs: Vec<f32> = session.pool().registry().get("diffusion2d_r1").unwrap()
         .meta_f64_list("coeffs")?.iter().map(|&v| v as f32).collect();
+    let out = report
+        .into_output()
+        .into_grid2d()
+        .ok_or_else(|| anyhow::anyhow!("stencil run produced no grid"))?;
     let want = reference::diffusion2d(grid, &coeffs, steps as usize);
     let err = max_abs_diff(&out.data, &want.data);
     println!("      max |err| = {err:.2e}");
@@ -40,7 +44,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("[3/3] simulating the same stencil on the thesis's FPGAs...");
     let shape = diffusion2d(1);
-    let work = Workload { extent: n as u64, steps };
+    let work = SimWorkload { extent: n as u64, steps };
     for dev in [stratix_v(), arria_10()] {
         let res = tune(&shape, &work, &dev);
         println!(

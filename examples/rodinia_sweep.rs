@@ -1,20 +1,21 @@
 //! Rodinia sweep: the Chapter 4 experiment end to end.
 //!
 //! For each of the six benchmarks: run the *functional* workload through
-//! the AOT compute units (small inputs, verified against oracles), then
-//! print the simulated FPGA variant table (None/Basic/Advanced ×
-//! NDR/SWI) for Stratix V — the data behind Tables 4-3 … 4-8.
+//! the AOT compute units via the Session API (small inputs, verified
+//! against oracles), then print the simulated FPGA variant table
+//! (None/Basic/Advanced × NDR/SWI) for Stratix V — the data behind
+//! Tables 4-3 … 4-8.
 //!
 //! Run: `cargo run --release --example rodinia_sweep`
 
 use fpga_hpc::coordinator::grid::Grid2D;
-use fpga_hpc::coordinator::{apps, reference, stencil_runner};
+use fpga_hpc::coordinator::reference;
+use fpga_hpc::coordinator::session::{Session, Workload};
 use fpga_hpc::device::stratix_v;
-use fpga_hpc::runtime::Runtime;
 use fpga_hpc::testutil::{assert_allclose, max_abs_diff, Rng};
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::open("artifacts")?;
+    let session = Session::builder().artifacts("artifacts").lanes(2).build()?;
     let mut rng = Rng::new(99);
 
     // --- functional runs (small but real workloads) ---
@@ -23,7 +24,10 @@ fn main() -> anyhow::Result<()> {
     let n = 512;
     let temp = Grid2D { ny: n, nx: n, data: rng.vec_f32(n * n, 60.0, 90.0) };
     let power = Grid2D { ny: n, nx: n, data: rng.vec_f32(n * n, 0.0, 1.0) };
-    let (hs, m) = stencil_runner::run_stencil2d(&rt, "hotspot2d", temp.clone(), Some(&power), 8)?;
+    let report =
+        session.run(Workload::stencil2d("hotspot2d", temp.clone(), Some(power.clone()), 8))?;
+    let m = report.metrics.clone();
+    let hs = report.into_output().into_grid2d().unwrap();
     let hs_want = reference::hotspot2d(temp, &power, reference::HotspotParams::default(), 8);
     assert_allclose(&hs.data, &hs_want.data, 1e-4, 1e-3, "hotspot");
     println!("  hotspot      OK  ({})", m.summary());
@@ -31,18 +35,24 @@ fn main() -> anyhow::Result<()> {
     let rows = 33;
     let cols = 8192;
     let wall: Vec<Vec<i32>> = (0..rows).map(|_| rng.vec_i32(cols, 0, 10)).collect();
-    let (pf, m) = apps::run_pathfinder(&rt, &wall)?;
+    let report = session.run(Workload::pathfinder(wall.clone()))?;
+    let m = report.metrics.clone();
+    let pf = report.into_output().into_row().unwrap();
     assert_eq!(pf, reference::pathfinder(&wall), "pathfinder mismatch");
     println!("  pathfinder   OK  ({})", m.summary());
 
     let nn = 256;
     let refm: Vec<Vec<i32>> = (0..=nn).map(|_| rng.vec_i32(nn + 1, -5, 15)).collect();
-    let (nw, m) = apps::run_nw(&rt, &refm, 10)?;
+    let report = session.run(Workload::nw(refm.clone(), 10))?;
+    let m = report.metrics.clone();
+    let nw = report.into_output().into_score_matrix().unwrap();
     assert_eq!(nw, reference::nw(&refm, 10), "nw mismatch");
     println!("  nw           OK  ({})", m.summary());
 
     let img = Grid2D { ny: n, nx: n, data: rng.vec_f32(n * n, 0.5, 2.0) };
-    let (sr, m) = apps::run_srad(&rt, img.clone(), 2)?;
+    let report = session.run(Workload::srad(img.clone(), 2))?;
+    let m = report.metrics.clone();
+    let sr = report.into_output().into_grid2d().unwrap();
     let sr_want = reference::srad(img, 0.5, 2);
     println!("  srad         OK  max|err|={:.1e} ({})", max_abs_diff(&sr.data, &sr_want.data), m.summary());
 
@@ -50,7 +60,9 @@ fn main() -> anyhow::Result<()> {
     let a: Vec<Vec<f32>> = (0..nl)
         .map(|i| (0..nl).map(|j| rng.f32_in(-1.0, 1.0) + if i == j { nl as f32 } else { 0.0 }).collect())
         .collect();
-    let (lu, m) = apps::run_lud(&rt, &a)?;
+    let report = session.run(Workload::lud(a.clone()))?;
+    let m = report.metrics.clone();
+    let lu = report.into_output().into_matrix().unwrap();
     let lu_want = reference::lud(&a);
     let mut err = 0f32;
     for i in 0..nl {

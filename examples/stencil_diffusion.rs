@@ -1,22 +1,23 @@
 //! High-order stencil scenario: the Ch. 5 headline experiment in miniature.
 //!
 //! Runs first- to fourth-order 2D diffusion both *functionally* (streamed
-//! through the AOT Pallas compute units, verified against the oracle) and
-//! *on the simulated FPGAs* (tuned accelerator configurations), printing a
-//! combined report — the reproduction of Figs. 5-9/5-10's sweep.
+//! through the AOT Pallas compute units via the Session API, verified
+//! against the oracle) and *on the simulated FPGAs* (tuned accelerator
+//! configurations), printing a combined report — the reproduction of
+//! Figs. 5-9/5-10's sweep.
 //!
 //! Run: `cargo run --release --example stencil_diffusion`
 
 use fpga_hpc::coordinator::grid::Grid2D;
-use fpga_hpc::coordinator::{reference, stencil_runner};
+use fpga_hpc::coordinator::reference;
+use fpga_hpc::coordinator::session::{Session, Workload};
 use fpga_hpc::device::arria_10;
-use fpga_hpc::runtime::Runtime;
-use fpga_hpc::stencil::config::{diffusion2d, default_workload};
+use fpga_hpc::stencil::config::{default_workload, diffusion2d};
 use fpga_hpc::stencil::tuner::tune;
 use fpga_hpc::testutil::{max_abs_diff, Rng};
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::open("artifacts")?;
+    let session = Session::builder().artifacts("artifacts").lanes(2).build()?;
     let a10 = arria_10();
     println!(
         "{:<16} {:>10} {:>12} {:>12} {:>10} {:>12}",
@@ -24,7 +25,7 @@ fn main() -> anyhow::Result<()> {
     );
     for radius in 1..=4u32 {
         let artifact = format!("diffusion2d_r{radius}");
-        let spec = rt.registry().get(&artifact).unwrap().clone();
+        let spec = session.pool().registry().get(&artifact).unwrap().clone();
         let t_fused = spec.meta_u64("steps")?;
         let coeffs: Vec<f32> =
             spec.meta_f64_list("coeffs")?.iter().map(|&v| v as f32).collect();
@@ -34,8 +35,14 @@ fn main() -> anyhow::Result<()> {
         let steps = 2 * t_fused;
         let mut rng = Rng::new(radius as u64);
         let grid = Grid2D { ny: n, nx: n, data: rng.vec_f32(n * n, 0.0, 1.0) };
-        let (out, metrics) =
-            stencil_runner::run_stencil2d(&rt, &artifact, grid.clone(), None, steps)?;
+        let report =
+            session.run(Workload::stencil2d(artifact.clone(), grid.clone(), None, steps))?;
+        anyhow::ensure!(report.ok(), "r={radius} run reported block faults");
+        let metrics = report.metrics.clone();
+        let out = report
+            .into_output()
+            .into_grid2d()
+            .ok_or_else(|| anyhow::anyhow!("stencil run produced no grid"))?;
         let want = reference::diffusion2d(grid, &coeffs, steps as usize);
         let err = max_abs_diff(&out.data, &want.data);
         anyhow::ensure!(err < 1e-5, "r={radius} verification failed: {err}");

@@ -193,6 +193,14 @@ fn run_diffusion2d_demo(n: usize, steps: u64, lanes: usize, mode: PassMode) -> c
     );
     let report = session.run(Workload::stencil2d("diffusion2d_r1", grid.clone(), None, steps))?;
     println!("  {}", report.metrics.summary());
+    // Block faults don't abort the run: they come back as per-stage
+    // statuses.  A demo with a partial result is a failed demo.
+    if !report.ok() {
+        for (k, status) in report.statuses.iter().enumerate() {
+            println!("  stage {k}: {status:?}");
+        }
+        anyhow::bail!("run completed with faults ({} blocks cancelled)", report.cancelled.len());
+    }
     let out = report
         .into_output()
         .into_grid2d()

@@ -1,18 +1,15 @@
-//! Full-application runners for the Ch. 4 dynamic-programming and
+//! Wavefront lowerings for the Ch. 4 dynamic-programming and
 //! linear-algebra benchmarks, composed from the AOT compute units the
 //! way the thesis's host code drives its bitstreams.
 //!
-//! Each app has a single-[`Runtime`] runner (`run_*`, execution on the
-//! caller's thread) and a lane-parallel runner (`run_*_lanes`) on the
-//! [`RuntimePool`].  Since PR 3 every lane runner goes through the
+//! Each app is described as a [`WaveSpace`] — topologically ordered
+//! waves of blocks with explicit dependency edges — and driven by the
 //! **wavefront pass driver**
-//! ([`drive_wave_pool`](crate::coordinator::passdriver::drive_wave_pool)): the
-//! workload is described as a [`WaveSpace`] — topologically ordered
-//! waves of blocks with explicit dependency edges — and a block runs
-//! as soon as its predecessors have written back.  There is no
-//! result-count or `wait_idle` barrier between waves, so the lanes
-//! stay fed across wave boundaries exactly like the thesis's deep
-//! pipelines across time steps:
+//! ([`drive_wave_pool`](crate::coordinator::passdriver::drive_wave_pool)):
+//! a block runs as soon as its predecessors have written back.  There
+//! is no result-count or `wait_idle` barrier between waves, so the
+//! lanes stay fed across wave boundaries exactly like the thesis's
+//! deep pipelines across time steps:
 //!
 //! * **Pathfinder** — wave `w` = one fused-row chunk; a column block
 //!   of wave `w+1` needs only the span-overlapping blocks of wave `w`
@@ -31,341 +28,37 @@
 //!   step-`k+1` block starts as soon as its own step-`k` inputs are
 //!   final (not when the whole step drains).
 //!
-//! Every lane runner is bit-identical to its single-runtime
-//! counterpart and to its own [`PassMode::Barrier`] schedule for any
-//! lane count: block inputs are fixed by the dependency order, write
-//! targets are disjoint, and per-block compute is deterministic.
-//!
-//! Since PR 4 the public front door is
-//! [`coordinator::session`](crate::coordinator::session): the pooled
-//! `run_*_lanes{,_mode}` entry points below are `#[deprecated]` shims
-//! over [`Session`](crate::coordinator::session::Session) (kept one
-//! release), and the `WaveSpace` lowerings in this module are reused
-//! verbatim by the session's workload fragments — which is what makes
-//! the shims bit-identical by construction.  The single-[`Runtime`]
-//! runners remain as the caller-thread reference implementations the
-//! bit-identity tests compare against.
+//! The public front door is
+//! [`coordinator::session`](crate::coordinator::session): the spaces
+//! here are wrapped verbatim by the session's workload fragments
+//! (`Workload::{pathfinder, nw, srad, lud}`), which is what makes
+//! every lane count and either
+//! [`PassMode`](crate::coordinator::passdriver::PassMode) bit-identical
+//! — block inputs are fixed by the dependency order, write targets are
+//! disjoint, and per-block compute is deterministic.  (The pre-PR 4
+//! `run_*` free functions and their `run_*_lanes` shims are gone; the
+//! lane-invariance integration tests now pin the pooled engine against
+//! a lanes=1 session over the same spaces.)
 
 use std::cell::UnsafeCell;
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail};
-
 use crate::coordinator::bufpool::TensorPools;
-use crate::coordinator::grid::{Boundary, Grid2D, GridWriter2D};
-use crate::coordinator::metrics::Metrics;
-use crate::coordinator::passdriver::{PassMode, WaveGraph, WaveSpace};
+use crate::coordinator::grid::{Boundary, GridWriter2D};
+use crate::coordinator::passdriver::{WaveGraph, WaveSpace};
 use crate::coordinator::stencil_runner::oob_axis;
-use crate::runtime::{Runtime, RuntimePool, Tensor};
+use crate::runtime::Tensor;
 
 /// Clamp-indexed span copy: append `n` values of `src` starting at
 /// signed offset `x0`, indices clamped into the row (Pathfinder's
-/// boundary rule).  Shared by the single-runtime and wavefront
-/// runners so their bit-identity contract rests on one gather.
+/// boundary rule).  Every Pathfinder gather rests on this one
+/// function, so the bit-identity contract across lane counts does
+/// too.
 fn clamp_span(src: &[i32], x0: isize, n: usize, out: &mut Vec<i32>) {
     let last = src.len() as isize - 1;
     for j in 0..n as isize {
         out.push(src[(x0 + j).clamp(0, last) as usize]);
     }
-}
-
-/// Gather one Pathfinder block's kernel inputs: the halo'd previous
-/// cost row and the fused wall rows over the same (clamp-indexed)
-/// span.
-fn pathfinder_block_inputs(
-    acc: &[i32],
-    wall: &[Vec<i32>],
-    base: usize,
-    x0: usize,
-    width: usize,
-    fused: usize,
-) -> (Vec<i32>, Vec<i32>) {
-    let padded = width + 2 * fused;
-    let xs = x0 as isize - fused as isize;
-    let mut prev = Vec::with_capacity(padded);
-    clamp_span(acc, xs, padded, &mut prev);
-    let mut rows_block = Vec::with_capacity(fused * padded);
-    for t in 0..fused {
-        clamp_span(&wall[base + t], xs, padded, &mut rows_block);
-    }
-    (prev, rows_block)
-}
-
-/// Pathfinder: accumulate min-cost from row 0 down through `wall`
-/// (rows × cols, i32), streaming fused-row blocks through the
-/// `pathfinder` artifact.  `(rows - 1)` must be a multiple of the
-/// artifact's fused depth.
-///
-/// Deprecated: run
-/// [`Workload::pathfinder`](crate::coordinator::session::Workload::pathfinder)
-/// through a [`Session`](crate::coordinator::session::Session) — this
-/// single-[`Runtime`] path is kept (one release) as the caller-thread
-/// reference the bit-identity tests pin the pooled engine against.
-#[deprecated(note = "use Session::builder() with Workload::pathfinder (see coordinator::session)")]
-pub fn run_pathfinder(rt: &Runtime, wall: &[Vec<i32>]) -> crate::Result<(Vec<i32>, Metrics)> {
-    let spec = rt
-        .registry()
-        .get("pathfinder")
-        .ok_or_else(|| anyhow!("missing pathfinder artifact"))?
-        .clone();
-    let width = spec.meta_u64("width")? as usize;
-    let fused = spec.meta_u64("fused_rows")? as usize;
-    let rows = wall.len();
-    let cols = wall[0].len();
-    if (rows - 1) % fused != 0 {
-        bail!("pathfinder: rows-1 = {} not a multiple of fused {fused}", rows - 1);
-    }
-    rt.executable("pathfinder")?;
-
-    let mut metrics = Metrics::default();
-    let wall_t = std::time::Instant::now();
-    let padded = width + 2 * fused;
-
-    let mut acc: Vec<i32> = wall[0].clone();
-    let mut base = 1usize;
-    while base < rows {
-        let mut next = vec![0i32; cols];
-        let mut x0 = 0usize;
-        while x0 < cols {
-            let (prev, rows_block) = pathfinder_block_inputs(&acc, wall, base, x0, width, fused);
-            let out = rt.execute(
-                "pathfinder",
-                &[
-                    Tensor::I32(prev, vec![padded]),
-                    Tensor::I32(rows_block, vec![fused, padded]),
-                ],
-            )?;
-            let vals = out[0].as_i32();
-            let w = width.min(cols - x0);
-            next[x0..x0 + w].copy_from_slice(&vals[..w]);
-            metrics.blocks += 1;
-            x0 += width;
-        }
-        acc = next;
-        base += fused;
-        metrics.cell_updates += cols as u64 * fused as u64;
-    }
-    metrics.wall = wall_t.elapsed();
-    Ok((acc, metrics))
-}
-
-/// Needleman-Wunsch over an (n+1)×(n+1) score matrix: the first row and
-/// column are gap-initialised, interior computed block by block through
-/// the `nw` artifact.  `n` must be a multiple of the artifact block.
-///
-/// Deprecated: see [`run_pathfinder`] — use
-/// [`Workload::nw`](crate::coordinator::session::Workload::nw) through
-/// a [`Session`](crate::coordinator::session::Session).
-#[deprecated(note = "use Session::builder() with Workload::nw (see coordinator::session)")]
-pub fn run_nw(
-    rt: &Runtime,
-    reference: &[Vec<i32>],
-    penalty: i32,
-) -> crate::Result<(Vec<Vec<i32>>, Metrics)> {
-    let spec = rt
-        .registry()
-        .get("nw")
-        .ok_or_else(|| anyhow!("missing nw artifact"))?
-        .clone();
-    let b = spec.meta_u64("block")? as usize;
-    let baked_penalty = spec.meta_u64("penalty")? as i32;
-    if penalty != baked_penalty {
-        bail!("nw: penalty {penalty} != artifact's baked {baked_penalty}");
-    }
-    let n = reference.len() - 1;
-    if n % b != 0 {
-        bail!("nw: interior size {n} not a multiple of block {b}");
-    }
-    rt.executable("nw")?;
-
-    let mut metrics = Metrics::default();
-    let wall_t = std::time::Instant::now();
-    let mut score = vec![vec![0i32; n + 1]; n + 1];
-    for j in 0..=n {
-        score[0][j] = -(j as i32) * penalty;
-    }
-    for (i, row) in score.iter_mut().enumerate() {
-        row[0] = -(i as i32) * penalty;
-    }
-
-    // Row-major block walk satisfies the up/left dependencies.
-    for bi in 0..n / b {
-        for bj in 0..n / b {
-            let r0 = 1 + bi * b;
-            let c0 = 1 + bj * b;
-            let top: Vec<i32> = score[r0 - 1][c0..c0 + b].to_vec();
-            let left: Vec<i32> = (0..b).map(|k| score[r0 + k][c0 - 1]).collect();
-            let corner = vec![score[r0 - 1][c0 - 1]];
-            let mut refb = Vec::with_capacity(b * b);
-            for i in 0..b {
-                refb.extend_from_slice(&reference[r0 + i][c0..c0 + b]);
-            }
-            let out = rt.execute(
-                "nw",
-                &[
-                    Tensor::I32(top, vec![b]),
-                    Tensor::I32(left, vec![b]),
-                    Tensor::I32(corner, vec![1]),
-                    Tensor::I32(refb, vec![b, b]),
-                ],
-            )?;
-            let vals = out[0].as_i32();
-            for i in 0..b {
-                score[r0 + i][c0..c0 + b].copy_from_slice(&vals[i * b..(i + 1) * b]);
-            }
-            metrics.blocks += 1;
-            metrics.cell_updates += (b * b) as u64;
-        }
-    }
-    metrics.wall = wall_t.elapsed();
-    Ok((score, metrics))
-}
-
-/// SRAD: `steps` iterations of (tile-partial reduction → fused two-pass
-/// stencil) over a positive image.  Image extents must be multiples of
-/// the artifact block for the reduction tiles.
-///
-/// Deprecated: see [`run_pathfinder`] — use
-/// [`Workload::srad`](crate::coordinator::session::Workload::srad)
-/// through a [`Session`](crate::coordinator::session::Session).
-#[deprecated(note = "use Session::builder() with Workload::srad (see coordinator::session)")]
-#[allow(deprecated)] // drives the deprecated single-Runtime stencil reference path
-pub fn run_srad(
-    rt: &Runtime,
-    img: Grid2D,
-    steps: u64,
-) -> crate::Result<(Grid2D, Metrics)> {
-    let red_spec = rt
-        .registry()
-        .get("sum_sumsq")
-        .ok_or_else(|| anyhow!("missing sum_sumsq artifact"))?
-        .clone();
-    let rblock = red_spec.meta_u64("block")? as usize;
-    rt.executable("sum_sumsq")?;
-    rt.executable("srad")?;
-
-    let mut metrics = Metrics::default();
-    let wall_t = std::time::Instant::now();
-    let mut cur = img;
-    let cells = (cur.ny * cur.nx) as f64;
-
-    for _ in 0..steps {
-        // --- partial reductions (zero-padding is sum-neutral) ---
-        let mut total = 0f64;
-        let mut total2 = 0f64;
-        let mut y0 = 0;
-        while y0 < cur.ny {
-            let mut x0 = 0;
-            while x0 < cur.nx {
-                let t = cur.extract_tile(
-                    y0 as isize, x0 as isize, rblock, rblock, 0,
-                    crate::coordinator::grid::Boundary::Zero,
-                );
-                let out = rt.execute("sum_sumsq", &[Tensor::F32(t, vec![rblock, rblock])])?;
-                let v = out[0].as_f32();
-                total += v[0] as f64;
-                total2 += v[1] as f64;
-                // Count the reduction invocation like any streamed
-                // block, matching run_srad_lanes' accounting.
-                metrics.blocks += 1;
-                x0 += rblock;
-            }
-            y0 += rblock;
-        }
-        let mean = total / cells;
-        let var = total2 / cells - mean * mean;
-        let q0 = (var / (mean * mean)) as f32;
-
-        // --- fused two-pass stencil, streamed ---
-        let (next, m) = crate::coordinator::stencil_runner::run_stencil2d_with_scalar(
-            rt, "srad", cur, q0,
-        )?;
-        metrics.blocks += m.blocks;
-        cur = next;
-        metrics.cell_updates += cells as u64;
-    }
-    metrics.wall = wall_t.elapsed();
-    Ok((cur, metrics))
-}
-
-/// Blocked LUD: factorize an (n×n) matrix in place using the diagonal /
-/// perimeter / internal artifacts.  `n` must be a multiple of the block.
-///
-/// Deprecated: see [`run_pathfinder`] — use
-/// [`Workload::lud`](crate::coordinator::session::Workload::lud)
-/// through a [`Session`](crate::coordinator::session::Session).
-#[deprecated(note = "use Session::builder() with Workload::lud (see coordinator::session)")]
-pub fn run_lud(rt: &Runtime, a: &[Vec<f32>]) -> crate::Result<(Vec<Vec<f32>>, Metrics)> {
-    let spec = rt
-        .registry()
-        .get("lud_internal")
-        .ok_or_else(|| anyhow!("missing lud artifacts"))?
-        .clone();
-    let b = spec.meta_u64("block")? as usize;
-    let n = a.len();
-    if n % b != 0 {
-        bail!("lud: size {n} not a multiple of block {b}");
-    }
-    for name in ["lud_diagonal", "lud_perimeter_row", "lud_perimeter_col", "lud_internal"] {
-        rt.executable(name)?;
-    }
-    let nb = n / b;
-    let mut m: Vec<Vec<f32>> = a.to_vec();
-    let mut metrics = Metrics::default();
-    let wall_t = std::time::Instant::now();
-
-    let get = |m: &Vec<Vec<f32>>, r: usize, c: usize| -> Vec<f32> {
-        let mut out = Vec::with_capacity(b * b);
-        for i in 0..b {
-            out.extend_from_slice(&m[r * b + i][c * b..c * b + b]);
-        }
-        out
-    };
-    let put = |m: &mut Vec<Vec<f32>>, r: usize, c: usize, vals: &[f32]| {
-        for i in 0..b {
-            m[r * b + i][c * b..c * b + b].copy_from_slice(&vals[i * b..(i + 1) * b]);
-        }
-    };
-
-    for k in 0..nb {
-        let dia = rt.execute("lud_diagonal", &[Tensor::F32(get(&m, k, k), vec![b, b])])?;
-        let dia_vals = dia[0].as_f32().to_vec();
-        put(&mut m, k, k, &dia_vals);
-        metrics.blocks += 1;
-
-        let dlu = Tensor::F32(dia_vals, vec![b, b]);
-        for j in k + 1..nb {
-            let row = rt.execute(
-                "lud_perimeter_row",
-                &[dlu.clone(), Tensor::F32(get(&m, k, j), vec![b, b])],
-            )?;
-            put(&mut m, k, j, row[0].as_f32());
-            let col = rt.execute(
-                "lud_perimeter_col",
-                &[dlu.clone(), Tensor::F32(get(&m, j, k), vec![b, b])],
-            )?;
-            put(&mut m, j, k, col[0].as_f32());
-            metrics.blocks += 2;
-        }
-        for i in k + 1..nb {
-            let lcol = Tensor::F32(get(&m, i, k), vec![b, b]);
-            for j in k + 1..nb {
-                let out = rt.execute(
-                    "lud_internal",
-                    &[
-                        Tensor::F32(get(&m, i, j), vec![b, b]),
-                        lcol.clone(),
-                        Tensor::F32(get(&m, k, j), vec![b, b]),
-                    ],
-                )?;
-                put(&mut m, i, j, out[0].as_f32());
-                metrics.blocks += 1;
-                metrics.cell_updates += (b * b) as u64;
-            }
-        }
-    }
-    metrics.wall = wall_t.elapsed();
-    Ok((m, metrics))
 }
 
 // ---------------------------------------------------------------------------
@@ -520,48 +213,6 @@ impl WaveSpace for PathfinderSpace {
     }
 }
 
-/// Lane-parallel Pathfinder on the wavefront pass driver: every
-/// column block of wave `w+1` is dispatched as soon as its
-/// span-overlapping wave-`w` predecessors have written back — the
-/// lanes never drain between fused-row chunks (the result-count wave
-/// barrier of the PR 2 runner is gone).  Bit-identical to
-/// [`run_pathfinder`] for any lane count and either [`PassMode`]
-/// (integer arithmetic, disjoint output spans, inputs fixed by the
-/// dependency order).
-/// Deprecated shim: forwards to a borrowed
-/// [`Session`](crate::coordinator::session::Session) running
-/// [`Workload::pathfinder`](crate::coordinator::session::Workload::pathfinder)
-/// — the same [`PathfinderSpace`] lowering, bit-identical for any lane
-/// count and either mode.  (Shim cost: clones `wall` into the by-value
-/// `Workload`; port to `Session` to avoid the copy.)
-#[deprecated(note = "use Session::over(pool).with_mode(mode) with Workload::pathfinder")]
-#[allow(deprecated)]
-pub fn run_pathfinder_lanes_mode(
-    pool: &RuntimePool,
-    wall: &[Vec<i32>],
-    mode: PassMode,
-) -> crate::Result<(Vec<i32>, Metrics)> {
-    use crate::coordinator::session::{Session, Workload, WorkloadOutput};
-    let report = Session::over(pool)
-        .with_mode(mode)
-        .run(Workload::pathfinder(wall.to_vec()))?;
-    match report.into_parts() {
-        (metrics, Some(WorkloadOutput::Row(row))) => Ok((row, metrics)),
-        _ => Err(anyhow!("pathfinder workload produced no cost-row output")),
-    }
-}
-
-/// Lane-parallel Pathfinder with the default [`PassMode::Pipelined`]
-/// schedule; deprecated shim, see [`run_pathfinder_lanes_mode`].
-#[deprecated(note = "use Session::builder() with Workload::pathfinder")]
-#[allow(deprecated)]
-pub fn run_pathfinder_lanes(
-    pool: &RuntimePool,
-    wall: &[Vec<i32>],
-) -> crate::Result<(Vec<i32>, Metrics)> {
-    run_pathfinder_lanes_mode(pool, wall, PassMode::Pipelined)
-}
-
 /// Needleman-Wunsch as a [`WaveSpace`]: wave `d` holds the score-block
 /// anti-diagonal `bi + bj = d`; block `(bi, bj)` depends on
 /// `(bi-1, bj)` and `(bi, bj-1)` in wave `d-1` (the corner value from
@@ -663,48 +314,6 @@ impl WaveSpace for NwSpace {
     }
 }
 
-/// Lane-parallel Needleman-Wunsch on the wavefront pass driver:
-/// anti-diagonal waves of independent blocks fan out across the lanes,
-/// and a block of the next diagonal starts as soon as its up/left
-/// neighbors have written back — no drain between diagonals.
-/// Bit-identical to [`run_nw`] for any lane count and either
-/// [`PassMode`] (integer arithmetic, single-assignment score cells).
-/// Deprecated shim: forwards to a borrowed
-/// [`Session`](crate::coordinator::session::Session) running
-/// [`Workload::nw`](crate::coordinator::session::Workload::nw) — the
-/// same [`NwSpace`] lowering, bit-identical for any lane count and
-/// either mode.  (Shim cost: clones `reference` into the by-value
-/// `Workload`; port to `Session` to avoid the copy.)
-#[deprecated(note = "use Session::over(pool).with_mode(mode) with Workload::nw")]
-#[allow(deprecated)]
-pub fn run_nw_lanes_mode(
-    pool: &RuntimePool,
-    reference: &[Vec<i32>],
-    penalty: i32,
-    mode: PassMode,
-) -> crate::Result<(Vec<Vec<i32>>, Metrics)> {
-    use crate::coordinator::session::{Session, Workload, WorkloadOutput};
-    let report = Session::over(pool)
-        .with_mode(mode)
-        .run(Workload::nw(reference.to_vec(), penalty))?;
-    match report.into_parts() {
-        (metrics, Some(WorkloadOutput::ScoreMatrix(m))) => Ok((m, metrics)),
-        _ => Err(anyhow!("nw workload produced no score-matrix output")),
-    }
-}
-
-/// Lane-parallel NW with the default [`PassMode::Pipelined`] schedule;
-/// deprecated shim, see [`run_nw_lanes_mode`].
-#[deprecated(note = "use Session::builder() with Workload::nw")]
-#[allow(deprecated)]
-pub fn run_nw_lanes(
-    pool: &RuntimePool,
-    reference: &[Vec<i32>],
-    penalty: i32,
-) -> crate::Result<(Vec<Vec<i32>>, Metrics)> {
-    run_nw_lanes_mode(pool, reference, penalty, PassMode::Pipelined)
-}
-
 /// SRAD as a [`WaveSpace`]: wave `2s` holds step `s`'s partial
 /// reduction tiles, wave `2s+1` its stencil blocks, with the
 /// **two-stage dependency edge** the ROADMAP called for:
@@ -723,9 +332,9 @@ pub fn run_nw_lanes(
 ///
 /// q0 is recomputed from the per-tile partials on each stencil
 /// extraction, always summing in tile-index order — the same f64
-/// additions in the same order as [`run_srad`], so the scalar (and the
-/// run) is bit-identical to the single-runtime path regardless of
-/// completion order.
+/// additions in the same order regardless of which lane finished which
+/// tile first, so the scalar (and the run) is bit-identical across
+/// lane counts and completion orders.
 pub(crate) struct SradSpace {
     pub(crate) red_artifact: Arc<str>,
     pub(crate) sten_artifact: Arc<str>,
@@ -828,7 +437,7 @@ impl WaveSpace for SradSpace {
         let src = self.bufs[s % 2];
         if w % 2 == 0 {
             // Reduction tile: rblock×rblock, no halo, zero padding
-            // (sum-neutral) — same extraction as run_srad.
+            // (sum-neutral).
             let (y0, x0) = self.rorigins[i];
             let mut t = self.pools.tiles.take(self.rblock * self.rblock);
             // SAFETY: dependency order — step s-1's stencil blocks
@@ -882,8 +491,8 @@ impl WaveSpace for SradSpace {
             return 0;
         }
         // One step's clipped interior per stencil block — summing to
-        // `cells` per wave pair, matching run_srad's per-invocation
-        // accounting (independent of the artifact's fused depth).
+        // `cells` per wave pair, one full image update per step
+        // (independent of the artifact's fused depth).
         let (y0, x0) = self.sorigins[i];
         let h = self.sblock.min(self.ny - y0);
         let ww = self.sblock.min(self.nx - x0);
@@ -902,48 +511,6 @@ impl WaveSpace for SradSpace {
             self.pools.descs.misses(),
         )
     }
-}
-
-/// Lane-parallel SRAD on the wavefront pass driver: `steps` iterations
-/// of (tile-partial reduction → fused stencil) with the reduction
-/// tiles of step `s+1` overlapping the stencil tail of step `s` — the
-/// per-step reduction → stencil serialization of [`run_srad`] is gone.
-/// Bit-identical to [`run_srad`] for any lane count and either
-/// [`PassMode`] (q0 partials are summed in tile order, stencil inputs
-/// are fixed by the dependency order, interiors are disjoint).
-/// Deprecated shim: forwards to a borrowed
-/// [`Session`](crate::coordinator::session::Session) running
-/// [`Workload::srad`](crate::coordinator::session::Workload::srad) —
-/// the same [`SradSpace`] lowering (two-stage edge included),
-/// bit-identical for any lane count and either mode.
-#[deprecated(note = "use Session::over(pool).with_mode(mode) with Workload::srad")]
-#[allow(deprecated)]
-pub fn run_srad_lanes_mode(
-    pool: &RuntimePool,
-    img: Grid2D,
-    steps: u64,
-    mode: PassMode,
-) -> crate::Result<(Grid2D, Metrics)> {
-    use crate::coordinator::session::{Session, Workload, WorkloadOutput};
-    let report = Session::over(pool)
-        .with_mode(mode)
-        .run(Workload::srad(img, steps))?;
-    match report.into_parts() {
-        (metrics, Some(WorkloadOutput::Grid2D(g))) => Ok((g, metrics)),
-        _ => Err(anyhow!("srad workload produced no 2D grid output")),
-    }
-}
-
-/// Lane-parallel SRAD with the default [`PassMode::Pipelined`]
-/// schedule; deprecated shim, see [`run_srad_lanes_mode`].
-#[deprecated(note = "use Session::builder() with Workload::srad")]
-#[allow(deprecated)]
-pub fn run_srad_lanes(
-    pool: &RuntimePool,
-    img: Grid2D,
-    steps: u64,
-) -> crate::Result<(Grid2D, Metrics)> {
-    run_srad_lanes_mode(pool, img, steps, PassMode::Pipelined)
 }
 
 /// Blocked LUD as a [`WaveSpace`]: step `k` unrolls into three waves —
@@ -1133,8 +700,8 @@ impl WaveSpace for LudSpace {
     }
 
     fn cell_updates(&self, w: usize, _i: usize) -> u64 {
-        // Match run_lud's accounting: only the internal Schur updates
-        // count as cell updates.
+        // Only the internal Schur updates count as cell updates; the
+        // diagonal and perimeter blocks are pipeline-fill overhead.
         if w % 3 == 2 {
             (self.b * self.b) as u64
         } else {
@@ -1143,49 +710,10 @@ impl WaveSpace for LudSpace {
     }
 }
 
-/// Lane-parallel blocked LUD on the wavefront pass driver: each step's
-/// perimeter and internal blocks fan out across the lanes, and blocks
-/// of step `k+1` start as soon as their own step-`k` inputs are final
-/// — no drain between factorization steps.  Bit-identical to
-/// [`run_lud`] for any lane count and either [`PassMode`] (per-block
-/// compute is deterministic and all reads are dependency-ordered).
-/// Deprecated shim: forwards to a borrowed
-/// [`Session`](crate::coordinator::session::Session) running
-/// [`Workload::lud`](crate::coordinator::session::Workload::lud) — the
-/// same [`LudSpace`] lowering, bit-identical for any lane count and
-/// either mode.  (Shim cost: clones `a` into the by-value `Workload`;
-/// port to `Session` to avoid the copy.)
-#[deprecated(note = "use Session::over(pool).with_mode(mode) with Workload::lud")]
-#[allow(deprecated)]
-pub fn run_lud_lanes_mode(
-    pool: &RuntimePool,
-    a: &[Vec<f32>],
-    mode: PassMode,
-) -> crate::Result<(Vec<Vec<f32>>, Metrics)> {
-    use crate::coordinator::session::{Session, Workload, WorkloadOutput};
-    let report = Session::over(pool)
-        .with_mode(mode)
-        .run(Workload::lud(a.to_vec()))?;
-    match report.into_parts() {
-        (metrics, Some(WorkloadOutput::Matrix(m))) => Ok((m, metrics)),
-        _ => Err(anyhow!("lud workload produced no matrix output")),
-    }
-}
-
-/// Lane-parallel LUD with the default [`PassMode::Pipelined`]
-/// schedule; deprecated shim, see [`run_lud_lanes_mode`].
-#[deprecated(note = "use Session::builder() with Workload::lud")]
-#[allow(deprecated)]
-pub fn run_lud_lanes(
-    pool: &RuntimePool,
-    a: &[Vec<f32>],
-) -> crate::Result<(Vec<Vec<f32>>, Metrics)> {
-    run_lud_lanes_mode(pool, a, PassMode::Pipelined)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::grid::Grid2D;
     use crate::coordinator::stencil_runner::block_origins_2d;
     use std::collections::HashSet;
 

@@ -34,6 +34,17 @@ pub struct Metrics {
     /// Blocks that were dispatched while their previous wave was still
     /// incomplete — the work a per-wave barrier would have serialized.
     pub overlap_starts: u64,
+    /// Retried job attempts (`Transient` faults under the pool's
+    /// [`RetryPolicy`]).  0 on every fault-free run.
+    ///
+    /// [`RetryPolicy`]: crate::runtime::RetryPolicy
+    pub job_retries: u64,
+    /// Jobs that failed terminally (retry budget exhausted, or a
+    /// `Fatal`/`Panic` fault).
+    pub jobs_failed: u64,
+    /// Lane threads respawned by the pool supervisor after a panic
+    /// escaped job isolation.
+    pub lane_restarts: u64,
 }
 
 impl Metrics {
@@ -97,6 +108,9 @@ impl Metrics {
             desc_pool_misses,
             pipeline_depth_max,
             overlap_starts,
+            job_retries,
+            jobs_failed,
+            lane_restarts,
         } = other;
         self.blocks += blocks;
         self.cell_updates += cell_updates;
@@ -110,6 +124,9 @@ impl Metrics {
         self.desc_pool_misses += desc_pool_misses;
         self.pipeline_depth_max = self.pipeline_depth_max.max(*pipeline_depth_max);
         self.overlap_starts += overlap_starts;
+        self.job_retries += job_retries;
+        self.jobs_failed += jobs_failed;
+        self.lane_restarts += lane_restarts;
     }
 
     pub fn summary(&self) -> String {
@@ -121,8 +138,16 @@ impl Metrics {
         } else {
             String::new()
         };
+        let faults = if self.job_retries + self.jobs_failed + self.lane_restarts > 0 {
+            format!(
+                " retries={} failed={} lane-restarts={}",
+                self.job_retries, self.jobs_failed, self.lane_restarts
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "blocks={} updates={} wall={:.3}s (marshal {:.1}% execute {:.1}% writeback {:.1}%) buf-reuse {:.0}%{wave} {:.3} GCell/s",
+            "blocks={} updates={} wall={:.3}s (marshal {:.1}% execute {:.1}% writeback {:.1}%) buf-reuse {:.0}%{wave}{faults} {:.3} GCell/s",
             self.blocks,
             self.cell_updates,
             self.wall.as_secs_f64(),
@@ -173,6 +198,7 @@ mod tests {
             pool_hits: 5,
             pipeline_depth_max: 2,
             overlap_starts: 4,
+            job_retries: 1,
             ..Default::default()
         };
         let b = Metrics {
@@ -182,6 +208,9 @@ mod tests {
             pool_hits: 1,
             pipeline_depth_max: 5,
             overlap_starts: 1,
+            job_retries: 2,
+            jobs_failed: 1,
+            lane_restarts: 1,
             ..Default::default()
         };
         a.merge(&b);
@@ -191,6 +220,17 @@ mod tests {
         assert_eq!(a.pool_hits, 6);
         assert_eq!(a.pipeline_depth_max, 5, "depth keeps the max, not the sum");
         assert_eq!(a.overlap_starts, 5);
+        assert_eq!(a.job_retries, 3);
+        assert_eq!(a.jobs_failed, 1);
+        assert_eq!(a.lane_restarts, 1);
+    }
+
+    #[test]
+    fn summary_mentions_faults_only_when_present() {
+        let clean = Metrics { blocks: 1, ..Default::default() };
+        assert!(!clean.summary().contains("retries="));
+        let faulty = Metrics { blocks: 1, job_retries: 2, ..Default::default() };
+        assert!(faulty.summary().contains("retries=2 failed=0 lane-restarts=0"));
     }
 
     #[test]

@@ -20,25 +20,28 @@
 //!   also the **wavefront** generalization (`WaveGraph`/`WaveTable`/
 //!   `WaveSpace`) driving the Ch. 4 apps with explicit per-block
 //!   dependency edges and no per-wave barrier;
-//! * [`stencil_runner`] — temporal-block streaming for the Ch. 5 stencil
-//!   workloads (diffusion/hotspot, 2D/3D): thin configuration shims
-//!   (block plans, tile extraction, write-back) over the pass driver,
-//!   single-runtime and lane-parallel variants;
-//! * [`apps`] — full-application runners for the Ch. 4 dynamic-programming
+//! * [`stencil_runner`] — temporal-block lowerings for the Ch. 5 stencil
+//!   workloads (diffusion/hotspot, 2D/3D): block plans, tile
+//!   extraction and write-back spaces over the pass driver;
+//! * [`apps`] — wavefront lowerings for the Ch. 4 dynamic-programming
 //!   and linear-algebra benchmarks (Pathfinder, NW, SRAD, LUD):
-//!   single-runtime runners plus lane-parallel `_lanes` variants as
-//!   `WaveSpace` shims over the wavefront pass driver;
+//!   `WaveSpace` implementations over the wavefront pass driver;
 //! * [`session`] — **the public front door** (PR 4): a typed
 //!   [`Session`](session::Session) builder owning the pool and
 //!   metrics, first-class [`Workload`](session::Workload) descriptors
 //!   that lower onto the wave driver, and a
 //!   [`Chain`](session::Chain) combinator splicing heterogeneous
 //!   workloads into one fused wave graph (cross-app seam edges, no
-//!   inter-app drain).  Every `run_*` free function in [`apps`] and
-//!   [`stencil_runner`] is now a `#[deprecated]` shim over it;
+//!   inter-app drain).  Since PR 6 a run is also fault-tolerant:
+//!   block faults are retried (`Transient`) or scoped to their
+//!   dependency cone, and the [`RunReport`](session::RunReport)
+//!   carries one [`WorkloadStatus`](session::WorkloadStatus) per
+//!   stage instead of aborting the whole run;
 //! * [`reference`] — native-Rust oracles used by the integration tests
 //!   and the end-to-end examples;
-//! * [`metrics`] — throughput/latency accounting for the §Perf work.
+//! * [`metrics`] — throughput/latency accounting for the §Perf work,
+//!   since PR 6 including the fault counters (`job_retries`,
+//!   `jobs_failed`, `lane_restarts`).
 
 pub mod apps;
 pub mod bufpool;
@@ -54,5 +57,6 @@ pub use grid::{Boundary, Grid2D, Grid3D};
 pub use metrics::Metrics;
 pub use passdriver::PassMode;
 pub use session::{
-    Chain, GridInput, RunReport, Session, SessionBuilder, Workload, WorkloadOutput,
+    Chain, FaultReport, GridInput, RunReport, Session, SessionBuilder, Workload,
+    WorkloadOutput, WorkloadStatus,
 };

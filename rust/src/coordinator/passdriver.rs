@@ -79,19 +79,32 @@
 //! [`PassMode::Barrier`] again keeps the wave-serial baseline (a block
 //! waits for *every* block of *every* earlier wave), which is what the
 //! CI perf gate compares the pipelined schedule against.
+//!
+//! # Fault tolerance
+//!
+//! The pooled wave driver scopes failure instead of aborting the run:
+//! a block whose job fails terminally (after the pool's `Transient`
+//! retry budget — see [`crate::runtime::RetryPolicy`]) has its
+//! dependency **cone** cancelled via [`WaveTable::cancel`] — a walk of
+//! the same CSR successor lists completion uses — while every block
+//! outside the cone keeps running.  [`drive_wave_pool`] reports the
+//! per-block faults and the cancelled set in a [`WaveOutcome`] so the
+//! session layer can mark only the affected workloads failed.  Under
+//! `cfg(any(test, feature = "chaos"))` a deterministic [`FaultPlan`]
+//! can inject faults keyed by `(wave, block, attempt)`.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::panic_text;
-use crate::runtime::pool::IdleGuard;
-use crate::runtime::{Runtime, RuntimePool, Tensor};
+use crate::runtime::pool::{lock, IdleGuard, JobStatus, RetryPolicy};
+use crate::runtime::{FaultKind, Runtime, RuntimePool, Tensor};
 
 /// Inter-pass scheduling regime.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -265,6 +278,10 @@ pub struct ReadyQueue {
 struct QueueState {
     ready: VecDeque<(usize, usize)>,
     dispatched: usize,
+    /// Blocks that will never run (their dependency cone was cancelled
+    /// after a terminal fault); they count toward `total` so `pop`
+    /// still terminates.
+    cancelled: usize,
     aborted: bool,
 }
 
@@ -274,6 +291,7 @@ impl ReadyQueue {
             state: Mutex::new(QueueState {
                 ready: seed.into_iter().collect(),
                 dispatched: 0,
+                cancelled: 0,
                 aborted: false,
             }),
             cv: Condvar::new(),
@@ -285,39 +303,50 @@ impl ReadyQueue {
         if items.is_empty() {
             return;
         }
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock(&self.state);
         st.ready.extend(items.iter().copied());
         drop(st);
         self.cv.notify_all();
     }
 
-    /// Next runnable item, or `None` once all `total` items have been
-    /// dispatched (or the run aborted).
+    /// Next runnable item, or `None` once every one of the `total`
+    /// items has been dispatched or cancelled (or the run aborted).
     pub fn pop(&self) -> Option<(usize, usize)> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock(&self.state);
         loop {
             if st.aborted {
                 return None;
             }
             if let Some(item) = st.ready.pop_front() {
                 st.dispatched += 1;
-                if st.dispatched >= self.total {
+                if st.dispatched + st.cancelled >= self.total {
                     // Wake peers parked on an empty queue so they can
                     // observe completion and exit.
                     self.cv.notify_all();
                 }
                 return Some(item);
             }
-            if st.dispatched >= self.total {
+            if st.dispatched + st.cancelled >= self.total {
                 return None;
             }
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
+    }
+
+    /// Account `n` blocks as cancelled: they will never be pushed, so
+    /// the dispatch target shrinks and parked `pop`pers can observe
+    /// completion.
+    pub fn cancel(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        lock(&self.state).cancelled += n;
+        self.cv.notify_all();
     }
 
     /// Abandon the run: wakes and releases every `pop`per.
     pub fn abort(&self) {
-        self.state.lock().unwrap().aborted = true;
+        lock(&self.state).aborted = true;
         self.cv.notify_all();
     }
 }
@@ -407,8 +436,12 @@ pub fn drive_local<S: StencilSpace>(
                 // SAFETY: dependency order, as above — `pop` only hands
                 // out blocks whose predecessors have written back.
                 let inputs = unsafe { space.extract(handles[pass % 2], block) };
-                if tx.send((pass, block, inputs)).is_err() {
-                    return; // consumer dropped (error path)
+                if let Err(failed) = tx.send((pass, block, inputs)) {
+                    // Consumer dropped (error path): recycle the
+                    // in-flight tile so the pool's steady state
+                    // survives a recovered fault.
+                    space.recycle(failed.0 .2);
+                    return;
                 }
             }
         });
@@ -429,6 +462,7 @@ pub fn drive_local<S: StencilSpace>(
                         space.recycle(inputs);
                     }
                     Err(e) => {
+                        space.recycle(inputs);
                         result = Err(e);
                         break;
                     }
@@ -441,9 +475,14 @@ pub fn drive_local<S: StencilSpace>(
             }
         }
         // Unblock a feeder parked on the ready queue or a full channel,
-        // then join it so a panic converts to an error instead of being
-        // resumed by the scope.
+        // recycle the tiles it extracted past the failure point (the
+        // drain ends once the feeder drops its sender), then join it so
+        // a panic converts to an error instead of being resumed by the
+        // scope.
         queue.abort();
+        for (_, _, tile) in rx.iter() {
+            space.recycle(tile);
+        }
         drop(rx);
         match feeder.join() {
             Err(p) => {
@@ -538,6 +577,12 @@ pub struct WaveTable {
     barrier: bool,
 }
 
+/// Counter sentinel marking a block `Cancelled` — terminal: a real
+/// predecessor count can never reach it (counts are block counts), and
+/// a concurrent `fetch_sub` from a straggling predecessor cannot bring
+/// it anywhere near the zero that would release the block.
+const CANCELLED: u32 = u32::MAX;
+
 impl WaveTable {
     pub fn new(graph: &dyn WaveGraph, mode: PassMode) -> WaveTable {
         let waves = graph.waves();
@@ -626,6 +671,54 @@ impl WaveTable {
             .filter(|&id| self.remaining[id].load(Ordering::Relaxed) == 0)
             .map(|id| self.coord(id))
             .collect()
+    }
+
+    /// Cancel the dependency cone of a terminally failed block
+    /// `(w, i)`: every transitive successor is marked with the
+    /// [`CANCELLED`] counter sentinel — an extra terminal state in the
+    /// per-block counter discipline — and returned, so the caller can
+    /// shrink the ready queue's dispatch target by exactly that many
+    /// blocks.  The failed block itself is *not* included (it was
+    /// already dispatched).  Blocks outside the cone are untouched and
+    /// keep running.
+    ///
+    /// No completion race: a cone member always retains at least one
+    /// incomplete predecessor (the failed block never completes, and
+    /// inductively neither does any cone member), so no concurrent
+    /// `complete` can drive its counter to zero while it is being
+    /// marked.  Idempotent across overlapping cones — a block already
+    /// at the sentinel is skipped, so each cancelled block is counted
+    /// exactly once.
+    ///
+    /// Under `Barrier` mode every block of every later wave depends on
+    /// `(w, i)`, so the cone is simply all blocks past wave `w`.
+    pub fn cancel(&self, w: usize, i: usize) -> Vec<(usize, usize)> {
+        let mark = |id: usize| self.remaining[id].swap(CANCELLED, Ordering::AcqRel) != CANCELLED;
+        let mut cancelled = Vec::new();
+        if self.barrier {
+            for id in self.offsets[w + 1]..self.total() {
+                if mark(id) {
+                    cancelled.push(self.coord(id));
+                }
+            }
+        } else {
+            let id0 = self.offsets[w] + i;
+            let mut stack: Vec<usize> = self.succs[self.succ_off[id0]..self.succ_off[id0 + 1]]
+                .iter()
+                .map(|&s| s as usize)
+                .collect();
+            while let Some(id) = stack.pop() {
+                if mark(id) {
+                    cancelled.push(self.coord(id));
+                    stack.extend(
+                        self.succs[self.succ_off[id]..self.succ_off[id + 1]]
+                            .iter()
+                            .map(|&s| s as usize),
+                    );
+                }
+            }
+        }
+        cancelled
     }
 
     /// Record the completion (write-back done) of block `(w, i)`;
@@ -758,7 +851,7 @@ impl DepthTracker {
     /// Block `(w, _)` is being dispatched (its inputs are about to be
     /// extracted).
     fn dispatched(&self, w: usize) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock(&self.state);
         if w > 0 && st.done[w - 1] < st.lens[w - 1] {
             st.overlap += 1;
         }
@@ -768,7 +861,7 @@ impl DepthTracker {
 
     /// Block `(w, _)` has written back.
     fn completed(&self, w: usize) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock(&self.state);
         st.done[w] += 1;
         while st.oldest < st.lens.len() && st.done[st.oldest] >= st.lens[st.oldest] {
             st.oldest += 1;
@@ -776,7 +869,7 @@ impl DepthTracker {
     }
 
     fn finish(&self) -> (u64, u64) {
-        let st = self.state.lock().unwrap();
+        let st = lock(&self.state);
         (st.max_depth as u64, st.overlap as u64)
     }
 }
@@ -854,8 +947,13 @@ pub fn drive_wave_local<S: WaveSpace>(
                 depth_ref.dispatched(w);
                 // SAFETY: dependency order, as above.
                 let inputs = unsafe { space_ref.extract(w, i) };
-                if tx.send((w, i, inputs)).is_err() {
-                    return; // consumer dropped (error path)
+                if let Err(failed) = tx.send((w, i, inputs)) {
+                    // Consumer dropped (error path): recycle the
+                    // in-flight block inputs so the buffer pools
+                    // survive a recovered fault.
+                    let (fw, fi, tiles) = failed.0;
+                    space_ref.recycle(fw, fi, tiles);
+                    return;
                 }
             }
         });
@@ -878,6 +976,7 @@ pub fn drive_wave_local<S: WaveSpace>(
                         space.recycle(w, i, inputs);
                     }
                     Err(e) => {
+                        space.recycle(w, i, inputs);
                         result = Err(e);
                         break;
                     }
@@ -888,7 +987,12 @@ pub fn drive_wave_local<S: WaveSpace>(
                 }
             }
         }
+        // As in drive_local: release the feeder, recycle its backlog,
+        // then join.
         queue.abort();
+        for (bw, bi, tiles) in rx.iter() {
+            space.recycle(bw, bi, tiles);
+        }
         drop(rx);
         match feeder.join() {
             Err(p) => {
@@ -910,6 +1014,92 @@ pub fn drive_wave_local<S: WaveSpace>(
     Ok(stats)
 }
 
+/// One terminally failed block of a pooled wave run: the retry budget
+/// was exhausted (`Transient`), or the fault was terminal on its first
+/// occurrence (`Fatal` / `Panic`).
+#[derive(Debug, Clone)]
+pub struct BlockFault {
+    pub wave: usize,
+    pub index: usize,
+    pub kind: FaultKind,
+    pub attempts: u32,
+    pub message: String,
+}
+
+/// Result of a pooled wave run.  `Ok(WaveOutcome)` means the run
+/// *drained* — infrastructure failures (a poisoned pool, a dead lane
+/// that could not respawn) still surface as `Err`.  Block-level faults
+/// are scoped instead: each is reported here together with the exact
+/// dependency cone it cancelled, and every block outside those cones
+/// ran to completion.
+pub struct WaveOutcome {
+    pub metrics: Metrics,
+    /// Terminally failed blocks, in completion order.
+    pub faults: Vec<BlockFault>,
+    /// Blocks cancelled as transitive successors of a failed block
+    /// (the failed blocks themselves are in `faults`, not here).
+    pub cancelled: Vec<(usize, usize)>,
+}
+
+/// Deterministic fault-injection plan for the chaos harness: faults
+/// are keyed by `(wave, block index, 1-based attempt)` — no clocks, no
+/// seeds — so an injected schedule replays identically on every run.
+#[cfg(any(test, feature = "chaos"))]
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Return a `Transient` fault from the job body at these keys
+    /// (retried under the pool's [`RetryPolicy`]).
+    pub transient: Vec<(usize, usize, u32)>,
+    /// Panic inside the job body at these keys (terminal: `Panic`).
+    pub panic: Vec<(usize, usize, u32)>,
+    /// Kill the executing lane thread at these keys (the job fails
+    /// with `Panic`; the lane supervisor respawns the lane).
+    pub lane_kill: Vec<(usize, usize, u32)>,
+}
+
+#[cfg(any(test, feature = "chaos"))]
+impl FaultPlan {
+    pub fn transient_at(mut self, w: usize, i: usize, attempt: u32) -> Self {
+        self.transient.push((w, i, attempt));
+        self
+    }
+
+    pub fn panic_at(mut self, w: usize, i: usize, attempt: u32) -> Self {
+        self.panic.push((w, i, attempt));
+        self
+    }
+
+    pub fn lane_kill_at(mut self, w: usize, i: usize, attempt: u32) -> Self {
+        self.lane_kill.push((w, i, attempt));
+        self
+    }
+
+    /// Fire whatever is registered for this `(wave, block, attempt)`
+    /// key, called from the job body before the block executes.
+    fn fire(&self, w: usize, i: usize, attempt: u32) -> crate::Result<()> {
+        if self.lane_kill.contains(&(w, i, attempt)) {
+            std::panic::panic_any(crate::runtime::pool::LaneKill);
+        }
+        if self.panic.contains(&(w, i, attempt)) {
+            panic!("injected panic at block ({w},{i}) attempt {attempt}");
+        }
+        if self.transient.contains(&(w, i, attempt)) {
+            return Err(crate::runtime::transient(format!(
+                "injected transient fault at block ({w},{i}) attempt {attempt}"
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Injection slot threaded through the pooled driver: a real plan in
+/// test/chaos builds, a zero-sized placeholder otherwise (so the hot
+/// path carries no fault-injection state in release builds).
+#[cfg(any(test, feature = "chaos"))]
+pub(crate) type Injection = Option<Arc<FaultPlan>>;
+#[cfg(not(any(test, feature = "chaos")))]
+pub(crate) type Injection = ();
+
 /// Run a wavefront workload on a [`RuntimePool`]: `extractors` workers
 /// pull dependency-ready blocks off the wave table, the lanes execute
 /// each block's artifact and write back, and each job's completion
@@ -917,13 +1107,41 @@ pub fn drive_wave_local<S: WaveSpace>(
 /// barrier between waves; the single [`RuntimePool::wait_idle`] at the
 /// end only closes out the run.  (The caller warms every distinct
 /// artifact on every lane outside the timed region first.)
+///
+/// Failure is scoped, not global: a terminally failed block cancels
+/// exactly its dependency cone ([`WaveTable::cancel`]) and the rest of
+/// the run keeps flowing; see [`WaveOutcome`].
 pub fn drive_wave_pool<S: WaveSpace + 'static>(
     pool: &RuntimePool,
     space: &Arc<S>,
     mode: PassMode,
     extractors: usize,
-) -> crate::Result<Metrics> {
+) -> crate::Result<WaveOutcome> {
+    drive_wave_pool_inner(pool, space, mode, extractors, Default::default())
+}
+
+/// [`drive_wave_pool`] with a deterministic [`FaultPlan`] — the chaos
+/// harness entry point (test/chaos builds only).
+#[cfg(any(test, feature = "chaos"))]
+pub fn drive_wave_pool_chaos<S: WaveSpace + 'static>(
+    pool: &RuntimePool,
+    space: &Arc<S>,
+    mode: PassMode,
+    extractors: usize,
+    plan: Arc<FaultPlan>,
+) -> crate::Result<WaveOutcome> {
+    drive_wave_pool_inner(pool, space, mode, extractors, Some(plan))
+}
+
+pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
+    pool: &RuntimePool,
+    space: &Arc<S>,
+    mode: PassMode,
+    extractors: usize,
+    _inject: Injection,
+) -> crate::Result<WaveOutcome> {
     let stats0 = pool.stats();
+    let counters0 = pool.fault_counters();
     let wall = Instant::now();
     let table = Arc::new(WaveTable::new(space.as_ref(), mode));
     let total = table.total();
@@ -931,11 +1149,12 @@ pub fn drive_wave_pool<S: WaveSpace + 'static>(
     let cells = Arc::new(AtomicU64::new(0));
     let wb_nanos = Arc::new(AtomicU64::new(0));
     let depth = Arc::new(DepthTracker::new(space.as_ref()));
+    let faults: Arc<Mutex<Vec<BlockFault>>> = Arc::new(Mutex::new(Vec::new()));
+    let cancelled: Arc<Mutex<Vec<(usize, usize)>>> = Arc::new(Mutex::new(Vec::new()));
 
     if total > 0 {
         let queue = Arc::new(ReadyQueue::new(total, table.seed()));
         let extractors = extractors.clamp(1, total);
-        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
 
         // SAFETY-relevant: jobs reach the caller's buffers through raw
         // handles inside the space; the IdleGuard drains the lanes
@@ -946,8 +1165,9 @@ pub fn drive_wave_pool<S: WaveSpace + 'static>(
                 sc.spawn(|| {
                     while let Some((w, i)) = queue.pop() {
                         depth.dispatched(w);
-                        // Catch extraction panics here so the other
-                        // workers and the lanes stop promptly.
+                        // Catch extraction panics here and scope them
+                        // like a failed job: cancel the block's cone,
+                        // keep everything else running.
                         let extracted = catch_unwind(AssertUnwindSafe(|| {
                             // SAFETY: dependency order via the ready
                             // queue — predecessors have written back.
@@ -956,12 +1176,20 @@ pub fn drive_wave_pool<S: WaveSpace + 'static>(
                         let inputs = match extracted {
                             Ok(inputs) => inputs,
                             Err(p) => {
-                                queue.abort();
-                                first_err.lock().unwrap().get_or_insert(anyhow!(
-                                    "wave extractor panicked: {}",
-                                    panic_text(p.as_ref())
-                                ));
-                                return;
+                                let cone = table.cancel(w, i);
+                                queue.cancel(cone.len());
+                                lock(&faults).push(BlockFault {
+                                    wave: w,
+                                    index: i,
+                                    kind: FaultKind::Panic,
+                                    attempts: 1,
+                                    message: format!(
+                                        "wave extractor panicked: {}",
+                                        panic_text(p.as_ref())
+                                    ),
+                                });
+                                lock(&cancelled).extend(cone);
+                                continue;
                             }
                         };
                         let artifact = space.artifact(w, i);
@@ -973,19 +1201,38 @@ pub fn drive_wave_pool<S: WaveSpace + 'static>(
                         let table_j = table.clone();
                         let queue_j = queue.clone();
                         let depth_j = depth.clone();
+                        let faults_j = faults.clone();
+                        let cancelled_j = cancelled.clone();
+                        // FnMut so the lane can re-run the body on a
+                        // Transient fault: the inputs stay parked in
+                        // the Option until an attempt succeeds.
+                        let mut inputs = Some(inputs);
+                        #[cfg(any(test, feature = "chaos"))]
+                        let plan_j = _inject.clone();
+                        #[cfg(any(test, feature = "chaos"))]
+                        let mut chaos_attempt: u32 = 0;
                         pool.submit_tracked(
                             move |_lane, rt| {
+                                #[cfg(any(test, feature = "chaos"))]
+                                {
+                                    chaos_attempt += 1;
+                                    if let Some(plan) = plan_j.as_ref() {
+                                        plan.fire(w, i, chaos_attempt)?;
+                                    }
+                                }
+                                let tiles =
+                                    inputs.as_ref().expect("job inputs already recycled");
                                 let t0;
                                 if fast_f32 {
                                     // Single-f32-output decompose fast
                                     // path (no Tensor wrapping).
-                                    let out = rt.execute_f32(&artifact, &inputs)?;
+                                    let out = rt.execute_f32(&artifact, tiles)?;
                                     t0 = Instant::now();
                                     // SAFETY: disjoint write targets
                                     // per the wave plan.
                                     unsafe { space_j.write_f32(w, i, &out) };
                                 } else {
-                                    let out = rt.execute(&artifact, &inputs)?;
+                                    let out = rt.execute(&artifact, tiles)?;
                                     t0 = Instant::now();
                                     // SAFETY: disjoint write targets
                                     // per the wave plan.
@@ -994,20 +1241,46 @@ pub fn drive_wave_pool<S: WaveSpace + 'static>(
                                 wb_j.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                                 done_j.fetch_add(1, Ordering::Relaxed);
                                 cells_j.fetch_add(space_j.cell_updates(w, i), Ordering::Relaxed);
-                                space_j.recycle(w, i, inputs);
+                                space_j.recycle(
+                                    w,
+                                    i,
+                                    inputs.take().expect("job inputs already recycled"),
+                                );
                                 Ok(())
                             },
-                            move |ok| {
-                                if ok {
+                            RetryPolicy::default(),
+                            move |status| match status {
+                                JobStatus::Ok { .. } => {
                                     depth_j.completed(w);
                                     let mut newly = Vec::new();
                                     table_j.complete(w, i, &mut newly);
                                     queue_j.push_all(&newly);
-                                } else {
-                                    // Failed or skipped job: successors
-                                    // can never run; release the
-                                    // extractors.
-                                    queue_j.abort();
+                                }
+                                JobStatus::Failed { kind, attempts, message } => {
+                                    // Scoped cancellation: only the
+                                    // failed block's dependency cone
+                                    // stops; independent blocks keep
+                                    // running.
+                                    let cone = table_j.cancel(w, i);
+                                    queue_j.cancel(cone.len());
+                                    lock(&faults_j).push(BlockFault {
+                                        wave: w,
+                                        index: i,
+                                        kind,
+                                        attempts,
+                                        message,
+                                    });
+                                    lock(&cancelled_j).extend(cone);
+                                }
+                                JobStatus::Skipped => {
+                                    // Infrastructure failure (poisoned
+                                    // pool): the underlying error
+                                    // surfaces via wait_idle below;
+                                    // here just release the cone so
+                                    // the extractors can drain.
+                                    let cone = table_j.cancel(w, i);
+                                    queue_j.cancel(cone.len());
+                                    lock(&cancelled_j).extend(cone);
                                 }
                             },
                         );
@@ -1015,20 +1288,18 @@ pub fn drive_wave_pool<S: WaveSpace + 'static>(
                 });
             }
         });
-        // Drain the lanes (the only wait_idle of the whole run), then
-        // surface extractor-side and lane-side failures in that order.
+        // Drain the lanes: the only wait_idle of the whole run, and
+        // the only place infrastructure errors surface.
         let idle = pool.wait_idle();
         drop(guard);
-        if let Some(e) = first_err.into_inner().unwrap() {
-            return Err(e);
-        }
         idle?;
     }
 
     let stats = pool.stats();
+    let counters = pool.fault_counters();
     let (pool_hits, pool_misses, desc_pool_hits, desc_pool_misses) = space.pool_counters();
     let (depth_max, overlap) = depth.finish();
-    Ok(Metrics {
+    let metrics = Metrics {
         blocks: done_blocks.load(Ordering::Relaxed),
         cell_updates: cells.load(Ordering::Relaxed),
         extract: Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms).max(0.0) / 1e3),
@@ -1041,7 +1312,13 @@ pub fn drive_wave_pool<S: WaveSpace + 'static>(
         desc_pool_misses,
         pipeline_depth_max: depth_max,
         overlap_starts: overlap,
-    })
+        job_retries: counters.job_retries - counters0.job_retries,
+        jobs_failed: counters.jobs_failed - counters0.jobs_failed,
+        lane_restarts: counters.lane_restarts - counters0.lane_restarts,
+    };
+    let faults = std::mem::take(&mut *lock(&faults));
+    let cancelled = std::mem::take(&mut *lock(&cancelled));
+    Ok(WaveOutcome { metrics, faults, cancelled })
 }
 
 #[cfg(test)]
@@ -1853,5 +2130,157 @@ mod tests {
             1,
         );
         assert!(r.is_err());
+    }
+
+    // ---------- scoped cancellation (WaveTable::cancel) ----------
+
+    /// Pure-logic reachability oracle: build the successor map by
+    /// reversing `visit_preds`, then BFS from the failed block.  The
+    /// failed block itself is excluded, matching `cancel`'s contract.
+    fn cancel_oracle(g: &TestGraph, from: (usize, usize)) -> Vec<(usize, usize)> {
+        use std::collections::HashMap;
+        let mut succs: HashMap<(usize, usize), Vec<(usize, usize)>> = HashMap::new();
+        for w in 0..g.waves() {
+            for i in 0..g.wave_len(w) {
+                g.visit_preds(w, i, &mut |v, j| {
+                    succs.entry((v, j)).or_default().push((w, i));
+                });
+            }
+        }
+        let mut seen = HashSet::new();
+        let mut queue: VecDeque<(usize, usize)> =
+            succs.get(&from).cloned().unwrap_or_default().into();
+        let mut cone = Vec::new();
+        while let Some(b) = queue.pop_front() {
+            if seen.insert(b) {
+                cone.push(b);
+                queue.extend(succs.get(&b).cloned().unwrap_or_default());
+            }
+        }
+        cone.sort_unstable();
+        cone
+    }
+
+    #[test]
+    fn wave_table_cancel_matches_reachability_oracle() {
+        // Every (graph shape, failed block) pair: the CSR successor
+        // walk must cancel exactly the transitive-successor set.
+        let graphs = [
+            lattice1d_graph(4, 5, 1),
+            lud_graph(3),
+            two_stage_graph(2, 3, 4),
+        ];
+        for g in &graphs {
+            for w in 0..g.waves() {
+                for i in 0..g.wave_len(w) {
+                    let table = WaveTable::new(g, PassMode::Pipelined);
+                    let mut got = table.cancel(w, i);
+                    got.sort_unstable();
+                    assert_eq!(got, cancel_oracle(g, (w, i)), "cone of ({w},{i})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wave_table_cancel_barrier_cone_is_every_later_block() {
+        // Under the wave-serial schedule every later block depends on
+        // the failed one — including blocks of empty-adjacent waves
+        // (lud_graph(2) has empty waves 4 and 5).
+        let g = lud_graph(2);
+        for w in 0..g.waves() {
+            for i in 0..g.wave_len(w) {
+                let table = WaveTable::new(&g, PassMode::Barrier);
+                let want: Vec<(usize, usize)> = (w + 1..g.waves())
+                    .flat_map(|v| (0..g.wave_len(v)).map(move |j| (v, j)))
+                    .collect();
+                let mut got = table.cancel(w, i);
+                got.sort_unstable();
+                assert_eq!(got, want, "barrier cone of ({w},{i})");
+            }
+        }
+    }
+
+    #[test]
+    fn wave_table_cancel_is_idempotent_and_scoped() {
+        // Reach-0 lattice = three independent columns.  Cancelling
+        // from (0,0) takes out only column 0's later blocks; a second
+        // overlapping cancel reports nothing new; and completing
+        // (0,1) still releases (1,1) — the untouched column flows.
+        let g = lattice1d_graph(3, 3, 0);
+        let table = WaveTable::new(&g, PassMode::Pipelined);
+        let mut cone = table.cancel(0, 0);
+        cone.sort_unstable();
+        assert_eq!(cone, vec![(1, 0), (2, 0)]);
+        assert!(
+            table.cancel(1, 0).is_empty(),
+            "overlapping cancel must not double-count"
+        );
+        let mut newly = Vec::new();
+        table.complete(0, 1, &mut newly);
+        assert_eq!(newly, vec![(1, 1)], "independent column must stay runnable");
+    }
+
+    #[test]
+    fn ready_queue_cancel_shrinks_dispatch_target() {
+        let q = ReadyQueue::new(5, [(0, 0), (0, 1)]);
+        assert_eq!(q.pop(), Some((0, 0)));
+        assert_eq!(q.pop(), Some((0, 1)));
+        // The other 3 blocks will never be pushed: accounting them as
+        // cancelled lets pop observe completion instead of parking.
+        q.cancel(3);
+        assert_eq!(q.pop(), None, "cancelled blocks count toward the target");
+    }
+
+    #[test]
+    fn fault_plan_fires_only_at_matching_attempt() {
+        let plan = FaultPlan::default().transient_at(1, 2, 1);
+        assert!(plan.fire(0, 0, 1).is_ok(), "other blocks untouched");
+        assert!(plan.fire(1, 2, 2).is_ok(), "attempt 2 is clean — retry succeeds");
+        let err = plan.fire(1, 2, 1).unwrap_err();
+        assert_eq!(FaultKind::of(&err), FaultKind::Transient);
+    }
+
+    // ---------- drive_wave_pool fault scoping (lanes, no artifacts) ----------
+
+    #[test]
+    fn drive_wave_pool_scopes_fatal_fault_to_dependency_cone() {
+        // Empty registry: the seed block's execute fails with an
+        // unknown-artifact error (Fatal, no retry).  Every other NW
+        // block transitively depends on (0,0), so the whole rest of
+        // the table cancels — and the run still drains cleanly: the
+        // fault is reported in the outcome, not as a poisoned pool.
+        let mut score = vec![0i32; 49];
+        let space = Arc::new(TestNwSpace {
+            nb: 3,
+            b: 2,
+            stride: 7,
+            refm: vec![0; 49],
+            score_ptr: score.as_mut_ptr(),
+        });
+        let pool = RuntimePool::with_registry(
+            ".".into(),
+            crate::runtime::Registry::default(),
+            2,
+        )
+        .unwrap();
+        let outcome = drive_wave_pool(&pool, &space, PassMode::Pipelined, 2)
+            .expect("block faults must not fail the drive");
+        assert_eq!(outcome.faults.len(), 1, "exactly the seed block faults");
+        let f = &outcome.faults[0];
+        assert_eq!((f.wave, f.index), (0, 0));
+        assert_eq!(f.kind, FaultKind::Fatal);
+        assert_eq!(f.attempts, 1, "Fatal faults must not retry");
+        assert!(f.message.contains("native-nw"), "message: {}", f.message);
+        let total: usize = (0..space.waves()).map(|w| space.wave_len(w)).sum();
+        assert_eq!(
+            outcome.cancelled.len(),
+            total - 1,
+            "everything downstream of the seed block cancels"
+        );
+        assert_eq!(outcome.metrics.blocks, 0);
+        assert_eq!(outcome.metrics.cell_updates, 0);
+        assert_eq!(outcome.metrics.jobs_failed, 1);
+        assert_eq!(outcome.metrics.job_retries, 0);
     }
 }

@@ -35,9 +35,9 @@
 //!
 //! Every workload becomes a *fragment*: a [`WaveSpace`] (topologically
 //! ordered waves of blocks with explicit dependency edges) plus the
-//! seam metadata a [`Chain`] needs.  The Ch. 4 apps reuse the exact
-//! spaces the deprecated `run_*_lanes` runners drove (`coordinator::
-//! apps`), so results are bit-identical to the old entry points; the
+//! seam metadata a [`Chain`] needs.  The Ch. 4 apps reuse the wave
+//! spaces defined in `coordinator::apps`, so results are bit-identical
+//! to the original per-app runners those spaces came from; the
 //! Ch. 5 stencils lower each *pass* to one wave whose edges are the
 //! `r·T` halo-overlap rule — the same schedule `DepTable` enforced,
 //! now expressed as an explicit graph so stencils can splice into
@@ -61,6 +61,22 @@
 //! spans the whole chain, and [`PassMode::Barrier`] degrades it to the
 //! back-to-back wave-serial reference the tests and the CI perf gate
 //! compare against.
+//!
+//! # Partial failure
+//!
+//! A terminally failed block no longer turns the whole run into `Err`:
+//! the drive cancels exactly the failed block's dependency cone and
+//! keeps every other block flowing (see `passdriver` § Fault
+//! tolerance), and [`Session::run`] maps the surviving per-block
+//! record onto per-stage [`WorkloadStatus`]es in the [`RunReport`].  A
+//! fused `srad.then(stencil2d)` chain whose upstream faults still
+//! reports the independent `pathfinder.then(nw)` stages as
+//! [`WorkloadStatus::Ok`] with their outputs intact; only stages that
+//! faulted ([`WorkloadStatus::Failed`]) or sat in a cancelled cone
+//! ([`WorkloadStatus::Cancelled`]) have unreliable outputs.
+//! `Session::run` itself returns `Err` only for infrastructure
+//! failures (bad descriptors, warmup/compile errors, a lane that could
+//! not be respawned).
 
 use std::cell::UnsafeCell;
 use std::collections::HashSet;
@@ -76,12 +92,15 @@ use crate::coordinator::apps::{
 use crate::coordinator::bufpool::TensorPools;
 use crate::coordinator::grid::{Boundary, Grid2D, Grid3D, GridWriter2D, GridWriter3D};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::passdriver::{self, PassMode, StencilSpace, WaveGraph, WaveSpace};
+use crate::coordinator::passdriver::{
+    self, BlockFault, PassMode, StencilSpace, WaveGraph, WaveSpace,
+};
 use crate::coordinator::stencil_runner::{
     block_origins_2d, boundary_of, extractor_count, scalar_stencil_meta, stencil_meta, Space2D,
     Space3D, StencilMeta,
 };
-use crate::runtime::{Registry, RuntimePool, Tensor};
+use crate::runtime::pool::lock;
+use crate::runtime::{FaultKind, Registry, RuntimePool, Tensor};
 
 // ---------------------------------------------------------------------------
 // Public descriptor types
@@ -302,15 +321,64 @@ impl WorkloadOutput {
     }
 }
 
+/// Why a stage did not complete: the first terminal block fault
+/// attributed to it by [`Session::run`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultReport {
+    pub kind: FaultKind,
+    pub message: String,
+    /// Execution attempts made on the faulting block (1 + retries).
+    pub attempts: u32,
+    /// Global (fused) wave of the faulting block.
+    pub wave: usize,
+    /// Block index within that wave.
+    pub block: usize,
+}
+
+/// Per-stage completion status in a [`RunReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadStatus {
+    /// Every block of the stage ran to completion; its output is the
+    /// real result.
+    Ok,
+    /// A block of this stage faulted terminally (retry budget
+    /// exhausted, or a `Fatal`/`Panic` fault); the block's dependency
+    /// cone was cancelled and the stage's output is partial.
+    Failed(FaultReport),
+    /// No block of this stage faulted, but some sat in a failed
+    /// upstream block's dependency cone and were cancelled; the
+    /// stage's output is partial.
+    Cancelled,
+}
+
+impl WorkloadStatus {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, WorkloadStatus::Ok)
+    }
+}
+
 /// What one [`Session::run`] call produced: per-run [`Metrics`] (no
 /// bleed-through from earlier runs on the same session/pool), the
 /// end-to-end elapsed time (including artifact warmup and lowering,
-/// which `metrics.wall` excludes), and one output per chain stage.
+/// which `metrics.wall` excludes), one output **and** one
+/// [`WorkloadStatus`] per chain stage, and the cancelled-block record.
+///
+/// Outputs are copied out for every stage — the drive quiesces the
+/// lanes before any buffer is read — but only stages whose status
+/// [`WorkloadStatus::is_ok`] carry trustworthy results; `Failed` /
+/// `Cancelled` stages report whatever the buffers held when their
+/// cones were cut.
 #[derive(Debug)]
 pub struct RunReport {
     pub metrics: Metrics,
     pub elapsed: Duration,
     pub outputs: Vec<WorkloadOutput>,
+    /// One status per chain stage, in chain order.
+    pub statuses: Vec<WorkloadStatus>,
+    /// Every block cancelled as a transitive successor of a failed
+    /// block, in global (fused wave, index) coordinates.  Empty on a
+    /// fault-free run.
+    pub cancelled: Vec<(usize, usize)>,
 }
 
 impl RunReport {
@@ -324,11 +392,17 @@ impl RunReport {
         self.outputs.pop().expect("a run has at least one stage")
     }
 
-    /// (metrics, final output) — the shape the deprecated `run_*`
-    /// shims return.
-    pub(crate) fn into_parts(mut self) -> (Metrics, Option<WorkloadOutput>) {
-        let out = self.outputs.pop();
-        (self.metrics, out)
+    /// `true` when every stage completed ([`WorkloadStatus::Ok`]).
+    pub fn ok(&self) -> bool {
+        self.statuses.iter().all(WorkloadStatus::is_ok)
+    }
+
+    /// The first stage fault, if any stage failed.
+    pub fn first_fault(&self) -> Option<&FaultReport> {
+        self.statuses.iter().find_map(|s| match s {
+            WorkloadStatus::Failed(f) => Some(f),
+            _ => None,
+        })
     }
 }
 
@@ -422,8 +496,8 @@ impl Session<'static> {
 }
 
 impl<'p> Session<'p> {
-    /// Borrow an existing pool (tests, benches and the deprecated
-    /// `run_*` shims share one pool across many sessions this way).
+    /// Borrow an existing pool (tests and benches share one pool
+    /// across many sessions this way).
     pub fn over(pool: &'p RuntimePool) -> Session<'p> {
         Session {
             engine: Engine::Borrowed(pool),
@@ -463,12 +537,12 @@ impl<'p> Session<'p> {
     /// Snapshot of the cumulative metrics across every run of this
     /// session.
     pub fn metrics(&self) -> Metrics {
-        self.totals.lock().unwrap().snapshot()
+        lock(&self.totals).snapshot()
     }
 
     /// Zero the cumulative metrics.
     pub fn reset_metrics(&self) {
-        self.totals.lock().unwrap().reset()
+        lock(&self.totals).reset()
     }
 
     /// Lower the chain onto one fused wave graph, warm every distinct
@@ -476,9 +550,30 @@ impl<'p> Session<'p> {
     /// the whole thing through the dependency-tracked scheduler —
     /// one `WaveTable`, one closing `wait_idle`, no barrier anywhere
     /// between stages.
+    ///
+    /// Block-level faults do not abort the run: the drive cancels the
+    /// failed block's dependency cone, finishes everything else, and
+    /// the report carries a per-stage [`WorkloadStatus`].  `Err` is
+    /// reserved for infrastructure failures (bad descriptors, warmup
+    /// errors, an unrecoverable pool).
     pub fn run(&self, chain: impl Into<Chain>) -> crate::Result<RunReport> {
+        self.run_inner(chain.into(), Default::default())
+    }
+
+    /// [`Session::run`] with a deterministic
+    /// [`FaultPlan`](passdriver::FaultPlan) injected into the drive —
+    /// the chaos-harness entry point (test / `chaos` builds only).
+    #[cfg(any(test, feature = "chaos"))]
+    pub fn run_with_faults(
+        &self,
+        chain: impl Into<Chain>,
+        plan: Arc<passdriver::FaultPlan>,
+    ) -> crate::Result<RunReport> {
+        self.run_inner(chain.into(), Some(plan))
+    }
+
+    fn run_inner(&self, chain: Chain, inject: passdriver::Injection) -> crate::Result<RunReport> {
         let t0 = Instant::now();
-        let chain = chain.into();
         ensure!(!chain.stages.is_empty(), "cannot run an empty chain");
         let pool = self.pool();
 
@@ -503,12 +598,20 @@ impl<'p> Session<'p> {
         let extractors = self
             .extractors
             .unwrap_or_else(|| extractor_count(pool.lanes()));
-        let metrics = passdriver::drive_wave_pool(pool, &space, self.mode, extractors)?;
+        let outcome =
+            passdriver::drive_wave_pool_inner(pool, &space, self.mode, extractors, inject)?;
         // The drive has quiesced every lane; copying outputs through
         // the raw handles is race-free now.
         let outputs = space.outputs();
-        self.totals.lock().unwrap().merge(&metrics);
-        Ok(RunReport { metrics, elapsed: t0.elapsed(), outputs })
+        let statuses = space.statuses(&outcome.faults, &outcome.cancelled);
+        lock(&self.totals).merge(&outcome.metrics);
+        Ok(RunReport {
+            metrics: outcome.metrics,
+            elapsed: t0.elapsed(),
+            outputs,
+            statuses,
+            cancelled: outcome.cancelled,
+        })
     }
 }
 
@@ -1380,6 +1483,37 @@ impl FusedSpace {
             })
             .collect()
     }
+
+    /// Map the drive's per-block fault / cancellation record onto
+    /// per-stage statuses: a stage owning a terminally failed block is
+    /// `Failed` (first fault wins), a stage whose only casualties were
+    /// cancelled cone members is `Cancelled`, everything else is `Ok`.
+    pub(crate) fn statuses(
+        &self,
+        faults: &[BlockFault],
+        cancelled: &[(usize, usize)],
+    ) -> Vec<WorkloadStatus> {
+        let mut st = vec![WorkloadStatus::Ok; self.frags.len()];
+        for &(w, _) in cancelled {
+            let (k, _) = self.locate(w);
+            if st[k] == WorkloadStatus::Ok {
+                st[k] = WorkloadStatus::Cancelled;
+            }
+        }
+        for f in faults {
+            let (k, _) = self.locate(f.wave);
+            if !matches!(st[k], WorkloadStatus::Failed(_)) {
+                st[k] = WorkloadStatus::Failed(FaultReport {
+                    kind: f.kind,
+                    message: f.message.clone(),
+                    attempts: f.attempts,
+                    wave: f.wave,
+                    block: f.index,
+                });
+            }
+        }
+        st
+    }
 }
 
 impl WaveGraph for FusedSpace {
@@ -1839,13 +1973,71 @@ mod tests {
 
     #[test]
     fn run_report_accessors() {
-        let report = RunReport {
+        let fault = FaultReport {
+            kind: FaultKind::Fatal,
+            message: "boom".into(),
+            attempts: 1,
+            wave: 0,
+            block: 0,
+        };
+        let mut report = RunReport {
             metrics: Metrics::default(),
             elapsed: Duration::ZERO,
             outputs: vec![WorkloadOutput::Piped, WorkloadOutput::Row(vec![1, 2])],
+            statuses: vec![WorkloadStatus::Ok, WorkloadStatus::Ok],
+            cancelled: Vec::new(),
         };
         assert_eq!(report.output(), &WorkloadOutput::Row(vec![1, 2]));
-        let (_, out) = report.into_parts();
-        assert_eq!(out, Some(WorkloadOutput::Row(vec![1, 2])));
+        assert!(report.ok());
+        assert_eq!(report.first_fault(), None);
+
+        report.statuses[1] = WorkloadStatus::Failed(fault.clone());
+        assert!(!report.ok());
+        assert_eq!(report.first_fault(), Some(&fault));
+
+        let out = report.into_output();
+        assert_eq!(out, WorkloadOutput::Row(vec![1, 2]));
+    }
+
+    #[test]
+    fn statuses_map_faults_and_cancellations_to_stages() {
+        // Two independent 2-pass stages over a 2x2 block lattice:
+        // stage A owns global waves 0-1, stage B waves 2-3.
+        let a = blur_frag(StencilInput::Own(rand_grid(8, 8, 21)), 2);
+        let b = blur_frag(StencilInput::Own(rand_grid(8, 8, 22)), 2);
+        let fused = FusedSpace::splice(vec![Box::new(a), Box::new(b)], vec![false, false]);
+
+        // Fault-free record: everything Ok.
+        assert_eq!(
+            fused.statuses(&[], &[]),
+            vec![WorkloadStatus::Ok, WorkloadStatus::Ok]
+        );
+
+        // A fault in stage A whose cone spills into stage B would mark
+        // A Failed; B stays Ok unless its own blocks were cancelled.
+        let fault = BlockFault {
+            wave: 1,
+            index: 2,
+            kind: FaultKind::Transient,
+            attempts: 3,
+            message: "injected".into(),
+        };
+        let st = fused.statuses(&[fault.clone()], &[]);
+        assert_eq!(st[1], WorkloadStatus::Ok);
+        match &st[0] {
+            WorkloadStatus::Failed(f) => {
+                assert_eq!(f.kind, FaultKind::Transient);
+                assert_eq!(f.attempts, 3);
+                assert_eq!((f.wave, f.block), (1, 2));
+            }
+            other => panic!("stage A should be Failed, got {other:?}"),
+        }
+
+        // Cancellations land on the stage that owns the global wave,
+        // and a stage's own fault outranks a cancellation mark.
+        let st = fused.statuses(&[fault], &[(1, 3), (3, 0)]);
+        assert!(matches!(st[0], WorkloadStatus::Failed(_)));
+        assert_eq!(st[1], WorkloadStatus::Cancelled);
+        assert!(!st[1].is_ok());
     }
 }

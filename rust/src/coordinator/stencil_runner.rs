@@ -18,39 +18,38 @@
 //! `wait_idle` barrier — the deep-pipeline behaviour of the thesis's
 //! combined spatial/temporal blocking).
 //!
-//! Each workload has two entry points:
+//! What lives here is the *lowering*, not the entry point: the stencil
+//! plan builders ([`StencilMeta`], [`Space2D`]/[`Space3D`],
+//! [`block_origins_2d`]) that
+//! [`coordinator::session`](crate::coordinator::session) wraps into
+//! workload fragments (`Workload::{stencil2d, stencil3d,
+//! stencil2d_with_scalar}`).  M extractor workers feed N execute lanes
+//! through the pool's bounded queue, and each lane writes its own block
+//! back (unordered — interiors are disjoint, so only metrics, not
+//! correctness, depend on order).  Results are bit-identical for any
+//! lane count and either [`PassMode`] (see the lane-invariance
+//! integration tests); the [`PassMode::Barrier`] baseline schedule
+//! backs the CI perf gate.  (The pre-PR 4 `run_stencil*` free functions
+//! and their `_lanes` shims are gone — the lane-invariance tests now
+//! pin the pooled engine against a lanes=1 session over the same
+//! spaces.)
 //!
-//! * `run_stencil{2d,3d}` — single [`Runtime`]: execution pinned to the
-//!   caller's thread, one extractor thread pipelining dependency-ready
-//!   tiles ahead of it (across pass boundaries);
-//! * `run_stencil{2d,3d}_lanes` — [`RuntimePool`]: M extractor workers
-//!   feed N execute lanes through the pool's bounded queue, and each
-//!   lane writes its own block back (unordered — interiors are
-//!   disjoint, so only metrics, not correctness, depend on order).
-//!   Results are bit-identical to the single-runtime path for any lane
-//!   count (see the lane-invariance integration tests); the `_mode`
-//!   variants expose the [`PassMode::Barrier`] baseline schedule for
-//!   the CI perf gate.
-//!
-//! Both paths marshal through the [`TensorPools`] arenas (f32 tiles
+//! Extraction marshals through the [`TensorPools`] arenas (f32 tiles
 //! *and* the i32 boundary descriptors), so steady-state passes allocate
 //! nothing for tile extraction (`Metrics::pool_hits` / `pool_misses` /
 //! `desc_pool_hits` / `desc_pool_misses` expose the reuse rates).
 //!
-//! Since PR 4 the public front door is the typed builder API in
-//! [`coordinator::session`](crate::coordinator::session): every pooled
-//! `run_*` entry point here is a `#[deprecated]` shim over
-//! [`Session`](crate::coordinator::session::Session) (kept one release),
-//! and the single-[`Runtime`] runners remain only as the caller-thread
-//! reference implementations the bit-identity tests compare against.
+//! [`passdriver`]: crate::coordinator::passdriver
+//! [`PassMode`]: crate::coordinator::passdriver::PassMode
+//! [`PassMode::Barrier`]: crate::coordinator::passdriver::PassMode::Barrier
+//! [`Metrics::pool_hits`]: crate::coordinator::metrics::Metrics
 
-use anyhow::{anyhow, bail};
+use anyhow::bail;
 
 use crate::coordinator::bufpool::TensorPools;
-use crate::coordinator::grid::{Boundary, Grid2D, Grid3D, GridWriter2D, GridWriter3D};
-use crate::coordinator::metrics::Metrics;
-use crate::coordinator::passdriver::{self, PassMode, StencilSpace};
-use crate::runtime::{Runtime, RuntimePool, Tensor};
+use crate::coordinator::grid::{Boundary, GridWriter2D, GridWriter3D};
+use crate::coordinator::passdriver::StencilSpace;
+use crate::runtime::Tensor;
 
 /// Out-of-grid cell counts per tile side: [top, bottom] for an axis.
 /// `o0` is the block's interior origin, `n` the grid extent.  Shared
@@ -108,9 +107,8 @@ pub(crate) fn stencil_meta(
 /// Manifest parameters of a scalar-carrying stencil artifact (SRAD's
 /// q0² stage): like [`stencil_meta`] but without the aux/step-count
 /// checks — the workload always advances exactly one fused pass.
-/// (Shared with the `Session` lowering in `coordinator::session` so
-/// the deprecated reference path and the builder path can never
-/// desynchronize.)
+/// (Used by the `Session` lowering in `coordinator::session` and the
+/// SRAD wavefront space in `coordinator::apps`.)
 pub(crate) fn scalar_stencil_meta(
     spec: &crate::runtime::ArtifactSpec,
 ) -> crate::Result<StencilMeta> {
@@ -384,208 +382,6 @@ impl StencilSpace for Space3D {
             self.pools.descs.misses(),
         )
     }
-}
-
-/// Run `steps` time steps of a 2D stencil artifact over `grid`.
-///
-/// `aux` is the optional second input stream (Hotspot's power grid, same
-/// extents).  Returns the final grid and metrics.
-///
-/// Deprecated: build a [`Session`](crate::coordinator::session::Session)
-/// and run [`Workload::stencil2d`](crate::coordinator::session::Workload::stencil2d)
-/// instead.  This single-[`Runtime`] path is kept (one release) as the
-/// caller-thread reference implementation the bit-identity tests pin
-/// the pooled engine against.
-#[deprecated(note = "use Session::builder() with Workload::stencil2d (see coordinator::session)")]
-pub fn run_stencil2d(
-    rt: &Runtime,
-    artifact: &str,
-    grid: Grid2D,
-    aux: Option<&Grid2D>,
-    steps: u64,
-) -> crate::Result<(Grid2D, Metrics)> {
-    let spec = rt
-        .registry()
-        .get(artifact)
-        .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
-        .clone();
-    let m = stencil_meta(&spec, aux.is_some(), steps)?;
-    let passes = (steps / m.t_fused) as usize;
-
-    // Compile up front, outside the timed region (the analogue of FPGA
-    // reprogramming, which the thesis also excludes from kernel timing,
-    // §4.2.4).
-    rt.executable(artifact)?;
-
-    let mut cur = grid;
-    let mut next = Grid2D::zeros(cur.ny, cur.nx);
-    let cell_updates = (cur.ny * cur.nx) as u64 * steps;
-    // SAFETY: the aux grid is never written; cur/next outlive the drive
-    // call, which quiesces every handle before returning.
-    let space = Space2D::new(cur.ny, cur.nx, &m, aux.map(|a| unsafe { a.shared_view() }), None);
-    let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
-    let metrics = passdriver::drive_single(rt, artifact, &space, handles, passes, cell_updates)?;
-    // Pass p writes buffer (p+1) % 2, so the final grid's parity is
-    // `passes % 2` (0 passes leaves the input untouched in `cur`).
-    Ok((if passes % 2 == 0 { cur } else { next }, metrics))
-}
-
-/// Lane-parallel variant of [`run_stencil2d`] with an explicit
-/// [`PassMode`].  Deprecated shim: forwards to a borrowed
-/// [`Session`](crate::coordinator::session::Session), which lowers the
-/// stencil onto the wavefront pass driver (one wave per pass, the same
-/// `r·T` halo edges) — bit-identical to the pre-Session `drive_pool`
-/// schedule for any lane count and either mode.  (Shim cost: the
-/// by-value `Workload` API makes this clone the aux grid per call —
-/// the old path borrowed it; port to `Session` to avoid the copy.)
-#[deprecated(note = "use Session::over(pool).with_mode(mode) with Workload::stencil2d")]
-#[allow(deprecated)]
-pub fn run_stencil2d_lanes_mode(
-    pool: &RuntimePool,
-    artifact: &str,
-    grid: Grid2D,
-    aux: Option<&Grid2D>,
-    steps: u64,
-    mode: PassMode,
-) -> crate::Result<(Grid2D, Metrics)> {
-    use crate::coordinator::session::{Session, Workload, WorkloadOutput};
-    let report = Session::over(pool)
-        .with_mode(mode)
-        .run(Workload::stencil2d(artifact, grid, aux.cloned(), steps))?;
-    match report.into_parts() {
-        (metrics, Some(WorkloadOutput::Grid2D(g))) => Ok((g, metrics)),
-        _ => Err(anyhow!("stencil2d workload produced no 2D grid output")),
-    }
-}
-
-/// Lane-parallel variant of [`run_stencil2d`]: deprecated shim over
-/// the [`Session`](crate::coordinator::session::Session) API with the
-/// default [`PassMode::Pipelined`] schedule.
-#[deprecated(note = "use Session::builder() with Workload::stencil2d")]
-#[allow(deprecated)]
-pub fn run_stencil2d_lanes(
-    pool: &RuntimePool,
-    artifact: &str,
-    grid: Grid2D,
-    aux: Option<&Grid2D>,
-    steps: u64,
-) -> crate::Result<(Grid2D, Metrics)> {
-    run_stencil2d_lanes_mode(pool, artifact, grid, aux, steps, PassMode::Pipelined)
-}
-
-/// Run `steps` time steps of a 3D stencil artifact over `grid`.
-///
-/// Deprecated: see [`run_stencil2d`] — kept as the single-[`Runtime`]
-/// reference path for the bit-identity tests.
-#[deprecated(note = "use Session::builder() with Workload::stencil3d (see coordinator::session)")]
-pub fn run_stencil3d(
-    rt: &Runtime,
-    artifact: &str,
-    grid: Grid3D,
-    aux: Option<&Grid3D>,
-    steps: u64,
-) -> crate::Result<(Grid3D, Metrics)> {
-    let spec = rt
-        .registry()
-        .get(artifact)
-        .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
-        .clone();
-    let m = stencil_meta(&spec, aux.is_some(), steps)?;
-    let passes = (steps / m.t_fused) as usize;
-
-    rt.executable(artifact)?;
-
-    let mut cur = grid;
-    let mut next = Grid3D::zeros(cur.nz, cur.ny, cur.nx);
-    let cell_updates = (cur.nz * cur.ny * cur.nx) as u64 * steps;
-    // SAFETY: as in run_stencil2d.
-    let space = Space3D::new(
-        cur.nz, cur.ny, cur.nx, &m, aux.map(|a| unsafe { a.shared_view() }),
-    );
-    let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
-    let metrics = passdriver::drive_single(rt, artifact, &space, handles, passes, cell_updates)?;
-    Ok((if passes % 2 == 0 { cur } else { next }, metrics))
-}
-
-/// Lane-parallel variant of [`run_stencil3d`] with an explicit
-/// [`PassMode`].  Deprecated shim over the
-/// [`Session`](crate::coordinator::session::Session) API; see
-/// [`run_stencil2d_lanes_mode`] — including its aux-clone shim cost.
-#[deprecated(note = "use Session::over(pool).with_mode(mode) with Workload::stencil3d")]
-#[allow(deprecated)]
-pub fn run_stencil3d_lanes_mode(
-    pool: &RuntimePool,
-    artifact: &str,
-    grid: Grid3D,
-    aux: Option<&Grid3D>,
-    steps: u64,
-    mode: PassMode,
-) -> crate::Result<(Grid3D, Metrics)> {
-    use crate::coordinator::session::{Session, Workload, WorkloadOutput};
-    let report = Session::over(pool)
-        .with_mode(mode)
-        .run(Workload::stencil3d(artifact, grid, aux.cloned(), steps))?;
-    match report.into_parts() {
-        (metrics, Some(WorkloadOutput::Grid3D(g))) => Ok((g, metrics)),
-        _ => Err(anyhow!("stencil3d workload produced no 3D grid output")),
-    }
-}
-
-/// Lane-parallel variant of [`run_stencil3d`]: deprecated shim over
-/// the [`Session`](crate::coordinator::session::Session) API with the
-/// default [`PassMode::Pipelined`] schedule.
-#[deprecated(note = "use Session::builder() with Workload::stencil3d")]
-#[allow(deprecated)]
-pub fn run_stencil3d_lanes(
-    pool: &RuntimePool,
-    artifact: &str,
-    grid: Grid3D,
-    aux: Option<&Grid3D>,
-    steps: u64,
-) -> crate::Result<(Grid3D, Metrics)> {
-    run_stencil3d_lanes_mode(pool, artifact, grid, aux, steps, PassMode::Pipelined)
-}
-
-/// One pass of a 2D stencil artifact that takes a run-time scalar operand
-/// (SRAD's q0² reduction result, shape `[steps]`).  Advances the grid by
-/// the artifact's fused step count.
-///
-/// Deprecated: see
-/// [`Workload::stencil2d_with_scalar`](crate::coordinator::session::Workload::stencil2d_with_scalar)
-/// — kept as the single-[`Runtime`] reference path used by [`run_srad`]
-/// (itself deprecated).
-///
-/// [`run_srad`]: crate::coordinator::apps::run_srad
-#[deprecated(note = "use Session with Workload::stencil2d_with_scalar (see coordinator::session)")]
-pub fn run_stencil2d_with_scalar(
-    rt: &Runtime,
-    artifact: &str,
-    grid: Grid2D,
-    scalar: f32,
-) -> crate::Result<(Grid2D, Metrics)> {
-    let spec = rt
-        .registry()
-        .get(artifact)
-        .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
-        .clone();
-    let m = scalar_stencil_meta(&spec)?;
-
-    rt.executable(artifact)?;
-
-    let mut cur = grid;
-    let mut next = Grid2D::zeros(cur.ny, cur.nx);
-    let cell_updates = (cur.ny * cur.nx) as u64 * m.t_fused;
-    // SAFETY: as in run_stencil2d.
-    let space = Space2D::new(
-        cur.ny,
-        cur.nx,
-        &m,
-        None,
-        Some(vec![scalar; m.t_fused as usize]),
-    );
-    let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
-    let metrics = passdriver::drive_single(rt, artifact, &space, handles, 1, cell_updates)?;
-    Ok((next, metrics))
 }
 
 #[cfg(test)]

@@ -19,10 +19,12 @@
 //!   builder API (`Session` / `Workload` / `Chain`): one typed front
 //!   door that lowers every workload — stencils and the Ch. 4 apps
 //!   alike — onto the dependency-tracked wave driver, and fuses
-//!   chained workloads into a single wave graph.  The old `run_*`
-//!   free functions are `#[deprecated]` shims over it (kept one
-//!   release); this crate denies `deprecated`, so only those shim
-//!   modules may still reference them.
+//!   chained workloads into a single wave graph.  Runs are
+//!   fault-tolerant: transient block faults retry in place, terminal
+//!   ones cancel exactly their dependency cone, and the report
+//!   carries a per-stage [`coordinator::session::WorkloadStatus`].
+//!   (The pre-PR 4 `run_*` free functions and their deprecated shims
+//!   were removed in PR 6.)
 //! * [`perfmodel`] — the thesis's general FPGA performance model
 //!   (Eqs. 3-1 … 3-8) plus area / f_max / power models.
 //! * [`device`] — device database (Tables 4-1, 4-2, 5-3, 5-4).
@@ -33,9 +35,9 @@
 //! * [`baseline`] — CPU/GPU/Xeon Phi roofline comparators.
 //! * [`report`] — regenerates every table and figure of the evaluation.
 
-// The deprecated `run_*` entry points may only be referenced from
-// their own shim modules (scoped `#[allow(deprecated)]`); everything
-// else in the crate must go through `coordinator::session`.
+// Nothing in this crate may call a deprecated entry point: future
+// deprecation cycles get the same treatment the `run_*` shims got
+// (deprecate one release, then delete).
 #![deny(deprecated)]
 
 pub mod baseline;

@@ -17,7 +17,7 @@
 pub mod pool;
 pub mod registry;
 
-pub use pool::RuntimePool;
+pub use pool::{FaultCounters, JobStatus, RetryPolicy, RuntimePool};
 pub use registry::{ArtifactSpec, DType, Registry, TensorSpec};
 
 use std::cell::RefCell;
@@ -26,6 +26,70 @@ use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Context};
+
+/// Failure classification at the pool boundary, attached to tracked-job
+/// completion callbacks so the wave driver can choose between retrying a
+/// block and cancelling its dependency cone (see `README.md`
+/// § Failure semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Execution-time failure (device staging, XLA execute, result
+    /// fetch): the inputs were structurally valid, so a fresh attempt
+    /// can succeed.  Eligible for bounded retry.
+    Transient,
+    /// Structural failure (unknown artifact, parse/compile error,
+    /// shape or dtype mismatch): the same job can never succeed.
+    /// Never retried.
+    Fatal,
+    /// The job body panicked.  Never retried.
+    Panic,
+}
+
+impl FaultKind {
+    /// Classify an error chain: the first [`Fault`] in the chain wins.
+    /// Errors that never got classified (manifest loading, driver
+    /// internals) default to `Fatal` — retrying the unknown is never
+    /// safe.
+    pub fn of(err: &anyhow::Error) -> FaultKind {
+        err.chain()
+            .find_map(|c| c.downcast_ref::<Fault>())
+            .map_or(FaultKind::Fatal, |f| f.kind)
+    }
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FaultKind::Transient => "transient",
+            FaultKind::Fatal => "fatal",
+            FaultKind::Panic => "panic",
+        })
+    }
+}
+
+/// A classified runtime error, wrapped into the `anyhow` chain at the
+/// site that knows the failure class; [`FaultKind::of`] recovers the
+/// class at the pool boundary.
+#[derive(Debug)]
+pub struct Fault {
+    pub kind: FaultKind,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Fault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Fault {}
+
+/// Tag an error message as [`FaultKind::Transient`].  Only transient
+/// sites need explicit tagging: everything unclassified defaults to
+/// `Fatal` under [`FaultKind::of`].
+pub(crate) fn transient(msg: String) -> anyhow::Error {
+    anyhow::Error::new(Fault { kind: FaultKind::Transient, msg })
+}
 
 /// Typed host-side tensor for kernel I/O.
 #[derive(Debug, Clone, PartialEq)]
@@ -86,21 +150,21 @@ impl Tensor {
             Tensor::F32(v, s) => client.buffer_from_host_buffer::<f32>(v, s, None),
             Tensor::I32(v, s) => client.buffer_from_host_buffer::<i32>(v, s, None),
         }
-        .map_err(|e| anyhow!("buffer staging failed: {e:?}"))
+        .map_err(|e| transient(format!("buffer staging failed: {e:?}")))
     }
 
     fn from_literal(lit: &xla::Literal) -> crate::Result<Tensor> {
         let shape = lit
             .array_shape()
-            .map_err(|e| anyhow!("shape query failed: {e:?}"))?;
+            .map_err(|e| transient(format!("shape query failed: {e:?}")))?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
         match shape.ty() {
             xla::ElementType::F32 => Ok(Tensor::F32(
-                lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+                lit.to_vec::<f32>().map_err(|e| transient(format!("{e:?}")))?,
                 dims,
             )),
             xla::ElementType::S32 => Ok(Tensor::I32(
-                lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+                lit.to_vec::<i32>().map_err(|e| transient(format!("{e:?}")))?,
                 dims,
             )),
             other => bail!("unsupported output element type {other:?}"),
@@ -225,17 +289,17 @@ impl Runtime {
         let refs: Vec<&xla::PjRtBuffer> = buffers.iter().collect();
         let result = exe
             .execute_b::<&xla::PjRtBuffer>(&refs)
-            .map_err(|e| anyhow!("executing {name} failed: {e:?}"))?;
+            .map_err(|e| transient(format!("executing {name} failed: {e:?}")))?;
         let buffer = &result[0][0];
         let mut tuple = buffer
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result failed: {e:?}"))?;
+            .map_err(|e| transient(format!("fetching result failed: {e:?}")))?;
         let execute = t0.elapsed();
 
         let tm2 = std::time::Instant::now();
         let parts = tuple
             .decompose_tuple()
-            .map_err(|e| anyhow!("decomposing tuple failed: {e:?}"))?;
+            .map_err(|e| transient(format!("decomposing tuple failed: {e:?}")))?;
         let marshal_out = tm2.elapsed();
 
         let mut stats = self.stats.borrow_mut();
@@ -289,7 +353,7 @@ impl Runtime {
             .ok_or_else(|| anyhow!("{name}: compiled artifact returned an empty result tuple"))
             .and_then(|lit| {
                 lit.to_vec::<f32>()
-                    .map_err(|e| anyhow!("reading f32 output failed: {e:?}"))
+                    .map_err(|e| transient(format!("reading f32 output failed: {e:?}")))
             });
         self.stats.borrow_mut().marshal_ms += tm.elapsed().as_secs_f64() * 1e3;
         out
@@ -314,5 +378,19 @@ mod tests {
         let lit = t.to_literal().unwrap();
         let back = Tensor::from_literal(&lit).unwrap();
         assert_eq!(t, back);
+    }
+
+    #[test]
+    fn fault_classification_survives_context_and_defaults_to_fatal() {
+        let e = transient("device buffer hiccup".into());
+        assert_eq!(FaultKind::of(&e), FaultKind::Transient);
+        // Wrapping with context must not lose the classification.
+        let wrapped = e.context("staging block (3, 7)");
+        assert_eq!(FaultKind::of(&wrapped), FaultKind::Transient);
+        assert!(format!("{wrapped:#}").contains("device buffer hiccup"));
+        // Untagged errors (unknown artifact, validation, internals)
+        // classify as Fatal: retrying the unknown is never safe.
+        let plain = anyhow!("unknown artifact 'nope'");
+        assert_eq!(FaultKind::of(&plain), FaultKind::Fatal);
     }
 }

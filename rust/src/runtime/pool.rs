@@ -9,42 +9,148 @@
 //! compiled per lane (per-lane compile caches — each PJRT client must own
 //! its executables).
 //!
-//! Work arrives as boxed `FnOnce(lane, &Runtime)` jobs through a bounded
-//! queue (backpressure for the extractor side).  Errors and panics inside
-//! jobs poison the pool until the next [`RuntimePool::wait_idle`], which
-//! reports the first failure; remaining queued jobs of the failed batch
-//! are drained without running.
+//! Work arrives as boxed jobs through a bounded queue (backpressure for
+//! the extractor side).  There are two failure disciplines:
 //!
-//! [`RuntimePool::submit_tracked`] attaches a **per-job completion
-//! callback**: the callback fires exactly once per job — after the job
-//! body runs, or when a poisoned pool drains (skips) the job — with a
-//! success flag, *before* the job is counted out of the in-flight set.
-//! The cross-pass pass driver uses this to advance its dependency table
-//! without a global [`RuntimePool::wait_idle`] barrier between passes
-//! (see [`crate::coordinator::passdriver`]).
+//! * **Untracked jobs** ([`RuntimePool::submit`]) keep the original
+//!   batch semantics: the first error or panic poisons the pool until
+//!   the next [`RuntimePool::wait_idle`], which reports it and clears
+//!   the poison; remaining queued jobs of the failed batch are drained
+//!   without running.  Warmup and the one-shot
+//!   [`RuntimePool::execute`] convenience use this path.
+//! * **Tracked jobs** ([`RuntimePool::submit_tracked`]) are the wave
+//!   driver's path and never poison the pool.  Each failure is
+//!   classified ([`FaultKind`]); `Transient` faults are retried under a
+//!   bounded [`RetryPolicy`] (exponential backoff), and the terminal
+//!   [`JobStatus`] is delivered to the job's completion callback
+//!   exactly once — also for jobs a poisoned or closing pool drained
+//!   without running (`Skipped`) — *before* the job leaves the
+//!   in-flight count, so [`RuntimePool::wait_idle`] also waits for
+//!   every callback.  The cross-pass wave driver uses the status to
+//!   choose between advancing the dependency table and cancelling the
+//!   failed block's dependency cone (see
+//!   [`crate::coordinator::passdriver`]).
+//!
+//! Lane threads are **supervised**: a panic that escapes the per-job
+//! isolation (chaos [`LaneKill`], or an unexpected unwind outside a job
+//! body) respawns the lane with a fresh `Runtime` from the shared
+//! registry instead of silently shrinking the pool, counted in
+//! [`FaultCounters::lane_restarts`].
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{anyhow, Context};
 
-use super::{Registry, Runtime, RuntimeStats, Tensor};
+use super::{FaultKind, Registry, Runtime, RuntimeStats, Tensor};
 
-/// A pool job body.  Takes the lane index and that lane's runtime.
+/// Lock a mutex, recovering from poisoning.  Every critical section
+/// behind this helper is a single-field update or a counter fold, so
+/// the data is consistent even if a thread panicked while holding the
+/// guard — and unwrapping would escalate one lane panic into a process
+/// abort when the unwinding thread's drop glue re-locks.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// An untracked pool job body.  Takes the lane index and that lane's
+/// runtime.
 type RunFn = Box<dyn FnOnce(usize, &Runtime) -> crate::Result<()> + Send + 'static>;
 
-/// A per-job completion callback; receives `true` iff the job body ran
-/// and returned `Ok` (a skipped job on a poisoned pool reports `false`).
-type DoneFn = Box<dyn FnOnce(bool) + Send + 'static>;
+/// A tracked (retryable) job body: `FnMut` so the lane can re-invoke it
+/// on a `Transient` fault.  Bodies must keep their inputs alive until
+/// they succeed (see the wave driver's `Option`-held inputs).
+type TrackedFn = Box<dyn FnMut(usize, &Runtime) -> crate::Result<()> + Send + 'static>;
 
-/// A unit of pool work: the body plus an optional completion callback.
+/// A per-job completion callback; receives the terminal [`JobStatus`].
+type DoneFn = Box<dyn FnOnce(JobStatus) + Send + 'static>;
+
+/// Bounded retry policy for tracked jobs.  Only `Transient` faults are
+/// retried; `Fatal` faults and panics are terminal on first occurrence.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempt budget (≥ 1); 1 disables retry.
+    pub attempts: u32,
+    /// Backoff before the second attempt; doubles per further retry.
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        // Three attempts with 1 ms / 2 ms pauses: long enough to ride
+        // out an allocator or device hiccup, short enough to be
+        // invisible next to a block execution.
+        RetryPolicy { attempts: 3, backoff: Duration::from_millis(1) }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries: every fault is terminal on the first attempt.
+    pub fn none() -> Self {
+        RetryPolicy { attempts: 1, backoff: Duration::ZERO }
+    }
+
+    /// Delay after failed attempt `attempt` (1-based): `backoff · 2^(attempt-1)`.
+    fn delay(&self, attempt: u32) -> Duration {
+        self.backoff.saturating_mul(1u32 << attempt.saturating_sub(1).min(16))
+    }
+}
+
+/// Terminal status of a tracked job, delivered to its completion
+/// callback exactly once.
+#[derive(Debug, Clone)]
+pub enum JobStatus {
+    /// The body returned `Ok` (possibly after `retries` retried
+    /// attempts).
+    Ok { retries: u32 },
+    /// The body failed terminally: a `Fatal` fault or a panic, or a
+    /// `Transient` fault with the retry budget exhausted.
+    Failed { kind: FaultKind, attempts: u32, message: String },
+    /// The job never ran: a poisoned pool drained it.
+    Skipped,
+}
+
+impl JobStatus {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, JobStatus::Ok { .. })
+    }
+}
+
+/// Snapshot of the pool's fault-tolerance counters since open.
+/// Drivers diff two snapshots to attribute counts to one run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Retried attempts of tracked jobs (`Transient` faults).
+    pub job_retries: u64,
+    /// Tracked jobs that failed terminally.
+    pub jobs_failed: u64,
+    /// Lane threads respawned after a panic escaped job isolation.
+    pub lane_restarts: u64,
+}
+
+/// Chaos panic payload: a job body that panics with `LaneKill` kills
+/// its lane *thread* — the per-job panic isolation deliberately
+/// re-raises it — exercising the supervisor's respawn path.  The job
+/// itself still completes as `Failed` with [`FaultKind::Panic`].
+#[cfg(any(test, feature = "chaos"))]
+pub struct LaneKill;
+
+enum JobBody {
+    Once(RunFn),
+    Tracked(TrackedFn),
+}
+
+/// A unit of pool work: the body plus an optional completion callback
+/// and the retry policy (tracked bodies only).
 struct Job {
-    run: RunFn,
+    body: JobBody,
     done: Option<DoneFn>,
+    policy: RetryPolicy,
 }
 
 struct QueueState {
@@ -67,13 +173,17 @@ struct Shared {
     poisoned: AtomicBool,
     /// Aggregated per-lane runtime stats (updated after every job).
     stats: Mutex<RuntimeStats>,
+    /// Fault-tolerance counters (see [`FaultCounters`]).
+    job_retries: AtomicU64,
+    jobs_failed: AtomicU64,
+    lane_restarts: AtomicU64,
     queue_cap: usize,
 }
 
 impl Shared {
     fn record_error(&self, e: anyhow::Error) {
         self.poisoned.store(true, Ordering::Release);
-        self.error.lock().unwrap().get_or_insert(e);
+        lock(&self.error).get_or_insert(e);
     }
 }
 
@@ -91,10 +201,21 @@ impl RuntimePool {
     /// thread; each lane then creates its own PJRT client.  Returns an
     /// error if the manifest fails to parse or any lane fails to start.
     pub fn open(dir: impl AsRef<Path>, lanes: usize) -> crate::Result<RuntimePool> {
-        let lanes = lanes.max(1);
         let dir: PathBuf = dir.as_ref().to_path_buf();
         let registry = Registry::load(dir.join("manifest.txt"))
             .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        RuntimePool::with_registry(dir, registry, lanes)
+    }
+
+    /// Open over an already-parsed registry (pure-logic tests use an
+    /// empty one: lanes start and run jobs without any artifacts on
+    /// disk).
+    pub(crate) fn with_registry(
+        dir: PathBuf,
+        registry: Registry,
+        lanes: usize,
+    ) -> crate::Result<RuntimePool> {
+        let lanes = lanes.max(1);
         let shared = Arc::new(Shared {
             state: Mutex::new(QueueState {
                 jobs: VecDeque::new(),
@@ -107,6 +228,9 @@ impl RuntimePool {
             error: Mutex::new(None),
             poisoned: AtomicBool::new(false),
             stats: Mutex::new(RuntimeStats::default()),
+            job_retries: AtomicU64::new(0),
+            jobs_failed: AtomicU64::new(0),
+            lane_restarts: AtomicU64::new(0),
             queue_cap: (lanes * 4).max(8),
         });
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<crate::Result<()>>();
@@ -118,12 +242,12 @@ impl RuntimePool {
             let tx = ready_tx.clone();
             let handle = match std::thread::Builder::new()
                 .name(format!("rt-lane-{lane}"))
-                .spawn(move || lane_main(lane, dir, reg, sh, tx))
+                .spawn(move || lane_entry(lane, dir, reg, sh, tx))
             {
                 Ok(h) => h,
                 Err(e) => {
                     // Release the lanes already spawned so they exit.
-                    shared.state.lock().unwrap().closed = true;
+                    lock(&shared.state).closed = true;
                     shared.job_ready.notify_all();
                     for h in handles {
                         let _ = h.join();
@@ -154,35 +278,64 @@ impl RuntimePool {
 
     /// Aggregate execution stats across all lanes.
     pub fn stats(&self) -> RuntimeStats {
-        self.shared.stats.lock().unwrap().clone()
+        lock(&self.shared.stats).clone()
     }
 
-    /// Enqueue a job.  Blocks while the queue is at capacity (the
-    /// bounded-channel backpressure between extractors and lanes).
+    /// Snapshot the fault-tolerance counters (retries / terminal
+    /// failures / lane respawns since open).
+    pub fn fault_counters(&self) -> FaultCounters {
+        FaultCounters {
+            job_retries: self.shared.job_retries.load(Ordering::Relaxed),
+            jobs_failed: self.shared.jobs_failed.load(Ordering::Relaxed),
+            lane_restarts: self.shared.lane_restarts.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Enqueue an untracked job.  Blocks while the queue is at capacity
+    /// (the bounded-channel backpressure between extractors and lanes).
+    /// Failures poison the pool until the next
+    /// [`RuntimePool::wait_idle`].
     pub fn submit<F>(&self, job: F)
     where
         F: FnOnce(usize, &Runtime) -> crate::Result<()> + Send + 'static,
     {
-        self.enqueue(Job { run: Box::new(job), done: None });
+        self.enqueue(Job {
+            body: JobBody::Once(Box::new(job)),
+            done: None,
+            policy: RetryPolicy::none(),
+        });
     }
 
-    /// Enqueue a job with a completion callback.  `on_done(ok)` fires
-    /// exactly once — after the job body returns, or with `ok = false`
-    /// when a poisoned pool drains the job without running it — and is
-    /// ordered before the job leaves the in-flight count (so
-    /// [`RuntimePool::wait_idle`] also waits for every callback).
-    pub fn submit_tracked<F, C>(&self, job: F, on_done: C)
+    /// Enqueue a tracked job with a retry policy and a completion
+    /// callback.  `on_done(status)` fires exactly once — after the body
+    /// succeeds or fails terminally (`Transient` faults are retried up
+    /// to `policy.attempts` times with exponential backoff), or with
+    /// [`JobStatus::Skipped`] when a poisoned pool drains the job
+    /// without running it — and is ordered before the job leaves the
+    /// in-flight count (so [`RuntimePool::wait_idle`] also waits for
+    /// every callback).  Tracked failures do **not** poison the pool:
+    /// scoping the consequence of a failed block is the caller's job
+    /// (see `WaveTable::cancel`).
+    pub fn submit_tracked<F, C>(&self, job: F, policy: RetryPolicy, on_done: C)
     where
-        F: FnOnce(usize, &Runtime) -> crate::Result<()> + Send + 'static,
-        C: FnOnce(bool) + Send + 'static,
+        F: FnMut(usize, &Runtime) -> crate::Result<()> + Send + 'static,
+        C: FnOnce(JobStatus) + Send + 'static,
     {
-        self.enqueue(Job { run: Box::new(job), done: Some(Box::new(on_done)) });
+        self.enqueue(Job {
+            body: JobBody::Tracked(Box::new(job)),
+            done: Some(Box::new(on_done)),
+            policy,
+        });
     }
 
     fn enqueue(&self, job: Job) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock(&self.shared.state);
         while st.jobs.len() >= self.shared.queue_cap && !st.closed {
-            st = self.shared.space.wait(st).unwrap();
+            st = self
+                .shared
+                .space
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
         }
         if st.closed {
             return; // pool shutting down; job dropped
@@ -193,16 +346,21 @@ impl RuntimePool {
     }
 
     /// Block until every submitted job has finished, then report the
-    /// first error (if any) and clear the poison flag so the pool can be
-    /// reused.
+    /// first untracked error (if any) and clear the poison flag so the
+    /// pool can be reused.  Tracked-job failures are reported through
+    /// their completion callbacks instead and never show up here.
     pub fn wait_idle(&self) -> crate::Result<()> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock(&self.shared.state);
         while !(st.jobs.is_empty() && st.in_flight == 0) {
-            st = self.shared.idle.wait(st).unwrap();
+            st = self
+                .shared
+                .idle
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
         }
         drop(st);
         self.shared.poisoned.store(false, Ordering::Release);
-        match self.shared.error.lock().unwrap().take() {
+        match lock(&self.shared.error).take() {
             Some(e) => Err(e),
             None => Ok(()),
         }
@@ -210,7 +368,10 @@ impl RuntimePool {
 
     /// Compile `artifact` on *every* lane, outside any timed region (the
     /// analogue of FPGA reprogramming, excluded from kernel timing as in
-    /// §4.2.4).  A barrier keeps each lane from grabbing two warmup jobs.
+    /// §4.2.4).  A barrier keeps each lane from grabbing two warmup jobs
+    /// — which is also why lane supervision must preserve the lane
+    /// count: a shrunken pool would park the surviving lanes here
+    /// forever.
     pub fn warmup_artifact(&self, artifact: &str) -> crate::Result<()> {
         // Drain any stale poison first: a poisoned lane would skip its
         // warmup job and leave the other lanes parked on the barrier.
@@ -279,7 +440,7 @@ impl RuntimePool {
 impl Drop for RuntimePool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock(&self.shared.state);
             st.closed = true;
         }
         self.shared.job_ready.notify_all();
@@ -311,28 +472,102 @@ impl Drop for IdleGuard<'_> {
     }
 }
 
-fn lane_main(
+/// Lane supervisor: creates the lane's `Runtime` and re-enters the job
+/// loop with a fresh one whenever a panic escapes the per-job isolation
+/// (chaos [`LaneKill`], or an unexpected unwind outside a job body), so
+/// the pool never silently shrinks — `warmup_artifact`'s all-lanes
+/// barrier depends on the lane count staying fixed.
+fn lane_entry(
     lane: usize,
     dir: PathBuf,
     registry: Registry,
     shared: Arc<Shared>,
     ready_tx: std::sync::mpsc::Sender<crate::Result<()>>,
 ) {
-    let rt = match Runtime::with_registry(&dir, registry) {
-        Ok(rt) => {
-            let _ = ready_tx.send(Ok(()));
-            rt
+    let mut ready = Some(ready_tx);
+    loop {
+        let rt = match Runtime::with_registry(&dir, registry.clone()) {
+            Ok(rt) => {
+                if let Some(tx) = ready.take() {
+                    let _ = tx.send(Ok(()));
+                }
+                rt
+            }
+            Err(e) => {
+                match ready.take() {
+                    Some(tx) => {
+                        let _ = tx.send(Err(e));
+                    }
+                    // A respawn needs a fresh PJRT client; if that
+                    // fails the pool genuinely shrinks — surface it
+                    // instead of pretending the lane is back.
+                    None => shared.record_error(
+                        e.context(format!("respawning lane {lane} after a panic")),
+                    ),
+                }
+                return;
+            }
+        };
+        if catch_unwind(AssertUnwindSafe(|| lane_main(lane, &rt, &shared))).is_ok() {
+            return; // clean shutdown: the pool closed and the queue drained
         }
-        Err(e) => {
-            let _ = ready_tx.send(Err(e));
+        // The in-flight job was already reported Failed (with
+        // FaultKind::Panic) by its JobGuard during the unwind; all that
+        // is lost is the dead Runtime's compile cache.
+        if lock(&shared.state).closed {
             return;
         }
-    };
-    drop(ready_tx);
+        shared.lane_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Per-job completion guard: fires the done callback and the in-flight
+/// decrement exactly once, even when a chaos [`LaneKill`] panic unwinds
+/// the lane mid-job — the pool's accounting stays sound while the
+/// supervisor respawns the lane.
+struct JobGuard<'a> {
+    shared: &'a Shared,
+    lane: usize,
+    done: Option<DoneFn>,
+    status: Option<JobStatus>,
+}
+
+impl Drop for JobGuard<'_> {
+    fn drop(&mut self) {
+        let status = self.status.take().unwrap_or_else(|| {
+            // Only reachable when a panic is unwinding the lane:
+            // account the terminal failure here.
+            self.shared.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            JobStatus::Failed {
+                kind: FaultKind::Panic,
+                attempts: 1,
+                message: format!("lane {} killed mid-job", self.lane),
+            }
+        });
+        if let Some(done) = self.done.take() {
+            // A panicking callback must not kill the lane (or mask an
+            // in-progress LaneKill unwind): convert it to a pool error.
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| done(status))) {
+                self.shared.record_error(anyhow!(
+                    "lane {} completion callback panicked: {}",
+                    self.lane,
+                    crate::coordinator::scheduler::panic_text(p.as_ref())
+                ));
+            }
+        }
+        let mut st = lock(&self.shared.state);
+        st.in_flight -= 1;
+        if st.in_flight == 0 && st.jobs.is_empty() {
+            self.shared.idle.notify_all();
+        }
+    }
+}
+
+fn lane_main(lane: usize, rt: &Runtime, shared: &Arc<Shared>) {
     let mut last = RuntimeStats::default();
     loop {
         let job = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock(&shared.state);
             loop {
                 if let Some(j) = st.jobs.pop_front() {
                     st.in_flight += 1;
@@ -341,41 +576,29 @@ fn lane_main(
                 if st.closed {
                     break None;
                 }
-                st = shared.job_ready.wait(st).unwrap();
+                st = shared
+                    .job_ready
+                    .wait(st)
+                    .unwrap_or_else(PoisonError::into_inner);
             }
         };
-        let Some(Job { run, done }) = job else { return };
+        let Some(Job { body, done, policy }) = job else { return };
         shared.space.notify_one();
 
-        let mut ok = false;
-        if !shared.poisoned.load(Ordering::Acquire) {
-            match catch_unwind(AssertUnwindSafe(|| run(lane, &rt))) {
-                Ok(Ok(())) => ok = true,
-                Ok(Err(e)) => shared.record_error(e),
-                Err(p) => shared.record_error(anyhow!(
-                    "lane {lane} job panicked: {}",
-                    crate::coordinator::scheduler::panic_text(p.as_ref())
-                )),
-            }
-        }
-        // The completion callback fires exactly once per job — also for
-        // jobs a poisoned pool drained without running (ok = false) —
-        // and before the in_flight decrement below, so wait_idle also
-        // waits for callbacks.  A panicking callback must not kill the
-        // lane thread: convert it to a pool error like any job failure.
-        if let Some(done) = done {
-            if let Err(p) = catch_unwind(AssertUnwindSafe(|| done(ok))) {
-                shared.record_error(anyhow!(
-                    "lane {lane} completion callback panicked: {}",
-                    crate::coordinator::scheduler::panic_text(p.as_ref())
-                ));
-            }
-        }
+        // The guard owns the callback and the in-flight decrement: both
+        // fire exactly once, on every exit path out of run_job —
+        // including the LaneKill re-raise.
+        let mut guard = JobGuard { shared, lane, done, status: None };
+        guard.status = Some(if shared.poisoned.load(Ordering::Acquire) {
+            JobStatus::Skipped
+        } else {
+            run_job(lane, rt, shared, body, policy)
+        });
 
         // Fold this lane's stats delta into the pool aggregate.
         let now = rt.stats();
         {
-            let mut agg = shared.stats.lock().unwrap();
+            let mut agg = lock(&shared.stats);
             agg.executions += now.executions - last.executions;
             agg.compile_ms += now.compile_ms - last.compile_ms;
             agg.execute_ms += now.execute_ms - last.execute_ms;
@@ -383,10 +606,295 @@ fn lane_main(
         }
         last = now;
 
-        let mut st = shared.state.lock().unwrap();
-        st.in_flight -= 1;
-        if st.in_flight == 0 && st.jobs.is_empty() {
-            shared.idle.notify_all();
+        drop(guard); // fires done, decrements in_flight, notifies idle
+    }
+}
+
+/// Run one job body to its terminal [`JobStatus`].  Untracked bodies
+/// keep the original poisoning discipline; tracked bodies classify
+/// every failure and retry `Transient` faults under the job's policy.
+fn run_job(
+    lane: usize,
+    rt: &Runtime,
+    shared: &Shared,
+    body: JobBody,
+    policy: RetryPolicy,
+) -> JobStatus {
+    match body {
+        JobBody::Once(run) => match catch_unwind(AssertUnwindSafe(|| run(lane, rt))) {
+            Ok(Ok(())) => JobStatus::Ok { retries: 0 },
+            Ok(Err(e)) => {
+                let status = JobStatus::Failed {
+                    kind: FaultKind::of(&e),
+                    attempts: 1,
+                    message: format!("{e:#}"),
+                };
+                shared.record_error(e);
+                status
+            }
+            Err(p) => {
+                #[cfg(any(test, feature = "chaos"))]
+                if p.downcast_ref::<LaneKill>().is_some() {
+                    std::panic::resume_unwind(p);
+                }
+                let message = format!(
+                    "lane {lane} job panicked: {}",
+                    crate::coordinator::scheduler::panic_text(p.as_ref())
+                );
+                shared.record_error(anyhow!("{message}"));
+                JobStatus::Failed { kind: FaultKind::Panic, attempts: 1, message }
+            }
+        },
+        JobBody::Tracked(mut run) => {
+            let max = policy.attempts.max(1);
+            let mut attempt = 0u32;
+            loop {
+                attempt += 1;
+                match catch_unwind(AssertUnwindSafe(|| run(lane, rt))) {
+                    Ok(Ok(())) => return JobStatus::Ok { retries: attempt - 1 },
+                    Ok(Err(e)) => {
+                        let kind = FaultKind::of(&e);
+                        if kind == FaultKind::Transient && attempt < max {
+                            shared.job_retries.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(policy.delay(attempt));
+                            continue;
+                        }
+                        shared.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                        return JobStatus::Failed {
+                            kind,
+                            attempts: attempt,
+                            message: format!("{e:#}"),
+                        };
+                    }
+                    Err(p) => {
+                        // A LaneKill panic is re-raised to take the
+                        // whole lane down (the JobGuard reports the job,
+                        // the supervisor respawns the lane); any other
+                        // panic is terminal for the job only.
+                        #[cfg(any(test, feature = "chaos"))]
+                        if p.downcast_ref::<LaneKill>().is_some() {
+                            std::panic::resume_unwind(p);
+                        }
+                        shared.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                        return JobStatus::Failed {
+                            kind: FaultKind::Panic,
+                            attempts: attempt,
+                            message: format!(
+                                "lane {lane} job panicked: {}",
+                                crate::coordinator::scheduler::panic_text(p.as_ref())
+                            ),
+                        };
+                    }
+                }
+            }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    /// Pool over an empty registry: lanes start real PJRT clients but
+    /// no artifacts exist — jobs that never touch `rt` (or that fail
+    /// to) exercise the queue/retry/callback machinery pure-logically.
+    fn test_pool(lanes: usize) -> RuntimePool {
+        RuntimePool::with_registry(PathBuf::from("."), Registry::default(), lanes)
+            .expect("lane startup needs no artifacts")
+    }
+
+    fn status_tag(s: &JobStatus) -> String {
+        match s {
+            JobStatus::Ok { retries } => format!("ok:{retries}"),
+            JobStatus::Failed { kind, attempts, .. } => format!("failed:{kind}:{attempts}"),
+            JobStatus::Skipped => "skipped".into(),
+        }
+    }
+
+    #[test]
+    fn tracked_callbacks_fire_exactly_once_in_completion_order() {
+        // lanes=1 makes completion order deterministic (FIFO): a mixed
+        // success/panic/fatal/skip batch must deliver exactly one
+        // status per job, in submission order, with the tracked
+        // failures NOT poisoning the pool — only the untracked failure
+        // surfaces at wait_idle.
+        let pool = test_pool(1);
+        let log = Arc::new(Mutex::new(Vec::<(usize, String)>::new()));
+        let fired: Arc<Vec<AtomicU32>> =
+            Arc::new((0..4).map(|_| AtomicU32::new(0)).collect());
+        let track = |id: usize| {
+            let log = log.clone();
+            let fired = fired.clone();
+            move |s: JobStatus| {
+                fired[id].fetch_add(1, Ordering::SeqCst);
+                lock(&log).push((id, status_tag(&s)));
+            }
+        };
+        pool.submit_tracked(|_, _| Ok(()), RetryPolicy::none(), track(0));
+        pool.submit_tracked(
+            |_, _| -> crate::Result<()> { panic!("tracked job exploded") },
+            RetryPolicy::none(),
+            track(1),
+        );
+        pool.submit_tracked(
+            |_, _| Err(anyhow!("structurally broken")),
+            RetryPolicy::none(),
+            track(2),
+        );
+        // Untracked failure poisons; the tracked job behind it skips.
+        pool.submit(|_, _| Err(anyhow!("untracked batch failure")));
+        pool.submit_tracked(|_, _| Ok(()), RetryPolicy::none(), track(3));
+
+        let err = pool.wait_idle().expect_err("untracked failure must surface");
+        assert!(format!("{err}").contains("untracked batch failure"), "got: {err}");
+        assert_eq!(
+            *lock(&log),
+            vec![
+                (0, "ok:0".into()),
+                (1, "failed:panic:1".into()),
+                (2, "failed:fatal:1".into()),
+                (3, "skipped".into()),
+            ]
+        );
+        for (id, n) in fired.iter().enumerate() {
+            assert_eq!(n.load(Ordering::SeqCst), 1, "callback {id} fired more than once");
+        }
+        // Tracked failures alone never poison: drained exactly once.
+        pool.wait_idle().unwrap();
+        assert_eq!(pool.fault_counters().jobs_failed, 2);
+    }
+
+    #[test]
+    fn transient_faults_retry_with_bounded_budget() {
+        let pool = test_pool(1);
+        let policy = RetryPolicy { attempts: 3, backoff: Duration::from_micros(50) };
+        let statuses = Arc::new(Mutex::new(Vec::<String>::new()));
+
+        // Fails transiently twice, succeeds on the third attempt.
+        let tries = Arc::new(AtomicU32::new(0));
+        let (t, s) = (tries.clone(), statuses.clone());
+        pool.submit_tracked(
+            move |_, _| {
+                if t.fetch_add(1, Ordering::SeqCst) < 2 {
+                    Err(crate::runtime::transient("flaky device".into()))
+                } else {
+                    Ok(())
+                }
+            },
+            policy,
+            move |st| lock(&s).push(status_tag(&st)),
+        );
+        // Always transient: exhausts the budget.
+        let s = statuses.clone();
+        pool.submit_tracked(
+            move |_, _| Err(crate::runtime::transient("hopeless device".into())),
+            policy,
+            move |st| lock(&s).push(status_tag(&st)),
+        );
+        // Fatal: terminal on the first attempt despite the budget.
+        let s = statuses.clone();
+        pool.submit_tracked(
+            move |_, _| Err(anyhow!("bad shape")),
+            policy,
+            move |st| lock(&s).push(status_tag(&st)),
+        );
+
+        pool.wait_idle().unwrap();
+        assert_eq!(tries.load(Ordering::SeqCst), 3);
+        assert_eq!(
+            *lock(&statuses),
+            vec!["ok:2".to_string(), "failed:transient:3".into(), "failed:fatal:1".into()]
+        );
+        let c = pool.fault_counters();
+        assert_eq!(c.job_retries, 2 + 2, "two retries per transient job");
+        assert_eq!(c.jobs_failed, 2);
+        assert_eq!(c.lane_restarts, 0);
+    }
+
+    #[test]
+    fn wait_idle_clears_poison_exactly_once() {
+        let pool = test_pool(2);
+        pool.submit(|_, _| Err(anyhow!("first failure")));
+        let err = pool.wait_idle().expect_err("poison must surface once");
+        assert!(format!("{err}").contains("first failure"));
+        // Reported and cleared: the next drain is clean, and new work runs.
+        pool.wait_idle().unwrap();
+        let ran = Arc::new(AtomicU32::new(0));
+        let r = ran.clone();
+        pool.submit(move |_, _| {
+            r.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        });
+        pool.wait_idle().unwrap();
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn lane_kill_restarts_the_lane_and_reports_failed_panic() {
+        let pool = test_pool(1);
+        let statuses = Arc::new(Mutex::new(Vec::<String>::new()));
+        let s = statuses.clone();
+        pool.submit_tracked(
+            |_, _| -> crate::Result<()> { std::panic::panic_any(LaneKill) },
+            RetryPolicy::default(),
+            move |st| lock(&s).push(status_tag(&st)),
+        );
+        pool.wait_idle().unwrap();
+        assert_eq!(*lock(&statuses), vec!["failed:panic:1".to_string()]);
+        assert_eq!(pool.fault_counters().lane_restarts, 1);
+        // The respawned lane (fresh Runtime, same thread slot) still
+        // serves jobs — the pool did not shrink.
+        let ran = Arc::new(AtomicU32::new(0));
+        let r = ran.clone();
+        pool.submit_tracked(
+            move |_, _| {
+                r.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            },
+            RetryPolicy::none(),
+            |st| assert!(st.is_ok()),
+        );
+        pool.wait_idle().unwrap();
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn concurrent_tracked_jobs_deliver_every_callback() {
+        let pool = test_pool(4);
+        let n = 64usize;
+        let fired: Arc<Vec<AtomicU32>> =
+            Arc::new((0..n).map(|_| AtomicU32::new(0)).collect());
+        let (oks, fails) = (Arc::new(AtomicU32::new(0)), Arc::new(AtomicU32::new(0)));
+        for i in 0..n {
+            let fired = fired.clone();
+            let (oks, fails) = (oks.clone(), fails.clone());
+            pool.submit_tracked(
+                move |_, _| {
+                    if i % 3 == 0 {
+                        Err(anyhow!("job {i} failed"))
+                    } else {
+                        Ok(())
+                    }
+                },
+                RetryPolicy::none(),
+                move |st| {
+                    fired[i].fetch_add(1, Ordering::SeqCst);
+                    if st.is_ok() {
+                        oks.fetch_add(1, Ordering::SeqCst);
+                    } else {
+                        fails.fetch_add(1, Ordering::SeqCst);
+                    }
+                },
+            );
+        }
+        // wait_idle waits for the callbacks too (they fire before the
+        // in-flight decrement), so every counter is final here.
+        pool.wait_idle().unwrap();
+        for (i, f) in fired.iter().enumerate() {
+            assert_eq!(f.load(Ordering::SeqCst), 1, "job {i}");
+        }
+        assert_eq!(oks.load(Ordering::SeqCst) + fails.load(Ordering::SeqCst), n as u32);
+        assert_eq!(fails.load(Ordering::SeqCst) as usize, n.div_ceil(3));
     }
 }

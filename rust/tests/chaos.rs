@@ -1,0 +1,149 @@
+//! Chaos-harness integration tests (`--features chaos`): deterministic
+//! fault injection through the real artifact path.  Each test drives a
+//! [`Session`] with a [`FaultPlan`] — faults keyed by
+//! `(wave, block, attempt)`, no clocks, no seeds — and checks the three
+//! fault-tolerance contracts end to end:
+//!
+//! 1. a `Transient` fault is retried in place and the run's output is
+//!    bitwise identical to a fault-free run;
+//! 2. an exhausted retry budget cancels exactly the failed block's
+//!    dependency cone while independent work in the same fused graph
+//!    completes `Ok`;
+//! 3. a killed lane is respawned by the pool supervisor and the
+//!    session keeps working.
+//!
+//! Requires `artifacts/` (run `make artifacts` first), like
+//! `integration.rs`.
+
+#![cfg(feature = "chaos")]
+
+use std::sync::Arc;
+
+use fpga_hpc::coordinator::grid::Grid2D;
+use fpga_hpc::coordinator::passdriver::FaultPlan;
+use fpga_hpc::coordinator::session::{Session, Workload, WorkloadStatus};
+use fpga_hpc::runtime::FaultKind;
+use fpga_hpc::testutil::Rng;
+
+/// Owning session over a fresh pool with `lanes` execute lanes.
+fn session(lanes: usize) -> Session<'static> {
+    Session::builder()
+        .artifacts("artifacts")
+        .lanes(lanes)
+        .build()
+        .expect("artifacts missing — run `make artifacts`")
+}
+
+fn rand_grid2d(ny: usize, nx: usize, seed: u64, lo: f32, hi: f32) -> Grid2D {
+    let mut rng = Rng::new(seed);
+    let data = rng.vec_f32(ny * nx, lo, hi);
+    Grid2D { ny, nx, data }
+}
+
+fn diffusion(grid: &Grid2D) -> Workload {
+    Workload::stencil2d("diffusion2d_r1", grid.clone(), None, 4)
+}
+
+#[test]
+fn transient_fault_retries_to_bitwise_identical_output() {
+    let grid = rand_grid2d(512, 512, 5, 0.0, 1.0);
+    let s = session(2);
+    let clean = s.run(diffusion(&grid)).unwrap();
+    assert!(clean.ok());
+
+    // One injected Transient on the first block's first attempt: the
+    // retry (attempt 2) runs the identical job body on the identical
+    // parked inputs, so the result must not drift by a single bit.
+    let plan = Arc::new(FaultPlan::default().transient_at(0, 0, 1));
+    let faulty = s.run_with_faults(diffusion(&grid), plan).unwrap();
+    assert!(faulty.ok(), "retried run must report every stage Ok");
+    assert!(faulty.cancelled.is_empty(), "a retried fault cancels nothing");
+    assert!(faulty.first_fault().is_none());
+    assert!(faulty.metrics.job_retries >= 1, "the retry must be counted");
+    assert_eq!(faulty.metrics.jobs_failed, 0);
+    assert_eq!(clean.metrics.blocks, faulty.metrics.blocks);
+
+    let want = clean.into_output().into_grid2d().unwrap();
+    let got = faulty.into_output().into_grid2d().unwrap();
+    assert_eq!(want.data, got.data, "retry must be bitwise invisible");
+}
+
+#[test]
+fn exhausted_retries_cancel_exactly_the_dependency_cone() {
+    // Chain two *independent* stages into one fused graph: NW
+    // (n=128 → 2×2 blocks of 64: waves 0..3 hold 1, 2, 1 blocks) and
+    // a diffusion stencil with its own grid (no seam edges).  Killing
+    // NW's root block (0,0) on every allowed attempt exhausts the
+    // retry budget (3 attempts) and must cancel exactly the three
+    // remaining NW blocks — the stencil chain flows to completion.
+    let n = 128;
+    let mut rng = Rng::new(66);
+    let refm: Vec<Vec<i32>> = (0..=n).map(|_| rng.vec_i32(n + 1, -5, 15)).collect();
+    let grid = rand_grid2d(300, 520, 11, 0.0, 1.0);
+    let s = session(2);
+    let want = s.run(diffusion(&grid)).unwrap().into_output().into_grid2d().unwrap();
+
+    let plan = Arc::new(
+        FaultPlan::default()
+            .transient_at(0, 0, 1)
+            .transient_at(0, 0, 2)
+            .transient_at(0, 0, 3),
+    );
+    let report = s
+        .run_with_faults(Workload::nw(refm, 10).then(diffusion(&grid)), plan)
+        .unwrap();
+
+    assert!(!report.ok());
+    assert_eq!(report.statuses.len(), 2);
+    match &report.statuses[0] {
+        WorkloadStatus::Failed(f) => {
+            assert_eq!(f.kind, FaultKind::Transient);
+            assert_eq!(f.attempts, 3, "the whole retry budget was spent");
+            assert_eq!((f.wave, f.block), (0, 0));
+        }
+        other => panic!("NW stage must be Failed, got {other:?}"),
+    }
+    assert_eq!(report.statuses[1], WorkloadStatus::Ok, "independent stage flows");
+    assert_eq!(report.metrics.job_retries, 2);
+    assert_eq!(report.metrics.jobs_failed, 1);
+
+    // The cone oracle: every NW block transitively depends on (0,0),
+    // so exactly NW waves 1 and 2 cancel — and nothing else.
+    let mut cancelled = report.cancelled.clone();
+    cancelled.sort_unstable();
+    assert_eq!(cancelled, vec![(1, 0), (1, 1), (2, 0)]);
+
+    let got = report.into_output().into_grid2d().unwrap();
+    assert_eq!(got.data, want.data, "surviving chain must be bitwise clean");
+}
+
+#[test]
+fn killed_lane_is_respawned_and_the_session_survives() {
+    let grid = rand_grid2d(512, 512, 21, 0.0, 1.0);
+    let s = session(2);
+    let want = s.run(diffusion(&grid)).unwrap().into_output().into_grid2d().unwrap();
+
+    // Kill the lane executing block (0,0): the job dies terminally
+    // (Panic, no retry), its cone cancels, and the supervisor brings
+    // the lane back — the run drains instead of deadlocking on a
+    // one-lane pool.
+    let plan = Arc::new(FaultPlan::default().lane_kill_at(0, 0, 1));
+    let report = s.run_with_faults(diffusion(&grid), plan).unwrap();
+    assert!(!report.ok());
+    match report.first_fault() {
+        Some(f) => {
+            assert_eq!(f.kind, FaultKind::Panic);
+            assert_eq!(f.attempts, 1, "a panic is terminal on first attempt");
+        }
+        None => panic!("lane kill must surface as a stage fault"),
+    }
+    assert_eq!(report.metrics.lane_restarts, 1, "exactly one lane respawn");
+    assert_eq!(report.metrics.jobs_failed, 1);
+
+    // The same session keeps working on the respawned lane set.
+    let after = s.run(diffusion(&grid)).unwrap();
+    assert!(after.ok(), "session must recover after a lane kill");
+    assert_eq!(after.metrics.lane_restarts, 0);
+    let got = after.into_output().into_grid2d().unwrap();
+    assert_eq!(got.data, want.data, "post-recovery run must be bitwise clean");
+}
