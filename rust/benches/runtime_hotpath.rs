@@ -12,16 +12,18 @@
 //! chain sweep at the end runs SRAD feeding a downstream stencil two
 //! ways: back-to-back barriered (two separate runs, the reference) and
 //! as one **fused** chain (`srad.then(stencil2d)`, a single spliced
-//! wave graph with cross-app seam edges).  Everything lands in
-//! `BENCH_runtime.json` for trajectory tracking; CI gates each
-//! pipelined/barrier pair at lanes=4 and the fused chain at ≥ 0.95× the
-//! back-to-back reference.
+//! wave graph with cross-app seam edges).  The locality sweep compares
+//! the sharded work-stealing scheduler against the single global run
+//! queue it replaced, and NUMA-pinned lanes against unpinned, both at
+//! lanes=4.  Everything lands in `BENCH_runtime.json` for trajectory
+//! tracking; CI gates each pipelined/barrier pair at lanes=4, the fused
+//! chain, and the sharded scheduler at ≥ 0.95× their baselines.
 
 use fpga_hpc::benchutil::{write_bench_json, BenchRow, Bencher};
 use fpga_hpc::coordinator::grid::{Boundary, Grid2D};
 use fpga_hpc::coordinator::session::{GridInput, Session, Workload};
 use fpga_hpc::coordinator::{Metrics, PassMode};
-use fpga_hpc::runtime::{Runtime, RuntimePool, Tensor};
+use fpga_hpc::runtime::{Pinning, PoolConfig, Runtime, RuntimePool, Tensor};
 use fpga_hpc::testutil::Rng;
 
 fn main() {
@@ -234,6 +236,58 @@ fn main() {
         fused.pipeline_depth_max,
         fused.overlap_starts,
     );
+
+    // --- locality sweep: sharded work-stealing queues vs the global
+    // --- run queue, and NUMA-pinned lanes vs unpinned, lanes=4 ---
+    println!("\n=== locality sweep (streamed diffusion2d 1024^2 x16, lanes=4) ===\n");
+    let cases: [(&str, bool, Pinning); 4] = [
+        ("sched_stencil_global", false, Pinning::None),
+        ("sched_stencil_sharded", true, Pinning::None),
+        ("pin_stencil_none", true, Pinning::None),
+        ("pin_stencil_numa", true, Pinning::Numa),
+    ];
+    for (name, sharded, pinning) in cases {
+        let pool = RuntimePool::open_with("artifacts", PoolConfig { lanes, pinning, sharded })
+            .expect("pool open");
+        // one unmeasured run: lane compile caches + per-lane shelves
+        // (and, under Numa, first-touch of the warm arenas on-node)
+        Session::over(&pool)
+            .run(Workload::stencil2d("diffusion2d_r1", grid.clone(), None, 4))
+            .unwrap();
+        let report = Session::over(&pool)
+            .run(Workload::stencil2d("diffusion2d_r1", grid.clone(), None, 16))
+            .unwrap();
+        let m = &report.metrics;
+        println!("{name}: {}", m.summary());
+        rows.push(BenchRow {
+            name: name.into(),
+            lanes,
+            gcells_per_sec: m.gcell_per_sec(),
+            wall_secs: m.wall.as_secs_f64(),
+            blocks: m.blocks,
+            pool_hits: m.pool_hits,
+            pool_misses: m.pool_misses,
+        });
+    }
+    let sched = |name: &str| {
+        rows.iter()
+            .find(|r| r.lanes == lanes && r.name == name)
+            .map(|r| r.gcells_per_sec)
+    };
+    if let (Some(global), Some(shard)) =
+        (sched("sched_stencil_global"), sched("sched_stencil_sharded"))
+    {
+        println!(
+            "sharded vs global queue at lanes=4: {:.2}x (CI gates at >= 0.95x)",
+            shard / global.max(1e-12)
+        );
+    }
+    if let (Some(none), Some(numa)) = (sched("pin_stencil_none"), sched("pin_stencil_numa")) {
+        println!(
+            "numa-pinned vs unpinned at lanes=4: {:.2}x (informational; single-node hosts pin nothing)",
+            numa / none.max(1e-12)
+        );
+    }
 
     write_bench_json("BENCH_runtime.json", &rows).expect("writing BENCH_runtime.json");
     println!("wrote BENCH_runtime.json");

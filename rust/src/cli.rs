@@ -14,7 +14,7 @@ use crate::coordinator::grid::Grid2D;
 use crate::coordinator::session::{Session, Workload};
 use crate::coordinator::{reference, PassMode};
 use crate::device::{arria_10, stratix_10, stratix_v, FpgaDevice};
-use crate::runtime::Runtime;
+use crate::runtime::{Pinning, Runtime};
 use crate::stencil::config::{default_workload, diffusion2d, diffusion3d};
 use crate::stencil::tuner::tune;
 use crate::testutil::Rng;
@@ -30,12 +30,16 @@ USAGE:
   fpga-hpc tune <d2r1|d2r2|..|d3r4> [sv|a10|s10]
                                    tune one stencil on one device
   fpga-hpc run diffusion2d [n] [steps] [--lanes N] [--mode barrier|pipelined]
+                           [--pin none|cores|numa]
                                    functional streamed run + verification
                                    through the Session builder API;
                                    --lanes N replicates the compute unit
                                    across N worker threads (default 1),
                                    --mode picks the inter-pass schedule
-                                   (default pipelined)
+                                   (default pipelined), --pin sets the
+                                   lane CPU-affinity policy (default
+                                   none; cores/numa clamp lanes to the
+                                   available cores)
   fpga-hpc sim                     simulate all Rodinia variants
   fpga-hpc list                    list AOT artifacts
 ";
@@ -79,9 +83,10 @@ pub fn run() -> crate::Result<()> {
             let mut rest: Vec<String> = args[1..].to_vec();
             let lanes = take_lanes_flag(&mut rest)?;
             let mode = take_mode_flag(&mut rest)?;
+            let pin = take_pin_flag(&mut rest)?;
             let n: usize = rest.get(1).and_then(|s| s.parse().ok()).unwrap_or(512);
             let steps: u64 = rest.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
-            run_diffusion2d_demo(n, steps, lanes, mode)?;
+            run_diffusion2d_demo(n, steps, lanes, mode, pin)?;
         }
         "sim" => {
             for dev in [stratix_v(), arria_10()] {
@@ -147,6 +152,21 @@ fn take_mode_flag(args: &mut Vec<String>) -> crate::Result<PassMode> {
     Ok(mode)
 }
 
+/// Remove `--pin none|cores|numa` from `args` (if present) and return
+/// the policy (default [`Pinning::None`]).
+fn take_pin_flag(args: &mut Vec<String>) -> crate::Result<Pinning> {
+    let Some(pos) = args.iter().position(|a| a == "--pin") else {
+        return Ok(Pinning::None);
+    };
+    let val = args
+        .get(pos + 1)
+        .ok_or_else(|| anyhow::anyhow!("--pin requires a value\n{USAGE}"))?
+        .clone();
+    let pin: Pinning = val.parse()?;
+    args.drain(pos..=pos + 1);
+    Ok(pin)
+}
+
 fn parse_device(s: &str) -> crate::Result<FpgaDevice> {
     Ok(match s {
         "sv" => stratix_v(),
@@ -166,13 +186,20 @@ fn parse_stencil(s: &str) -> crate::Result<(crate::stencil::config::StencilShape
     Ok((shape, dims))
 }
 
-fn run_diffusion2d_demo(n: usize, steps: u64, lanes: usize, mode: PassMode) -> crate::Result<()> {
+fn run_diffusion2d_demo(
+    n: usize,
+    steps: u64,
+    lanes: usize,
+    mode: PassMode,
+    pin: Pinning,
+) -> crate::Result<()> {
     // One typed front door for any lane count: the Session owns the
     // pool, the workload lowers onto the wave driver.
     let session = Session::builder()
         .artifacts("artifacts")
         .lanes(lanes)
         .mode(mode)
+        .pinning(pin)
         .build()?;
     let spec = session
         .pool()
@@ -187,8 +214,11 @@ fn run_diffusion2d_demo(n: usize, steps: u64, lanes: usize, mode: PassMode) -> c
         .collect();
     let rng = std::cell::RefCell::new(Rng::new(42));
     let grid = Grid2D::from_fn(n, n, |_, _| rng.borrow_mut().f32_in(0.0, 1.0));
+    // Report the session's lane count: pinned sessions may have
+    // clamped the request to the available cores.
+    let lanes = session.lanes();
     println!(
-        "running diffusion2d r=1 on {n}x{n} for {steps} steps ({lanes} lane{}, {mode:?})...",
+        "running diffusion2d r=1 on {n}x{n} for {steps} steps ({lanes} lane{}, {mode:?}, pin {pin:?})...",
         if lanes == 1 { "" } else { "s" }
     );
     let report = session.run(Workload::stencil2d("diffusion2d_r1", grid.clone(), None, steps))?;

@@ -382,6 +382,56 @@ impl SradSpace {
         let var = total2 / self.cells - mean * mean;
         (var / (mean * mean)) as f32
     }
+
+    /// Shard-keyed extraction body shared by [`WaveSpace::extract`]
+    /// (shard 0) and [`WaveSpace::extract_sharded`] (the driver's
+    /// affinity lane): tile buffers come from the shard's free list so
+    /// a block's tiles cycle within one lane under the sharded
+    /// scheduler.
+    ///
+    /// # Safety
+    ///
+    /// Same dependency-order contract as [`WaveSpace::extract`].
+    unsafe fn extract_on(&self, shard: usize, w: usize, i: usize) -> Vec<Tensor> {
+        let s = w / 2;
+        let src = self.bufs[s % 2];
+        if w % 2 == 0 {
+            // Reduction tile: rblock×rblock, no halo, zero padding
+            // (sum-neutral).
+            let (y0, x0) = self.rorigins[i];
+            let mut t = self.pools.tiles.take_on(shard, self.rblock * self.rblock);
+            // SAFETY: dependency order — step s-1's stencil blocks
+            // wrote every in-grid cell this tile reads.
+            src.extract_tile_into(
+                y0 as isize, x0 as isize, self.rblock, self.rblock, 0, Boundary::Zero, &mut t,
+            );
+            vec![Tensor::F32(t, vec![self.rblock, self.rblock])]
+        } else {
+            // Stencil block: the same inputs Space2D builds for the
+            // scalar-carrying srad artifact — halo'd tile, per-step
+            // scalar, boundary-restoration descriptor.
+            let q0 = self.q0(s);
+            let (y0, x0) = self.sorigins[i];
+            let mut inputs = Vec::with_capacity(3);
+            let mut t = self.pools.tiles.take_on(shard, self.tile * self.tile);
+            // SAFETY: dependency order, as above (all step-s reduction
+            // tiles completed after all step-(s-1) stencil blocks).
+            src.extract_tile_into(
+                y0 as isize, x0 as isize, self.tile, self.tile, self.halo,
+                self.boundary, &mut t,
+            );
+            inputs.push(Tensor::F32(t, vec![self.tile, self.tile]));
+            let mut v = self.pools.tiles.take_on(shard, self.t_fused);
+            v.resize(self.t_fused, q0);
+            inputs.push(Tensor::F32(v, vec![self.t_fused]));
+            let (t0, t1) = oob_axis(y0, self.sblock, self.halo, self.ny);
+            let (l0, l1) = oob_axis(x0, self.sblock, self.halo, self.nx);
+            let mut d = self.pools.descs.take_on(shard, 4);
+            d.extend_from_slice(&[t0, t1, l0, l1]);
+            inputs.push(Tensor::I32(d, vec![4]));
+            inputs
+        }
+    }
 }
 
 impl WaveGraph for SradSpace {
@@ -433,44 +483,11 @@ impl WaveSpace for SradSpace {
     }
 
     unsafe fn extract(&self, w: usize, i: usize) -> Vec<Tensor> {
-        let s = w / 2;
-        let src = self.bufs[s % 2];
-        if w % 2 == 0 {
-            // Reduction tile: rblock×rblock, no halo, zero padding
-            // (sum-neutral).
-            let (y0, x0) = self.rorigins[i];
-            let mut t = self.pools.tiles.take(self.rblock * self.rblock);
-            // SAFETY: dependency order — step s-1's stencil blocks
-            // wrote every in-grid cell this tile reads.
-            src.extract_tile_into(
-                y0 as isize, x0 as isize, self.rblock, self.rblock, 0, Boundary::Zero, &mut t,
-            );
-            vec![Tensor::F32(t, vec![self.rblock, self.rblock])]
-        } else {
-            // Stencil block: the same inputs Space2D builds for the
-            // scalar-carrying srad artifact — halo'd tile, per-step
-            // scalar, boundary-restoration descriptor.
-            let q0 = self.q0(s);
-            let (y0, x0) = self.sorigins[i];
-            let mut inputs = Vec::with_capacity(3);
-            let mut t = self.pools.tiles.take(self.tile * self.tile);
-            // SAFETY: dependency order, as above (all step-s reduction
-            // tiles completed after all step-(s-1) stencil blocks).
-            src.extract_tile_into(
-                y0 as isize, x0 as isize, self.tile, self.tile, self.halo,
-                self.boundary, &mut t,
-            );
-            inputs.push(Tensor::F32(t, vec![self.tile, self.tile]));
-            let mut v = self.pools.tiles.take(self.t_fused);
-            v.resize(self.t_fused, q0);
-            inputs.push(Tensor::F32(v, vec![self.t_fused]));
-            let (t0, t1) = oob_axis(y0, self.sblock, self.halo, self.ny);
-            let (l0, l1) = oob_axis(x0, self.sblock, self.halo, self.nx);
-            let mut d = self.pools.descs.take(4);
-            d.extend_from_slice(&[t0, t1, l0, l1]);
-            inputs.push(Tensor::I32(d, vec![4]));
-            inputs
-        }
+        self.extract_on(0, w, i)
+    }
+
+    unsafe fn extract_sharded(&self, shard: usize, w: usize, i: usize) -> Vec<Tensor> {
+        self.extract_on(shard, w, i)
     }
 
     unsafe fn write(&self, w: usize, i: usize, out: &[Tensor]) {
@@ -503,6 +520,10 @@ impl WaveSpace for SradSpace {
         self.pools.recycle(inputs);
     }
 
+    fn recycle_sharded(&self, shard: usize, _w: usize, _i: usize, inputs: Vec<Tensor>) {
+        self.pools.recycle_on(shard, inputs);
+    }
+
     fn pool_counters(&self) -> (u64, u64, u64, u64) {
         (
             self.pools.tiles.hits(),
@@ -510,6 +531,10 @@ impl WaveSpace for SradSpace {
             self.pools.descs.hits(),
             self.pools.descs.misses(),
         )
+    }
+
+    fn pool_evictions(&self) -> u64 {
+        self.pools.evictions()
     }
 }
 

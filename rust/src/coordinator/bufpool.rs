@@ -17,19 +17,55 @@
 //! in one pool.  Hit/miss counters feed the `pool_hits`/`pool_misses`
 //! (and `desc_pool_hits`/`desc_pool_misses`) fields of
 //! [`crate::coordinator::metrics::Metrics`].
+//!
+//! ## Sharding and retention (PR 7)
+//!
+//! A pool built with [`BufferPool::with_shards`] keeps one shelf set
+//! **per lane** ([`BufferPool::take_on`] / [`BufferPool::put_on`]):
+//! the wave driver keys both by the block's affinity lane, so a block's
+//! tile cycles extractor → lane → recycle entirely within shard
+//! `lane_of(block)` — steady-state extraction touches only lane-local
+//! free lists (one uncontended mutex), and under NUMA pinning the
+//! buffer's pages stay on the lane's node.  Buffers are
+//! **first-touch-initialized** on the taking thread at allocation, so a
+//! pinned extractor faults the pages onto its own node.
+//!
+//! Retention is bounded: each capacity bucket keeps at most
+//! [`SHELF_HIGH_WATER`] buffers per shard; overflow spills to a small
+//! **global overflow ring** (cross-shard rescue for imbalanced phases),
+//! and beyond that buffers are dropped and counted
+//! (`Metrics::pool_evictions`) — long sessions no longer grow arenas
+//! monotonically.  The single-shard [`BufferPool::default`] keeps the
+//! original `take`/`put` surface for the single-runtime drivers.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::runtime::Tensor;
 
-/// Thread-safe recycling pool of `Vec<T>` buffers.
+/// Per-bucket retention cap: `put` keeps at most this many buffers on
+/// one capacity shelf of one shard before spilling to the overflow
+/// ring.  Sized for the deepest realistic in-flight set (queue cap +
+/// lanes + extractor lookahead) of one tile size.
+pub const SHELF_HIGH_WATER: usize = 32;
+
+/// Global overflow-ring capacity (buffers of any size, all shards).
+const OVERFLOW_CAP: usize = 64;
+
+type Shelves<T> = BTreeMap<usize, Vec<Vec<T>>>;
+
+/// Thread-safe recycling pool of `Vec<T>` buffers, optionally sharded
+/// per lane.
 #[derive(Debug)]
 pub struct BufferPool<T> {
-    shelves: Mutex<BTreeMap<usize, Vec<Vec<T>>>>,
+    shards: Vec<Mutex<Shelves<T>>>,
+    /// Cross-shard spill: buffers a full shelf could not retain, still
+    /// recyclable by any shard before eviction.
+    overflow: Mutex<VecDeque<Vec<T>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 /// Recycling pool for `f32` tile buffers (the dominant marshalling
@@ -38,48 +74,53 @@ pub type TilePool = BufferPool<f32>;
 
 impl<T> Default for BufferPool<T> {
     fn default() -> Self {
-        BufferPool {
-            shelves: Mutex::new(BTreeMap::new()),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-        }
+        Self::with_shards(1)
     }
 }
 
 impl<T> BufferPool<T> {
-    /// Fetch a cleared buffer with capacity ≥ `len` (allocating one only
-    /// on a pool miss).
-    pub fn take(&self, len: usize) -> Vec<T> {
-        let mut shelves = self.shelves.lock().unwrap();
-        // Smallest shelf that covers the request.
-        if let Some((&cap, stack)) = shelves.range_mut(len..).next() {
-            let v = stack.pop().expect("empty shelves are removed on pop");
-            if stack.is_empty() {
-                shelves.remove(&cap);
-            }
-            drop(shelves);
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return v;
+    /// A pool with one independent shelf set per shard (≥ 1).  Shard
+    /// indices to `take_on`/`put_on` wrap, so callers can pass lane
+    /// hints directly.
+    pub fn with_shards(shards: usize) -> Self {
+        BufferPool {
+            shards: (0..shards.max(1)).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            overflow: Mutex::new(VecDeque::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
-        drop(shelves);
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        Vec::with_capacity(len)
     }
 
-    /// Return a buffer for reuse.  Zero-capacity buffers are dropped,
-    /// and each shelf is capped so recycled buffers that nothing ever
-    /// re-requests (e.g. a one-off tile size) cannot grow without bound.
-    pub fn put(&self, mut v: Vec<T>) {
-        const MAX_PER_SHELF: usize = 256;
+    /// Return a buffer for reuse (shard 0 — the single-shard surface).
+    pub fn put(&self, v: Vec<T>) {
+        self.put_on(0, v);
+    }
+
+    /// Return a buffer to `shard`'s shelves.  Zero-capacity buffers are
+    /// dropped; a shelf at its high-water mark spills to the overflow
+    /// ring, and a full ring drops the buffer (counted as an eviction)
+    /// — retention is bounded per bucket, not monotonic.
+    pub fn put_on(&self, shard: usize, mut v: Vec<T>) {
         v.clear();
         let cap = v.capacity();
         if cap == 0 {
             return;
         }
-        let mut shelves = self.shelves.lock().unwrap();
-        let stack = shelves.entry(cap).or_default();
-        if stack.len() < MAX_PER_SHELF {
-            stack.push(v);
+        {
+            let mut shelves = lockp(&self.shards[shard % self.shards.len()]);
+            let stack = shelves.entry(cap).or_default();
+            if stack.len() < SHELF_HIGH_WATER {
+                stack.push(v);
+                return;
+            }
+        }
+        let mut ring = lockp(&self.overflow);
+        if ring.len() < OVERFLOW_CAP {
+            ring.push_back(v);
+        } else {
+            drop(ring);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -92,6 +133,62 @@ impl<T> BufferPool<T> {
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
+
+    /// Buffers dropped by the high-water bound instead of retained.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+impl<T: Default + Clone> BufferPool<T> {
+    /// Fetch a cleared buffer with capacity ≥ `len` (shard 0 — the
+    /// single-shard surface).
+    pub fn take(&self, len: usize) -> Vec<T> {
+        self.take_on(0, len)
+    }
+
+    /// Fetch a cleared buffer with capacity ≥ `len` from `shard`'s
+    /// shelves, falling back to the overflow ring, allocating only when
+    /// both miss.  A fresh allocation is first-touch-initialized on the
+    /// calling thread, so a NUMA-pinned extractor faults the pages onto
+    /// its own node.
+    pub fn take_on(&self, shard: usize, len: usize) -> Vec<T> {
+        {
+            let mut shelves = lockp(&self.shards[shard % self.shards.len()]);
+            // Smallest shelf that covers the request.
+            if let Some((&cap, stack)) = shelves.range_mut(len..).next() {
+                let v = stack.pop().expect("empty shelves are removed on pop");
+                if stack.is_empty() {
+                    shelves.remove(&cap);
+                }
+                drop(shelves);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return v;
+            }
+        }
+        {
+            let mut ring = lockp(&self.overflow);
+            if let Some(i) = ring.iter().position(|v| v.capacity() >= len) {
+                let v = ring.remove(i).expect("position() index is live");
+                drop(ring);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return v;
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut v = Vec::with_capacity(len);
+        // First touch: fault the pages in on this (possibly pinned)
+        // thread, then hand the buffer out cleared as usual.
+        v.resize(len, T::default());
+        v.clear();
+        v
+    }
+}
+
+/// Lock recovering from poisoning — shelf state is a plain container,
+/// consistent after any panicking holder.
+fn lockp<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 /// The full marshalling-path pool set: `f32` tiles plus the `i32`
@@ -104,6 +201,14 @@ pub struct TensorPools {
 }
 
 impl TensorPools {
+    /// Pools sharded per lane (see [`BufferPool::with_shards`]).
+    pub fn with_shards(shards: usize) -> Self {
+        TensorPools {
+            tiles: TilePool::with_shards(shards),
+            descs: BufferPool::with_shards(shards),
+        }
+    }
+
     /// Return a block's input tensors to their pools for reuse.
     ///
     /// Kernel *output* buffers are deliberately not pooled: they are
@@ -112,12 +217,24 @@ impl TensorPools {
     /// never satisfy a `take` — shelving them would only hold dead
     /// memory.
     pub fn recycle(&self, inputs: Vec<Tensor>) {
+        self.recycle_on(0, inputs);
+    }
+
+    /// [`TensorPools::recycle`] into one lane's shard: the wave driver
+    /// passes the block's affinity lane so a tile cycles within its
+    /// lane-local free list.
+    pub fn recycle_on(&self, shard: usize, inputs: Vec<Tensor>) {
         for t in inputs {
             match t {
-                Tensor::F32(v, _) => self.tiles.put(v),
-                Tensor::I32(v, _) => self.descs.put(v),
+                Tensor::F32(v, _) => self.tiles.put_on(shard, v),
+                Tensor::I32(v, _) => self.descs.put_on(shard, v),
             }
         }
+    }
+
+    /// Total buffers dropped by the retention bound across both pools.
+    pub fn evictions(&self) -> u64 {
+        self.tiles.evictions() + self.descs.evictions()
     }
 }
 
@@ -217,5 +334,53 @@ mod tests {
             }
         });
         assert_eq!(p.hits() + p.misses(), 400);
+    }
+
+    #[test]
+    fn high_water_mark_bounds_retention_and_counts_evictions() {
+        // One bucket: the shelf keeps SHELF_HIGH_WATER, the ring keeps
+        // OVERFLOW_CAP more, everything beyond is dropped and counted.
+        let p = TilePool::default();
+        let n = SHELF_HIGH_WATER + OVERFLOW_CAP + 5;
+        for _ in 0..n {
+            p.put(Vec::with_capacity(128));
+        }
+        assert_eq!(p.evictions(), 5, "retention beyond shelf + ring is dropped");
+        // Every retained buffer is still takeable without allocating.
+        for _ in 0..(SHELF_HIGH_WATER + OVERFLOW_CAP) {
+            assert!(p.take(128).capacity() >= 128);
+        }
+        assert_eq!(p.misses(), 0);
+        // The pool is now empty: the next take allocates.
+        p.take(128);
+        assert_eq!(p.misses(), 1);
+    }
+
+    #[test]
+    fn shards_keep_local_free_lists_with_overflow_rescue() {
+        let p = TilePool::with_shards(2);
+        // A buffer shelved on shard 0 is invisible to shard 1 — the
+        // steady-state path never scans another lane's free list.
+        p.put_on(0, Vec::with_capacity(64));
+        let v = p.take_on(1, 64);
+        assert_eq!(p.misses(), 1, "cross-shard take allocates");
+        p.put_on(1, v);
+        assert!(p.take_on(1, 64).capacity() >= 64);
+        assert_eq!(p.hits(), 1, "same-shard take reuses");
+        // But a shelf at its high-water mark spills to the ring, where
+        // any shard can rescue the buffer before it is evicted.
+        for _ in 0..=SHELF_HIGH_WATER {
+            p.put_on(0, Vec::with_capacity(512));
+        }
+        assert!(p.take_on(1, 512).capacity() >= 512, "overflowed buffer rescued cross-shard");
+        assert_eq!(p.evictions(), 0);
+    }
+
+    #[test]
+    fn shard_indices_wrap() {
+        let p = TilePool::with_shards(2);
+        p.put_on(5, Vec::with_capacity(32)); // 5 % 2 == shard 1
+        assert!(p.take_on(1, 32).capacity() >= 32);
+        assert_eq!(p.hits(), 1);
     }
 }

@@ -45,6 +45,22 @@ pub struct Metrics {
     /// Lane threads respawned by the pool supervisor after a panic
     /// escaped job isolation.
     pub lane_restarts: u64,
+    /// Jobs a lane popped from its own run-queue shard (sharded
+    /// scheduler only; 0 on the global-queue engine and at lanes=1).
+    pub local_pops: u64,
+    /// Jobs a lane stole from another lane's shard.  Steady-state runs
+    /// should keep `local_pops` well above this.
+    pub queue_steals: u64,
+    /// Affinity-hinted jobs that ran on the lane they were hinted to.
+    pub affinity_hits: u64,
+    /// Affinity-hinted jobs stolen by a different lane.
+    pub affinity_misses: u64,
+    /// Successful CPU-affinity applications (lane spawns/respawns and
+    /// extractor partners) under `Pinning::{Cores,Numa}`.
+    pub pins_applied: u64,
+    /// Pooled buffers dropped by the per-bucket high-water mark instead
+    /// of being retained (arena-growth bound).
+    pub pool_evictions: u64,
 }
 
 impl Metrics {
@@ -111,6 +127,12 @@ impl Metrics {
             job_retries,
             jobs_failed,
             lane_restarts,
+            local_pops,
+            queue_steals,
+            affinity_hits,
+            affinity_misses,
+            pins_applied,
+            pool_evictions,
         } = other;
         self.blocks += blocks;
         self.cell_updates += cell_updates;
@@ -127,6 +149,12 @@ impl Metrics {
         self.job_retries += job_retries;
         self.jobs_failed += jobs_failed;
         self.lane_restarts += lane_restarts;
+        self.local_pops += local_pops;
+        self.queue_steals += queue_steals;
+        self.affinity_hits += affinity_hits;
+        self.affinity_misses += affinity_misses;
+        self.pins_applied += pins_applied;
+        self.pool_evictions += pool_evictions;
     }
 
     pub fn summary(&self) -> String {
@@ -146,8 +174,19 @@ impl Metrics {
         } else {
             String::new()
         };
+        let locality = if self.local_pops + self.queue_steals > 0 {
+            format!(
+                " local-pops={} steals={} affinity={}/{}",
+                self.local_pops,
+                self.queue_steals,
+                self.affinity_hits,
+                self.affinity_hits + self.affinity_misses
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "blocks={} updates={} wall={:.3}s (marshal {:.1}% execute {:.1}% writeback {:.1}%) buf-reuse {:.0}%{wave}{faults} {:.3} GCell/s",
+            "blocks={} updates={} wall={:.3}s (marshal {:.1}% execute {:.1}% writeback {:.1}%) buf-reuse {:.0}%{wave}{faults}{locality} {:.3} GCell/s",
             self.blocks,
             self.cell_updates,
             self.wall.as_secs_f64(),
@@ -211,6 +250,12 @@ mod tests {
             job_retries: 2,
             jobs_failed: 1,
             lane_restarts: 1,
+            local_pops: 40,
+            queue_steals: 3,
+            affinity_hits: 38,
+            affinity_misses: 2,
+            pins_applied: 4,
+            pool_evictions: 6,
             ..Default::default()
         };
         a.merge(&b);
@@ -223,6 +268,27 @@ mod tests {
         assert_eq!(a.job_retries, 3);
         assert_eq!(a.jobs_failed, 1);
         assert_eq!(a.lane_restarts, 1);
+        assert_eq!(a.local_pops, 40);
+        assert_eq!(a.queue_steals, 3);
+        assert_eq!(a.affinity_hits, 38);
+        assert_eq!(a.affinity_misses, 2);
+        assert_eq!(a.pins_applied, 4);
+        assert_eq!(a.pool_evictions, 6);
+    }
+
+    #[test]
+    fn summary_mentions_locality_only_when_scheduling_was_sharded() {
+        let global = Metrics { blocks: 1, ..Default::default() };
+        assert!(!global.summary().contains("local-pops="));
+        let sharded = Metrics {
+            blocks: 1,
+            local_pops: 10,
+            queue_steals: 2,
+            affinity_hits: 9,
+            affinity_misses: 1,
+            ..Default::default()
+        };
+        assert!(sharded.summary().contains("local-pops=10 steals=2 affinity=9/10"));
     }
 
     #[test]

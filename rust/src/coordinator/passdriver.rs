@@ -163,6 +163,21 @@ pub trait StencilSpace: Send + Sync {
 
     /// (tile hits, tile misses, descriptor hits, descriptor misses).
     fn pool_counters(&self) -> (u64, u64, u64, u64);
+
+    /// Buffers dropped by the pools' retention bound (see
+    /// `bufpool::SHELF_HIGH_WATER`).  Spaces without bounded pools
+    /// report 0.
+    fn pool_evictions(&self) -> u64 {
+        0
+    }
+}
+
+/// Sticky block→lane map: the lane a block's affinity key lands on.
+/// Pure modular hashing — deliberately free of run state, so the same
+/// block keys to the same lane on every pass, across `Chain` seams, and
+/// on both the sharded and global engines (where it is simply unused).
+pub fn lane_of(key: u64, lanes: usize) -> usize {
+    (key % lanes.max(1) as u64) as usize
 }
 
 /// Per-block completion counters over the block-origin lattice: block
@@ -375,6 +390,7 @@ fn finalize_metrics<S: StencilSpace>(
         pool_misses,
         desc_pool_hits,
         desc_pool_misses,
+        pool_evictions: space.pool_evictions(),
         ..Metrics::default()
     }
 }
@@ -787,6 +803,45 @@ pub trait WaveSpace: WaveGraph {
         (0, 0, 0, 0)
     }
 
+    /// Buffers dropped by the pools' retention bound (see
+    /// `bufpool::SHELF_HIGH_WATER`).  Spaces without bounded pools
+    /// report 0.
+    fn pool_evictions(&self) -> u64 {
+        0
+    }
+
+    /// Stable affinity key for block `(w, i)`: blocks that touch the
+    /// same data should return the same key, so [`lane_of`] sends them
+    /// to the same lane's run-queue shard (and tile-pool shard) pass
+    /// after pass.  The default keys by block index — exactly right
+    /// for the stencil fragments, whose block `i` of every wave is the
+    /// same block-origin tile of the grid, and stable across `Chain`
+    /// seams because spliced fragments renumber waves, not block
+    /// indices.  Must be deterministic and independent of run state.
+    fn affinity(&self, w: usize, i: usize) -> u64 {
+        let _ = w;
+        i as u64
+    }
+
+    /// [`WaveSpace::extract`] drawing tile buffers from one lane's pool
+    /// shard.  The default ignores the shard and delegates (correct
+    /// for single-shard pools and pool-less spaces).
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`WaveSpace::extract`].
+    unsafe fn extract_sharded(&self, shard: usize, w: usize, i: usize) -> Vec<Tensor> {
+        let _ = shard;
+        self.extract(w, i)
+    }
+
+    /// [`WaveSpace::recycle`] into one lane's pool shard; default
+    /// delegates to the unsharded method.
+    fn recycle_sharded(&self, shard: usize, w: usize, i: usize, inputs: Vec<Tensor>) {
+        let _ = shard;
+        self.recycle(w, i, inputs);
+    }
+
     /// True when block `(w, i)`'s artifact has a single f32 output and
     /// the space wants [`Runtime::execute_f32`]'s decompose fast path;
     /// the pool driver then writes back through
@@ -1142,6 +1197,8 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
 ) -> crate::Result<WaveOutcome> {
     let stats0 = pool.stats();
     let counters0 = pool.fault_counters();
+    let sched0 = pool.sched_counters();
+    let lanes = pool.lanes();
     let wall = Instant::now();
     let table = Arc::new(WaveTable::new(space.as_ref(), mode));
     let total = table.total();
@@ -1161,17 +1218,39 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
         // before those buffers can be freed, even on an unwinding exit.
         let guard = IdleGuard::new(pool);
         std::thread::scope(|sc| {
-            for _ in 0..extractors {
-                sc.spawn(|| {
+            for ex in 0..extractors {
+                // Move clones of the shared trackers into each
+                // extractor (the closure must own them: `ex` forces a
+                // `move` capture); `space` and `pool` are Copy borrows
+                // that outlive the scope.
+                let queue = Arc::clone(&queue);
+                let depth = Arc::clone(&depth);
+                let table = Arc::clone(&table);
+                let faults = Arc::clone(&faults);
+                let cancelled = Arc::clone(&cancelled);
+                let done_blocks = Arc::clone(&done_blocks);
+                let cells = Arc::clone(&cells);
+                let wb_nanos = Arc::clone(&wb_nanos);
+                let _inject = _inject.clone();
+                sc.spawn(move || {
+                    // Under Pinning::{Cores,Numa} each extractor sits on
+                    // the node of the lanes it mostly feeds, so a
+                    // pool-miss allocation first-touches pages on the
+                    // right node.  No-op (false) when unpinned.
+                    pool.pin_extractor(ex);
                     while let Some((w, i)) = queue.pop() {
                         depth.dispatched(w);
+                        // Sticky block→lane affinity: the same key
+                        // every pass, so a block's tile cycles through
+                        // one lane's cache (and pool shard).
+                        let hint = lane_of(space.affinity(w, i), lanes);
                         // Catch extraction panics here and scope them
                         // like a failed job: cancel the block's cone,
                         // keep everything else running.
                         let extracted = catch_unwind(AssertUnwindSafe(|| {
                             // SAFETY: dependency order via the ready
                             // queue — predecessors have written back.
-                            unsafe { space.extract(w, i) }
+                            unsafe { space.extract_sharded(hint, w, i) }
                         }));
                         let inputs = match extracted {
                             Ok(inputs) => inputs,
@@ -1211,7 +1290,8 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
                         let plan_j = _inject.clone();
                         #[cfg(any(test, feature = "chaos"))]
                         let mut chaos_attempt: u32 = 0;
-                        pool.submit_tracked(
+                        pool.submit_tracked_hinted(
+                            Some(hint),
                             move |_lane, rt| {
                                 #[cfg(any(test, feature = "chaos"))]
                                 {
@@ -1241,7 +1321,11 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
                                 wb_j.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                                 done_j.fetch_add(1, Ordering::Relaxed);
                                 cells_j.fetch_add(space_j.cell_updates(w, i), Ordering::Relaxed);
-                                space_j.recycle(
+                                // Back to the shard the extractor took
+                                // from: the tile cycles within one
+                                // lane's free list even when stolen.
+                                space_j.recycle_sharded(
+                                    hint,
                                     w,
                                     i,
                                     inputs.take().expect("job inputs already recycled"),
@@ -1297,6 +1381,7 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
 
     let stats = pool.stats();
     let counters = pool.fault_counters();
+    let sched = pool.sched_counters();
     let (pool_hits, pool_misses, desc_pool_hits, desc_pool_misses) = space.pool_counters();
     let (depth_max, overlap) = depth.finish();
     let metrics = Metrics {
@@ -1315,6 +1400,12 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
         job_retries: counters.job_retries - counters0.job_retries,
         jobs_failed: counters.jobs_failed - counters0.jobs_failed,
         lane_restarts: counters.lane_restarts - counters0.lane_restarts,
+        local_pops: sched.local_pops - sched0.local_pops,
+        queue_steals: sched.queue_steals - sched0.queue_steals,
+        affinity_hits: sched.affinity_hits - sched0.affinity_hits,
+        affinity_misses: sched.affinity_misses - sched0.affinity_misses,
+        pins_applied: sched.pins_applied - sched0.pins_applied,
+        pool_evictions: space.pool_evictions(),
     };
     let faults = std::mem::take(&mut *lock(&faults));
     let cancelled = std::mem::take(&mut *lock(&cancelled));
@@ -2282,5 +2373,57 @@ mod tests {
         assert_eq!(outcome.metrics.cell_updates, 0);
         assert_eq!(outcome.metrics.jobs_failed, 1);
         assert_eq!(outcome.metrics.job_retries, 0);
+    }
+
+    // ---------- block→lane affinity ----------
+
+    #[test]
+    fn lane_of_is_stable_modular_hashing() {
+        for lanes in 1..=8usize {
+            for key in 0..64u64 {
+                assert_eq!(lane_of(key, lanes), (key % lanes as u64) as usize);
+                // Deterministic: same key, same lane, every time.
+                assert_eq!(lane_of(key, lanes), lane_of(key, lanes));
+            }
+        }
+        // Degenerate lane counts never panic or index out of range.
+        assert_eq!(lane_of(17, 0), 0);
+        assert_eq!(lane_of(17, 1), 0);
+    }
+
+    #[test]
+    fn lane_of_covers_every_lane() {
+        // Block indices are dense, so modular hashing balances them:
+        // 8 consecutive keys over 4 lanes land exactly twice per lane.
+        let mut counts = [0usize; 4];
+        for key in 0..8u64 {
+            counts[lane_of(key, 4)] += 1;
+        }
+        assert_eq!(counts, [2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn default_affinity_is_block_index_stable_across_waves() {
+        // The default WaveSpace key ignores the wave: block i of every
+        // wave (and of every chained fragment, which renumbers waves
+        // but not block indices) sticks to one lane for the whole run.
+        let mut score = vec![0i32; 49];
+        let space = TestNwSpace {
+            nb: 3,
+            b: 2,
+            stride: 7,
+            refm: vec![0; 49],
+            score_ptr: score.as_mut_ptr(),
+        };
+        for w in 0..space.waves() {
+            for i in 0..space.wave_len(w) {
+                assert_eq!(space.affinity(w, i), i as u64);
+                assert_eq!(
+                    lane_of(space.affinity(w, i), 4),
+                    lane_of(space.affinity(0, i), 4),
+                    "block {i} must key to the same lane in every wave"
+                );
+            }
+        }
     }
 }

@@ -100,7 +100,8 @@ use crate::coordinator::stencil_runner::{
     Space3D, StencilMeta,
 };
 use crate::runtime::pool::lock;
-use crate::runtime::{FaultKind, Registry, RuntimePool, Tensor};
+use crate::runtime::topology::available_cores;
+use crate::runtime::{FaultKind, Pinning, PoolConfig, Registry, RuntimePool, Tensor};
 
 // ---------------------------------------------------------------------------
 // Public descriptor types
@@ -417,6 +418,7 @@ pub struct SessionBuilder {
     lanes: usize,
     mode: PassMode,
     extractors: Option<usize>,
+    pinning: Pinning,
 }
 
 impl Default for SessionBuilder {
@@ -426,8 +428,26 @@ impl Default for SessionBuilder {
             lanes: 1,
             mode: PassMode::Pipelined,
             extractors: None,
+            pinning: Pinning::None,
         }
     }
+}
+
+/// Clamp a pinned lane count to the machine: under
+/// [`Pinning::Cores`]/[`Pinning::Numa`] each lane wants a CPU of its
+/// own (plus its extractor partners), so more lanes than cores would
+/// just stack pinned threads on shared CPUs and serialize them.
+/// Unpinned sessions keep whatever was asked for — the OS scheduler is
+/// free to oversubscribe.
+fn clamp_lanes(lanes: usize, pinning: Pinning, cores: usize) -> usize {
+    let lanes = lanes.max(1);
+    if pinning == Pinning::None || cores == 0 || lanes <= cores {
+        return lanes;
+    }
+    eprintln!(
+        "session: clamping lanes {lanes} -> {cores} (pinning {pinning:?} needs a core per lane)"
+    );
+    cores
 }
 
 impl SessionBuilder {
@@ -457,9 +477,23 @@ impl SessionBuilder {
         self
     }
 
+    /// CPU-affinity policy for the lane threads and their extractor
+    /// partners (default [`Pinning::None`]).  Under
+    /// `Pinning::{Cores,Numa}` the lane count is clamped to the
+    /// available cores at [`SessionBuilder::build`] time, with a
+    /// warning on stderr.
+    pub fn pinning(mut self, pinning: Pinning) -> Self {
+        self.pinning = pinning;
+        self
+    }
+
     /// Open the artifact directory and spin up the lane pool.
     pub fn build(self) -> crate::Result<Session<'static>> {
-        let pool = RuntimePool::open(&self.dir, self.lanes)?;
+        let lanes = clamp_lanes(self.lanes, self.pinning, available_cores());
+        let pool = RuntimePool::open_with(
+            &self.dir,
+            PoolConfig { lanes, pinning: self.pinning, sharded: true },
+        )?;
         Ok(Session {
             engine: Engine::Owned(pool),
             mode: self.mode,
@@ -582,7 +616,14 @@ impl<'p> Session<'p> {
         let mut piped = Vec::with_capacity(chain.stages.len());
         for stage in chain.stages {
             let wants = stage.wants_upstream();
-            let frag = stage.lower(pool.registry(), frags.last().map(|f| f.as_ref()), &mut artifacts)?;
+            // Tile pools shard per lane: the driver keys take/recycle
+            // by the block's affinity lane, so free lists stay local.
+            let frag = stage.lower(
+                pool.registry(),
+                frags.last().map(|f| f.as_ref()),
+                &mut artifacts,
+                pool.lanes(),
+            )?;
             piped.push(wants);
             frags.push(frag);
         }
@@ -800,12 +841,13 @@ impl Stencil2dFragment {
         aux: Option<Grid2D>,
         scalar: Option<Vec<f32>>,
         passes: usize,
+        shards: usize,
     ) -> Stencil2dFragment {
         let (handles, ny, nx, grids) = double_buffer(input);
         // SAFETY: the aux grid is never written and outlives the drive
         // (owned by this fragment).
         let aux_handle = aux.as_ref().map(|a| unsafe { a.shared_view() });
-        let space = Space2D::new(ny, nx, m, aux_handle, scalar);
+        let space = Space2D::new(ny, nx, m, aux_handle, scalar).with_pool_shards(shards);
         let dims = space.lattice();
         let reach = space.reach();
         Stencil2dFragment {
@@ -848,6 +890,10 @@ impl WaveSpace for Stencil2dFragment {
         self.space.extract(self.handles[w % 2], i)
     }
 
+    unsafe fn extract_sharded(&self, shard: usize, w: usize, i: usize) -> Vec<Tensor> {
+        self.space.extract_on(shard, self.handles[w % 2], i)
+    }
+
     unsafe fn write(&self, w: usize, i: usize, out: &[Tensor]) {
         self.space.write(self.handles[(w + 1) % 2], i, out[0].as_f32());
     }
@@ -863,8 +909,16 @@ impl WaveSpace for Stencil2dFragment {
         StencilSpace::recycle(&self.space, inputs);
     }
 
+    fn recycle_sharded(&self, shard: usize, _w: usize, _i: usize, inputs: Vec<Tensor>) {
+        self.space.recycle_on(shard, inputs);
+    }
+
     fn pool_counters(&self) -> (u64, u64, u64, u64) {
         StencilSpace::pool_counters(&self.space)
+    }
+
+    fn pool_evictions(&self) -> u64 {
+        StencilSpace::pool_evictions(&self.space)
     }
 
     fn wants_f32(&self, _w: usize, _i: usize) -> bool {
@@ -943,6 +997,7 @@ impl Stencil3dFragment {
         mut grid: Grid3D,
         aux: Option<Grid3D>,
         passes: usize,
+        shards: usize,
     ) -> Stencil3dFragment {
         let (nz, ny, nx) = (grid.nz, grid.ny, grid.nx);
         // SAFETY: both grids move into `grids` below; heap storage is
@@ -952,7 +1007,7 @@ impl Stencil3dFragment {
         let h1 = unsafe { next.shared_writer() };
         // SAFETY: the aux grid is never written.
         let aux_handle = aux.as_ref().map(|a| unsafe { a.shared_view() });
-        let space = Space3D::new(nz, ny, nx, m, aux_handle);
+        let space = Space3D::new(nz, ny, nx, m, aux_handle).with_pool_shards(shards);
         let dims = space.lattice();
         let reach = space.reach();
         Stencil3dFragment {
@@ -995,6 +1050,10 @@ impl WaveSpace for Stencil3dFragment {
         self.space.extract(self.handles[w % 2], i)
     }
 
+    unsafe fn extract_sharded(&self, shard: usize, w: usize, i: usize) -> Vec<Tensor> {
+        self.space.extract_on(shard, self.handles[w % 2], i)
+    }
+
     unsafe fn write(&self, w: usize, i: usize, out: &[Tensor]) {
         self.space.write(self.handles[(w + 1) % 2], i, out[0].as_f32());
     }
@@ -1011,8 +1070,16 @@ impl WaveSpace for Stencil3dFragment {
         StencilSpace::recycle(&self.space, inputs);
     }
 
+    fn recycle_sharded(&self, shard: usize, _w: usize, _i: usize, inputs: Vec<Tensor>) {
+        self.space.recycle_on(shard, inputs);
+    }
+
     fn pool_counters(&self) -> (u64, u64, u64, u64) {
         StencilSpace::pool_counters(&self.space)
+    }
+
+    fn pool_evictions(&self) -> u64 {
+        StencilSpace::pool_evictions(&self.space)
     }
 
     fn wants_f32(&self, _w: usize, _i: usize) -> bool {
@@ -1053,6 +1120,9 @@ macro_rules! delegate_wave_impls {
             unsafe fn extract(&self, w: usize, i: usize) -> Vec<Tensor> {
                 self.space.extract(w, i)
             }
+            unsafe fn extract_sharded(&self, shard: usize, w: usize, i: usize) -> Vec<Tensor> {
+                self.space.extract_sharded(shard, w, i)
+            }
             unsafe fn write(&self, w: usize, i: usize, out: &[Tensor]) {
                 self.space.write(w, i, out)
             }
@@ -1062,8 +1132,17 @@ macro_rules! delegate_wave_impls {
             fn recycle(&self, w: usize, i: usize, inputs: Vec<Tensor>) {
                 self.space.recycle(w, i, inputs)
             }
+            fn recycle_sharded(&self, shard: usize, w: usize, i: usize, inputs: Vec<Tensor>) {
+                self.space.recycle_sharded(shard, w, i, inputs)
+            }
             fn pool_counters(&self) -> (u64, u64, u64, u64) {
                 self.space.pool_counters()
+            }
+            fn pool_evictions(&self) -> u64 {
+                self.space.pool_evictions()
+            }
+            fn affinity(&self, w: usize, i: usize) -> u64 {
+                self.space.affinity(w, i)
             }
         }
     };
@@ -1176,11 +1255,14 @@ impl Fragment for LudFragment {
 impl Workload {
     /// Lower this descriptor to a wave fragment, appending the
     /// artifact names it executes to `artifacts` (for lane warmup).
+    /// `shards` sizes the fragment's tile-pool sharding (one free list
+    /// per lane; pass 1 for an unsharded pool).
     fn lower(
         self,
         reg: &Registry,
         upstream: Option<&dyn Fragment>,
         artifacts: &mut Vec<String>,
+        shards: usize,
     ) -> crate::Result<Box<dyn Fragment>> {
         match self.0 {
             WorkloadKind::Stencil2d { artifact, grid, aux, steps } => {
@@ -1199,6 +1281,7 @@ impl Workload {
                     aux,
                     None,
                     passes,
+                    shards,
                 )))
             }
             WorkloadKind::Stencil2dScalar { artifact, grid, scalar } => {
@@ -1216,6 +1299,7 @@ impl Workload {
                     None,
                     Some(vec![scalar; m.t_fused as usize]),
                     1,
+                    shards,
                 )))
             }
             WorkloadKind::Stencil3d { artifact, grid, aux, steps } => {
@@ -1232,6 +1316,7 @@ impl Workload {
                     grid,
                     aux,
                     passes,
+                    shards,
                 )))
             }
             WorkloadKind::Pathfinder { wall } => {
@@ -1355,7 +1440,7 @@ impl Workload {
                     partials: (0..steps * nrtiles)
                         .map(|_| SyncCell(UnsafeCell::new((0.0, 0.0))))
                         .collect(),
-                    pools: TensorPools::default(),
+                    pools: TensorPools::with_shards(shards),
                 };
                 Ok(Box::new(SradFragment { space, _grids: grids }))
             }
@@ -1551,6 +1636,11 @@ impl WaveSpace for FusedSpace {
         self.frags[k].extract(lw, i)
     }
 
+    unsafe fn extract_sharded(&self, shard: usize, w: usize, i: usize) -> Vec<Tensor> {
+        let (k, lw) = self.locate(w);
+        self.frags[k].extract_sharded(shard, lw, i)
+    }
+
     unsafe fn write(&self, w: usize, i: usize, out: &[Tensor]) {
         let (k, lw) = self.locate(w);
         self.frags[k].write(lw, i, out)
@@ -1566,6 +1656,11 @@ impl WaveSpace for FusedSpace {
         self.frags[k].recycle(lw, i, inputs)
     }
 
+    fn recycle_sharded(&self, shard: usize, w: usize, i: usize, inputs: Vec<Tensor>) {
+        let (k, lw) = self.locate(w);
+        self.frags[k].recycle_sharded(shard, lw, i, inputs)
+    }
+
     fn pool_counters(&self) -> (u64, u64, u64, u64) {
         let mut t = (0u64, 0u64, 0u64, 0u64);
         for f in &self.frags {
@@ -1576,6 +1671,20 @@ impl WaveSpace for FusedSpace {
             t.3 += c.3;
         }
         t
+    }
+
+    fn pool_evictions(&self) -> u64 {
+        self.frags.iter().map(|f| f.pool_evictions()).sum()
+    }
+
+    fn affinity(&self, w: usize, i: usize) -> u64 {
+        // Delegate on the fragment's *local* wave: the default key is
+        // the block index, which stays stable across a Chain's seam
+        // (splicing renumbers waves, never block indices), so a piped
+        // block lands on the same lane that extracted its upstream
+        // producer tiles.
+        let (k, lw) = self.locate(w);
+        self.frags[k].affinity(lw, i)
     }
 
     fn wants_f32(&self, w: usize, i: usize) -> bool {
@@ -1605,7 +1714,7 @@ mod tests {
     }
 
     fn blur_frag(input: StencilInput, passes: usize) -> Stencil2dFragment {
-        Stencil2dFragment::build(Arc::from("blur"), &blur_meta(), input, None, None, passes)
+        Stencil2dFragment::build(Arc::from("blur"), &blur_meta(), input, None, None, passes, 1)
     }
 
     /// T=1 five-point average over a halo'd 6x6 tile -> 4x4 interior
@@ -2039,5 +2148,34 @@ mod tests {
         assert!(matches!(st[0], WorkloadStatus::Failed(_)));
         assert_eq!(st[1], WorkloadStatus::Cancelled);
         assert!(!st[1].is_ok());
+    }
+
+    #[test]
+    fn clamp_lanes_only_caps_pinned_sessions() {
+        // Unpinned: any oversubscription is the OS scheduler's problem.
+        assert_eq!(clamp_lanes(16, Pinning::None, 4), 16);
+        // Pinned: a core per lane, so the count caps at the machine.
+        assert_eq!(clamp_lanes(16, Pinning::Cores, 4), 4);
+        assert_eq!(clamp_lanes(16, Pinning::Numa, 4), 4);
+        assert_eq!(clamp_lanes(3, Pinning::Cores, 4), 3);
+        // Degenerate inputs stay sane.
+        assert_eq!(clamp_lanes(0, Pinning::Cores, 4), 1);
+        assert_eq!(clamp_lanes(8, Pinning::Cores, 0), 8);
+    }
+
+    #[test]
+    fn fused_affinity_delegates_on_local_waves() {
+        // The affinity key of a block must be its *fragment-local*
+        // block index, unchanged by where the fragment's waves landed
+        // in the fused numbering — that is what keeps a piped chain's
+        // block->lane map stable across the seam.
+        let a = blur_frag(StencilInput::Own(rand_grid(8, 8, 31)), 2);
+        let b = blur_frag(StencilInput::Own(rand_grid(8, 8, 32)), 2);
+        let fused = FusedSpace::splice(vec![Box::new(a), Box::new(b)], vec![false, false]);
+        for w in 0..fused.waves() {
+            for i in 0..fused.wave_len(w) {
+                assert_eq!(fused.affinity(w, i), i as u64);
+            }
+        }
     }
 }

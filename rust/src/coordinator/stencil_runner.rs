@@ -213,6 +213,60 @@ impl Space2D {
             pools: TensorPools::default(),
         }
     }
+
+    /// Shard the tile/descriptor pools per lane (see
+    /// [`TensorPools::with_shards`]); the session lowering sizes this
+    /// by the pool's lane count so a block's buffers cycle within its
+    /// affinity lane's free list.
+    pub(crate) fn with_pool_shards(mut self, shards: usize) -> Space2D {
+        self.pools = TensorPools::with_shards(shards);
+        self
+    }
+
+    /// [`StencilSpace::extract`] drawing buffers from one pool shard.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`StencilSpace::extract`].
+    pub(crate) unsafe fn extract_on(
+        &self,
+        shard: usize,
+        src: GridWriter2D,
+        block: usize,
+    ) -> Vec<Tensor> {
+        let (y0, x0) = self.origins[block];
+        let mut inputs = Vec::with_capacity(4);
+        let mut t = self.pools.tiles.take_on(shard, self.tile * self.tile);
+        src.extract_tile_into(
+            y0 as isize, x0 as isize, self.tile, self.tile, self.halo, self.boundary, &mut t,
+        );
+        inputs.push(Tensor::F32(t, vec![self.tile, self.tile]));
+        if let Some(aux) = &self.aux {
+            let mut p = self.pools.tiles.take_on(shard, self.tile * self.tile);
+            aux.extract_tile_into(
+                y0 as isize, x0 as isize, self.tile, self.tile, self.halo, self.boundary, &mut p,
+            );
+            inputs.push(Tensor::F32(p, vec![self.tile, self.tile]));
+        }
+        if let Some(s) = &self.scalar {
+            let mut v = self.pools.tiles.take_on(shard, s.len());
+            v.extend_from_slice(s);
+            inputs.push(Tensor::F32(v, vec![s.len()]));
+        }
+        // per-step boundary restoration descriptor (see the
+        // physical-boundary contract in kernels/stencil2d.py)
+        let (t0, t1) = oob_axis(y0, self.block, self.halo, self.ny);
+        let (l0, l1) = oob_axis(x0, self.block, self.halo, self.nx);
+        let mut d = self.pools.descs.take_on(shard, 4);
+        d.extend_from_slice(&[t0, t1, l0, l1]);
+        inputs.push(Tensor::I32(d, vec![4]));
+        inputs
+    }
+
+    /// Return recyclable buffers to one pool shard.
+    pub(crate) fn recycle_on(&self, shard: usize, inputs: Vec<Tensor>) {
+        self.pools.recycle_on(shard, inputs);
+    }
 }
 
 impl StencilSpace for Space2D {
@@ -231,33 +285,7 @@ impl StencilSpace for Space2D {
     }
 
     unsafe fn extract(&self, src: GridWriter2D, block: usize) -> Vec<Tensor> {
-        let (y0, x0) = self.origins[block];
-        let mut inputs = Vec::with_capacity(4);
-        let mut t = self.pools.tiles.take(self.tile * self.tile);
-        src.extract_tile_into(
-            y0 as isize, x0 as isize, self.tile, self.tile, self.halo, self.boundary, &mut t,
-        );
-        inputs.push(Tensor::F32(t, vec![self.tile, self.tile]));
-        if let Some(aux) = &self.aux {
-            let mut p = self.pools.tiles.take(self.tile * self.tile);
-            aux.extract_tile_into(
-                y0 as isize, x0 as isize, self.tile, self.tile, self.halo, self.boundary, &mut p,
-            );
-            inputs.push(Tensor::F32(p, vec![self.tile, self.tile]));
-        }
-        if let Some(s) = &self.scalar {
-            let mut v = self.pools.tiles.take(s.len());
-            v.extend_from_slice(s);
-            inputs.push(Tensor::F32(v, vec![s.len()]));
-        }
-        // per-step boundary restoration descriptor (see the
-        // physical-boundary contract in kernels/stencil2d.py)
-        let (t0, t1) = oob_axis(y0, self.block, self.halo, self.ny);
-        let (l0, l1) = oob_axis(x0, self.block, self.halo, self.nx);
-        let mut d = self.pools.descs.take(4);
-        d.extend_from_slice(&[t0, t1, l0, l1]);
-        inputs.push(Tensor::I32(d, vec![4]));
-        inputs
+        self.extract_on(0, src, block)
     }
 
     unsafe fn write(&self, dst: GridWriter2D, block: usize, out: &[f32]) {
@@ -276,6 +304,10 @@ impl StencilSpace for Space2D {
             self.pools.descs.hits(),
             self.pools.descs.misses(),
         )
+    }
+
+    fn pool_evictions(&self) -> u64 {
+        self.pools.evictions()
     }
 }
 
@@ -324,6 +356,51 @@ impl Space3D {
             pools: TensorPools::default(),
         }
     }
+
+    /// Shard the pools per lane; see [`Space2D::with_pool_shards`].
+    pub(crate) fn with_pool_shards(mut self, shards: usize) -> Space3D {
+        self.pools = TensorPools::with_shards(shards);
+        self
+    }
+
+    /// [`StencilSpace::extract`] drawing buffers from one pool shard.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`StencilSpace::extract`].
+    pub(crate) unsafe fn extract_on(
+        &self,
+        shard: usize,
+        src: GridWriter3D,
+        block: usize,
+    ) -> Vec<Tensor> {
+        let (z0, y0, x0) = self.origins[block];
+        let mut inputs = Vec::with_capacity(3);
+        let mut t = self.pools.tiles.take_on(shard, self.tile * self.tile * self.tile);
+        src.extract_tile_into(
+            z0 as isize, y0 as isize, x0 as isize, self.tile, self.halo, self.boundary, &mut t,
+        );
+        inputs.push(Tensor::F32(t, vec![self.tile, self.tile, self.tile]));
+        if let Some(aux) = &self.aux {
+            let mut p = self.pools.tiles.take_on(shard, self.tile * self.tile * self.tile);
+            aux.extract_tile_into(
+                z0 as isize, y0 as isize, x0 as isize, self.tile, self.halo, self.boundary, &mut p,
+            );
+            inputs.push(Tensor::F32(p, vec![self.tile, self.tile, self.tile]));
+        }
+        let (z0o, z1o) = oob_axis(z0, self.block, self.halo, self.nz);
+        let (y0o, y1o) = oob_axis(y0, self.block, self.halo, self.ny);
+        let (x0o, x1o) = oob_axis(x0, self.block, self.halo, self.nx);
+        let mut d = self.pools.descs.take_on(shard, 6);
+        d.extend_from_slice(&[z0o, z1o, y0o, y1o, x0o, x1o]);
+        inputs.push(Tensor::I32(d, vec![6]));
+        inputs
+    }
+
+    /// Return recyclable buffers to one pool shard.
+    pub(crate) fn recycle_on(&self, shard: usize, inputs: Vec<Tensor>) {
+        self.pools.recycle_on(shard, inputs);
+    }
 }
 
 impl StencilSpace for Space3D {
@@ -342,27 +419,7 @@ impl StencilSpace for Space3D {
     }
 
     unsafe fn extract(&self, src: GridWriter3D, block: usize) -> Vec<Tensor> {
-        let (z0, y0, x0) = self.origins[block];
-        let mut inputs = Vec::with_capacity(3);
-        let mut t = self.pools.tiles.take(self.tile * self.tile * self.tile);
-        src.extract_tile_into(
-            z0 as isize, y0 as isize, x0 as isize, self.tile, self.halo, self.boundary, &mut t,
-        );
-        inputs.push(Tensor::F32(t, vec![self.tile, self.tile, self.tile]));
-        if let Some(aux) = &self.aux {
-            let mut p = self.pools.tiles.take(self.tile * self.tile * self.tile);
-            aux.extract_tile_into(
-                z0 as isize, y0 as isize, x0 as isize, self.tile, self.halo, self.boundary, &mut p,
-            );
-            inputs.push(Tensor::F32(p, vec![self.tile, self.tile, self.tile]));
-        }
-        let (z0o, z1o) = oob_axis(z0, self.block, self.halo, self.nz);
-        let (y0o, y1o) = oob_axis(y0, self.block, self.halo, self.ny);
-        let (x0o, x1o) = oob_axis(x0, self.block, self.halo, self.nx);
-        let mut d = self.pools.descs.take(6);
-        d.extend_from_slice(&[z0o, z1o, y0o, y1o, x0o, x1o]);
-        inputs.push(Tensor::I32(d, vec![6]));
-        inputs
+        self.extract_on(0, src, block)
     }
 
     unsafe fn write(&self, dst: GridWriter3D, block: usize, out: &[f32]) {
@@ -381,6 +438,10 @@ impl StencilSpace for Space3D {
             self.pools.descs.hits(),
             self.pools.descs.misses(),
         )
+    }
+
+    fn pool_evictions(&self) -> u64 {
+        self.pools.evictions()
     }
 }
 

@@ -16,9 +16,13 @@
 
 pub mod pool;
 pub mod registry;
+pub mod topology;
 
-pub use pool::{FaultCounters, JobStatus, RetryPolicy, RuntimePool};
+pub use pool::{
+    FaultCounters, JobStatus, LaneHint, PoolConfig, RetryPolicy, RuntimePool, SchedCounters,
+};
 pub use registry::{ArtifactSpec, DType, Registry, TensorSpec};
+pub use topology::Pinning;
 
 use std::cell::RefCell;
 use std::collections::HashMap;

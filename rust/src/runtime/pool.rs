@@ -9,8 +9,31 @@
 //! compiled per lane (per-lane compile caches — each PJRT client must own
 //! its executables).
 //!
-//! Work arrives as boxed jobs through a bounded queue (backpressure for
-//! the extractor side).  There are two failure disciplines:
+//! ## Sharded scheduling (PR 7)
+//!
+//! Work arrives as boxed jobs through **per-lane sharded run queues**
+//! with LIFO-slot work stealing.  A job may carry a [`LaneHint`]
+//! (block→lane affinity computed by the wave driver): hinted jobs land
+//! in their shard's single-item LIFO **slot** (displacing the previous
+//! occupant to the front of the shard's deque), so the newest —
+//! cache-warmest — successor of a block is the first thing its lane
+//! pops.  Unhinted jobs spread round-robin across the shard deques.
+//! A lane pops its own slot, then its own deque front (the hot end),
+//! and only when both are empty **steals**: victim deque *backs* (the
+//! cold end) first, victim slots as a last resort.  Stealing keeps the
+//! pool work-conserving — any queued job is reachable by any lane, so
+//! `wait_idle`, cancellation and fault-retry semantics are unchanged
+//! from the global-queue engine, and a stolen tracked job simply
+//! retries on the thief (the retry loop runs on whichever lane popped
+//! it).  `PoolConfig { sharded: false }` collapses the shards to one
+//! FIFO deque and ignores hints — the literal pre-PR 7 global queue,
+//! kept for the bench comparison and the bitwise-identity tests.
+//! [`SchedCounters`] exposes the locality observables (local pops,
+//! steals, affinity hits/misses, pins applied).
+//!
+//! Submission blocks while the total queued count is at capacity
+//! (backpressure for the extractor side).  There are two failure
+//! disciplines:
 //!
 //! * **Untracked jobs** ([`RuntimePool::submit`]) keep the original
 //!   batch semantics: the first error or panic poisons the pool until
@@ -35,7 +58,10 @@
 //! isolation (chaos [`LaneKill`], or an unexpected unwind outside a job
 //! body) respawns the lane with a fresh `Runtime` from the shared
 //! registry instead of silently shrinking the pool, counted in
-//! [`FaultCounters::lane_restarts`].
+//! [`FaultCounters::lane_restarts`].  Under a [`Pinning`] policy the
+//! supervisor (re-)applies the lane's CPU affinity at the top of every
+//! supervision iteration, so a respawned lane lands back on its node
+//! before its fresh PJRT client allocates.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -47,6 +73,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context};
 
+use super::topology::{pin_current_thread, PinPlan, Pinning};
 use super::{FaultKind, Registry, Runtime, RuntimeStats, Tensor};
 
 /// Lock a mutex, recovering from poisoning.  Every critical section
@@ -57,6 +84,11 @@ use super::{FaultKind, Registry, Runtime, RuntimeStats, Tensor};
 pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
+
+/// A sticky lane preference for a submitted job (shard index modulo the
+/// lane count).  The wave driver derives it from the block's lattice
+/// origin so successive passes of one block land on one lane.
+pub type LaneHint = usize;
 
 /// An untracked pool job body.  Takes the lane index and that lane's
 /// runtime.
@@ -69,6 +101,25 @@ type TrackedFn = Box<dyn FnMut(usize, &Runtime) -> crate::Result<()> + Send + 's
 
 /// A per-job completion callback; receives the terminal [`JobStatus`].
 type DoneFn = Box<dyn FnOnce(JobStatus) + Send + 'static>;
+
+/// Construction-time pool configuration (see [`RuntimePool::open_with`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    /// Lane-thread count (clamped to ≥ 1).
+    pub lanes: usize,
+    /// CPU/NUMA pinning policy for lanes and their extractor partners.
+    pub pinning: Pinning,
+    /// `true` (default): per-lane sharded queues with work stealing.
+    /// `false`: one global FIFO deque, hints ignored — the literal
+    /// pre-PR 7 engine, kept as the bench/identity baseline.
+    pub sharded: bool,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig { lanes: 1, pinning: Pinning::None, sharded: true }
+    }
+}
 
 /// Bounded retry policy for tracked jobs.  Only `Transient` faults are
 /// retried; `Fatal` faults and panics are terminal on first occurrence.
@@ -133,6 +184,27 @@ pub struct FaultCounters {
     pub lane_restarts: u64,
 }
 
+/// Snapshot of the sharded scheduler's locality counters since open.
+/// All zero when the pool runs the global-queue emulation
+/// (`PoolConfig { sharded: false }` or a single lane) — the legacy
+/// scheduler has no locality to observe.  Drivers diff two snapshots
+/// to attribute counts to one run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedCounters {
+    /// Jobs a lane popped from its own shard (slot or deque).
+    pub local_pops: u64,
+    /// Jobs a lane stole from another lane's shard.
+    pub queue_steals: u64,
+    /// Hinted jobs popped by the lane they were hinted to.
+    pub affinity_hits: u64,
+    /// Hinted jobs stolen by a different lane.
+    pub affinity_misses: u64,
+    /// Successful `sched_setaffinity` applications (lane spawns and
+    /// respawns, plus extractor partners via
+    /// [`RuntimePool::pin_extractor`]).
+    pub pins_applied: u64,
+}
+
 /// Chaos panic payload: a job body that panics with `LaneKill` kills
 /// its lane *thread* — the per-job panic isolation deliberately
 /// re-raises it — exercising the supervisor's respawn path.  The job
@@ -145,18 +217,131 @@ enum JobBody {
     Tracked(TrackedFn),
 }
 
-/// A unit of pool work: the body plus an optional completion callback
-/// and the retry policy (tracked bodies only).
+/// A unit of pool work: the body plus an optional completion callback,
+/// the retry policy (tracked bodies only) and the affinity hint.
 struct Job {
     body: JobBody,
     done: Option<DoneFn>,
     policy: RetryPolicy,
+    hint: Option<LaneHint>,
+}
+
+/// One lane's run queue: a single-item LIFO slot for the newest hinted
+/// job (the cache-warm successor) plus a deque whose *front* is the hot
+/// end (owner pops front, thieves steal back).
+#[derive(Default)]
+struct Shard {
+    slot: Option<Job>,
+    fifo: VecDeque<Job>,
+}
+
+/// How a lane acquired a job — drives the locality accounting.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Pop {
+    Local,
+    Stolen,
 }
 
 struct QueueState {
-    jobs: VecDeque<Job>,
+    shards: Vec<Shard>,
+    /// Total queued jobs across every slot and deque (capacity and
+    /// idle accounting — cheaper than summing shards).
+    queued: usize,
     in_flight: usize,
     closed: bool,
+    /// Round-robin cursor for unhinted jobs.
+    rr: usize,
+}
+
+impl QueueState {
+    /// Route a job to its shard.  Hinted jobs (multi-shard pools only)
+    /// take the LIFO slot, displacing the previous occupant to the
+    /// deque front — so a shard drains newest-first, the work-stealing
+    /// analogue of depth-first block descent.  Unhinted jobs (and
+    /// every job of a global-mode pool) append round-robin FIFO.
+    fn push(&mut self, job: Job) {
+        let n = self.shards.len();
+        match job.hint.filter(|_| n > 1) {
+            Some(h) => {
+                let shard = &mut self.shards[h % n];
+                if let Some(prev) = shard.slot.replace(job) {
+                    shard.fifo.push_front(prev);
+                }
+            }
+            None => {
+                let t = self.rr;
+                self.rr = (self.rr + 1) % n;
+                self.shards[t].fifo.push_back(job);
+            }
+        }
+        self.queued += 1;
+    }
+
+    /// Pop the next job for `lane`: own slot → own deque front → steal
+    /// victim deque backs → steal victim slots.  Victim order starts at
+    /// the next lane over so thieves spread instead of mobbing shard 0.
+    fn pop_for(&mut self, lane: usize) -> Option<(Job, Pop)> {
+        let n = self.shards.len();
+        let me = lane % n;
+        if let Some(job) = self.shards[me].slot.take() {
+            self.queued -= 1;
+            return Some((job, Pop::Local));
+        }
+        if let Some(job) = self.shards[me].fifo.pop_front() {
+            self.queued -= 1;
+            return Some((job, Pop::Local));
+        }
+        for d in 1..n {
+            let v = (me + d) % n;
+            if let Some(job) = self.shards[v].fifo.pop_back() {
+                self.queued -= 1;
+                return Some((job, Pop::Stolen));
+            }
+        }
+        for d in 1..n {
+            let v = (me + d) % n;
+            if let Some(job) = self.shards[v].slot.take() {
+                self.queued -= 1;
+                return Some((job, Pop::Stolen));
+            }
+        }
+        None
+    }
+}
+
+/// Per-lane runtime-stats cell (satellite: the stats fold is lock-free
+/// on the hot path — each lane touches only its own atomics, the read
+/// side folds all lanes).  Durations are stored as integer microseconds
+/// so a plain `fetch_add` suffices.
+#[derive(Default)]
+struct LaneStatsCell {
+    executions: AtomicU64,
+    compile_us: AtomicU64,
+    execute_us: AtomicU64,
+    marshal_us: AtomicU64,
+}
+
+fn to_us(ms: f64) -> u64 {
+    (ms * 1_000.0).max(0.0).round() as u64
+}
+
+impl LaneStatsCell {
+    fn add_delta(&self, last: &RuntimeStats, now: &RuntimeStats) {
+        self.executions.fetch_add(now.executions - last.executions, Ordering::Relaxed);
+        self.compile_us.fetch_add(to_us(now.compile_ms - last.compile_ms), Ordering::Relaxed);
+        self.execute_us.fetch_add(to_us(now.execute_ms - last.execute_ms), Ordering::Relaxed);
+        self.marshal_us.fetch_add(to_us(now.marshal_ms - last.marshal_ms), Ordering::Relaxed);
+    }
+}
+
+/// Sharded-scheduler locality counters (see [`SchedCounters`]).
+#[derive(Default)]
+struct SchedCells {
+    local_pops: AtomicU64,
+    queue_steals: AtomicU64,
+    affinity_hits: AtomicU64,
+    affinity_misses: AtomicU64,
+    pins_applied: AtomicU64,
 }
 
 struct Shared {
@@ -171,13 +356,19 @@ struct Shared {
     error: Mutex<Option<anyhow::Error>>,
     /// Set alongside `error`; lanes drain (skip) jobs while poisoned.
     poisoned: AtomicBool,
-    /// Aggregated per-lane runtime stats (updated after every job).
-    stats: Mutex<RuntimeStats>,
+    /// Per-lane runtime stats, folded on read by [`RuntimePool::stats`].
+    lane_stats: Vec<LaneStatsCell>,
+    /// Locality counters (sharded mode only).
+    sched: SchedCells,
     /// Fault-tolerance counters (see [`FaultCounters`]).
     job_retries: AtomicU64,
     jobs_failed: AtomicU64,
     lane_restarts: AtomicU64,
     queue_cap: usize,
+    /// Lane/extractor → CPU-set assignment under the pinning policy.
+    plan: PinPlan,
+    /// `true` when the pool runs >1 shard (locality accounting active).
+    multi_shard: bool,
 }
 
 impl Shared {
@@ -197,14 +388,22 @@ pub struct RuntimePool {
 
 impl RuntimePool {
     /// Open the artifact directory and spin up `lanes` worker threads
-    /// (clamped to ≥ 1).  The manifest is read once on the calling
-    /// thread; each lane then creates its own PJRT client.  Returns an
-    /// error if the manifest fails to parse or any lane fails to start.
+    /// (clamped to ≥ 1) with the default config (sharded queues, no
+    /// pinning).  The manifest is read once on the calling thread; each
+    /// lane then creates its own PJRT client.  Returns an error if the
+    /// manifest fails to parse or any lane fails to start.
     pub fn open(dir: impl AsRef<Path>, lanes: usize) -> crate::Result<RuntimePool> {
+        Self::open_with(dir, PoolConfig { lanes, ..PoolConfig::default() })
+    }
+
+    /// Open with an explicit [`PoolConfig`] (sharding and pinning
+    /// knobs).  `config.pinning` is applied by each lane itself at the
+    /// top of its supervision loop — and re-applied on respawn.
+    pub fn open_with(dir: impl AsRef<Path>, config: PoolConfig) -> crate::Result<RuntimePool> {
         let dir: PathBuf = dir.as_ref().to_path_buf();
         let registry = Registry::load(dir.join("manifest.txt"))
             .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        RuntimePool::with_registry(dir, registry, lanes)
+        RuntimePool::with_registry_cfg(dir, registry, config)
     }
 
     /// Open over an already-parsed registry (pure-logic tests use an
@@ -215,23 +414,37 @@ impl RuntimePool {
         registry: Registry,
         lanes: usize,
     ) -> crate::Result<RuntimePool> {
-        let lanes = lanes.max(1);
+        Self::with_registry_cfg(dir, registry, PoolConfig { lanes, ..PoolConfig::default() })
+    }
+
+    pub(crate) fn with_registry_cfg(
+        dir: PathBuf,
+        registry: Registry,
+        config: PoolConfig,
+    ) -> crate::Result<RuntimePool> {
+        let lanes = config.lanes.max(1);
+        let nshards = if config.sharded { lanes } else { 1 };
         let shared = Arc::new(Shared {
             state: Mutex::new(QueueState {
-                jobs: VecDeque::new(),
+                shards: (0..nshards).map(|_| Shard::default()).collect(),
+                queued: 0,
                 in_flight: 0,
                 closed: false,
+                rr: 0,
             }),
             job_ready: Condvar::new(),
             space: Condvar::new(),
             idle: Condvar::new(),
             error: Mutex::new(None),
             poisoned: AtomicBool::new(false),
-            stats: Mutex::new(RuntimeStats::default()),
+            lane_stats: (0..lanes).map(|_| LaneStatsCell::default()).collect(),
+            sched: SchedCells::default(),
             job_retries: AtomicU64::new(0),
             jobs_failed: AtomicU64::new(0),
             lane_restarts: AtomicU64::new(0),
             queue_cap: (lanes * 4).max(8),
+            plan: PinPlan::new(config.pinning, lanes),
+            multi_shard: nshards > 1,
         });
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<crate::Result<()>>();
         let mut handles = Vec::with_capacity(lanes);
@@ -276,9 +489,17 @@ impl RuntimePool {
         &self.registry
     }
 
-    /// Aggregate execution stats across all lanes.
+    /// Aggregate execution stats, folded across the per-lane atomic
+    /// cells on read — no lock anywhere on the job hot path.
     pub fn stats(&self) -> RuntimeStats {
-        lock(&self.shared.stats).clone()
+        let mut agg = RuntimeStats::default();
+        for cell in &self.shared.lane_stats {
+            agg.executions += cell.executions.load(Ordering::Relaxed);
+            agg.compile_ms += cell.compile_us.load(Ordering::Relaxed) as f64 / 1_000.0;
+            agg.execute_ms += cell.execute_us.load(Ordering::Relaxed) as f64 / 1_000.0;
+            agg.marshal_ms += cell.marshal_us.load(Ordering::Relaxed) as f64 / 1_000.0;
+        }
+        agg
     }
 
     /// Snapshot the fault-tolerance counters (retries / terminal
@@ -291,6 +512,32 @@ impl RuntimePool {
         }
     }
 
+    /// Snapshot the sharded scheduler's locality counters since open.
+    pub fn sched_counters(&self) -> SchedCounters {
+        let s = &self.shared.sched;
+        SchedCounters {
+            local_pops: s.local_pops.load(Ordering::Relaxed),
+            queue_steals: s.queue_steals.load(Ordering::Relaxed),
+            affinity_hits: s.affinity_hits.load(Ordering::Relaxed),
+            affinity_misses: s.affinity_misses.load(Ordering::Relaxed),
+            pins_applied: s.pins_applied.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Pin the calling thread as extractor partner `j` under the pool's
+    /// pinning policy (slot `lanes + j`, see
+    /// [`crate::runtime::topology::PinPlan`]).  Returns whether a pin
+    /// was applied; a no-pinning policy (or topology) is a cheap no-op.
+    pub fn pin_extractor(&self, j: usize) -> bool {
+        if let Some(cpus) = self.shared.plan.extractor_cpus(j) {
+            if pin_current_thread(cpus) {
+                self.shared.sched.pins_applied.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+        }
+        false
+    }
+
     /// Enqueue an untracked job.  Blocks while the queue is at capacity
     /// (the bounded-channel backpressure between extractors and lanes).
     /// Failures poison the pool until the next
@@ -299,10 +546,21 @@ impl RuntimePool {
     where
         F: FnOnce(usize, &Runtime) -> crate::Result<()> + Send + 'static,
     {
+        self.submit_hinted(None, job);
+    }
+
+    /// [`RuntimePool::submit`] with a lane-affinity hint: the job lands
+    /// in shard `hint % lanes`' LIFO slot and runs on that lane unless
+    /// an idle lane steals it first.
+    pub fn submit_hinted<F>(&self, hint: Option<LaneHint>, job: F)
+    where
+        F: FnOnce(usize, &Runtime) -> crate::Result<()> + Send + 'static,
+    {
         self.enqueue(Job {
             body: JobBody::Once(Box::new(job)),
             done: None,
             policy: RetryPolicy::none(),
+            hint,
         });
     }
 
@@ -321,16 +579,33 @@ impl RuntimePool {
         F: FnMut(usize, &Runtime) -> crate::Result<()> + Send + 'static,
         C: FnOnce(JobStatus) + Send + 'static,
     {
+        self.submit_tracked_hinted(None, job, policy, on_done);
+    }
+
+    /// [`RuntimePool::submit_tracked`] with a lane-affinity hint.  A
+    /// stolen hinted job keeps full tracked semantics — retries run on
+    /// the thief, the callback fires exactly once.
+    pub fn submit_tracked_hinted<F, C>(
+        &self,
+        hint: Option<LaneHint>,
+        job: F,
+        policy: RetryPolicy,
+        on_done: C,
+    ) where
+        F: FnMut(usize, &Runtime) -> crate::Result<()> + Send + 'static,
+        C: FnOnce(JobStatus) + Send + 'static,
+    {
         self.enqueue(Job {
             body: JobBody::Tracked(Box::new(job)),
             done: Some(Box::new(on_done)),
             policy,
+            hint,
         });
     }
 
     fn enqueue(&self, job: Job) {
         let mut st = lock(&self.shared.state);
-        while st.jobs.len() >= self.shared.queue_cap && !st.closed {
+        while st.queued >= self.shared.queue_cap && !st.closed {
             st = self
                 .shared
                 .space
@@ -340,7 +615,7 @@ impl RuntimePool {
         if st.closed {
             return; // pool shutting down; job dropped
         }
-        st.jobs.push_back(job);
+        st.push(job);
         drop(st);
         self.shared.job_ready.notify_one();
     }
@@ -351,7 +626,7 @@ impl RuntimePool {
     /// their completion callbacks instead and never show up here.
     pub fn wait_idle(&self) -> crate::Result<()> {
         let mut st = lock(&self.shared.state);
-        while !(st.jobs.is_empty() && st.in_flight == 0) {
+        while !(st.queued == 0 && st.in_flight == 0) {
             st = self
                 .shared
                 .idle
@@ -369,8 +644,10 @@ impl RuntimePool {
     /// Compile `artifact` on *every* lane, outside any timed region (the
     /// analogue of FPGA reprogramming, excluded from kernel timing as in
     /// §4.2.4).  A barrier keeps each lane from grabbing two warmup jobs
-    /// — which is also why lane supervision must preserve the lane
-    /// count: a shrunken pool would park the surviving lanes here
+    /// — each job is hinted to its own lane's shard, and no lane can
+    /// finish one warmup job (and go stealing) before every lane has
+    /// taken one — which is also why lane supervision must preserve the
+    /// lane count: a shrunken pool would park the surviving lanes here
     /// forever.
     pub fn warmup_artifact(&self, artifact: &str) -> crate::Result<()> {
         // Drain any stale poison first: a poisoned lane would skip its
@@ -378,10 +655,10 @@ impl RuntimePool {
         self.wait_idle()?;
         let barrier = Arc::new(Barrier::new(self.lanes));
         let name: Arc<str> = Arc::from(artifact);
-        for _ in 0..self.lanes {
+        for lane in 0..self.lanes {
             let b = barrier.clone();
             let n = name.clone();
-            self.submit(move |lane, rt| {
+            self.submit_hinted(Some(lane), move |lane, rt| {
                 // Catch panics locally: an unwinding compile must not
                 // skip the barrier, or the other lanes would park in
                 // b.wait() forever (lane_main's catch_unwind is too
@@ -476,7 +753,9 @@ impl Drop for IdleGuard<'_> {
 /// loop with a fresh one whenever a panic escapes the per-job isolation
 /// (chaos [`LaneKill`], or an unexpected unwind outside a job body), so
 /// the pool never silently shrinks — `warmup_artifact`'s all-lanes
-/// barrier depends on the lane count staying fixed.
+/// barrier depends on the lane count staying fixed.  The lane's CPU pin
+/// is (re-)applied at the top of every iteration, so a respawned lane
+/// lands back on its node before its fresh PJRT client allocates.
 fn lane_entry(
     lane: usize,
     dir: PathBuf,
@@ -486,6 +765,11 @@ fn lane_entry(
 ) {
     let mut ready = Some(ready_tx);
     loop {
+        if let Some(cpus) = shared.plan.lane_cpus(lane) {
+            if pin_current_thread(cpus) {
+                shared.sched.pins_applied.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         let rt = match Runtime::with_registry(&dir, registry.clone()) {
             Ok(rt) => {
                 if let Some(tx) = ready.take() {
@@ -557,7 +841,7 @@ impl Drop for JobGuard<'_> {
         }
         let mut st = lock(&self.shared.state);
         st.in_flight -= 1;
-        if st.in_flight == 0 && st.jobs.is_empty() {
+        if st.in_flight == 0 && st.queued == 0 {
             self.shared.idle.notify_all();
         }
     }
@@ -566,12 +850,12 @@ impl Drop for JobGuard<'_> {
 fn lane_main(lane: usize, rt: &Runtime, shared: &Arc<Shared>) {
     let mut last = RuntimeStats::default();
     loop {
-        let job = {
+        let popped = {
             let mut st = lock(&shared.state);
             loop {
-                if let Some(j) = st.jobs.pop_front() {
+                if let Some(p) = st.pop_for(lane) {
                     st.in_flight += 1;
-                    break Some(j);
+                    break Some(p);
                 }
                 if st.closed {
                     break None;
@@ -582,8 +866,24 @@ fn lane_main(lane: usize, rt: &Runtime, shared: &Arc<Shared>) {
                     .unwrap_or_else(PoisonError::into_inner);
             }
         };
-        let Some(Job { body, done, policy }) = job else { return };
+        let Some((Job { body, done, policy, hint }, pop)) = popped else { return };
         shared.space.notify_one();
+        if shared.multi_shard {
+            match pop {
+                Pop::Local => {
+                    shared.sched.local_pops.fetch_add(1, Ordering::Relaxed);
+                    if hint.is_some() {
+                        shared.sched.affinity_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Pop::Stolen => {
+                    shared.sched.queue_steals.fetch_add(1, Ordering::Relaxed);
+                    if hint.is_some() {
+                        shared.sched.affinity_misses.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
 
         // The guard owns the callback and the in-flight decrement: both
         // fire exactly once, on every exit path out of run_job —
@@ -595,15 +895,10 @@ fn lane_main(lane: usize, rt: &Runtime, shared: &Arc<Shared>) {
             run_job(lane, rt, shared, body, policy)
         });
 
-        // Fold this lane's stats delta into the pool aggregate.
+        // Fold this lane's stats delta into its own atomic cell (no
+        // lock: the cell is this lane's alone, readers fold all cells).
         let now = rt.stats();
-        {
-            let mut agg = lock(&shared.stats);
-            agg.executions += now.executions - last.executions;
-            agg.compile_ms += now.compile_ms - last.compile_ms;
-            agg.execute_ms += now.execute_ms - last.execute_ms;
-            agg.marshal_ms += now.marshal_ms - last.marshal_ms;
-        }
+        shared.lane_stats[lane].add_delta(&last, &now);
         last = now;
 
         drop(guard); // fires done, decrements in_flight, notifies idle
@@ -714,11 +1009,12 @@ mod tests {
 
     #[test]
     fn tracked_callbacks_fire_exactly_once_in_completion_order() {
-        // lanes=1 makes completion order deterministic (FIFO): a mixed
-        // success/panic/fatal/skip batch must deliver exactly one
-        // status per job, in submission order, with the tracked
-        // failures NOT poisoning the pool — only the untracked failure
-        // surfaces at wait_idle.
+        // lanes=1 makes completion order deterministic (FIFO — a
+        // single-lane pool has one shard, and unhinted jobs keep strict
+        // submission order): a mixed success/panic/fatal/skip batch
+        // must deliver exactly one status per job, in submission order,
+        // with the tracked failures NOT poisoning the pool — only the
+        // untracked failure surfaces at wait_idle.
         let pool = test_pool(1);
         let log = Arc::new(Mutex::new(Vec::<(usize, String)>::new()));
         let fired: Arc<Vec<AtomicU32>> =
@@ -896,5 +1192,201 @@ mod tests {
         }
         assert_eq!(oks.load(Ordering::SeqCst) + fails.load(Ordering::SeqCst), n as u32);
         assert_eq!(fails.load(Ordering::SeqCst) as usize, n.div_ceil(3));
+    }
+
+    #[test]
+    fn randomized_hints_run_every_job_exactly_once_with_full_accounting() {
+        // The core sharded-queue invariant: under randomized hints and
+        // live stealing at lanes=4, every job's body runs exactly once,
+        // every callback fires exactly once, and every pop is accounted
+        // as either local or stolen (no job materializes or vanishes).
+        let pool = test_pool(4);
+        let n = 200usize;
+        let mut rng = crate::testutil::Rng::new(7);
+        let bodies: Arc<Vec<AtomicU32>> =
+            Arc::new((0..n).map(|_| AtomicU32::new(0)).collect());
+        let callbacks: Arc<Vec<AtomicU32>> =
+            Arc::new((0..n).map(|_| AtomicU32::new(0)).collect());
+        for i in 0..n {
+            // Mostly hinted (arbitrary shard targets, including far
+            // beyond the lane count — hints wrap), some unhinted.
+            let hint = if rng.usize_in(0, 4) == 0 { None } else { Some(rng.usize_in(0, 63)) };
+            let bodies = bodies.clone();
+            let callbacks = callbacks.clone();
+            pool.submit_tracked_hinted(
+                hint,
+                move |_, _| {
+                    bodies[i].fetch_add(1, Ordering::SeqCst);
+                    Ok(())
+                },
+                RetryPolicy::none(),
+                move |st| {
+                    assert!(st.is_ok());
+                    callbacks[i].fetch_add(1, Ordering::SeqCst);
+                },
+            );
+        }
+        pool.wait_idle().unwrap();
+        for i in 0..n {
+            assert_eq!(bodies[i].load(Ordering::SeqCst), 1, "job {i} body count");
+            assert_eq!(callbacks[i].load(Ordering::SeqCst), 1, "job {i} callback count");
+        }
+        let c = pool.sched_counters();
+        assert_eq!(
+            c.local_pops + c.queue_steals,
+            n as u64,
+            "every pop is exactly one of local/stolen"
+        );
+        assert!(
+            c.affinity_hits + c.affinity_misses <= n as u64,
+            "only hinted jobs count toward affinity"
+        );
+    }
+
+    #[test]
+    fn stolen_tracked_job_retries_on_the_thief() {
+        // Park one lane inside a job, hint a transiently-failing probe
+        // at that busy lane: the idle lane must steal it, and the retry
+        // must run on the thief (the retry loop runs wherever the job
+        // was popped) — never bouncing back to the hinted lane.
+        let pool = test_pool(2);
+        let (lane_tx, lane_rx) = std::sync::mpsc::channel::<usize>();
+        let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+        pool.submit_tracked_hinted(
+            Some(0),
+            move |lane, _| {
+                let _ = lane_tx.send(lane);
+                let _ = release_rx.recv();
+                Ok(())
+            },
+            RetryPolicy::none(),
+            |st| assert!(st.is_ok()),
+        );
+        let busy = lane_rx.recv().expect("blocker must start");
+
+        let attempts = Arc::new(Mutex::new(Vec::<usize>::new()));
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<String>();
+        let a = attempts.clone();
+        let flaky = AtomicU32::new(0);
+        pool.submit_tracked_hinted(
+            Some(busy),
+            move |lane, _| {
+                lock(&a).push(lane);
+                if flaky.fetch_add(1, Ordering::SeqCst) == 0 {
+                    Err(crate::runtime::transient("first attempt hiccup".into()))
+                } else {
+                    Ok(())
+                }
+            },
+            RetryPolicy { attempts: 3, backoff: Duration::from_micros(50) },
+            move |st| {
+                let _ = done_tx.send(status_tag(&st));
+            },
+        );
+        // The probe completes while the hinted lane is still parked:
+        // only the thief could have run it.
+        assert_eq!(done_rx.recv().unwrap(), "ok:1");
+        let _ = release_tx.send(());
+        pool.wait_idle().unwrap();
+
+        let lanes_seen = lock(&attempts).clone();
+        assert_eq!(lanes_seen.len(), 2, "one transient failure + one retry");
+        assert_eq!(lanes_seen[0], lanes_seen[1], "retry must stay on the thief");
+        assert_ne!(lanes_seen[0], busy, "the hinted lane was parked — a thief ran the job");
+        let c = pool.sched_counters();
+        assert!(c.queue_steals >= 1, "the probe was stolen");
+        assert!(c.affinity_misses >= 1, "a stolen hinted job is an affinity miss");
+        assert_eq!(pool.fault_counters().job_retries, 1);
+    }
+
+    #[test]
+    fn unsharded_pool_runs_hinted_jobs_and_counts_nothing() {
+        // PoolConfig { sharded: false } is the PR 6 global-queue
+        // engine: hints are accepted (and ignored), the locality
+        // counters stay zero — the legacy scheduler has no locality.
+        let pool = RuntimePool::with_registry_cfg(
+            PathBuf::from("."),
+            Registry::default(),
+            PoolConfig { lanes: 2, sharded: false, ..PoolConfig::default() },
+        )
+        .unwrap();
+        let ran = Arc::new(AtomicU32::new(0));
+        for i in 0..16usize {
+            let r = ran.clone();
+            pool.submit_tracked_hinted(
+                Some(i),
+                move |_, _| {
+                    r.fetch_add(1, Ordering::SeqCst);
+                    Ok(())
+                },
+                RetryPolicy::none(),
+                |st| assert!(st.is_ok()),
+            );
+        }
+        pool.wait_idle().unwrap();
+        assert_eq!(ran.load(Ordering::SeqCst), 16);
+        assert_eq!(pool.sched_counters(), SchedCounters::default());
+    }
+
+    /// Two-shard queue state for driving the routing logic directly
+    /// (a 1-shard pool ignores hints, so lanes=1 can't exercise it).
+    fn two_shard_state() -> QueueState {
+        QueueState {
+            shards: (0..2).map(|_| Shard::default()).collect(),
+            queued: 0,
+            in_flight: 0,
+            closed: false,
+            rr: 0,
+        }
+    }
+
+    /// A job hinted at shard `h % 2`.  Hints 0/2/4 all land on shard 0
+    /// while staying distinguishable, so the hint doubles as a tag.
+    fn hinted(h: usize) -> Job {
+        Job {
+            body: JobBody::Once(Box::new(|_, _| Ok(()))),
+            done: None,
+            policy: RetryPolicy::none(),
+            hint: Some(h),
+        }
+    }
+
+    #[test]
+    fn hinted_shard_drains_lifo_through_the_slot() {
+        // Three jobs hinted at one shard must come back newest-first
+        // (slot, then deque front) — the LIFO order that keeps a
+        // block's freshest successor cache-warm for its owner lane.
+        let mut st = two_shard_state();
+        st.push(hinted(0));
+        st.push(hinted(2));
+        st.push(hinted(4));
+        assert_eq!(st.queued, 3);
+        let mut seen = Vec::new();
+        while let Some((job, pop)) = st.pop_for(0) {
+            assert!(matches!(pop, Pop::Local), "owner pops are local");
+            seen.push(job.hint.unwrap());
+        }
+        assert_eq!(seen, vec![4, 2, 0], "owner drains newest-first");
+        assert_eq!(st.queued, 0);
+    }
+
+    #[test]
+    fn thief_steals_the_cold_end_first() {
+        // Victim shard holds hinted jobs (slot = newest, deque back =
+        // oldest); a thief must drain the cold end before touching the
+        // slot — the owner keeps its warmest work longest.
+        let mut st = two_shard_state();
+        st.push(hinted(0));
+        st.push(hinted(2));
+        st.push(hinted(4));
+        let mut seen = Vec::new();
+        while let Some((job, pop)) = st.pop_for(1) {
+            assert!(matches!(pop, Pop::Stolen), "cross-shard pops are steals");
+            seen.push(job.hint.unwrap());
+        }
+        assert_eq!(seen, vec![0, 2, 4], "thief drains oldest-first, slot last");
+        // Sanity: the owner sees nothing left either.
+        assert!(st.pop_for(0).is_none());
+        assert_eq!(st.queued, 0);
     }
 }

@@ -1,0 +1,320 @@
+//! CPU / NUMA topology discovery and lane pinning.
+//!
+//! The thesis's stencil accelerators win because every tile's working
+//! set stays resident next to the compute unit that consumes it
+//! (§5.3.1).  The host-side analogue is keeping a lane thread, its
+//! extractor partner and its tile arena on one NUMA node.  This module
+//! supplies the mechanism:
+//!
+//! * [`Topology::discover`] parses `/sys/devices/system/node/node*/cpulist`
+//!   into per-node CPU sets, degrading to a single synthetic node (all
+//!   CPUs) when sysfs is absent or unreadable — discovery **never
+//!   errors**, so `Pinning::Numa` on a single-node laptop simply
+//!   behaves like [`Pinning::None`].
+//! * [`PinPlan`] maps pool lanes and extractor slots to CPU sets under
+//!   a [`Pinning`] policy (round-robin across nodes).
+//! * [`pin_current_thread`] applies a set via a direct
+//!   `sched_setaffinity` syscall binding (the offline dependency set
+//!   has no libc crate); on non-Linux targets it is a no-op returning
+//!   `false`.
+//!
+//! The policy knob travels `SessionBuilder::pinning` → `PoolConfig` →
+//! lane supervisor: each lane re-applies its pin at the top of its
+//! supervision loop, so a respawned lane lands back on its node
+//! (`Metrics::pins_applied` counts every application, including
+//! re-pins after a kill).
+
+use std::path::Path;
+
+/// Thread-pinning policy for pool lanes and their extractor partners.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Pinning {
+    /// No affinity calls at all (the pre-PR 7 behaviour).
+    #[default]
+    None,
+    /// Pin each lane/extractor to a single CPU, round-robin across
+    /// nodes (lane k → k-th CPU of the node-interleaved list).
+    Cores,
+    /// Pin each lane/extractor to the full CPU set of one NUMA node
+    /// (lane k → node `k % nnodes`).  With fewer than two nodes this
+    /// degrades to [`Pinning::None`] — pinning every thread to "all
+    /// CPUs" would be a syscall with no effect.
+    Numa,
+}
+
+impl std::str::FromStr for Pinning {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "none" => Ok(Pinning::None),
+            "cores" => Ok(Pinning::Cores),
+            "numa" => Ok(Pinning::Numa),
+            other => anyhow::bail!("unknown pinning policy '{other}' (none|cores|numa)"),
+        }
+    }
+}
+
+/// The machine's NUMA layout: one CPU list per node.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// `nodes[n]` = the online CPU ids of NUMA node `n` (sorted).
+    pub nodes: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    /// Discover the NUMA layout from sysfs, falling back to one
+    /// synthetic node holding every available CPU.  Never errors: a
+    /// container without `/sys/devices/system/node` (or with
+    /// unreadable cpulists) reports a single node.
+    pub fn discover() -> Self {
+        Self::from_sysfs(Path::new("/sys/devices/system/node")).unwrap_or_else(Self::single_node)
+    }
+
+    /// One synthetic node spanning every CPU the process may use.
+    pub fn single_node() -> Self {
+        Topology { nodes: vec![(0..available_cores()).collect()] }
+    }
+
+    fn from_sysfs(root: &Path) -> Option<Self> {
+        let mut ids: Vec<usize> = Vec::new();
+        for entry in std::fs::read_dir(root).ok()?.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(id) = name.strip_prefix("node").and_then(|s| s.parse().ok()) {
+                ids.push(id);
+            }
+        }
+        ids.sort_unstable();
+        let mut nodes = Vec::with_capacity(ids.len());
+        for id in ids {
+            let list = std::fs::read_to_string(root.join(format!("node{id}/cpulist"))).ok()?;
+            let cpus = parse_cpulist(&list);
+            if cpus.is_empty() {
+                // Memory-only node (no CPUs): nothing to pin to.
+                continue;
+            }
+            nodes.push(cpus);
+        }
+        if nodes.is_empty() { None } else { Some(Topology { nodes }) }
+    }
+}
+
+/// Parse a sysfs cpulist (`"0-3,8-11,15"`) into sorted CPU ids.
+/// Malformed segments are skipped rather than erroring — topology
+/// discovery must degrade, never fail.
+pub fn parse_cpulist(list: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for part in list.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((lo, hi)) = part.split_once('-') {
+            if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>()) {
+                if lo <= hi && hi - lo < 4096 {
+                    cpus.extend(lo..=hi);
+                }
+            }
+        } else if let Ok(cpu) = part.parse::<usize>() {
+            cpus.push(cpu);
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    cpus
+}
+
+/// CPUs the process can schedule on (best effort; ≥ 1).
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// A resolved lane/extractor → CPU-set assignment for one pool.
+///
+/// Slot layout: lanes take slots `0..lanes`, extractor `j` takes slot
+/// `lanes + j` — so under [`Pinning::Cores`] a lane and its extractor
+/// partner land on *different* CPUs (extraction runs concurrently with
+/// execution), while under [`Pinning::Numa`] lane `k` and extractor
+/// `k` share node `k % nnodes`, keeping a block's tile arena, its
+/// extractor and its execute lane on one node.
+#[derive(Clone, Debug)]
+pub struct PinPlan {
+    policy: Pinning,
+    /// Per-node CPU sets (Numa granularity).
+    nodes: Vec<Vec<usize>>,
+    /// Node-interleaved flat CPU list (Cores granularity).
+    flat: Vec<usize>,
+    lanes: usize,
+}
+
+impl PinPlan {
+    /// Build a plan for `lanes` lanes by discovering the live topology.
+    pub fn new(policy: Pinning, lanes: usize) -> Self {
+        Self::with_topology(policy, lanes, &Topology::discover())
+    }
+
+    /// Build a plan over an explicit topology (unit-testable).
+    pub fn with_topology(policy: Pinning, lanes: usize, topo: &Topology) -> Self {
+        // Interleave CPUs across nodes (n0c0, n1c0, n0c1, n1c1, …) so
+        // Cores pinning spreads lanes over the memory controllers
+        // instead of filling node 0 first.
+        let width = topo.nodes.iter().map(Vec::len).max().unwrap_or(0);
+        let mut flat = Vec::new();
+        for i in 0..width {
+            for node in &topo.nodes {
+                if let Some(&cpu) = node.get(i) {
+                    flat.push(cpu);
+                }
+            }
+        }
+        PinPlan { policy, nodes: topo.nodes.clone(), flat, lanes }
+    }
+
+    /// The CPU set for lane `lane`, or `None` when the policy (or the
+    /// topology) calls for no pinning.
+    pub fn lane_cpus(&self, lane: usize) -> Option<&[usize]> {
+        self.slot_cpus(lane)
+    }
+
+    /// The CPU set for extractor slot `j` (partnered after the lanes).
+    pub fn extractor_cpus(&self, j: usize) -> Option<&[usize]> {
+        self.slot_cpus(self.lanes + j)
+    }
+
+    fn slot_cpus(&self, slot: usize) -> Option<&[usize]> {
+        match self.policy {
+            Pinning::None => None,
+            Pinning::Cores => {
+                if self.flat.is_empty() {
+                    return None;
+                }
+                let i = slot % self.flat.len();
+                Some(&self.flat[i..=i])
+            }
+            Pinning::Numa => {
+                // A single node would pin everything to "all CPUs":
+                // pure overhead, no locality — degrade to None.
+                if self.nodes.len() < 2 {
+                    return None;
+                }
+                Some(&self.nodes[slot % self.nodes.len()])
+            }
+        }
+    }
+}
+
+/// Pin the calling thread to `cpus` via `sched_setaffinity`.  Returns
+/// `true` when the kernel accepted the mask.  Supports CPU ids up to
+/// 1023 (ids beyond the mask are dropped; an all-dropped set is a
+/// no-op returning `false`).
+#[cfg(target_os = "linux")]
+pub fn pin_current_thread(cpus: &[usize]) -> bool {
+    const WORDS: usize = 16; // 16 × 64 = 1024 CPUs
+    let mut mask = [0u64; WORDS];
+    let mut any = false;
+    for &cpu in cpus {
+        if cpu < WORDS * 64 {
+            mask[cpu / 64] |= 1u64 << (cpu % 64);
+            any = true;
+        }
+    }
+    if !any {
+        return false;
+    }
+    extern "C" {
+        // pid 0 = the calling thread.  Bound directly: the vendored
+        // dependency set carries no libc crate.
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    // SAFETY: `mask` outlives the call and `cpusetsize` matches its
+    // byte length; sched_setaffinity only reads the mask.
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+/// Non-Linux targets have no sched_setaffinity: pinning is a no-op.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(_cpus: &[usize]) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parses_ranges_singles_and_junk() {
+        assert_eq!(parse_cpulist("0-3,8-11\n"), vec![0, 1, 2, 3, 8, 9, 10, 11]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist(" 2 , 0 , 2 "), vec![0, 2]);
+        assert_eq!(parse_cpulist("7-4"), Vec::<usize>::new(), "inverted range is junk");
+        assert_eq!(parse_cpulist("a-b,x,,3"), vec![3], "malformed segments are skipped");
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn discovery_never_errors_and_has_at_least_one_cpu() {
+        let topo = Topology::discover();
+        assert!(!topo.nodes.is_empty());
+        assert!(topo.nodes.iter().all(|n| !n.is_empty()));
+    }
+
+    fn two_node_topo() -> Topology {
+        Topology { nodes: vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]] }
+    }
+
+    #[test]
+    fn none_policy_pins_nothing() {
+        let plan = PinPlan::with_topology(Pinning::None, 4, &two_node_topo());
+        assert!(plan.lane_cpus(0).is_none());
+        assert!(plan.extractor_cpus(0).is_none());
+    }
+
+    #[test]
+    fn cores_policy_interleaves_single_cpus_across_nodes() {
+        let plan = PinPlan::with_topology(Pinning::Cores, 4, &two_node_topo());
+        // Flat order interleaves nodes: 0,4,1,5,2,6,3,7.
+        assert_eq!(plan.lane_cpus(0), Some(&[0usize][..]));
+        assert_eq!(plan.lane_cpus(1), Some(&[4usize][..]));
+        assert_eq!(plan.lane_cpus(2), Some(&[1usize][..]));
+        assert_eq!(plan.lane_cpus(3), Some(&[5usize][..]));
+        // Extractors continue after the lane slots (slot 4, 5 → 2, 6).
+        assert_eq!(plan.extractor_cpus(0), Some(&[2usize][..]));
+        assert_eq!(plan.extractor_cpus(1), Some(&[6usize][..]));
+        // Oversubscription wraps instead of failing.
+        assert_eq!(plan.extractor_cpus(4), Some(&[0usize][..]));
+    }
+
+    #[test]
+    fn numa_policy_assigns_whole_nodes_round_robin() {
+        let plan = PinPlan::with_topology(Pinning::Numa, 4, &two_node_topo());
+        assert_eq!(plan.lane_cpus(0), Some(&[0usize, 1, 2, 3][..]));
+        assert_eq!(plan.lane_cpus(1), Some(&[4usize, 5, 6, 7][..]));
+        assert_eq!(plan.lane_cpus(2), Some(&[0usize, 1, 2, 3][..]));
+        // Extractor j shares node j % nnodes with lane j.
+        assert_eq!(plan.extractor_cpus(0), plan.lane_cpus(0));
+        assert_eq!(plan.extractor_cpus(1), plan.lane_cpus(1));
+    }
+
+    #[test]
+    fn numa_on_a_single_node_machine_degrades_to_none() {
+        let topo = Topology { nodes: vec![vec![0, 1, 2, 3]] };
+        let plan = PinPlan::with_topology(Pinning::Numa, 4, &topo);
+        assert!(plan.lane_cpus(0).is_none(), "single node ⇒ Pinning::None behaviour");
+        assert!(plan.extractor_cpus(0).is_none());
+    }
+
+    #[test]
+    fn pinning_parses_from_cli_strings() {
+        assert_eq!("none".parse::<Pinning>().unwrap(), Pinning::None);
+        assert_eq!("cores".parse::<Pinning>().unwrap(), Pinning::Cores);
+        assert_eq!("numa".parse::<Pinning>().unwrap(), Pinning::Numa);
+        assert!("both".parse::<Pinning>().is_err());
+    }
+
+    #[test]
+    fn pin_current_thread_handles_empty_and_oversized_sets() {
+        assert!(!pin_current_thread(&[]), "empty set is a no-op");
+        assert!(!pin_current_thread(&[100_000]), "out-of-mask ids drop to a no-op");
+    }
+}

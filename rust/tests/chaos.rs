@@ -22,14 +22,23 @@ use std::sync::Arc;
 use fpga_hpc::coordinator::grid::Grid2D;
 use fpga_hpc::coordinator::passdriver::FaultPlan;
 use fpga_hpc::coordinator::session::{Session, Workload, WorkloadStatus};
-use fpga_hpc::runtime::FaultKind;
+use fpga_hpc::runtime::{FaultKind, Pinning};
 use fpga_hpc::testutil::Rng;
 
 /// Owning session over a fresh pool with `lanes` execute lanes.
+///
+/// `FPGA_HPC_PIN=none|cores|numa` pins the lanes — CI runs the whole
+/// chaos suite a second time under `cores` so fault-driven lane
+/// respawns exercise the re-pin path.
 fn session(lanes: usize) -> Session<'static> {
+    let pin: Pinning = std::env::var("FPGA_HPC_PIN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(Pinning::None);
     Session::builder()
         .artifacts("artifacts")
         .lanes(lanes)
+        .pinning(pin)
         .build()
         .expect("artifacts missing — run `make artifacts`")
 }

@@ -14,9 +14,9 @@
 //! reproduce it bit for bit.
 
 use fpga_hpc::coordinator::grid::{Grid2D, Grid3D};
-use fpga_hpc::coordinator::session::{GridInput, Session, Workload, WorkloadOutput};
+use fpga_hpc::coordinator::session::{Chain, GridInput, Session, Workload, WorkloadOutput};
 use fpga_hpc::coordinator::{reference, PassMode};
-use fpga_hpc::runtime::{Runtime, RuntimePool, Tensor};
+use fpga_hpc::runtime::{Pinning, PoolConfig, Runtime, RuntimePool, Tensor};
 use fpga_hpc::testutil::{assert_allclose, max_abs_diff, Rng};
 
 fn runtime() -> Runtime {
@@ -900,6 +900,193 @@ fn session_rejects_upstream_without_producer() {
         Workload::pathfinder(vec![vec![0; 64]; 9]).then(Workload::srad(GridInput::Upstream, 1)),
     );
     assert!(r.is_err(), "piping from a grid-less producer must be rejected");
+}
+
+// ---------------------------------------------------------------------------
+// Locality-aware scheduling (PR 7): sharded queues, affinity, pinning
+// ---------------------------------------------------------------------------
+
+/// Pool with an explicit scheduler engine: `sharded: false` is the
+/// literal pre-PR 7 global-FIFO engine, kept as the identity baseline.
+fn pool_with(lanes: usize, sharded: bool) -> RuntimePool {
+    RuntimePool::open_with(
+        "artifacts",
+        PoolConfig { lanes, pinning: Pinning::None, sharded },
+    )
+    .expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn sharded_scheduler_matches_global_queue_bitwise() {
+    // Acceptance: for every workload shape — both stencils, all four
+    // Ch. 4 apps, and a piped heterogeneous chain — the sharded
+    // work-stealing scheduler must reproduce the global-queue engine
+    // bit for bit at lanes 1, 2 and 4 under both schedules.  Stealing
+    // and affinity only move *where* a block runs, never its inputs.
+    let temp = rand_grid2d(256, 256, 211, 60.0, 90.0);
+    let power = rand_grid2d(256, 256, 212, 0.0, 1.0);
+    let g3 = rand_grid3d(32, 32, 32, 213, 0.0, 1.0);
+    let mut rng = Rng::new(214);
+    let wall: Vec<Vec<i32>> = (0..17).map(|_| rng.vec_i32(5_000, 0, 10)).collect();
+    let refm: Vec<Vec<i32>> = (0..=128).map(|_| rng.vec_i32(129, -5, 15)).collect();
+    let img = rand_grid2d(256, 256, 215, 0.5, 2.0);
+    let a: Vec<Vec<f32>> = (0..128)
+        .map(|i| {
+            (0..128)
+                .map(|j| rng.f32_in(-1.0, 1.0) + if i == j { 128.0 } else { 0.0 })
+                .collect()
+        })
+        .collect();
+
+    let cases: Vec<(&str, Box<dyn Fn() -> Chain>)> = vec![
+        ("hotspot2d", {
+            let (t, p) = (temp.clone(), power.clone());
+            Box::new(move || Workload::stencil2d("hotspot2d", t.clone(), Some(p.clone()), 8).into())
+        }),
+        ("diffusion3d", {
+            let g = g3.clone();
+            Box::new(move || Workload::stencil3d("diffusion3d_r1", g.clone(), None, 4).into())
+        }),
+        ("pathfinder", {
+            let w = wall.clone();
+            Box::new(move || Workload::pathfinder(w.clone()).into())
+        }),
+        ("nw", {
+            let r = refm.clone();
+            Box::new(move || Workload::nw(r.clone(), 10).into())
+        }),
+        ("srad", {
+            let i = img.clone();
+            Box::new(move || Workload::srad(i.clone(), 2).into())
+        }),
+        ("lud", {
+            let m = a.clone();
+            Box::new(move || Workload::lud(m.clone()).into())
+        }),
+        ("srad->stencil2d", {
+            let i = img.clone();
+            Box::new(move || {
+                Workload::srad(i.clone(), 2).then(Workload::stencil2d(
+                    "diffusion2d_r1",
+                    GridInput::Upstream,
+                    None,
+                    8,
+                ))
+            })
+        }),
+    ];
+
+    for lanes in [1usize, 2, 4] {
+        let global = pool_with(lanes, false);
+        let sharded = pool_with(lanes, true);
+        for (name, mk) in &cases {
+            for mode in [PassMode::Barrier, PassMode::Pipelined] {
+                let rg = Session::over(&global).with_mode(mode).run(mk()).unwrap();
+                let rs = Session::over(&sharded).with_mode(mode).run(mk()).unwrap();
+                assert!(rg.ok() && rs.ok(), "{name} lanes={lanes} {mode:?}: runs must be clean");
+                assert_eq!(
+                    rg.metrics.blocks, rs.metrics.blocks,
+                    "{name} lanes={lanes} {mode:?}: block counts differ"
+                );
+                // The global engine must not count scheduler locality:
+                // its zero rows are what the bench baseline relies on.
+                assert_eq!(
+                    rg.metrics.local_pops + rg.metrics.queue_steals
+                        + rg.metrics.affinity_hits + rg.metrics.affinity_misses,
+                    0,
+                    "{name} lanes={lanes} {mode:?}: global engine counted sharded-scheduler events"
+                );
+                assert_eq!(
+                    rg.outputs, rs.outputs,
+                    "{name} lanes={lanes} {mode:?}: sharded output != global-queue output"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_lanes_pop_mostly_local() {
+    // Acceptance: with blocks affinity-hashed evenly across 4 lanes,
+    // a lane finds its next job in its own shard almost always —
+    // stealing is the exception that keeps lanes busy at wave tails,
+    // not the steady state.
+    let grid = rand_grid2d(1024, 1024, 221, 0.0, 1.0);
+    let r = session(4)
+        .run(Workload::stencil2d("diffusion2d_r1", grid.clone(), None, 16))
+        .unwrap();
+    let m = &r.metrics;
+    assert!(m.local_pops > 0, "sharded session must count local pops");
+    assert!(
+        m.local_pops > m.queue_steals,
+        "locality inverted: {} local pops vs {} steals",
+        m.local_pops,
+        m.queue_steals
+    );
+    assert!(m.affinity_hits > 0, "hinted blocks must land on their lane");
+
+    // A lanes=1 session has one shard: nothing to localize or steal,
+    // so every scheduler counter stays zero (same as the old engine).
+    let r1 = session(1)
+        .run(Workload::stencil2d("diffusion2d_r1", grid, None, 16))
+        .unwrap();
+    let m1 = &r1.metrics;
+    assert_eq!(
+        m1.local_pops + m1.queue_steals + m1.affinity_hits + m1.affinity_misses,
+        0,
+        "single-lane runs must not count sharded-scheduler events"
+    );
+}
+
+#[test]
+fn pinned_sessions_run_and_degrade_gracefully() {
+    // Acceptance: pinning never changes results, and asking for more
+    // pinned lanes than cores clamps instead of failing.  Numa on a
+    // single-node machine (most CI) degrades to no-op pinning — the
+    // run must still be clean and bit-identical.
+    let grid = rand_grid2d(256, 256, 231, 0.0, 1.0);
+    let want = session(1)
+        .run(Workload::stencil2d("diffusion2d_r1", grid.clone(), None, 8))
+        .unwrap()
+        .into_output()
+        .into_grid2d()
+        .unwrap();
+    for pin in [Pinning::Cores, Pinning::Numa] {
+        let s = Session::builder()
+            .artifacts("artifacts")
+            .lanes(2)
+            .pinning(pin)
+            .build()
+            .unwrap();
+        let r = s
+            .run(Workload::stencil2d("diffusion2d_r1", grid.clone(), None, 8))
+            .unwrap();
+        assert!(r.ok(), "{pin:?}: pinned run must be clean");
+        if pin == Pinning::Cores {
+            assert!(
+                r.metrics.pins_applied > 0,
+                "Cores pinning must pin the extractor partners during the drive"
+            );
+        }
+        let got = r.into_output().into_grid2d().unwrap();
+        assert_eq!(got.data, want.data, "{pin:?}: pinned run differs from unpinned");
+    }
+
+    // Oversubscribed pinned request: clamped to the machine, still runs.
+    let s = Session::builder()
+        .artifacts("artifacts")
+        .lanes(10_000)
+        .pinning(Pinning::Cores)
+        .build()
+        .unwrap();
+    assert!(
+        s.lanes() <= fpga_hpc::runtime::topology::available_cores().max(1),
+        "pinned lanes must clamp to the available cores"
+    );
+    let r = s
+        .run(Workload::stencil2d("diffusion2d_r1", grid, None, 8))
+        .unwrap();
+    assert!(r.ok(), "clamped session must still run cleanly");
 }
 
 #[test]
