@@ -61,6 +61,14 @@ pub struct Metrics {
     /// Pooled buffers dropped by the per-bucket high-water mark instead
     /// of being retained (arena-growth bound).
     pub pool_evictions: u64,
+    /// Replay rounds launched by the wave driver: after a terminal
+    /// block fault, the cancelled dependency cone is re-armed and
+    /// re-driven under the run's `ReplayPolicy` instead of being
+    /// reported as partial output.  0 on every fault-free run.
+    pub cone_replays: u64,
+    /// Total blocks re-driven across all replay rounds (failed blocks
+    /// plus their cancelled cones).
+    pub replay_blocks: u64,
 }
 
 impl Metrics {
@@ -133,6 +141,8 @@ impl Metrics {
             affinity_misses,
             pins_applied,
             pool_evictions,
+            cone_replays,
+            replay_blocks,
         } = other;
         self.blocks += blocks;
         self.cell_updates += cell_updates;
@@ -155,6 +165,8 @@ impl Metrics {
         self.affinity_misses += affinity_misses;
         self.pins_applied += pins_applied;
         self.pool_evictions += pool_evictions;
+        self.cone_replays += cone_replays;
+        self.replay_blocks += replay_blocks;
     }
 
     pub fn summary(&self) -> String {
@@ -174,6 +186,14 @@ impl Metrics {
         } else {
             String::new()
         };
+        let replays = if self.cone_replays > 0 {
+            format!(
+                " cone-replays={} replay-blocks={}",
+                self.cone_replays, self.replay_blocks
+            )
+        } else {
+            String::new()
+        };
         let locality = if self.local_pops + self.queue_steals > 0 {
             format!(
                 " local-pops={} steals={} affinity={}/{}",
@@ -186,7 +206,7 @@ impl Metrics {
             String::new()
         };
         format!(
-            "blocks={} updates={} wall={:.3}s (marshal {:.1}% execute {:.1}% writeback {:.1}%) buf-reuse {:.0}%{wave}{faults}{locality} {:.3} GCell/s",
+            "blocks={} updates={} wall={:.3}s (marshal {:.1}% execute {:.1}% writeback {:.1}%) buf-reuse {:.0}%{wave}{faults}{replays}{locality} {:.3} GCell/s",
             self.blocks,
             self.cell_updates,
             self.wall.as_secs_f64(),
@@ -256,6 +276,8 @@ mod tests {
             affinity_misses: 2,
             pins_applied: 4,
             pool_evictions: 6,
+            cone_replays: 2,
+            replay_blocks: 9,
             ..Default::default()
         };
         a.merge(&b);
@@ -274,6 +296,8 @@ mod tests {
         assert_eq!(a.affinity_misses, 2);
         assert_eq!(a.pins_applied, 4);
         assert_eq!(a.pool_evictions, 6);
+        assert_eq!(a.cone_replays, 2);
+        assert_eq!(a.replay_blocks, 9);
     }
 
     #[test]
@@ -297,6 +321,14 @@ mod tests {
         assert!(!clean.summary().contains("retries="));
         let faulty = Metrics { blocks: 1, job_retries: 2, ..Default::default() };
         assert!(faulty.summary().contains("retries=2 failed=0 lane-restarts=0"));
+        assert!(!faulty.summary().contains("cone-replays="));
+        let replayed = Metrics {
+            blocks: 1,
+            cone_replays: 1,
+            replay_blocks: 4,
+            ..Default::default()
+        };
+        assert!(replayed.summary().contains("cone-replays=1 replay-blocks=4"));
     }
 
     #[test]

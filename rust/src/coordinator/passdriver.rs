@@ -93,7 +93,7 @@
 //! `cfg(any(test, feature = "chaos"))` a deterministic [`FaultPlan`]
 //! can inject faults keyed by `(wave, block, attempt)`.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, PoisonError};
@@ -737,6 +737,76 @@ impl WaveTable {
         cancelled
     }
 
+    /// Re-arm a cancelled dependency cone for a replay round: reset
+    /// every member's counter from the [`CANCELLED`] sentinel (or a
+    /// failed block's stuck count) to the number of predecessors it has
+    /// *inside the member set*, and return the members whose re-armed
+    /// count is zero — the replay round's ready seeds (exactly the
+    /// terminally failed blocks: every other cone member retains an
+    /// in-set predecessor on its path from a failed block).
+    ///
+    /// `members` must be the union of the round's failed blocks and
+    /// their cancelled cones, with no duplicates.  Counting only in-set
+    /// predecessors is what makes the re-arm sound: every out-of-set
+    /// predecessor already completed (that is how the failed block got
+    /// dispatched), so it will never decrement again — and every
+    /// successor of a member is itself a member (successors of a failed
+    /// block form its cone; cones are successor-closed), so replay
+    /// completions never decrement a finished block's counter either.
+    /// Under `Barrier` mode the same rule counts members in strictly
+    /// earlier waves (all faults of a barrier round sit in one wave —
+    /// a later wave cannot start until the earlier one fully completes
+    /// — so the earliest members are exactly the failed blocks).
+    ///
+    /// The snapshot the replay resumes from is the grid itself: a cone
+    /// member never ran, and any block that would overwrite a cell a
+    /// member reads transitively depends on that member (write-after-
+    /// read edges are dependency edges in every lowering), so it sits
+    /// in the cone too and never ran.  The members' inputs are still
+    /// exactly what they would have been on the first attempt.
+    ///
+    /// Called between rounds, after the pool has drained — no block is
+    /// in flight, so plain stores are race-free.
+    pub fn rearm(&self, members: &[(usize, usize)]) -> Vec<(usize, usize)> {
+        if self.barrier {
+            let waves = self.offsets.len() - 1;
+            let mut per_wave = vec![0u32; waves];
+            for &(w, _) in members {
+                per_wave[w] += 1;
+            }
+            // earlier[w] = members in waves 0..w — the member-scoped
+            // analogue of the full-graph `offsets[w]` seed count.
+            let mut earlier = vec![0u32; waves];
+            let mut acc = 0u32;
+            for w in 0..waves {
+                earlier[w] = acc;
+                acc += per_wave[w];
+            }
+            for &(w, i) in members {
+                self.remaining[self.offsets[w] + i].store(earlier[w], Ordering::Relaxed);
+            }
+        } else {
+            let ids: HashSet<usize> = members.iter().map(|&(w, i)| self.offsets[w] + i).collect();
+            for &id in &ids {
+                self.remaining[id].store(0, Ordering::Relaxed);
+            }
+            for &id in &ids {
+                for &s in &self.succs[self.succ_off[id]..self.succ_off[id + 1]] {
+                    if ids.contains(&(s as usize)) {
+                        self.remaining[s as usize].fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        let mut seeds: Vec<(usize, usize)> = members
+            .iter()
+            .copied()
+            .filter(|&(w, i)| self.remaining[self.offsets[w] + i].load(Ordering::Relaxed) == 0)
+            .collect();
+        seeds.sort_unstable();
+        seeds
+    }
+
     /// Record the completion (write-back done) of block `(w, i)`;
     /// appends every block this makes runnable to `ready`.
     pub fn complete(&self, w: usize, i: usize, ready: &mut Vec<(usize, usize)>) {
@@ -1077,8 +1147,57 @@ pub struct BlockFault {
     pub wave: usize,
     pub index: usize,
     pub kind: FaultKind,
+    /// Execution attempts made on the block (1 + in-place retries).
+    /// When the run replayed the block's cone, attempts accumulate
+    /// across every round — six for a block that spent a 3-attempt
+    /// retry budget twice.
     pub attempts: u32,
     pub message: String,
+}
+
+/// Cone-replay budget for a pooled wave run: after the in-place
+/// [`RetryPolicy`] is spent, a terminally failed block's cancelled
+/// dependency cone may be re-armed ([`WaveTable::rearm`]) and
+/// re-driven up to `attempts` more rounds instead of surfacing partial
+/// output.  Backoff-free and clock-free — with a deterministic
+/// [`FaultPlan`] the whole fail/replay schedule reproduces exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplayPolicy {
+    /// Replay rounds allowed per drive (0 = report the first terminal
+    /// faults as-is — the pre-replay behaviour, and what the raw
+    /// [`drive_wave_pool`] entry point uses).
+    pub attempts: u32,
+}
+
+impl Default for ReplayPolicy {
+    /// One replay round.
+    fn default() -> Self {
+        ReplayPolicy { attempts: 1 }
+    }
+}
+
+impl ReplayPolicy {
+    /// No replay: terminal faults cancel their cones and the run
+    /// reports them.
+    pub fn none() -> Self {
+        ReplayPolicy { attempts: 0 }
+    }
+
+    /// Replay up to `attempts` rounds.
+    pub fn with_attempts(attempts: u32) -> Self {
+        ReplayPolicy { attempts }
+    }
+}
+
+/// One *healed* block fault: the block failed terminally, its cone was
+/// re-armed under the run's [`ReplayPolicy`], and a later round ran it
+/// to completion — the output it feeds is whole, not partial.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConeReplay {
+    pub wave: usize,
+    pub index: usize,
+    /// Replay rounds this block consumed before completing (≥ 1).
+    pub rounds: u32,
 }
 
 /// Result of a pooled wave run.  `Ok(WaveOutcome)` means the run
@@ -1089,11 +1208,17 @@ pub struct BlockFault {
 /// ran to completion.
 pub struct WaveOutcome {
     pub metrics: Metrics,
-    /// Terminally failed blocks, in completion order.
+    /// Terminally failed blocks *after* the replay budget: a fault that
+    /// a replay round healed moves to `replays` instead.  In completion
+    /// order of the final round.
     pub faults: Vec<BlockFault>,
-    /// Blocks cancelled as transitive successors of a failed block
-    /// (the failed blocks themselves are in `faults`, not here).
+    /// Blocks still cancelled after the replay budget, as transitive
+    /// successors of a block in `faults` (the failed blocks themselves
+    /// are in `faults`, not here).
     pub cancelled: Vec<(usize, usize)>,
+    /// Faults healed by cone replay ([`ReplayPolicy`]); empty when the
+    /// run was fault-free or replay was off.
+    pub replays: Vec<ConeReplay>,
 }
 
 /// Deterministic fault-injection plan for the chaos harness: faults
@@ -1165,27 +1290,72 @@ pub(crate) type Injection = ();
 ///
 /// Failure is scoped, not global: a terminally failed block cancels
 /// exactly its dependency cone ([`WaveTable::cancel`]) and the rest of
-/// the run keeps flowing; see [`WaveOutcome`].
+/// the run keeps flowing; see [`WaveOutcome`].  This raw entry point
+/// does not replay cancelled cones ([`ReplayPolicy::none`]); use
+/// [`drive_wave_pool_replay`] (or the session layer, which replays by
+/// default) for checkpoint/replay semantics.
 pub fn drive_wave_pool<S: WaveSpace + 'static>(
     pool: &RuntimePool,
     space: &Arc<S>,
     mode: PassMode,
     extractors: usize,
 ) -> crate::Result<WaveOutcome> {
-    drive_wave_pool_inner(pool, space, mode, extractors, Default::default())
+    drive_wave_pool_inner(pool, space, mode, extractors, ReplayPolicy::none(), Default::default())
 }
 
-/// [`drive_wave_pool`] with a deterministic [`FaultPlan`] — the chaos
-/// harness entry point (test/chaos builds only).
+/// [`drive_wave_pool`] with cone checkpoint/replay: when a block fails
+/// terminally mid-wave, the round drains, the failed block's cancelled
+/// cone is re-armed ([`WaveTable::rearm`]) under a fresh pool epoch,
+/// and just that cone is re-driven — up to `replay.attempts` rounds —
+/// so a partial failure costs a latency blip instead of the run.
+pub fn drive_wave_pool_replay<S: WaveSpace + 'static>(
+    pool: &RuntimePool,
+    space: &Arc<S>,
+    mode: PassMode,
+    extractors: usize,
+    replay: ReplayPolicy,
+) -> crate::Result<WaveOutcome> {
+    drive_wave_pool_inner(pool, space, mode, extractors, replay, Default::default())
+}
+
+/// [`drive_wave_pool_replay`] with a deterministic [`FaultPlan`] — the
+/// chaos harness entry point (test/chaos builds only).  Plan keys are
+/// cumulative across replay rounds: an injection at attempt 4 fires on
+/// the first attempt of the second round when the retry budget is 3.
 #[cfg(any(test, feature = "chaos"))]
 pub fn drive_wave_pool_chaos<S: WaveSpace + 'static>(
     pool: &RuntimePool,
     space: &Arc<S>,
     mode: PassMode,
     extractors: usize,
+    replay: ReplayPolicy,
     plan: Arc<FaultPlan>,
 ) -> crate::Result<WaveOutcome> {
-    drive_wave_pool_inner(pool, space, mode, extractors, Some(plan))
+    drive_wave_pool_inner(pool, space, mode, extractors, replay, Some(plan))
+}
+
+/// Shared trackers one pooled drive hands to each of its replay
+/// rounds (see [`drive_round`]).
+struct RoundCtx {
+    table: Arc<WaveTable>,
+    depth: Arc<DepthTracker>,
+    faults: Arc<Mutex<Vec<BlockFault>>>,
+    cancelled: Arc<Mutex<Vec<(usize, usize)>>>,
+    done_blocks: Arc<AtomicU64>,
+    cells: Arc<AtomicU64>,
+    wb_nanos: Arc<AtomicU64>,
+    /// Mirrors the pool's submission epoch on the callback side: a
+    /// straggling completion from an abandoned round (whose body the
+    /// pool's epoch fence already kept from running) must not cancel
+    /// into — or advance — the re-armed table, so every completion
+    /// callback checks its round is still current before touching
+    /// shared state.
+    round_tag: Arc<AtomicU64>,
+    /// Cumulative chaos-attempt floor per block: [`FaultPlan`] keys
+    /// stay cumulative across replay rounds, so "fail attempts 1..=3,
+    /// succeed at 4" spans a replay boundary.
+    #[cfg(any(test, feature = "chaos"))]
+    attempt_base: Arc<Mutex<HashMap<(usize, usize), u32>>>,
 }
 
 pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
@@ -1193,147 +1363,292 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
     space: &Arc<S>,
     mode: PassMode,
     extractors: usize,
+    replay: ReplayPolicy,
     _inject: Injection,
 ) -> crate::Result<WaveOutcome> {
     let stats0 = pool.stats();
     let counters0 = pool.fault_counters();
     let sched0 = pool.sched_counters();
-    let lanes = pool.lanes();
     let wall = Instant::now();
     let table = Arc::new(WaveTable::new(space.as_ref(), mode));
     let total = table.total();
-    let done_blocks = Arc::new(AtomicU64::new(0));
-    let cells = Arc::new(AtomicU64::new(0));
-    let wb_nanos = Arc::new(AtomicU64::new(0));
-    let depth = Arc::new(DepthTracker::new(space.as_ref()));
-    let faults: Arc<Mutex<Vec<BlockFault>>> = Arc::new(Mutex::new(Vec::new()));
-    let cancelled: Arc<Mutex<Vec<(usize, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+    let ctx = RoundCtx {
+        table: Arc::clone(&table),
+        depth: Arc::new(DepthTracker::new(space.as_ref())),
+        faults: Arc::new(Mutex::new(Vec::new())),
+        cancelled: Arc::new(Mutex::new(Vec::new())),
+        done_blocks: Arc::new(AtomicU64::new(0)),
+        cells: Arc::new(AtomicU64::new(0)),
+        wb_nanos: Arc::new(AtomicU64::new(0)),
+        round_tag: Arc::new(AtomicU64::new(0)),
+        #[cfg(any(test, feature = "chaos"))]
+        attempt_base: Arc::new(Mutex::new(HashMap::new())),
+    };
+
+    let mut replays: Vec<ConeReplay> = Vec::new();
+    let mut cone_replays = 0u64;
+    let mut replay_blocks = 0u64;
+    let mut faults: Vec<BlockFault> = Vec::new();
+    let mut cancelled: Vec<(usize, usize)> = Vec::new();
 
     if total > 0 {
-        let queue = Arc::new(ReadyQueue::new(total, table.seed()));
-        let extractors = extractors.clamp(1, total);
+        // Cumulative execution attempts and failed-round counts per
+        // block (fault reporting and [`ConeReplay::rounds`]).
+        let mut attempts_spent: HashMap<(usize, usize), u32> = HashMap::new();
+        let mut failed_rounds: HashMap<(usize, usize), u32> = HashMap::new();
+        let mut pending: Vec<BlockFault> = Vec::new();
+        let mut seeds = table.seed();
+        let mut target = total;
+        let mut round: u64 = 0;
+        loop {
+            // Fresh pool epoch per round: a submission still queued
+            // from an earlier round completes Skipped without running.
+            let epoch = pool.advance_epoch();
+            let batch = std::mem::take(&mut seeds);
+            drive_round(pool, space, &ctx, batch, target, extractors, round, epoch, &_inject)?;
 
-        // SAFETY-relevant: jobs reach the caller's buffers through raw
-        // handles inside the space; the IdleGuard drains the lanes
-        // before those buffers can be freed, even on an unwinding exit.
-        let guard = IdleGuard::new(pool);
-        std::thread::scope(|sc| {
-            for ex in 0..extractors {
-                // Move clones of the shared trackers into each
-                // extractor (the closure must own them: `ex` forces a
-                // `move` capture); `space` and `pool` are Copy borrows
-                // that outlive the scope.
-                let queue = Arc::clone(&queue);
-                let depth = Arc::clone(&depth);
-                let table = Arc::clone(&table);
-                let faults = Arc::clone(&faults);
-                let cancelled = Arc::clone(&cancelled);
-                let done_blocks = Arc::clone(&done_blocks);
-                let cells = Arc::clone(&cells);
-                let wb_nanos = Arc::clone(&wb_nanos);
-                let _inject = _inject.clone();
-                sc.spawn(move || {
-                    // Under Pinning::{Cores,Numa} each extractor sits on
-                    // the node of the lanes it mostly feeds, so a
-                    // pool-miss allocation first-touches pages on the
-                    // right node.  No-op (false) when unpinned.
-                    pool.pin_extractor(ex);
-                    while let Some((w, i)) = queue.pop() {
-                        depth.dispatched(w);
-                        // Sticky block→lane affinity: the same key
-                        // every pass, so a block's tile cycles through
-                        // one lane's cache (and pool shard).
-                        let hint = lane_of(space.affinity(w, i), lanes);
-                        // Catch extraction panics here and scope them
-                        // like a failed job: cancel the block's cone,
-                        // keep everything else running.
-                        let extracted = catch_unwind(AssertUnwindSafe(|| {
-                            // SAFETY: dependency order via the ready
-                            // queue — predecessors have written back.
-                            unsafe { space.extract_sharded(hint, w, i) }
-                        }));
-                        let inputs = match extracted {
-                            Ok(inputs) => inputs,
-                            Err(p) => {
-                                let cone = table.cancel(w, i);
-                                queue.cancel(cone.len());
-                                lock(&faults).push(BlockFault {
-                                    wave: w,
-                                    index: i,
-                                    kind: FaultKind::Panic,
-                                    attempts: 1,
-                                    message: format!(
-                                        "wave extractor panicked: {}",
-                                        panic_text(p.as_ref())
-                                    ),
-                                });
-                                lock(&cancelled).extend(cone);
-                                continue;
+            let round_faults = std::mem::take(&mut *lock(&ctx.faults));
+            let round_cancelled = std::mem::take(&mut *lock(&ctx.cancelled));
+            for f in &round_faults {
+                *attempts_spent.entry((f.wave, f.index)).or_insert(0) += f.attempts;
+                *failed_rounds.entry((f.wave, f.index)).or_insert(0) += 1;
+            }
+            // A block that failed last round but not this one healed:
+            // the replay ran it (and its cone) to completion.
+            for f in &pending {
+                let k = (f.wave, f.index);
+                if !round_faults.iter().any(|g| (g.wave, g.index) == k) {
+                    replays.push(ConeReplay {
+                        wave: f.wave,
+                        index: f.index,
+                        rounds: failed_rounds.get(&k).copied().unwrap_or(1),
+                    });
+                }
+            }
+            if round_faults.is_empty() {
+                break; // clean round — nothing left to replay
+            }
+            if round >= u64::from(replay.attempts) {
+                // Replay budget spent: surface the terminal state, with
+                // attempts accumulated across every round.
+                faults = round_faults;
+                for f in &mut faults {
+                    f.attempts = attempts_spent[&(f.wave, f.index)];
+                }
+                cancelled = round_cancelled;
+                break;
+            }
+            // Checkpoint/replay: the failed blocks plus their cancelled
+            // cones re-arm in place (their inputs are untouched — any
+            // block that could overwrite a cell they read sits in the
+            // same cone and never ran) and only that set re-drives.
+            let mut members: Vec<(usize, usize)> =
+                round_faults.iter().map(|f| (f.wave, f.index)).collect();
+            members.extend(round_cancelled.iter().copied());
+            seeds = table.rearm(&members);
+            target = members.len();
+            cone_replays += 1;
+            replay_blocks += members.len() as u64;
+            pending = round_faults;
+            round += 1;
+        }
+    }
+
+    let stats = pool.stats();
+    let counters = pool.fault_counters();
+    let sched = pool.sched_counters();
+    let (pool_hits, pool_misses, desc_pool_hits, desc_pool_misses) = space.pool_counters();
+    let (depth_max, overlap) = ctx.depth.finish();
+    let metrics = Metrics {
+        blocks: ctx.done_blocks.load(Ordering::Relaxed),
+        cell_updates: ctx.cells.load(Ordering::Relaxed),
+        extract: Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms).max(0.0) / 1e3),
+        execute: Duration::from_secs_f64((stats.execute_ms - stats0.execute_ms).max(0.0) / 1e3),
+        writeback: Duration::from_nanos(ctx.wb_nanos.load(Ordering::Relaxed)),
+        wall: wall.elapsed(),
+        pool_hits,
+        pool_misses,
+        desc_pool_hits,
+        desc_pool_misses,
+        pipeline_depth_max: depth_max,
+        overlap_starts: overlap,
+        job_retries: counters.job_retries - counters0.job_retries,
+        jobs_failed: counters.jobs_failed - counters0.jobs_failed,
+        lane_restarts: counters.lane_restarts - counters0.lane_restarts,
+        local_pops: sched.local_pops - sched0.local_pops,
+        queue_steals: sched.queue_steals - sched0.queue_steals,
+        affinity_hits: sched.affinity_hits - sched0.affinity_hits,
+        affinity_misses: sched.affinity_misses - sched0.affinity_misses,
+        pins_applied: sched.pins_applied - sched0.pins_applied,
+        pool_evictions: space.pool_evictions(),
+        cone_replays,
+        replay_blocks,
+    };
+    Ok(WaveOutcome { metrics, faults, cancelled, replays })
+}
+
+/// Drive one replay round: feed the `seeds` frontier (a batch of
+/// `target` blocks) through the pool under submission `epoch`, and
+/// drain the lanes completely before returning.  Faults and
+/// cancellations land in the `ctx` vectors; the caller harvests them
+/// to decide whether — and what — to replay.
+#[allow(clippy::too_many_arguments)]
+fn drive_round<S: WaveSpace + 'static>(
+    pool: &RuntimePool,
+    space: &Arc<S>,
+    ctx: &RoundCtx,
+    seeds: Vec<(usize, usize)>,
+    target: usize,
+    extractors: usize,
+    round: u64,
+    epoch: u64,
+    _inject: &Injection,
+) -> crate::Result<()> {
+    let lanes = pool.lanes();
+    let queue = Arc::new(ReadyQueue::new(target, seeds));
+    let workers = extractors.clamp(1, target);
+    ctx.round_tag.store(round, Ordering::Release);
+
+    // SAFETY-relevant: jobs reach the caller's buffers through raw
+    // handles inside the space; the IdleGuard drains the lanes
+    // before those buffers can be freed, even on an unwinding exit.
+    let guard = IdleGuard::new(pool);
+    std::thread::scope(|sc| {
+        for ex in 0..workers {
+            // Move clones of the shared trackers into each
+            // extractor (the closure must own them: `ex` forces a
+            // `move` capture); `space` and `pool` are Copy borrows
+            // that outlive the scope.
+            let queue = Arc::clone(&queue);
+            let depth = Arc::clone(&ctx.depth);
+            let table = Arc::clone(&ctx.table);
+            let faults = Arc::clone(&ctx.faults);
+            let cancelled = Arc::clone(&ctx.cancelled);
+            let done_blocks = Arc::clone(&ctx.done_blocks);
+            let cells = Arc::clone(&ctx.cells);
+            let wb_nanos = Arc::clone(&ctx.wb_nanos);
+            let round_tag = Arc::clone(&ctx.round_tag);
+            let _inject = _inject.clone();
+            #[cfg(any(test, feature = "chaos"))]
+            let attempt_base = Arc::clone(&ctx.attempt_base);
+            sc.spawn(move || {
+                // Under Pinning::{Cores,Numa} each extractor sits on
+                // the node of the lanes it mostly feeds, so a
+                // pool-miss allocation first-touches pages on the
+                // right node.  No-op (false) when unpinned.
+                pool.pin_extractor(ex);
+                while let Some((w, i)) = queue.pop() {
+                    depth.dispatched(w);
+                    // Sticky block→lane affinity: the same key
+                    // every pass, so a block's tile cycles through
+                    // one lane's cache (and pool shard).
+                    let hint = lane_of(space.affinity(w, i), lanes);
+                    // Catch extraction panics here and scope them
+                    // like a failed job: cancel the block's cone,
+                    // keep everything else running.
+                    let extracted = catch_unwind(AssertUnwindSafe(|| {
+                        // SAFETY: dependency order via the ready
+                        // queue — predecessors have written back.
+                        unsafe { space.extract_sharded(hint, w, i) }
+                    }));
+                    let inputs = match extracted {
+                        Ok(inputs) => inputs,
+                        Err(p) => {
+                            let cone = table.cancel(w, i);
+                            queue.cancel(cone.len());
+                            lock(&faults).push(BlockFault {
+                                wave: w,
+                                index: i,
+                                kind: FaultKind::Panic,
+                                attempts: 1,
+                                message: format!(
+                                    "wave extractor panicked: {}",
+                                    panic_text(p.as_ref())
+                                ),
+                            });
+                            lock(&cancelled).extend(cone);
+                            continue;
+                        }
+                    };
+                    let artifact = space.artifact(w, i);
+                    let fast_f32 = space.wants_f32(w, i);
+                    let space_j = space.clone();
+                    let done_j = done_blocks.clone();
+                    let cells_j = cells.clone();
+                    let wb_j = wb_nanos.clone();
+                    let table_j = table.clone();
+                    let queue_j = queue.clone();
+                    let depth_j = depth.clone();
+                    let faults_j = faults.clone();
+                    let cancelled_j = cancelled.clone();
+                    let tag_j = round_tag.clone();
+                    // FnMut so the lane can re-run the body on a
+                    // Transient fault: the inputs stay parked in
+                    // the Option until an attempt succeeds.
+                    let mut inputs = Some(inputs);
+                    #[cfg(any(test, feature = "chaos"))]
+                    let plan_j = _inject.clone();
+                    #[cfg(any(test, feature = "chaos"))]
+                    let base_j = attempt_base.clone();
+                    // Resume the chaos-attempt counter past every
+                    // attempt this block burned in earlier rounds.
+                    #[cfg(any(test, feature = "chaos"))]
+                    let mut chaos_attempt: u32 =
+                        lock(&attempt_base).get(&(w, i)).copied().unwrap_or(0);
+                    pool.submit_tracked_scoped(
+                        Some(hint),
+                        epoch,
+                        move |_lane, rt| {
+                            #[cfg(any(test, feature = "chaos"))]
+                            {
+                                chaos_attempt += 1;
+                                if let Some(plan) = plan_j.as_ref() {
+                                    plan.fire(w, i, chaos_attempt)?;
+                                }
                             }
-                        };
-                        let artifact = space.artifact(w, i);
-                        let fast_f32 = space.wants_f32(w, i);
-                        let space_j = space.clone();
-                        let done_j = done_blocks.clone();
-                        let cells_j = cells.clone();
-                        let wb_j = wb_nanos.clone();
-                        let table_j = table.clone();
-                        let queue_j = queue.clone();
-                        let depth_j = depth.clone();
-                        let faults_j = faults.clone();
-                        let cancelled_j = cancelled.clone();
-                        // FnMut so the lane can re-run the body on a
-                        // Transient fault: the inputs stay parked in
-                        // the Option until an attempt succeeds.
-                        let mut inputs = Some(inputs);
-                        #[cfg(any(test, feature = "chaos"))]
-                        let plan_j = _inject.clone();
-                        #[cfg(any(test, feature = "chaos"))]
-                        let mut chaos_attempt: u32 = 0;
-                        pool.submit_tracked_hinted(
-                            Some(hint),
-                            move |_lane, rt| {
-                                #[cfg(any(test, feature = "chaos"))]
-                                {
-                                    chaos_attempt += 1;
-                                    if let Some(plan) = plan_j.as_ref() {
-                                        plan.fire(w, i, chaos_attempt)?;
-                                    }
-                                }
-                                let tiles =
-                                    inputs.as_ref().expect("job inputs already recycled");
-                                let t0;
-                                if fast_f32 {
-                                    // Single-f32-output decompose fast
-                                    // path (no Tensor wrapping).
-                                    let out = rt.execute_f32(&artifact, tiles)?;
-                                    t0 = Instant::now();
-                                    // SAFETY: disjoint write targets
-                                    // per the wave plan.
-                                    unsafe { space_j.write_f32(w, i, &out) };
-                                } else {
-                                    let out = rt.execute(&artifact, tiles)?;
-                                    t0 = Instant::now();
-                                    // SAFETY: disjoint write targets
-                                    // per the wave plan.
-                                    unsafe { space_j.write(w, i, &out) };
-                                }
-                                wb_j.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                                done_j.fetch_add(1, Ordering::Relaxed);
-                                cells_j.fetch_add(space_j.cell_updates(w, i), Ordering::Relaxed);
-                                // Back to the shard the extractor took
-                                // from: the tile cycles within one
-                                // lane's free list even when stolen.
-                                space_j.recycle_sharded(
-                                    hint,
-                                    w,
-                                    i,
-                                    inputs.take().expect("job inputs already recycled"),
-                                );
-                                Ok(())
-                            },
-                            RetryPolicy::default(),
-                            move |status| match status {
+                            let tiles =
+                                inputs.as_ref().expect("job inputs already recycled");
+                            let t0;
+                            if fast_f32 {
+                                // Single-f32-output decompose fast
+                                // path (no Tensor wrapping).
+                                let out = rt.execute_f32(&artifact, tiles)?;
+                                t0 = Instant::now();
+                                // SAFETY: disjoint write targets
+                                // per the wave plan.
+                                unsafe { space_j.write_f32(w, i, &out) };
+                            } else {
+                                let out = rt.execute(&artifact, tiles)?;
+                                t0 = Instant::now();
+                                // SAFETY: disjoint write targets
+                                // per the wave plan.
+                                unsafe { space_j.write(w, i, &out) };
+                            }
+                            wb_j.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            done_j.fetch_add(1, Ordering::Relaxed);
+                            cells_j.fetch_add(space_j.cell_updates(w, i), Ordering::Relaxed);
+                            // Back to the shard the extractor took
+                            // from: the tile cycles within one
+                            // lane's free list even when stolen.
+                            space_j.recycle_sharded(
+                                hint,
+                                w,
+                                i,
+                                inputs.take().expect("job inputs already recycled"),
+                            );
+                            Ok(())
+                        },
+                        RetryPolicy::default(),
+                        move |status| {
+                            if tag_j.load(Ordering::Acquire) != round {
+                                // Straggler from an abandoned round:
+                                // the pool's epoch fence kept its
+                                // body from running, and its status
+                                // must not touch the re-armed table
+                                // or the fresh queue either.
+                                return;
+                            }
+                            match status {
                                 JobStatus::Ok { .. } => {
                                     depth_j.completed(w);
                                     let mut newly = Vec::new();
@@ -1345,6 +1660,10 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
                                     // failed block's dependency cone
                                     // stops; independent blocks keep
                                     // running.
+                                    #[cfg(any(test, feature = "chaos"))]
+                                    {
+                                        *lock(&base_j).entry((w, i)).or_insert(0) += attempts;
+                                    }
                                     let cone = table_j.cancel(w, i);
                                     queue_j.cancel(cone.len());
                                     lock(&faults_j).push(BlockFault {
@@ -1366,50 +1685,18 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
                                     queue_j.cancel(cone.len());
                                     lock(&cancelled_j).extend(cone);
                                 }
-                            },
-                        );
-                    }
-                });
-            }
-        });
-        // Drain the lanes: the only wait_idle of the whole run, and
-        // the only place infrastructure errors surface.
-        let idle = pool.wait_idle();
-        drop(guard);
-        idle?;
-    }
-
-    let stats = pool.stats();
-    let counters = pool.fault_counters();
-    let sched = pool.sched_counters();
-    let (pool_hits, pool_misses, desc_pool_hits, desc_pool_misses) = space.pool_counters();
-    let (depth_max, overlap) = depth.finish();
-    let metrics = Metrics {
-        blocks: done_blocks.load(Ordering::Relaxed),
-        cell_updates: cells.load(Ordering::Relaxed),
-        extract: Duration::from_secs_f64((stats.marshal_ms - stats0.marshal_ms).max(0.0) / 1e3),
-        execute: Duration::from_secs_f64((stats.execute_ms - stats0.execute_ms).max(0.0) / 1e3),
-        writeback: Duration::from_nanos(wb_nanos.load(Ordering::Relaxed)),
-        wall: wall.elapsed(),
-        pool_hits,
-        pool_misses,
-        desc_pool_hits,
-        desc_pool_misses,
-        pipeline_depth_max: depth_max,
-        overlap_starts: overlap,
-        job_retries: counters.job_retries - counters0.job_retries,
-        jobs_failed: counters.jobs_failed - counters0.jobs_failed,
-        lane_restarts: counters.lane_restarts - counters0.lane_restarts,
-        local_pops: sched.local_pops - sched0.local_pops,
-        queue_steals: sched.queue_steals - sched0.queue_steals,
-        affinity_hits: sched.affinity_hits - sched0.affinity_hits,
-        affinity_misses: sched.affinity_misses - sched0.affinity_misses,
-        pins_applied: sched.pins_applied - sched0.pins_applied,
-        pool_evictions: space.pool_evictions(),
-    };
-    let faults = std::mem::take(&mut *lock(&faults));
-    let cancelled = std::mem::take(&mut *lock(&cancelled));
-    Ok(WaveOutcome { metrics, faults, cancelled })
+                            }
+                        },
+                    );
+                }
+            });
+        }
+    });
+    // Drain the lanes: one wait_idle per round — still the only place
+    // infrastructure errors surface.
+    let idle = pool.wait_idle();
+    drop(guard);
+    idle
 }
 
 #[cfg(test)]
@@ -2312,6 +2599,144 @@ mod tests {
         assert_eq!(newly, vec![(1, 1)], "independent column must stay runnable");
     }
 
+    // ---------- cone checkpoint/replay (WaveTable::rearm) ----------
+
+    /// Replay-round simulation over a re-armed member set: dispatch
+    /// ready members in an arbitrary order, asserting that no
+    /// non-member is ever released, that every in-set predecessor
+    /// completed first, and that every member runs exactly once.
+    fn simulate_rearm(g: &TestGraph, table: &WaveTable, members: &[(usize, usize)]) {
+        let set: HashSet<(usize, usize)> = members.iter().copied().collect();
+        let mut ready = table.rearm(members);
+        for b in &ready {
+            assert!(set.contains(b), "seed {b:?} is not a member");
+        }
+        let mut completed: HashSet<(usize, usize)> = HashSet::new();
+        let mut dispatched = 0usize;
+        while let Some((w, i)) = ready.pop() {
+            dispatched += 1;
+            g.visit_preds(w, i, &mut |v, j| {
+                if set.contains(&(v, j)) {
+                    assert!(
+                        completed.contains(&(v, j)),
+                        "member ({w},{i}) released before in-set predecessor ({v},{j})"
+                    );
+                }
+            });
+            assert!(completed.insert((w, i)), "member ({w},{i}) double-scheduled");
+            let mut newly = Vec::new();
+            table.complete(w, i, &mut newly);
+            for b in &newly {
+                assert!(set.contains(b), "replay released non-member {b:?}");
+            }
+            ready.extend(newly);
+        }
+        assert_eq!(dispatched, members.len(), "not every member re-ran");
+    }
+
+    #[test]
+    fn wave_table_rearm_seeds_are_exactly_the_failed_blocks() {
+        // For every (graph, failed block): cancel the cone, re-arm it,
+        // and check the replay seeds are exactly the failed block —
+        // every other member retains an in-set predecessor — then
+        // re-drive the members under the scheduling invariants.
+        let graphs = [
+            lattice1d_graph(4, 5, 1),
+            lud_graph(3),
+            two_stage_graph(2, 3, 4),
+        ];
+        for g in &graphs {
+            for w in 0..g.waves() {
+                for i in 0..g.wave_len(w) {
+                    let table = WaveTable::new(g, PassMode::Pipelined);
+                    let cone = table.cancel(w, i);
+                    let mut members = vec![(w, i)];
+                    members.extend(cone);
+                    let seeds = table.rearm(&members);
+                    assert_eq!(seeds, vec![(w, i)], "replay frontier of ({w},{i})");
+                    // Re-armed counters must equal each member's in-set
+                    // predecessor count.
+                    let set: HashSet<(usize, usize)> = members.iter().copied().collect();
+                    for &(mw, mi) in &members {
+                        let mut in_set = 0u32;
+                        g.visit_preds(mw, mi, &mut |v, j| {
+                            if set.contains(&(v, j)) {
+                                in_set += 1;
+                            }
+                        });
+                        let got = table.remaining[table.offsets[mw] + mi].load(Ordering::Relaxed);
+                        assert_eq!(got, in_set, "re-armed count of ({mw},{mi})");
+                    }
+                    simulate_rearm(g, &table, &members);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wave_table_rearm_is_idempotent() {
+        // Re-arming the same member set twice (an aborted replay round
+        // that never ran) must restore identical counters and seeds.
+        let g = lud_graph(3);
+        let table = WaveTable::new(&g, PassMode::Pipelined);
+        let mut members = vec![(1, 0)];
+        members.extend(table.cancel(1, 0));
+        let first = table.rearm(&members);
+        let snapshot: Vec<u32> = table
+            .remaining
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let second = table.rearm(&members);
+        let again: Vec<u32> = table
+            .remaining
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        assert_eq!(first, second);
+        assert_eq!(snapshot, again);
+    }
+
+    #[test]
+    fn wave_table_rearm_barrier_restores_wave_serial_order() {
+        // Barrier mode: two blocks of one wave fail together; the cone
+        // is every later block.  The re-armed replay must seed exactly
+        // the two failed blocks and release members wave-serially
+        // (a member runs only after every member of every earlier wave).
+        let g = lud_graph(3);
+        let w = 1; // perimeter wave: 4 blocks
+        let table = WaveTable::new(&g, PassMode::Barrier);
+        let mut members = vec![(w, 0), (w, 2)];
+        members.extend(table.cancel(w, 0));
+        assert!(table.cancel(w, 2).is_empty(), "overlapping barrier cancel");
+        let seeds = table.rearm(&members);
+        assert_eq!(seeds, vec![(w, 0), (w, 2)]);
+
+        let set: HashSet<(usize, usize)> = members.iter().copied().collect();
+        let mut ready = seeds;
+        let mut completed: HashSet<(usize, usize)> = HashSet::new();
+        let mut dispatched = 0usize;
+        while let Some((v, j)) = ready.pop() {
+            dispatched += 1;
+            for &(mw, mi) in &members {
+                if mw < v {
+                    assert!(
+                        completed.contains(&(mw, mi)),
+                        "barrier replay: ({v},{j}) before wave-{mw} member {mi}"
+                    );
+                }
+            }
+            assert!(completed.insert((v, j)), "double-scheduled");
+            let mut newly = Vec::new();
+            table.complete(v, j, &mut newly);
+            for b in &newly {
+                assert!(set.contains(b), "replay released non-member {b:?}");
+            }
+            ready.extend(newly);
+        }
+        assert_eq!(dispatched, members.len(), "not every member re-ran");
+    }
+
     #[test]
     fn ready_queue_cancel_shrinks_dispatch_target() {
         let q = ReadyQueue::new(5, [(0, 0), (0, 1)]);
@@ -2372,6 +2797,55 @@ mod tests {
         assert_eq!(outcome.metrics.blocks, 0);
         assert_eq!(outcome.metrics.cell_updates, 0);
         assert_eq!(outcome.metrics.jobs_failed, 1);
+        assert_eq!(outcome.metrics.job_retries, 0);
+    }
+
+    #[test]
+    fn drive_wave_pool_replay_exhaustion_reports_cumulative_attempts() {
+        // Same empty-registry setup: the seed block's Fatal fault
+        // persists across rounds, so a 2-round replay budget re-arms
+        // and re-drives the full 9-block cone twice before surfacing
+        // the terminal state — with the attempts of all three rounds
+        // accumulated on the fault, and the final cancellation set
+        // identical to the no-replay run's.
+        let mut score = vec![0i32; 49];
+        let space = Arc::new(TestNwSpace {
+            nb: 3,
+            b: 2,
+            stride: 7,
+            refm: vec![0; 49],
+            score_ptr: score.as_mut_ptr(),
+        });
+        let pool = RuntimePool::with_registry(
+            ".".into(),
+            crate::runtime::Registry::default(),
+            2,
+        )
+        .unwrap();
+        let outcome = drive_wave_pool_replay(
+            &pool,
+            &space,
+            PassMode::Pipelined,
+            2,
+            ReplayPolicy::with_attempts(2),
+        )
+        .expect("replayed block faults must not fail the drive");
+        assert_eq!(outcome.faults.len(), 1, "the fault never heals");
+        let f = &outcome.faults[0];
+        assert_eq!((f.wave, f.index), (0, 0));
+        assert_eq!(f.kind, FaultKind::Fatal);
+        assert_eq!(f.attempts, 3, "one Fatal attempt per round, accumulated");
+        assert!(outcome.replays.is_empty(), "nothing healed");
+        let total: usize = (0..space.waves()).map(|w| space.wave_len(w)).sum();
+        assert_eq!(outcome.cancelled.len(), total - 1);
+        assert_eq!(outcome.metrics.cone_replays, 2, "both budget rounds launched");
+        assert_eq!(
+            outcome.metrics.replay_blocks,
+            2 * total as u64,
+            "each replay round re-drives the whole 9-block cone"
+        );
+        assert_eq!(outcome.metrics.blocks, 0);
+        assert_eq!(outcome.metrics.jobs_failed, 3);
         assert_eq!(outcome.metrics.job_retries, 0);
     }
 

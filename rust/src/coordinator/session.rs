@@ -93,7 +93,7 @@ use crate::coordinator::bufpool::TensorPools;
 use crate::coordinator::grid::{Boundary, Grid2D, Grid3D, GridWriter2D, GridWriter3D};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::passdriver::{
-    self, BlockFault, PassMode, StencilSpace, WaveGraph, WaveSpace,
+    self, BlockFault, ConeReplay, PassMode, ReplayPolicy, StencilSpace, WaveGraph, WaveSpace,
 };
 use crate::coordinator::stencil_runner::{
     block_origins_2d, boundary_of, extractor_count, scalar_stencil_meta, stencil_meta, Space2D,
@@ -342,19 +342,40 @@ pub enum WorkloadStatus {
     /// Every block of the stage ran to completion; its output is the
     /// real result.
     Ok,
+    /// A block of this stage faulted terminally *and* cone replay
+    /// healed it: the cancelled dependency cone was re-armed and
+    /// re-driven to completion under the session's [`ReplayPolicy`],
+    /// so the stage's output is whole — bitwise what a fault-free run
+    /// produces — at the cost of `attempts` replay round(s).  Stages
+    /// whose blocks were merely re-driven as cone members (no fault of
+    /// their own) report [`WorkloadStatus::Ok`].
+    Replayed {
+        /// Replay rounds the stage's worst block consumed (≥ 1).
+        attempts: u32,
+    },
     /// A block of this stage faulted terminally (retry budget
-    /// exhausted, or a `Fatal`/`Panic` fault); the block's dependency
-    /// cone was cancelled and the stage's output is partial.
+    /// exhausted, or a `Fatal`/`Panic` fault) and the replay budget —
+    /// if any — was also spent; the block's dependency cone was
+    /// cancelled and the stage's output is partial.
     Failed(FaultReport),
     /// No block of this stage faulted, but some sat in a failed
-    /// upstream block's dependency cone and were cancelled; the
-    /// stage's output is partial.
+    /// upstream block's dependency cone and stayed cancelled after the
+    /// replay budget; the stage's output is partial.
     Cancelled,
 }
 
 impl WorkloadStatus {
+    /// Strictly fault-free (`Ok` only — a `Replayed` stage completed,
+    /// but not invisibly; see [`WorkloadStatus::completed`]).
     pub fn is_ok(&self) -> bool {
         matches!(self, WorkloadStatus::Ok)
+    }
+
+    /// The stage's output is whole and trustworthy: `Ok`, or
+    /// `Replayed` (healed by cone replay, bitwise identical to a
+    /// fault-free run).
+    pub fn completed(&self) -> bool {
+        matches!(self, WorkloadStatus::Ok | WorkloadStatus::Replayed { .. })
     }
 }
 
@@ -378,8 +399,12 @@ pub struct RunReport {
     pub statuses: Vec<WorkloadStatus>,
     /// Every block cancelled as a transitive successor of a failed
     /// block, in global (fused wave, index) coordinates.  Empty on a
-    /// fault-free run.
+    /// fault-free run and on a run fully healed by cone replay.
     pub cancelled: Vec<(usize, usize)>,
+    /// One entry per terminally-faulted block that cone replay healed,
+    /// in global (fused wave, index) coordinates.  Empty on a
+    /// fault-free run and when [`ReplayPolicy::none`] is in force.
+    pub replays: Vec<ConeReplay>,
 }
 
 impl RunReport {
@@ -393,9 +418,18 @@ impl RunReport {
         self.outputs.pop().expect("a run has at least one stage")
     }
 
-    /// `true` when every stage completed ([`WorkloadStatus::Ok`]).
+    /// `true` when every stage ran strictly fault-free
+    /// ([`WorkloadStatus::Ok`]); a healed [`WorkloadStatus::Replayed`]
+    /// stage fails this check — use [`RunReport::completed`] to accept
+    /// both.
     pub fn ok(&self) -> bool {
         self.statuses.iter().all(WorkloadStatus::is_ok)
+    }
+
+    /// `true` when every stage's output is whole — `Ok` or healed by
+    /// cone replay (`Replayed`).
+    pub fn completed(&self) -> bool {
+        self.statuses.iter().all(WorkloadStatus::completed)
     }
 
     /// The first stage fault, if any stage failed.
@@ -419,6 +453,7 @@ pub struct SessionBuilder {
     mode: PassMode,
     extractors: Option<usize>,
     pinning: Pinning,
+    replay: ReplayPolicy,
 }
 
 impl Default for SessionBuilder {
@@ -429,6 +464,7 @@ impl Default for SessionBuilder {
             mode: PassMode::Pipelined,
             extractors: None,
             pinning: Pinning::None,
+            replay: ReplayPolicy::default(),
         }
     }
 }
@@ -487,6 +523,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Cone-replay budget for terminally-faulted blocks (default
+    /// [`ReplayPolicy::default`] — one replay round).  Use
+    /// [`ReplayPolicy::none`] to restore the PR 6 cancel-only
+    /// semantics.
+    pub fn replay(mut self, replay: ReplayPolicy) -> Self {
+        self.replay = replay;
+        self
+    }
+
     /// Open the artifact directory and spin up the lane pool.
     pub fn build(self) -> crate::Result<Session<'static>> {
         let lanes = clamp_lanes(self.lanes, self.pinning, available_cores());
@@ -498,6 +543,7 @@ impl SessionBuilder {
             engine: Engine::Owned(pool),
             mode: self.mode,
             extractors: self.extractors,
+            replay: self.replay,
             totals: Mutex::new(Metrics::default()),
         })
     }
@@ -518,6 +564,7 @@ pub struct Session<'p> {
     engine: Engine<'p>,
     mode: PassMode,
     extractors: Option<usize>,
+    replay: ReplayPolicy,
     totals: Mutex<Metrics>,
 }
 
@@ -537,6 +584,7 @@ impl<'p> Session<'p> {
             engine: Engine::Borrowed(pool),
             mode: PassMode::Pipelined,
             extractors: None,
+            replay: ReplayPolicy::default(),
             totals: Mutex::new(Metrics::default()),
         }
     }
@@ -550,6 +598,12 @@ impl<'p> Session<'p> {
     /// Override the extractor-worker count.
     pub fn with_extractors(mut self, n: usize) -> Self {
         self.extractors = Some(n.max(1));
+        self
+    }
+
+    /// Override the cone-replay budget (default one replay round).
+    pub fn with_replay(mut self, replay: ReplayPolicy) -> Self {
+        self.replay = replay;
         self
     }
 
@@ -586,10 +640,13 @@ impl<'p> Session<'p> {
     /// between stages.
     ///
     /// Block-level faults do not abort the run: the drive cancels the
-    /// failed block's dependency cone, finishes everything else, and
-    /// the report carries a per-stage [`WorkloadStatus`].  `Err` is
-    /// reserved for infrastructure failures (bad descriptors, warmup
-    /// errors, an unrecoverable pool).
+    /// failed block's dependency cone, finishes everything else, then
+    /// re-arms and re-drives just the cone under the session's
+    /// [`ReplayPolicy`] (default one replay round) — a healed stage
+    /// reports [`WorkloadStatus::Replayed`] with whole output; a
+    /// spent budget falls back to `Failed`/`Cancelled` with partial
+    /// output.  `Err` is reserved for infrastructure failures (bad
+    /// descriptors, warmup errors, an unrecoverable pool).
     pub fn run(&self, chain: impl Into<Chain>) -> crate::Result<RunReport> {
         self.run_inner(chain.into(), Default::default())
     }
@@ -639,12 +696,18 @@ impl<'p> Session<'p> {
         let extractors = self
             .extractors
             .unwrap_or_else(|| extractor_count(pool.lanes()));
-        let outcome =
-            passdriver::drive_wave_pool_inner(pool, &space, self.mode, extractors, inject)?;
+        let outcome = passdriver::drive_wave_pool_inner(
+            pool,
+            &space,
+            self.mode,
+            extractors,
+            self.replay,
+            inject,
+        )?;
         // The drive has quiesced every lane; copying outputs through
         // the raw handles is race-free now.
         let outputs = space.outputs();
-        let statuses = space.statuses(&outcome.faults, &outcome.cancelled);
+        let statuses = space.statuses(&outcome.faults, &outcome.cancelled, &outcome.replays);
         lock(&self.totals).merge(&outcome.metrics);
         Ok(RunReport {
             metrics: outcome.metrics,
@@ -652,6 +715,7 @@ impl<'p> Session<'p> {
             outputs,
             statuses,
             cancelled: outcome.cancelled,
+            replays: outcome.replays,
         })
     }
 }
@@ -1569,19 +1633,33 @@ impl FusedSpace {
             .collect()
     }
 
-    /// Map the drive's per-block fault / cancellation record onto
-    /// per-stage statuses: a stage owning a terminally failed block is
-    /// `Failed` (first fault wins), a stage whose only casualties were
-    /// cancelled cone members is `Cancelled`, everything else is `Ok`.
+    /// Map the drive's per-block fault / cancellation / replay record
+    /// onto per-stage statuses: a stage owning a terminally failed
+    /// block is `Failed` (first fault wins), a stage whose only
+    /// casualties were cancelled cone members is `Cancelled`, a stage
+    /// whose faulted blocks were all healed by cone replay is
+    /// `Replayed` (worst replay-round count wins), everything else is
+    /// `Ok` — including stages whose blocks were merely re-driven as
+    /// healthy cone members.
     pub(crate) fn statuses(
         &self,
         faults: &[BlockFault],
         cancelled: &[(usize, usize)],
+        replays: &[ConeReplay],
     ) -> Vec<WorkloadStatus> {
         let mut st = vec![WorkloadStatus::Ok; self.frags.len()];
+        for r in replays {
+            let (k, _) = self.locate(r.wave);
+            let rounds = match st[k] {
+                WorkloadStatus::Ok => r.rounds,
+                WorkloadStatus::Replayed { attempts } => attempts.max(r.rounds),
+                _ => continue,
+            };
+            st[k] = WorkloadStatus::Replayed { attempts: rounds };
+        }
         for &(w, _) in cancelled {
             let (k, _) = self.locate(w);
-            if st[k] == WorkloadStatus::Ok {
+            if st[k].completed() {
                 st[k] = WorkloadStatus::Cancelled;
             }
         }
@@ -2095,13 +2173,22 @@ mod tests {
             outputs: vec![WorkloadOutput::Piped, WorkloadOutput::Row(vec![1, 2])],
             statuses: vec![WorkloadStatus::Ok, WorkloadStatus::Ok],
             cancelled: Vec::new(),
+            replays: Vec::new(),
         };
         assert_eq!(report.output(), &WorkloadOutput::Row(vec![1, 2]));
         assert!(report.ok());
+        assert!(report.completed());
+        assert_eq!(report.first_fault(), None);
+
+        // A healed stage is completed but not strictly ok.
+        report.statuses[1] = WorkloadStatus::Replayed { attempts: 1 };
+        assert!(!report.ok());
+        assert!(report.completed());
         assert_eq!(report.first_fault(), None);
 
         report.statuses[1] = WorkloadStatus::Failed(fault.clone());
         assert!(!report.ok());
+        assert!(!report.completed());
         assert_eq!(report.first_fault(), Some(&fault));
 
         let out = report.into_output();
@@ -2118,7 +2205,7 @@ mod tests {
 
         // Fault-free record: everything Ok.
         assert_eq!(
-            fused.statuses(&[], &[]),
+            fused.statuses(&[], &[], &[]),
             vec![WorkloadStatus::Ok, WorkloadStatus::Ok]
         );
 
@@ -2131,7 +2218,7 @@ mod tests {
             attempts: 3,
             message: "injected".into(),
         };
-        let st = fused.statuses(&[fault.clone()], &[]);
+        let st = fused.statuses(&[fault.clone()], &[], &[]);
         assert_eq!(st[1], WorkloadStatus::Ok);
         match &st[0] {
             WorkloadStatus::Failed(f) => {
@@ -2144,10 +2231,45 @@ mod tests {
 
         // Cancellations land on the stage that owns the global wave,
         // and a stage's own fault outranks a cancellation mark.
-        let st = fused.statuses(&[fault], &[(1, 3), (3, 0)]);
+        let st = fused.statuses(&[fault], &[(1, 3), (3, 0)], &[]);
         assert!(matches!(st[0], WorkloadStatus::Failed(_)));
         assert_eq!(st[1], WorkloadStatus::Cancelled);
         assert!(!st[1].is_ok());
+    }
+
+    #[test]
+    fn statuses_map_healed_replays_to_stages() {
+        let a = blur_frag(StencilInput::Own(rand_grid(8, 8, 23)), 2);
+        let b = blur_frag(StencilInput::Own(rand_grid(8, 8, 24)), 2);
+        let fused = FusedSpace::splice(vec![Box::new(a), Box::new(b)], vec![false, false]);
+
+        // Two healed faults in stage A: the stage reports Replayed
+        // with the worst round count; stage B — whose blocks may have
+        // been re-driven as cone members, but never faulted — stays
+        // Ok.
+        let replays = vec![
+            ConeReplay { wave: 0, index: 1, rounds: 1 },
+            ConeReplay { wave: 1, index: 0, rounds: 2 },
+        ];
+        let st = fused.statuses(&[], &[], &replays);
+        assert_eq!(st[0], WorkloadStatus::Replayed { attempts: 2 });
+        assert!(st[0].completed() && !st[0].is_ok());
+        assert_eq!(st[1], WorkloadStatus::Ok);
+
+        // A stage that still has cancelled blocks after the replay
+        // budget is Cancelled even if another of its faults healed,
+        // and a terminal fault outranks everything.
+        let st = fused.statuses(&[], &[(1, 3)], &replays);
+        assert_eq!(st[0], WorkloadStatus::Cancelled);
+        let fault = BlockFault {
+            wave: 0,
+            index: 2,
+            kind: FaultKind::Transient,
+            attempts: 6,
+            message: "injected".into(),
+        };
+        let st = fused.statuses(&[fault], &[], &replays);
+        assert!(matches!(st[0], WorkloadStatus::Failed(_)));
     }
 
     #[test]

@@ -21,7 +21,9 @@
 //!   alike — onto the dependency-tracked wave driver, and fuses
 //!   chained workloads into a single wave graph.  Runs are
 //!   fault-tolerant: transient block faults retry in place, terminal
-//!   ones cancel exactly their dependency cone, and the report
+//!   ones cancel exactly their dependency cone, cancelled cones are
+//!   checkpoint/replayed on fresh rounds (bounded by a
+//!   [`coordinator::passdriver::ReplayPolicy`]), and the report
 //!   carries a per-stage [`coordinator::session::WorkloadStatus`].
 //!   (The pre-PR 4 `run_*` free functions and their deprecated shims
 //!   were removed in PR 6.)

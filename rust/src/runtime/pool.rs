@@ -224,6 +224,14 @@ struct Job {
     done: Option<DoneFn>,
     policy: RetryPolicy,
     hint: Option<LaneHint>,
+    /// Submission epoch for replay-scoped jobs
+    /// ([`RuntimePool::submit_tracked_scoped`]): a lane that pops the
+    /// job after [`RuntimePool::advance_epoch`] has moved past this
+    /// value completes it as [`JobStatus::Skipped`] without running the
+    /// body — a straggler from an abandoned attempt can never write
+    /// back or double-fire into a re-armed wave table.  `None` (every
+    /// unscoped submission) is never stale.
+    epoch: Option<u64>,
 }
 
 /// One lane's run queue: a single-item LIFO slot for the newest hinted
@@ -364,6 +372,9 @@ struct Shared {
     job_retries: AtomicU64,
     jobs_failed: AtomicU64,
     lane_restarts: AtomicU64,
+    /// Current submission epoch for replay-scoped tracked jobs (see
+    /// [`RuntimePool::advance_epoch`]).  Monotonic; never reset.
+    epoch: AtomicU64,
     queue_cap: usize,
     /// Lane/extractor → CPU-set assignment under the pinning policy.
     plan: PinPlan,
@@ -442,6 +453,7 @@ impl RuntimePool {
             job_retries: AtomicU64::new(0),
             jobs_failed: AtomicU64::new(0),
             lane_restarts: AtomicU64::new(0),
+            epoch: AtomicU64::new(0),
             queue_cap: (lanes * 4).max(8),
             plan: PinPlan::new(config.pinning, lanes),
             multi_shard: nshards > 1,
@@ -561,6 +573,7 @@ impl RuntimePool {
             done: None,
             policy: RetryPolicy::none(),
             hint,
+            epoch: None,
         });
     }
 
@@ -600,6 +613,48 @@ impl RuntimePool {
             done: Some(Box::new(on_done)),
             policy,
             hint,
+            epoch: None,
+        });
+    }
+
+    /// The current replay epoch (see [`RuntimePool::advance_epoch`]).
+    pub fn epoch(&self) -> u64 {
+        self.shared.epoch.load(Ordering::Acquire)
+    }
+
+    /// Open a new submission epoch and return it.  Jobs submitted under
+    /// an older epoch via [`RuntimePool::submit_tracked_scoped`] that
+    /// are still queued complete as [`JobStatus::Skipped`] without
+    /// running — the fence the cone-replay driver relies on so a
+    /// straggling completion from an abandoned attempt cannot
+    /// double-fire into re-armed wave-table counters.
+    pub fn advance_epoch(&self) -> u64 {
+        self.shared.epoch.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    /// [`RuntimePool::submit_tracked_hinted`] scoped to a submission
+    /// `epoch` (from [`RuntimePool::advance_epoch`]): if the pool's
+    /// epoch has moved on by the time a lane pops the job, the body is
+    /// not run and the callback fires with [`JobStatus::Skipped`].  All
+    /// other tracked semantics (retry policy, exactly-once callback,
+    /// steal behaviour) are unchanged.
+    pub fn submit_tracked_scoped<F, C>(
+        &self,
+        hint: Option<LaneHint>,
+        epoch: u64,
+        job: F,
+        policy: RetryPolicy,
+        on_done: C,
+    ) where
+        F: FnMut(usize, &Runtime) -> crate::Result<()> + Send + 'static,
+        C: FnOnce(JobStatus) + Send + 'static,
+    {
+        self.enqueue(Job {
+            body: JobBody::Tracked(Box::new(job)),
+            done: Some(Box::new(on_done)),
+            policy,
+            hint,
+            epoch: Some(epoch),
         });
     }
 
@@ -866,7 +921,7 @@ fn lane_main(lane: usize, rt: &Runtime, shared: &Arc<Shared>) {
                     .unwrap_or_else(PoisonError::into_inner);
             }
         };
-        let Some((Job { body, done, policy, hint }, pop)) = popped else { return };
+        let Some((Job { body, done, policy, hint, epoch }, pop)) = popped else { return };
         shared.space.notify_one();
         if shared.multi_shard {
             match pop {
@@ -889,7 +944,11 @@ fn lane_main(lane: usize, rt: &Runtime, shared: &Arc<Shared>) {
         // fire exactly once, on every exit path out of run_job —
         // including the LaneKill re-raise.
         let mut guard = JobGuard { shared, lane, done, status: None };
-        guard.status = Some(if shared.poisoned.load(Ordering::Acquire) {
+        let stale = epoch.is_some_and(|e| e != shared.epoch.load(Ordering::Acquire));
+        guard.status = Some(if shared.poisoned.load(Ordering::Acquire) || stale {
+            // Stale epoch: a replay round has already abandoned this
+            // submission; running it would race the re-armed wave
+            // table.  The callback still fires (Skipped) exactly once.
             JobStatus::Skipped
         } else {
             run_job(lane, rt, shared, body, policy)
@@ -1348,6 +1407,7 @@ mod tests {
             done: None,
             policy: RetryPolicy::none(),
             hint: Some(h),
+            epoch: None,
         }
     }
 
@@ -1388,5 +1448,44 @@ mod tests {
         // Sanity: the owner sees nothing left either.
         assert!(st.pop_for(0).is_none());
         assert_eq!(st.queued, 0);
+    }
+
+    #[test]
+    fn stale_epoch_job_skips_without_running_the_body() {
+        // A job scoped to an epoch that has already been superseded
+        // must never run its body — the lane completes it as Skipped
+        // (callback still exactly once).  A job scoped to the *current*
+        // epoch runs normally.  This is the fence the cone-replay
+        // driver leans on: stragglers from an abandoned replay round
+        // cannot write back into re-armed wave-table counters.
+        let pool = test_pool(2);
+        let stale_epoch = pool.advance_epoch();
+        let live_epoch = pool.advance_epoch(); // supersedes stale_epoch
+        assert_eq!(pool.epoch(), live_epoch);
+
+        let ran = Arc::new(AtomicU32::new(0));
+        let statuses = Arc::new(Mutex::new(Vec::<String>::new()));
+        for (tag, epoch) in [("stale", stale_epoch), ("live", live_epoch)] {
+            let ran = ran.clone();
+            let statuses = statuses.clone();
+            pool.submit_tracked_scoped(
+                None,
+                epoch,
+                move |_, _| {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                    Ok(())
+                },
+                RetryPolicy::default(),
+                move |s| lock(&statuses).push(format!("{tag}:{}", status_tag(&s))),
+            );
+        }
+        pool.wait_idle().unwrap();
+
+        assert_eq!(ran.load(Ordering::SeqCst), 1, "only the live-epoch body runs");
+        let mut got = lock(&statuses).clone();
+        got.sort();
+        assert_eq!(got, vec!["live:ok:0".to_string(), "stale:skipped".to_string()]);
+        // Skipping is not a failure: the fault counters stay clean.
+        assert_eq!(pool.fault_counters().jobs_failed, 0);
     }
 }

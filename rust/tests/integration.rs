@@ -1,8 +1,11 @@
 //! End-to-end integration tests: AOT artifacts → PJRT runtime →
 //! coordinator streaming, verified against the native-Rust oracles.
 //!
-//! These tests require `artifacts/` (run `make artifacts` first); they are
-//! the Rust-side counterpart of the pytest suite's kernel-vs-oracle
+//! These tests require `artifacts/` (run `make artifacts` first) and a
+//! native XLA backend; each one opens with
+//! [`fpga_hpc::require_backend!`] and skips when only the vendored
+//! shim is linked, so plain `cargo test` stays green everywhere.  They
+//! are the Rust-side counterpart of the pytest suite's kernel-vs-oracle
 //! checks, now covering the *whole* request path: manifest parsing,
 //! literal marshalling, halo extraction, block scheduling, temporal
 //! blocking, write-back and reassembly.
@@ -57,6 +60,7 @@ fn coeffs_of(rt: &Runtime, artifact: &str) -> Vec<f32> {
 
 #[test]
 fn manifest_loads_all_artifacts() {
+    fpga_hpc::require_backend!();
     let rt = runtime();
     assert!(rt.registry().len() >= 18, "expected full artifact set");
     for name in ["diffusion2d_r1", "hotspot3d", "nw", "srad", "lud_internal"] {
@@ -66,6 +70,7 @@ fn manifest_loads_all_artifacts() {
 
 #[test]
 fn diffusion2d_streamed_matches_reference() {
+    fpga_hpc::require_backend!();
     let rt = runtime();
     let s = session(1);
     for radius in [1u32, 2] {
@@ -90,6 +95,7 @@ fn diffusion2d_streamed_matches_reference() {
 
 #[test]
 fn diffusion2d_partial_blocks_match_reference() {
+    fpga_hpc::require_backend!();
     // Grid not a multiple of the 256-block: partial edge blocks extend
     // past the grid and must be clipped exactly.
     let rt = runtime();
@@ -107,6 +113,7 @@ fn diffusion2d_partial_blocks_match_reference() {
 
 #[test]
 fn hotspot2d_streamed_matches_reference() {
+    fpga_hpc::require_backend!();
     let temp = rand_grid2d(512, 512, 21, 60.0, 90.0);
     let power = rand_grid2d(512, 512, 22, 0.0, 1.0);
     let steps = 8; // 2 passes of T=4
@@ -122,6 +129,7 @@ fn hotspot2d_streamed_matches_reference() {
 
 #[test]
 fn diffusion3d_streamed_matches_reference() {
+    fpga_hpc::require_backend!();
     let rt = runtime();
     let coeffs = coeffs_of(&rt, "diffusion3d_r1");
     let grid = rand_grid3d(64, 64, 64, 31, 0.0, 1.0);
@@ -138,6 +146,7 @@ fn diffusion3d_streamed_matches_reference() {
 
 #[test]
 fn hotspot3d_streamed_matches_reference() {
+    fpga_hpc::require_backend!();
     let temp = rand_grid3d(48, 48, 48, 41, 60.0, 90.0);
     let power = rand_grid3d(48, 48, 48, 42, 0.0, 1.0);
     let steps = 4;
@@ -154,6 +163,7 @@ fn hotspot3d_streamed_matches_reference() {
 
 #[test]
 fn stencil2d_rejects_bad_step_counts() {
+    fpga_hpc::require_backend!();
     let grid = rand_grid2d(256, 256, 1, 0.0, 1.0);
     // diffusion2d_r1 has T=4; 6 steps is not a multiple
     let r = session(1).run(Workload::stencil2d("diffusion2d_r1", grid, None, 6));
@@ -162,6 +172,7 @@ fn stencil2d_rejects_bad_step_counts() {
 
 #[test]
 fn pathfinder_app_matches_reference() {
+    fpga_hpc::require_backend!();
     let mut rng = Rng::new(55);
     let rows = 17; // 1 + 2 fused chunks of 8
     let cols = 5_000; // exercises a partial final block (width 4096)
@@ -177,6 +188,7 @@ fn pathfinder_app_matches_reference() {
 
 #[test]
 fn nw_app_matches_reference() {
+    fpga_hpc::require_backend!();
     let mut rng = Rng::new(66);
     let n = 128; // 2x2 blocks of 64
     let reference_matrix: Vec<Vec<i32>> =
@@ -193,12 +205,14 @@ fn nw_app_matches_reference() {
 
 #[test]
 fn nw_app_rejects_wrong_penalty() {
+    fpga_hpc::require_backend!();
     let refm = vec![vec![0i32; 65]; 65];
     assert!(session(1).run(Workload::nw(refm, 3)).is_err());
 }
 
 #[test]
 fn srad_app_matches_reference() {
+    fpga_hpc::require_backend!();
     let img = rand_grid2d(512, 512, 77, 0.5, 2.0);
     let steps = 2;
     let got = session(1)
@@ -213,6 +227,7 @@ fn srad_app_matches_reference() {
 
 #[test]
 fn lud_app_matches_reference() {
+    fpga_hpc::require_backend!();
     let mut rng = Rng::new(88);
     let n = 128; // 2x2 blocks of 64
     let a: Vec<Vec<f32>> = (0..n)
@@ -236,6 +251,7 @@ fn lud_app_matches_reference() {
 
 #[test]
 fn lane_count_invariance_hotspot2d() {
+    fpga_hpc::require_backend!();
     // lanes=1 and lanes=4 must produce bit-identical grids: block
     // compute is identical per block and interiors are disjoint, so
     // writeback order is invisible.
@@ -256,6 +272,7 @@ fn lane_count_invariance_hotspot2d() {
 
 #[test]
 fn lane_count_invariance_diffusion3d() {
+    fpga_hpc::require_backend!();
     let grid = rand_grid3d(64, 64, 64, 31, 0.0, 1.0);
     let steps = 4;
     let one = session(1)
@@ -275,6 +292,7 @@ fn lane_count_invariance_diffusion3d() {
 
 #[test]
 fn pipelined_matches_barrier_bitwise_at_lanes_1_2_4() {
+    fpga_hpc::require_backend!();
     // The cross-pass pipelined schedule must be bitwise identical to
     // the drain-between-passes baseline at every lane count: per-block
     // compute is deterministic, interiors are disjoint, and the
@@ -309,6 +327,7 @@ fn pipelined_matches_barrier_bitwise_at_lanes_1_2_4() {
 
 #[test]
 fn pipelined_matches_barrier_bitwise_3d() {
+    fpga_hpc::require_backend!();
     let grid = rand_grid3d(64, 64, 64, 131, 0.0, 1.0);
     let steps = 8; // 4 passes of T=2
     let pool = RuntimePool::open("artifacts", 4).unwrap();
@@ -338,6 +357,7 @@ fn pipelined_matches_barrier_bitwise_3d() {
 
 #[test]
 fn pipelined_partial_blocks_match_reference() {
+    fpga_hpc::require_backend!();
     // Odd geometry: partial edge blocks keep their clipping semantics
     // under the dependency-pipelined schedule.
     let rt = runtime();
@@ -356,6 +376,7 @@ fn pipelined_partial_blocks_match_reference() {
 
 #[test]
 fn pathfinder_lanes_matches_reference() {
+    fpga_hpc::require_backend!();
     let mut rng = Rng::new(57);
     let rows = 17; // 1 + 2 fused chunks of 8
     let cols = 5_000; // partial final block (width 4096)
@@ -372,6 +393,7 @@ fn pathfinder_lanes_matches_reference() {
 
 #[test]
 fn pathfinder_wave_pipelined_matches_barrier_at_lanes_1_2_4() {
+    fpga_hpc::require_backend!();
     // Deeper run (8 waves) so the pipelined schedule really crosses
     // wave boundaries; results must be bit-identical to the
     // wave-serial baseline and the lanes=1 reference.
@@ -410,6 +432,7 @@ fn pathfinder_wave_pipelined_matches_barrier_at_lanes_1_2_4() {
 
 #[test]
 fn nw_wave_pipelined_matches_barrier_at_lanes_1_2_4() {
+    fpga_hpc::require_backend!();
     let mut rng = Rng::new(67);
     let n = 256; // 4x4 blocks of 64: 7 anti-diagonal waves
     let reference_matrix: Vec<Vec<i32>> =
@@ -442,6 +465,7 @@ fn nw_wave_pipelined_matches_barrier_at_lanes_1_2_4() {
 
 #[test]
 fn nw_lanes_rejects_wrong_penalty() {
+    fpga_hpc::require_backend!();
     let pool = RuntimePool::open("artifacts", 1).unwrap();
     let refm = vec![vec![0i32; 65]; 65];
     assert!(Session::over(&pool).run(Workload::nw(refm, 3)).is_err());
@@ -449,6 +473,7 @@ fn nw_lanes_rejects_wrong_penalty() {
 
 #[test]
 fn srad_wave_pipelined_matches_barrier_at_lanes_1_2_4() {
+    fpga_hpc::require_backend!();
     // The two-stage edge (full reduction→stencil, span stencil→next
     // reduction) must not change a single bit: q0 partials are summed
     // in tile order, stencil inputs are fixed by the dependency order.
@@ -484,6 +509,7 @@ fn srad_wave_pipelined_matches_barrier_at_lanes_1_2_4() {
 
 #[test]
 fn lud_wave_pipelined_matches_barrier_at_lanes_1_2_4() {
+    fpga_hpc::require_backend!();
     let mut rng = Rng::new(89);
     let n = 256; // 4x4 blocks of 64: 12 waves
     let a: Vec<Vec<f32>> = (0..n)
@@ -524,6 +550,7 @@ fn lud_wave_pipelined_matches_barrier_at_lanes_1_2_4() {
 
 #[test]
 fn descriptor_pool_reuses_in_steady_state() {
+    fpga_hpc::require_backend!();
     // The i32 boundary descriptors come from their own keyed pool:
     // after warm-up, passes allocate no descriptor buffers either.
     let grid = rand_grid2d(1024, 1024, 103, 0.0, 1.0);
@@ -547,6 +574,7 @@ fn descriptor_pool_reuses_in_steady_state() {
 
 #[test]
 fn steady_state_passes_reuse_tile_buffers() {
+    fpga_hpc::require_backend!();
     // Two passes (T=4, steps=8): pass 1 may allocate (pool warm-up),
     // pass 2 must be served entirely from the recycle pool — zero
     // per-block heap allocations for tile extraction in steady state.
@@ -571,6 +599,7 @@ fn steady_state_passes_reuse_tile_buffers() {
 
 #[test]
 fn pooled_runner_reuses_tile_buffers() {
+    fpga_hpc::require_backend!();
     let grid = rand_grid2d(1024, 1024, 101, 0.0, 1.0);
     let pool = RuntimePool::open("artifacts", 2).unwrap();
     let report = Session::over(&pool)
@@ -588,6 +617,7 @@ fn pooled_runner_reuses_tile_buffers() {
 
 #[test]
 fn runtime_pool_executes_and_aggregates_stats() {
+    fpga_hpc::require_backend!();
     let pool = RuntimePool::open("artifacts", 2).unwrap();
     assert_eq!(pool.lanes(), 2);
     pool.warmup_artifact("sum_sumsq").unwrap();
@@ -604,6 +634,7 @@ fn runtime_pool_executes_and_aggregates_stats() {
 
 #[test]
 fn runtime_pool_surfaces_lane_errors_and_recovers() {
+    fpga_hpc::require_backend!();
     let pool = RuntimePool::open("artifacts", 2).unwrap();
     pool.submit(|_, rt| rt.execute("no_such_artifact", &[]).map(|_| ()));
     let err = pool.wait_idle().expect_err("lane error must surface");
@@ -618,6 +649,7 @@ fn runtime_pool_surfaces_lane_errors_and_recovers() {
 
 #[test]
 fn runtime_pool_surfaces_job_panics() {
+    fpga_hpc::require_backend!();
     let pool = RuntimePool::open("artifacts", 1).unwrap();
     pool.submit(|_, _| panic!("job exploded"));
     let err = pool.wait_idle().expect_err("panic must surface as error");
@@ -626,6 +658,7 @@ fn runtime_pool_surfaces_job_panics() {
 
 #[test]
 fn runtime_rejects_shape_mismatch() {
+    fpga_hpc::require_backend!();
     let rt = runtime();
     let bad = Tensor::F32(vec![0.0; 16], vec![4, 4]);
     assert!(rt.execute("diffusion2d_r1", &[bad]).is_err());
@@ -633,6 +666,7 @@ fn runtime_rejects_shape_mismatch() {
 
 #[test]
 fn runtime_stats_accumulate() {
+    fpga_hpc::require_backend!();
     let rt = runtime();
     let spec = rt.registry().get("sum_sumsq").unwrap().clone();
     let n = spec.inputs[0].shape[0];
@@ -650,6 +684,7 @@ fn runtime_stats_accumulate() {
 
 #[test]
 fn session_runs_every_workload_against_oracles() {
+    fpga_hpc::require_backend!();
     // Every workload runs through Session against its native-Rust
     // oracle, and every clean run reports fault-free: all statuses Ok,
     // no cancellations, zero failed jobs.
@@ -736,6 +771,7 @@ fn session_runs_every_workload_against_oracles() {
 
 #[test]
 fn session_reports_per_run_metrics_and_accumulates_totals() {
+    fpga_hpc::require_backend!();
     // The metrics-bleed fix: two identical runs on one session must
     // report identical per-run counters (not 1x then 2x), while the
     // session totals accumulate and reset on demand.
@@ -763,6 +799,7 @@ fn session_reports_per_run_metrics_and_accumulates_totals() {
 
 #[test]
 fn fused_srad_stencil_chain_matches_backtoback_at_lanes_1_2_4() {
+    fpga_hpc::require_backend!();
     // Acceptance: a heterogeneous chain through a single spliced
     // WaveGraph with no inter-app wait_idle, bitwise identical to the
     // back-to-back barriered reference.
@@ -816,6 +853,7 @@ fn fused_srad_stencil_chain_matches_backtoback_at_lanes_1_2_4() {
 
 #[test]
 fn fused_chain_overlaps_across_the_seam() {
+    fpga_hpc::require_backend!();
     // pathfinder.then(nw) shares one wave graph with no seam edges at
     // all: NW's first anti-diagonal seeds immediately and must be
     // dispatched while Pathfinder waves are still incomplete — the
@@ -863,6 +901,7 @@ fn fused_chain_overlaps_across_the_seam() {
 
 #[test]
 fn fused_piped_chain_reports_depth_and_srad_stencil_accuracy() {
+    fpga_hpc::require_backend!();
     // Depth observability on the data-dependent chain: the fused
     // pipelined run must report cross-wave depth > 1, and the final
     // grid still tracks the native oracle end to end.
@@ -890,6 +929,7 @@ fn fused_piped_chain_reports_depth_and_srad_stencil_accuracy() {
 
 #[test]
 fn session_rejects_upstream_without_producer() {
+    fpga_hpc::require_backend!();
     let pool = RuntimePool::open("artifacts", 1).unwrap();
     let session = Session::over(&pool);
     let r = session.run(Workload::stencil2d("diffusion2d_r1", GridInput::Upstream, None, 4));
@@ -918,6 +958,7 @@ fn pool_with(lanes: usize, sharded: bool) -> RuntimePool {
 
 #[test]
 fn sharded_scheduler_matches_global_queue_bitwise() {
+    fpga_hpc::require_backend!();
     // Acceptance: for every workload shape — both stencils, all four
     // Ch. 4 apps, and a piped heterogeneous chain — the sharded
     // work-stealing scheduler must reproduce the global-queue engine
@@ -1007,6 +1048,7 @@ fn sharded_scheduler_matches_global_queue_bitwise() {
 
 #[test]
 fn sharded_lanes_pop_mostly_local() {
+    fpga_hpc::require_backend!();
     // Acceptance: with blocks affinity-hashed evenly across 4 lanes,
     // a lane finds its next job in its own shard almost always —
     // stealing is the exception that keeps lanes busy at wave tails,
@@ -1040,6 +1082,7 @@ fn sharded_lanes_pop_mostly_local() {
 
 #[test]
 fn pinned_sessions_run_and_degrade_gracefully() {
+    fpga_hpc::require_backend!();
     // Acceptance: pinning never changes results, and asking for more
     // pinned lanes than cores clamps instead of failing.  Numa on a
     // single-node machine (most CI) degrades to no-op pinning — the
@@ -1091,6 +1134,7 @@ fn pinned_sessions_run_and_degrade_gracefully() {
 
 #[test]
 fn property_streamed_equals_reference_random_geometry() {
+    fpga_hpc::require_backend!();
     // Property test: random grid sizes and step counts (multiples of T)
     // always reproduce the oracle.
     let rt = runtime();

@@ -1,0 +1,373 @@
+//! Vendored, dependency-free shim over the xla-rs binding surface that
+//! the `fpga_hpc` runtime layer (`src/runtime/`) was written against.
+//!
+//! Host-side data marshalling is fully functional: [`Literal`] stores
+//! real bytes with a real shape and round-trips through
+//! [`Literal::to_vec`], and [`PjRtClient::buffer_from_host_buffer`]
+//! stages host slices exactly like the native binding does.  What this
+//! shim cannot do is run HLO: [`PjRtClient::compile`] always fails with
+//! a descriptive error, so every artifact-driven path fails fast at
+//! warmup/compile time (classified `Fatal` by the runtime, never
+//! retried).  Builds, unit tests, clippy, rustdoc, and the pure-logic
+//! integration surface all work without any native library.
+//!
+//! To run compiled artifacts for real, replace this path dependency
+//! with the native `xla` crate (see `../README.md`); the API here is a
+//! strict subset, so no caller changes are needed.
+
+use std::fmt;
+use std::rc::Rc;
+
+/// Binding-level error.  The runtime layer formats these with `{:?}`,
+/// matching the native binding's error type.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Binding-level result.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// XLA element types (the subset meaningful to this stack, plus the
+/// common neighbours so dtype mismatches print something sensible).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    /// Size of one element in bytes.
+    pub fn byte_size(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::S16 | ElementType::U16 | ElementType::F16 | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Host types that can be staged to / fetched from a [`Literal`].
+/// Sealed: the runtime layer only marshals f32 and i32 (`DType` in the
+/// artifact manifest), both 4-byte types.
+pub trait NativeType: sealed::Sealed + Copy {
+    /// The element type this host type marshals as.
+    const TY: ElementType;
+    /// Reassemble one element from native-endian bytes.
+    fn from_ne_bytes(b: [u8; 4]) -> Self;
+    /// Serialize one element to native-endian bytes.
+    fn to_ne_bytes(self) -> [u8; 4];
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+
+    fn from_ne_bytes(b: [u8; 4]) -> Self {
+        f32::from_ne_bytes(b)
+    }
+
+    fn to_ne_bytes(self) -> [u8; 4] {
+        f32::to_ne_bytes(self)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+
+    fn from_ne_bytes(b: [u8; 4]) -> Self {
+        i32::from_ne_bytes(b)
+    }
+
+    fn to_ne_bytes(self) -> [u8; 4] {
+        i32::to_ne_bytes(self)
+    }
+}
+
+/// Shape of an array literal: element type + dimensions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+}
+
+/// A host-side literal: a typed, shaped byte buffer (or a tuple of
+/// literals, as produced by tuple-returning computations).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    shape: ArrayShape,
+    data: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Build an array literal from raw bytes.  Fails if the byte count
+    /// does not match the shape.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let shape = ArrayShape { ty, dims: dims.iter().map(|&d| d as i64).collect() };
+        let expect = shape.element_count() * ty.byte_size();
+        if data.len() != expect {
+            return Err(Error(format!(
+                "literal data size {} does not match shape {:?}{:?} ({} bytes)",
+                data.len(),
+                ty,
+                dims,
+                expect
+            )));
+        }
+        Ok(Literal { shape, data: data.to_vec(), tuple: None })
+    }
+
+    /// The array shape; errors on tuple literals, which have none.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if self.tuple.is_some() {
+            return Err(Error("tuple literal has no array shape".to_string()));
+        }
+        Ok(self.shape.clone())
+    }
+
+    /// Copy the elements out as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error("cannot read elements of a tuple literal".to_string()));
+        }
+        if self.shape.ty != T::TY {
+            return Err(Error(format!(
+                "element type mismatch: literal is {:?}, requested {:?}",
+                self.shape.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| T::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Split a tuple literal into its parts (consumes the contents,
+    /// like the native binding's move-out semantics).
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        self.tuple
+            .take()
+            .ok_or_else(|| Error("literal is not a tuple".to_string()))
+    }
+}
+
+/// Parsed HLO module (held as text: the shim validates readability,
+/// the native backend does the actual parse).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Load an HLO-text artifact from disk.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text from {path}: {e}")))?;
+        if text.trim().is_empty() {
+            return Err(Error(format!("HLO text file {path} is empty")));
+        }
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+
+    pub fn proto(&self) -> &HloModuleProto {
+        &self.proto
+    }
+}
+
+/// A device buffer.  In this host-only shim a buffer is a staged
+/// literal; `to_literal_sync` is therefore an exact round-trip.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    /// Fetch the buffer contents back to the host.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A compiled executable.  Never constructed by this shim (compilation
+/// requires the native backend), but the type must exist so the
+/// runtime's compile cache and execute path typecheck.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed buffer arguments, returning per-device
+    /// result buffers (`[replica][output]`).
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        // Unreachable in practice: compile() never yields an executable.
+        Err(Error(BACKEND_MISSING.to_string()))
+    }
+}
+
+const BACKEND_MISSING: &str = "vendored xla shim: executing HLO requires the native \
+     xla_extension backend; swap rust/vendor/xla for the native xla crate (see its README)";
+
+/// The PJRT client.  Holds an `Rc` so it is deliberately `!Send`, like
+/// the native client — one client per lane thread (see
+/// `runtime::pool`).
+pub struct PjRtClient {
+    _not_send: Rc<()>,
+}
+
+impl PjRtClient {
+    /// Create the host (CPU) client.  Always succeeds: host-side
+    /// staging needs no native library.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _not_send: Rc::new(()) })
+    }
+
+    /// Stage a typed host slice as a device buffer.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for &v in data {
+            bytes.extend_from_slice(&v.to_ne_bytes());
+        }
+        let literal = Literal::create_from_shape_and_untyped_data(T::TY, dims, &bytes)?;
+        Ok(PjRtBuffer { literal })
+    }
+
+    /// Compile an HLO computation.  Always fails in the shim: there is
+    /// no compiler without the native backend.  The runtime classifies
+    /// this `Fatal` (never retried) and surfaces it at warmup.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(BACKEND_MISSING.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_f32_bytes_and_shape() {
+        let v = [1.5f32, -2.0, 0.25, 8.0];
+        let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_ne_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &bytes).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), v);
+    }
+
+    #[test]
+    fn literal_rejects_size_and_type_mismatches() {
+        let r = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &[0u8; 4]);
+        assert!(r.is_err());
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[1], &[0u8; 4]).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn buffer_staging_roundtrips_through_to_literal_sync() {
+        let client = PjRtClient::cpu().unwrap();
+        let buf = client.buffer_from_host_buffer::<i32>(&[-7, 42], &[2], None).unwrap();
+        let lit = buf.to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![-7, 42]);
+        assert_eq!(lit.array_shape().unwrap().dims(), &[2]);
+    }
+
+    #[test]
+    fn compile_fails_fast_with_a_descriptive_error() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: "HloModule m".to_string() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(format!("{err:?}").contains("xla_extension"));
+    }
+
+    #[test]
+    fn decompose_tuple_moves_parts_out_once() {
+        let part =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0u8; 4]).unwrap();
+        let mut tup = Literal {
+            shape: ArrayShape { ty: ElementType::F32, dims: Vec::new() },
+            data: Vec::new(),
+            tuple: Some(vec![part.clone(), part]),
+        };
+        let parts = tup.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(tup.decompose_tuple().is_err());
+    }
+}
