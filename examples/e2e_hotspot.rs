@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(2024);
     // initial temperature field ~70-90C with a hot region, uniform power
     let temp = Grid2D::from_fn(n, n, |y, x| {
-        let base = 70.0 + 10.0 * ((y as f32 / n as f32) * 3.14).sin();
+        let base = 70.0 + 10.0 * ((y as f32 / n as f32) * std::f32::consts::PI).sin();
         base + if (300..600).contains(&y) && (300..600).contains(&x) { 8.0 } else { 0.0 }
     });
     let power = Grid2D { ny: n, nx: n, data: rng.vec_f32(n * n, 0.0, 0.8) };
@@ -51,11 +51,16 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(report.ok(), "run reported block faults: {:?}", report.first_fault());
     println!("\n[execution]");
     println!("  {}", report.metrics.summary());
-    println!("  wallclock {:.3}s  coordinator overhead {:.1}%",
-        report.elapsed.as_secs_f64(), 100.0 * report.metrics.overhead_frac());
+    println!(
+        "  wallclock {:.3}s  coordinator overhead {:.1}%",
+        report.elapsed.as_secs_f64(),
+        100.0 * report.metrics.overhead_frac(),
+    );
     let stats = session.pool().stats();
-    println!("  runtime: {} executions, compile {:.0}ms, execute {:.0}ms, marshal {:.0}ms",
-        stats.executions, stats.compile_ms, stats.execute_ms, stats.marshal_ms);
+    println!(
+        "  runtime: {} executions, compile {:.0}ms, execute {:.0}ms, marshal {:.0}ms",
+        stats.executions, stats.compile_ms, stats.execute_ms, stats.marshal_ms,
+    );
     let out = report
         .into_output()
         .into_grid2d()
@@ -64,7 +69,8 @@ fn main() -> anyhow::Result<()> {
     // --- verification ---
     println!("\n[verification]");
     let t0 = std::time::Instant::now();
-    let want = reference::hotspot2d(temp, &power, reference::HotspotParams::default(), steps as usize);
+    let params = reference::HotspotParams::default();
+    let want = reference::hotspot2d(temp, &power, params, steps as usize);
     let ref_wall = t0.elapsed();
     let err = max_abs_diff(&out.data, &want.data);
     println!("  native single-thread reference: {:.3}s", ref_wall.as_secs_f64());

@@ -31,8 +31,8 @@ fn main() -> anyhow::Result<()> {
     println!("      {}", report.metrics.summary());
 
     println!("[2/3] verifying against the native Rust oracle...");
-    let coeffs: Vec<f32> = session.pool().registry().get("diffusion2d_r1").unwrap()
-        .meta_f64_list("coeffs")?.iter().map(|&v| v as f32).collect();
+    let spec = session.pool().registry().get("diffusion2d_r1").unwrap().clone();
+    let coeffs: Vec<f32> = spec.meta_f64_list("coeffs")?.iter().map(|&v| v as f32).collect();
     let out = report
         .into_output()
         .into_grid2d()

@@ -54,11 +54,16 @@ fn main() -> anyhow::Result<()> {
     let m = report.metrics.clone();
     let sr = report.into_output().into_grid2d().unwrap();
     let sr_want = reference::srad(img, 0.5, 2);
-    println!("  srad         OK  max|err|={:.1e} ({})", max_abs_diff(&sr.data, &sr_want.data), m.summary());
+    let sr_err = max_abs_diff(&sr.data, &sr_want.data);
+    println!("  srad         OK  max|err|={sr_err:.1e} ({})", m.summary());
 
     let nl = 192;
     let a: Vec<Vec<f32>> = (0..nl)
-        .map(|i| (0..nl).map(|j| rng.f32_in(-1.0, 1.0) + if i == j { nl as f32 } else { 0.0 }).collect())
+        .map(|i| {
+            (0..nl)
+                .map(|j| rng.f32_in(-1.0, 1.0) + if i == j { nl as f32 } else { 0.0 })
+                .collect()
+        })
         .collect();
     let report = session.run(Workload::lud(a.clone()))?;
     let m = report.metrics.clone();

@@ -27,8 +27,8 @@ fn main() -> anyhow::Result<()> {
         let artifact = format!("diffusion2d_r{radius}");
         let spec = session.pool().registry().get(&artifact).unwrap().clone();
         let t_fused = spec.meta_u64("steps")?;
-        let coeffs: Vec<f32> =
-            spec.meta_f64_list("coeffs")?.iter().map(|&v| v as f32).collect();
+        let raw = spec.meta_f64_list("coeffs")?;
+        let coeffs: Vec<f32> = raw.iter().map(|&v| v as f32).collect();
 
         // functional: 2 fused passes over a 512^2 grid
         let n = 512;

@@ -855,7 +855,9 @@ mod tests {
     fn srad_space(ny: usize, nx: usize, rblock: usize, sblock: usize, steps: usize) -> SradSpace {
         let rorigins = block_origins_2d(ny, nx, rblock);
         let nrtiles = rorigins.len();
-        // graph-only space: the grid handles are never dereferenced
+        // SAFETY: graph-only space — the handle is stored but never
+        // read or written (no extract/write call dereferences it), so
+        // the outlives/disjointness contract is vacuous.
         let mut dummy = Grid2D::zeros(1, 1);
         let h = unsafe { dummy.shared_writer() };
         SradSpace {

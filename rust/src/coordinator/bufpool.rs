@@ -39,10 +39,10 @@
 //! original `take`/`put` surface for the single-runtime drivers.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
 use crate::runtime::Tensor;
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{Mutex, MutexGuard, PoisonError};
 
 /// Per-bucket retention cap: `put` keeps at most this many buffers on
 /// one capacity shelf of one shard before spilling to the overflow
@@ -63,6 +63,11 @@ pub struct BufferPool<T> {
     /// Cross-shard spill: buffers a full shelf could not retain, still
     /// recyclable by any shard before eviction.
     overflow: Mutex<VecDeque<Vec<T>>>,
+    /// Monotonic tallies, every access `Relaxed`: the buffers
+    /// themselves travel through the shard/ring mutexes above (which
+    /// carry the happens-before edges), so the counters order nothing —
+    /// readers only ever want totals-so-far, and RMW atomicity alone
+    /// keeps those exact.
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -187,8 +192,8 @@ impl<T: Default + Clone> BufferPool<T> {
 
 /// Lock recovering from poisoning — shelf state is a plain container,
 /// consistent after any panicking holder.
-fn lockp<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+fn lockp<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 /// The full marshalling-path pool set: `f32` tiles plus the `i32`
@@ -320,7 +325,7 @@ mod tests {
 
     #[test]
     fn concurrent_take_put() {
-        let p = std::sync::Arc::new(TilePool::default());
+        let p = crate::sync::Arc::new(TilePool::default());
         std::thread::scope(|s| {
             for _ in 0..4 {
                 let p = p.clone();

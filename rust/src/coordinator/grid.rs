@@ -657,6 +657,8 @@ mod tests {
         let mut a = Grid2D::zeros(5, 5); // partial block clips at the edge
         let mut b = Grid2D::zeros(5, 5);
         a.write_block(3, 3, 4, 4, &block);
+        // SAFETY: single-threaded; `b` is only read again after the
+        // handle's last use.
         let w = unsafe { b.shared_writer() };
         w.write_block(3, 3, 4, 4, &block);
         assert_eq!(a, b);
@@ -665,6 +667,7 @@ mod tests {
         let mut a3 = Grid3D::zeros(4, 4, 4);
         let mut b3 = Grid3D::zeros(4, 4, 4);
         a3.write_block(2, 2, 2, 3, &cube);
+        // SAFETY: as above.
         let w3 = unsafe { b3.shared_writer() };
         w3.write_block(2, 2, 2, 3, &cube);
         assert_eq!(a3, b3);
@@ -674,6 +677,8 @@ mod tests {
     fn shared_writer_parallel_disjoint_blocks() {
         let src = Grid2D::from_fn(8, 8, |y, x| (y * 8 + x) as f32);
         let mut dst = Grid2D::zeros(8, 8);
+        // SAFETY: writes below target pairwise-disjoint 4x4 block
+        // origins; `dst` outlives the scope and is only read after it.
         let w = unsafe { dst.shared_writer() };
         std::thread::scope(|s| {
             for y0 in (0..8).step_by(4) {
@@ -689,18 +694,22 @@ mod tests {
     #[test]
     fn handle_extract_matches_grid_extract() {
         let g = Grid2D::from_fn(9, 7, |y, x| (y * 7 + x) as f32);
+        // SAFETY: read-only view, nothing mutates `g` while it is live.
         let view = unsafe { g.shared_view() };
         for (y0, x0) in [(0isize, 0isize), (4, 3), (8, 6), (-1, 5)] {
             let want = g.extract_tile(y0, x0, 5, 5, 2, Boundary::Clamp);
             let mut got = Vec::new();
+            // SAFETY: no writer exists at all.
             unsafe { view.extract_tile_into(y0, x0, 5, 5, 2, Boundary::Clamp, &mut got) };
             assert_eq!(want, got, "origin ({y0},{x0})");
         }
 
         let g3 = Grid3D::from_fn(5, 4, 6, |z, y, x| (z * 24 + y * 6 + x) as f32);
+        // SAFETY: as above.
         let view3 = unsafe { g3.shared_view() };
         let want = g3.extract_tile_owned(1, 0, 2, 4, 1, Boundary::Zero);
         let mut got = Vec::new();
+        // SAFETY: as above.
         unsafe { view3.extract_tile_into(1, 0, 2, 4, 1, Boundary::Zero, &mut got) };
         assert_eq!(want, got);
     }

@@ -95,8 +95,7 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, PoisonError};
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
@@ -105,6 +104,8 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::panic_text;
 use crate::runtime::pool::{lock, IdleGuard, JobStatus, RetryPolicy};
 use crate::runtime::{FaultKind, Runtime, RuntimePool, Tensor};
+use crate::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use crate::sync::{Arc, Condvar, Mutex, PoisonError};
 
 /// Inter-pass scheduling regime.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -668,7 +669,9 @@ impl WaveTable {
 
     /// Total blocks across all waves.
     pub fn total(&self) -> usize {
-        *self.offsets.last().unwrap()
+        // `offsets` always carries the leading 0 sentinel, so `last()`
+        // exists even for an empty graph.
+        self.offsets.last().copied().unwrap_or(0)
     }
 
     /// Map a global block id back to its `(wave, index)` pair.
@@ -683,6 +686,10 @@ impl WaveTable {
     /// count is zero (all of wave 0, plus any later block with no
     /// declared dependencies).
     pub fn seed(&self) -> Vec<(usize, usize)> {
+        // Relaxed: runs before the round is published to any worker —
+        // callbacks reach these counters only through the ready-queue
+        // mutex (the happens-before edge that hands the table over), so
+        // there is nothing concurrent to order against yet.
         (0..self.total())
             .filter(|&id| self.remaining[id].load(Ordering::Relaxed) == 0)
             .map(|id| self.coord(id))
@@ -783,9 +790,15 @@ impl WaveTable {
                 acc += per_wave[w];
             }
             for &(w, i) in members {
+                // Relaxed: quiescent between rounds (doc above); the
+                // replay workers acquire these stores through the
+                // ready-queue mutex when the seeds are published.
                 self.remaining[self.offsets[w] + i].store(earlier[w], Ordering::Relaxed);
             }
         } else {
+            // Relaxed stores + RMWs: same quiescence argument — no
+            // block is in flight, and publication to the replay
+            // workers rides the ready-queue mutex.
             let ids: HashSet<usize> = members.iter().map(|&(w, i)| self.offsets[w] + i).collect();
             for &id in &ids {
                 self.remaining[id].store(0, Ordering::Relaxed);
@@ -798,6 +811,8 @@ impl WaveTable {
                 }
             }
         }
+        // Relaxed loads: reading back this call's own single-threaded
+        // stores.
         let mut seeds: Vec<(usize, usize)> = members
             .iter()
             .copied()
@@ -1459,6 +1474,9 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
     let sched = pool.sched_counters();
     let (pool_hits, pool_misses, desc_pool_hits, desc_pool_misses) = space.pool_counters();
     let (depth_max, overlap) = ctx.depth.finish();
+    // Relaxed loads: every callback that bumped these tallies finished
+    // before the drain above returned (mutex-mediated), so the values
+    // are final — the counters carry no payload to synchronize.
     let metrics = Metrics {
         blocks: ctx.done_blocks.load(Ordering::Relaxed),
         cell_updates: ctx.cells.load(Ordering::Relaxed),
@@ -1624,6 +1642,9 @@ fn drive_round<S: WaveSpace + 'static>(
                                 // per the wave plan.
                                 unsafe { space_j.write(w, i, &out) };
                             }
+                            // Relaxed: independent monotonic tallies;
+                            // the driver reads them only after the
+                            // drain, never to synchronize data.
                             wb_j.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                             done_j.fetch_add(1, Ordering::Relaxed);
                             cells_j.fetch_add(space_j.cell_updates(w, i), Ordering::Relaxed);
@@ -1851,7 +1872,7 @@ mod tests {
 
     #[test]
     fn ready_queue_releases_parked_threads_on_final_dispatch() {
-        let q = std::sync::Arc::new(ReadyQueue::new(2, [(0usize, 0usize), (0, 1)]));
+        let q = Arc::new(ReadyQueue::new(2, [(0usize, 0usize), (0, 1)]));
         std::thread::scope(|s| {
             for _ in 0..4 {
                 let q = q.clone();
@@ -1992,6 +2013,9 @@ mod tests {
         let space = TestSpace2D::new(ny, nx, block, halo);
         let mut cur = init;
         let mut next = Grid2D::zeros(ny, nx);
+        // SAFETY: `cur`/`next` outlive the drive below; the driver's
+        // dependency table keeps concurrent block accesses disjoint and
+        // neither grid is touched through another path until it returns.
         let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
         let tile = space.tile;
         let (blocks, _) = drive_local(
@@ -2029,6 +2053,9 @@ mod tests {
         let space = TestSpace2D::new(8, 8, 4, 1);
         let mut cur = Grid2D::from_fn(8, 8, |y, x| (y * 8 + x) as f32);
         let mut next = Grid2D::zeros(8, 8);
+        // SAFETY: `cur`/`next` outlive the drive below; the driver's
+        // dependency table keeps concurrent block accesses disjoint and
+        // neither grid is touched through another path until it returns.
         let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
         let tile = space.tile;
         drive_local(
@@ -2049,6 +2076,9 @@ mod tests {
         let space = TestSpace2D::new(8, 8, 4, 1);
         let mut cur = Grid2D::zeros(8, 8);
         let mut next = Grid2D::zeros(8, 8);
+        // SAFETY: `cur`/`next` outlive the drive below; the driver's
+        // dependency table keeps concurrent block accesses disjoint and
+        // neither grid is touched through another path until it returns.
         let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
         let mut n = 0;
         let r = drive_local(
@@ -2072,6 +2102,9 @@ mod tests {
         let space = TestSpace2D::new(8, 8, 4, 1);
         let mut cur = Grid2D::zeros(8, 8);
         let mut next = Grid2D::zeros(8, 8);
+        // SAFETY: `cur`/`next` outlive the drive below; the driver's
+        // dependency table keeps concurrent block accesses disjoint and
+        // neither grid is touched through another path until it returns.
         let handles = unsafe { [cur.shared_writer(), next.shared_writer()] };
         let (blocks, _) =
             drive_local(|_b, _i| Ok(vec![0.0; 16]), &space, handles, 0, 4).unwrap();
@@ -2320,6 +2353,9 @@ mod tests {
         score_ptr: *mut i32,
     }
 
+    // SAFETY: the raw score pointer is only dereferenced on
+    // dependency-ordered anti-diagonal cells (the wave table serializes
+    // every overlapping access), over a buffer that outlives the drive.
     unsafe impl Send for TestNwSpace {}
     unsafe impl Sync for TestNwSpace {}
 

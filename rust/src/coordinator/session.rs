@@ -2075,6 +2075,8 @@ mod tests {
         let rorigins = block_origins_2d(ny, nx, rblock);
         let nrtiles = rorigins.len();
         let mut dummy = Grid2D::zeros(1, 1);
+        // SAFETY: graph-only space under test — the handle is never
+        // dereferenced.
         let h = unsafe { dummy.shared_writer() };
         let space = SradSpace {
             red_artifact: Arc::from("sum_sumsq"),

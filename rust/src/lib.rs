@@ -36,6 +36,11 @@
 //!   optimization levels × kernel models).
 //! * [`baseline`] — CPU/GPU/Xeon Phi roofline comparators.
 //! * [`report`] — regenerates every table and figure of the evaluation.
+//! * [`sync`] — the concurrency shim: the runtime/coordinator core
+//!   imports its `std::sync` primitives through here so the loom
+//!   model-checking build (`--cfg loom`, `tests/loom.rs`) can swap in
+//!   exhaustively-explored doubles.  See the runtime README's
+//!   "Verification" section.
 
 // Nothing in this crate may call a deprecated entry point: future
 // deprecation cycles get the same treatment the `run_*` shims got
@@ -52,6 +57,7 @@ pub mod report;
 pub mod rodinia;
 pub mod runtime;
 pub mod stencil;
+pub mod sync;
 pub mod testutil;
 
 /// Crate-wide result alias.

@@ -177,11 +177,16 @@ impl Tensor {
 }
 
 fn cast_f32(v: &[f32]) -> &[u8] {
-    // f32 -> u8 reinterpretation is always valid (no alignment shrink).
+    // SAFETY: reading a live f32 slice as bytes: same allocation, same
+    // length in bytes (len * 4 cannot overflow — the slice exists),
+    // alignment only shrinks (4 -> 1), and every byte of an f32 is
+    // initialized.  The borrow ties the lifetime to `v`.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 
 fn cast_i32(v: &[i32]) -> &[u8] {
+    // SAFETY: as in `cast_f32` — i32 -> u8 reinterpretation of a live
+    // borrowed slice with byte-exact length.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 

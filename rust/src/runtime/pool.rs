@@ -66,8 +66,6 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Barrier, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -75,6 +73,8 @@ use anyhow::{anyhow, Context};
 
 use super::topology::{pin_current_thread, PinPlan, Pinning};
 use super::{FaultKind, Registry, Runtime, RuntimeStats, Tensor};
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{Arc, Barrier, Condvar, Mutex, MutexGuard, PoisonError};
 
 /// Lock a mutex, recovering from poisoning.  Every critical section
 /// behind this helper is a single-field update or a counter fold, so
@@ -83,6 +83,19 @@ use super::{FaultKind, Registry, Runtime, RuntimeStats, Tensor};
 /// abort when the unwinding thread's drop glue re-locks.
 pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Is a job submitted under `epoch` stale?  `None` (every unscoped
+/// submission) is never stale; a scoped job is stale iff the pool's
+/// epoch cell has moved past its submission value.  The Acquire load
+/// pairs with the AcqRel RMW in [`RuntimePool::advance_epoch`]: a lane
+/// that pops a scoped job after a replay round has been abandoned must
+/// observe the advanced epoch (the pop and the advance are both inside
+/// the queue mutex's happens-before chain) and completes the job as
+/// [`JobStatus::Skipped`] without running the body.  The loom epoch
+/// model (`tests/loom.rs`) checks exactly this property.
+pub(crate) fn epoch_stale(epoch: Option<u64>, current: &AtomicU64) -> bool {
+    epoch.is_some_and(|e| e != current.load(Ordering::Acquire))
 }
 
 /// A sticky lane preference for a submitted job (shard index modulo the
@@ -321,7 +334,6 @@ impl QueueState {
 /// on the hot path — each lane touches only its own atomics, the read
 /// side folds all lanes).  Durations are stored as integer microseconds
 /// so a plain `fetch_add` suffices.
-#[derive(Default)]
 struct LaneStatsCell {
     executions: AtomicU64,
     compile_us: AtomicU64,
@@ -329,11 +341,30 @@ struct LaneStatsCell {
     marshal_us: AtomicU64,
 }
 
+// Explicit (not derived) so the struct still builds when the sync shim
+// swaps in loom's atomics, which don't guarantee a `Default` impl.
+impl Default for LaneStatsCell {
+    fn default() -> Self {
+        LaneStatsCell {
+            executions: AtomicU64::new(0),
+            compile_us: AtomicU64::new(0),
+            execute_us: AtomicU64::new(0),
+            marshal_us: AtomicU64::new(0),
+        }
+    }
+}
+
 fn to_us(ms: f64) -> u64 {
     (ms * 1_000.0).max(0.0).round() as u64
 }
 
 impl LaneStatsCell {
+    // Relaxed throughout this file's stats/sched/fault counters: they
+    // are observability tallies, not synchronization.  Job payloads and
+    // results travel through the queue mutex (the happens-before edge);
+    // a reader folding the cells only needs totals-so-far, which RMW
+    // atomicity alone makes exact.  None of them gates a loom-modeled
+    // protocol.
     fn add_delta(&self, last: &RuntimeStats, now: &RuntimeStats) {
         self.executions.fetch_add(now.executions - last.executions, Ordering::Relaxed);
         self.compile_us.fetch_add(to_us(now.compile_ms - last.compile_ms), Ordering::Relaxed);
@@ -343,13 +374,25 @@ impl LaneStatsCell {
 }
 
 /// Sharded-scheduler locality counters (see [`SchedCounters`]).
-#[derive(Default)]
 struct SchedCells {
     local_pops: AtomicU64,
     queue_steals: AtomicU64,
     affinity_hits: AtomicU64,
     affinity_misses: AtomicU64,
     pins_applied: AtomicU64,
+}
+
+// Explicit for the same loom-compatibility reason as `LaneStatsCell`.
+impl Default for SchedCells {
+    fn default() -> Self {
+        SchedCells {
+            local_pops: AtomicU64::new(0),
+            queue_steals: AtomicU64::new(0),
+            affinity_hits: AtomicU64::new(0),
+            affinity_misses: AtomicU64::new(0),
+            pins_applied: AtomicU64::new(0),
+        }
+    }
 }
 
 struct Shared {
@@ -465,6 +508,10 @@ impl RuntimePool {
             let reg = registry.clone();
             let sh = shared.clone();
             let tx = ready_tx.clone();
+            // The one sanctioned unscoped-spawn site in the crate (see
+            // clippy.toml): lanes are supervised, join on shutdown, and
+            // respawn on death.
+            #[allow(clippy::disallowed_methods)]
             let handle = match std::thread::Builder::new()
                 .name(format!("rt-lane-{lane}"))
                 .spawn(move || lane_entry(lane, dir, reg, sh, tx))
@@ -944,7 +991,7 @@ fn lane_main(lane: usize, rt: &Runtime, shared: &Arc<Shared>) {
         // fire exactly once, on every exit path out of run_job —
         // including the LaneKill re-raise.
         let mut guard = JobGuard { shared, lane, done, status: None };
-        let stale = epoch.is_some_and(|e| e != shared.epoch.load(Ordering::Acquire));
+        let stale = epoch_stale(epoch, &shared.epoch);
         guard.status = Some(if shared.poisoned.load(Ordering::Acquire) || stale {
             // Stale epoch: a replay round has already abandoned this
             // submission; running it would race the re-armed wave
@@ -1045,10 +1092,73 @@ fn run_job(
     }
 }
 
+/// Pure-logic probes over the pool's private queue/epoch machinery for
+/// the loom models in `tests/loom.rs`.  Compiled only under
+/// `--cfg loom`; nothing here spawns lanes or touches PJRT — the models
+/// drive the exact [`QueueState::push`]/[`QueueState::pop_for`] and
+/// [`epoch_stale`] code the real lanes execute, with loom's
+/// model-checked primitives underneath (via [`crate::sync`]).
+#[cfg(loom)]
+pub mod loom_model {
+    use super::{lock, Job, JobBody, Pop, QueueState, RetryPolicy, Shard};
+    use crate::sync::atomic::AtomicU64;
+    use crate::sync::Mutex;
+
+    /// See the private [`super::epoch_stale`] — re-exposed so the loom
+    /// epoch-fence model checks the exact predicate `lane_main` runs.
+    pub fn epoch_stale(epoch: Option<u64>, current: &AtomicU64) -> bool {
+        super::epoch_stale(epoch, current)
+    }
+
+    /// The sharded run queue behind the same mutex discipline the lanes
+    /// use.  Each probe job carries an observable `tag` in its `epoch`
+    /// field (the body is a no-op and is never run).
+    pub struct ProbeQueue {
+        state: Mutex<QueueState>,
+    }
+
+    impl ProbeQueue {
+        pub fn new(shards: usize) -> Self {
+            assert!(shards >= 1, "a pool always has at least one shard");
+            ProbeQueue {
+                state: Mutex::new(QueueState {
+                    shards: (0..shards).map(|_| Shard::default()).collect(),
+                    queued: 0,
+                    in_flight: 0,
+                    closed: false,
+                    rr: 0,
+                }),
+            }
+        }
+
+        /// Enqueue a probe via the real [`QueueState::push`]: hinted
+        /// jobs take the LIFO slot (displacing the previous occupant to
+        /// the deque front), unhinted ones round-robin the FIFO backs.
+        pub fn push(&self, hint: Option<usize>, tag: u64) {
+            lock(&self.state).push(Job {
+                body: JobBody::Tracked(Box::new(|_, _| Ok(()))),
+                done: None,
+                policy: RetryPolicy::default(),
+                hint,
+                epoch: Some(tag),
+            });
+        }
+
+        /// Pop for `lane` via the real [`QueueState::pop_for`].
+        /// Returns `(tag, stolen, queued_after)`.
+        pub fn pop_for(&self, lane: usize) -> Option<(u64, bool, usize)> {
+            let mut st = lock(&self.state);
+            let (job, pop) = st.pop_for(lane)?;
+            let tag = job.epoch.expect("probe jobs always carry a tag");
+            Some((tag, pop == Pop::Stolen, st.queued))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU32;
+    use crate::sync::atomic::AtomicU32;
 
     /// Pool over an empty registry: lanes start real PJRT clients but
     /// no artifacts exist — jobs that never touch `rt` (or that fail

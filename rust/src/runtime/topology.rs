@@ -317,4 +317,81 @@ mod tests {
         assert!(!pin_current_thread(&[]), "empty set is a no-op");
         assert!(!pin_current_thread(&[100_000]), "out-of-mask ids drop to a no-op");
     }
+
+    #[test]
+    fn cpulist_tolerates_empty_files_and_trailing_commas() {
+        // An empty or whitespace-only cpulist file (seen on memory-only
+        // nodes) parses to "no CPUs", not an error.
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("\n"), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("   \n  "), Vec::<usize>::new());
+        // Trailing (and doubled) commas are skipped as empty segments.
+        assert_eq!(parse_cpulist("0,1,\n"), vec![0, 1]);
+        assert_eq!(parse_cpulist(",,0-2,,"), vec![0, 1, 2]);
+        // A reversed range contributes nothing, but does not poison the
+        // well-formed segments around it.
+        assert_eq!(parse_cpulist("3-1"), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("5,3-1,7-7,"), vec![5, 7]);
+    }
+
+    /// Property: under any simulated 1/2/3-node topology, every lane
+    /// and extractor slot resolves to a CPU set that actually exists —
+    /// a single CPU from the node-interleaved list under `Cores`,
+    /// exactly one node's full list under `Numa` (≥ 2 nodes), and no
+    /// pin at all under `None` or degraded `Numa`.
+    #[test]
+    fn pinplan_property_every_slot_maps_to_a_valid_node() {
+        use crate::testutil::{for_cases, Rng};
+
+        fn sim_topology(rng: &mut Rng, nnodes: usize) -> Topology {
+            let mut next_cpu = 0usize;
+            let nodes = (0..nnodes)
+                .map(|_| {
+                    let width = rng.usize_in(1, 6);
+                    let cpus: Vec<usize> = (next_cpu..next_cpu + width).collect();
+                    next_cpu += width;
+                    cpus
+                })
+                .collect();
+            Topology { nodes }
+        }
+
+        for_cases(64, |rng| {
+            let nnodes = rng.usize_in(1, 3);
+            let topo = sim_topology(rng, nnodes);
+            let lanes = rng.usize_in(1, 8);
+            let extractors = rng.usize_in(0, 8);
+            let policy = *rng.choose(&[Pinning::None, Pinning::Cores, Pinning::Numa]);
+            let plan = PinPlan::with_topology(policy, lanes, &topo);
+            let union: Vec<usize> = topo.nodes.iter().flatten().copied().collect();
+
+            let mut slots: Vec<Option<&[usize]>> = Vec::new();
+            for lane in 0..lanes {
+                slots.push(plan.lane_cpus(lane));
+            }
+            for j in 0..extractors {
+                slots.push(plan.extractor_cpus(j));
+            }
+            for set in slots {
+                match policy {
+                    Pinning::None => assert!(set.is_none(), "None never pins"),
+                    Pinning::Cores => {
+                        let cpus = set.expect("Cores always pins on a non-empty topology");
+                        assert_eq!(cpus.len(), 1, "Cores pins a single CPU");
+                        assert!(union.contains(&cpus[0]), "pinned CPU must exist");
+                    }
+                    Pinning::Numa if nnodes < 2 => {
+                        assert!(set.is_none(), "single node degrades to no pinning");
+                    }
+                    Pinning::Numa => {
+                        let cpus = set.expect("Numa pins whole nodes when nnodes >= 2");
+                        assert!(
+                            topo.nodes.iter().any(|node| node[..] == cpus[..]),
+                            "a Numa pin set must be exactly one node's CPU list"
+                        );
+                    }
+                }
+            }
+        });
+    }
 }

@@ -1,0 +1,105 @@
+//! Concurrency primitives behind one shim — the crate's single door to
+//! `std::sync`-style types, swappable to [loom]'s model-checked
+//! doubles.
+//!
+//! The runtime's correctness rests on hand-rolled lock-free protocols
+//! (the `WaveTable` AcqRel counter discipline, the pool's submit-epoch
+//! fence, the sharded work-stealing queues).  Comments can argue those
+//! protocols are sound; only a model checker can *explore* them.  Loom
+//! re-implements the `std::sync` surface with an exhaustive
+//! interleaving/memory-model explorer, but it can only see operations
+//! performed through its own types — so every module of the
+//! concurrency core (`runtime::pool`, `coordinator::passdriver`,
+//! `coordinator::bufpool`, `coordinator::scheduler`) imports its
+//! primitives from here, never from `std::sync` directly:
+//!
+//! * Under a normal build this module is a zero-cost re-export of the
+//!   `std` types (the atomic cells are re-exported as type *aliases* —
+//!   see below).
+//! * Under `RUSTFLAGS="--cfg loom"` the same paths resolve to
+//!   `loom::sync`, and `tests/loom.rs` drives the real `WaveTable` /
+//!   `ReadyQueue` / shard-queue code through every interleaving.
+//!
+//! **The rule** (enforced by `clippy.toml`'s `disallowed-types` gate):
+//! new code must not name the `std::sync::atomic` cell types anywhere
+//! outside this file — import `crate::sync::atomic::{AtomicU64, ...}`
+//! instead.  The gate works because clippy's `disallowed_types` lint
+//! resolves re-exports to their `std` definition but does *not* see
+//! through type aliases; the aliases below are therefore the one
+//! sanctioned spelling.  (`Ordering` is deliberately not disallowed —
+//! it is pure data, and both `std` and loom use the `std` enum.)
+//!
+//! What swaps and what deliberately does not:
+//!
+//! | name                          | normal build | `cfg(loom)` |
+//! |-------------------------------|--------------|-------------|
+//! | `atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize}` | `std` (as aliases) | `loom` |
+//! | `Mutex`, `MutexGuard`, `Condvar` | `std`     | `loom`      |
+//! | `Arc`, `Barrier`, `PoisonError`  | `std`     | `std`       |
+//!
+//! `Arc` stays `std` everywhere: loom's `Arc` cannot hold unsized
+//! payloads (the pool passes `Arc<str>` artifact names), and no modeled
+//! protocol relies on the reference count's release/acquire handshake —
+//! every cross-thread publication the models check goes through a
+//! `Mutex` or an atomic RMW chain.  `Barrier` stays `std` because loom
+//! provides none and the only user (`RuntimePool::warmup_artifact`) is
+//! not on a modeled path; `PoisonError` is `std`-only machinery that
+//! loom's `LockResult` shares.  `std::sync::mpsc` is likewise not
+//! re-exported: the channels sit outside every modeled protocol, and
+//! callers keep importing them from `std` (they are not disallowed).
+//!
+//! [loom]: https://docs.rs/loom
+
+#[cfg(not(loom))]
+#[allow(clippy::disallowed_types)] // the one sanctioned naming site
+pub mod atomic {
+    //! Atomic cells (aliased, see the module docs) plus `Ordering`.
+    pub use std::sync::atomic::Ordering;
+
+    pub type AtomicBool = std::sync::atomic::AtomicBool;
+    pub type AtomicU32 = std::sync::atomic::AtomicU32;
+    pub type AtomicU64 = std::sync::atomic::AtomicU64;
+    pub type AtomicUsize = std::sync::atomic::AtomicUsize;
+}
+
+#[cfg(loom)]
+pub mod atomic {
+    //! Loom's model-checked atomic cells.
+    pub use loom::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+}
+
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard};
+
+pub use std::sync::{Arc, Barrier, PoisonError};
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::atomic::{AtomicU64, Ordering};
+    use super::{Condvar, Mutex};
+
+    /// The aliases must behave exactly like the std types they name —
+    /// a smoke check that the shim adds nothing and loses nothing.
+    #[test]
+    fn shim_types_are_std_types() {
+        let a = AtomicU64::new(1);
+        assert_eq!(a.fetch_add(1, Ordering::AcqRel), 1);
+        assert_eq!(a.load(Ordering::Acquire), 2);
+
+        let m = Mutex::new(7u32);
+        let cv = Condvar::new();
+        {
+            let mut g: super::MutexGuard<'_, u32> = m.lock().unwrap();
+            *g += 1;
+            cv.notify_all();
+        }
+        assert_eq!(*m.lock().unwrap(), 8);
+
+        // The non-swapped names remain plain std re-exports.
+        let shared: super::Arc<str> = super::Arc::from("unsized payloads stay supported");
+        assert_eq!(shared.len(), 31);
+    }
+}
