@@ -10,6 +10,8 @@
 //! fpga-hpc list                  # list artifacts in the manifest
 //! ```
 
+use std::time::Duration;
+
 use crate::coordinator::grid::Grid2D;
 use crate::coordinator::session::{Session, Workload};
 use crate::coordinator::{reference, PassMode};
@@ -30,7 +32,8 @@ USAGE:
   fpga-hpc tune <d2r1|d2r2|..|d3r4> [sv|a10|s10]
                                    tune one stencil on one device
   fpga-hpc run diffusion2d [n] [steps] [--lanes N] [--mode barrier|pipelined]
-                           [--pin none|cores|numa]
+                           [--pin none|cores|numa] [--deadline-ms N]
+                           [--job-timeout-ms N]
                                    functional streamed run + verification
                                    through the Session builder API;
                                    --lanes N replicates the compute unit
@@ -39,7 +42,12 @@ USAGE:
                                    (default pipelined), --pin sets the
                                    lane CPU-affinity policy (default
                                    none; cores/numa clamp lanes to the
-                                   available cores)
+                                   available cores), --deadline-ms bounds
+                                   the whole run (expiry exits non-zero
+                                   with a DeadlineExceeded report instead
+                                   of hanging), --job-timeout-ms bounds
+                                   each block job (a stuck lane is reaped
+                                   and the block heals via cone replay)
   fpga-hpc sim                     simulate all Rodinia variants
   fpga-hpc list                    list AOT artifacts
 ";
@@ -84,9 +92,11 @@ pub fn run() -> crate::Result<()> {
             let lanes = take_lanes_flag(&mut rest)?;
             let mode = take_mode_flag(&mut rest)?;
             let pin = take_pin_flag(&mut rest)?;
+            let deadline = take_ms_flag(&mut rest, "--deadline-ms")?;
+            let job_timeout = take_ms_flag(&mut rest, "--job-timeout-ms")?;
             let n: usize = rest.get(1).and_then(|s| s.parse().ok()).unwrap_or(512);
             let steps: u64 = rest.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
-            run_diffusion2d_demo(n, steps, lanes, mode, pin)?;
+            run_diffusion2d_demo(n, steps, lanes, mode, pin, deadline, job_timeout)?;
         }
         "sim" => {
             for dev in [stratix_v(), arria_10()] {
@@ -167,6 +177,24 @@ fn take_pin_flag(args: &mut Vec<String>) -> crate::Result<Pinning> {
     Ok(pin)
 }
 
+/// Remove `<flag> N` (a millisecond count) from `args` (if present)
+/// and return it as a [`Duration`].  `0` is allowed — an
+/// already-expired deadline is the `--deadline-ms` smoke-test case.
+fn take_ms_flag(args: &mut Vec<String>, flag: &str) -> crate::Result<Option<Duration>> {
+    let Some(pos) = args.iter().position(|a| a == flag) else {
+        return Ok(None);
+    };
+    let val = args
+        .get(pos + 1)
+        .ok_or_else(|| anyhow::anyhow!("{flag} requires a value\n{USAGE}"))?
+        .clone();
+    let ms: u64 = val
+        .parse()
+        .map_err(|_| anyhow::anyhow!("{flag}: '{val}' is not a millisecond count"))?;
+    args.drain(pos..=pos + 1);
+    Ok(Some(Duration::from_millis(ms)))
+}
+
 fn parse_device(s: &str) -> crate::Result<FpgaDevice> {
     Ok(match s {
         "sv" => stratix_v(),
@@ -186,21 +214,30 @@ fn parse_stencil(s: &str) -> crate::Result<(crate::stencil::config::StencilShape
     Ok((shape, dims))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_diffusion2d_demo(
     n: usize,
     steps: u64,
     lanes: usize,
     mode: PassMode,
     pin: Pinning,
+    deadline: Option<Duration>,
+    job_timeout: Option<Duration>,
 ) -> crate::Result<()> {
     // One typed front door for any lane count: the Session owns the
     // pool, the workload lowers onto the wave driver.
-    let session = Session::builder()
+    let mut builder = Session::builder()
         .artifacts("artifacts")
         .lanes(lanes)
         .mode(mode)
-        .pinning(pin)
-        .build()?;
+        .pinning(pin);
+    if let Some(d) = deadline {
+        builder = builder.deadline(d);
+    }
+    if let Some(b) = job_timeout {
+        builder = builder.job_timeout(b);
+    }
+    let session = builder.build()?;
     let spec = session
         .pool()
         .registry()
@@ -228,6 +265,14 @@ fn run_diffusion2d_demo(
     if !report.ok() {
         for (k, status) in report.statuses.iter().enumerate() {
             println!("  stage {k}: {status:?}");
+        }
+        if report.deadline_exceeded {
+            anyhow::bail!(
+                "DeadlineExceeded: run cut off after {:?} ({} blocks unfinished, {} cancelled)",
+                report.elapsed,
+                report.unfinished.len(),
+                report.cancelled.len(),
+            );
         }
         anyhow::bail!("run completed with faults ({} blocks cancelled)", report.cancelled.len());
     }

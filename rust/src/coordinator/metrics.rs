@@ -45,6 +45,13 @@ pub struct Metrics {
     /// Lane threads respawned by the pool supervisor after a panic
     /// escaped job isolation.
     pub lane_restarts: u64,
+    /// Budgeted jobs completed as `Timeout` by the pool watchdog (also
+    /// counted in `jobs_failed`).  0 on every run without a
+    /// `job_timeout`.
+    pub job_timeouts: u64,
+    /// Hung lane threads reaped (and replaced) by the pool watchdog.
+    /// Disjoint from `lane_restarts`, which counts panic respawns.
+    pub lanes_reaped: u64,
     /// Jobs a lane popped from its own run-queue shard (sharded
     /// scheduler only; 0 on the global-queue engine and at lanes=1).
     pub local_pops: u64,
@@ -135,6 +142,8 @@ impl Metrics {
             job_retries,
             jobs_failed,
             lane_restarts,
+            job_timeouts,
+            lanes_reaped,
             local_pops,
             queue_steals,
             affinity_hits,
@@ -159,6 +168,8 @@ impl Metrics {
         self.job_retries += job_retries;
         self.jobs_failed += jobs_failed;
         self.lane_restarts += lane_restarts;
+        self.job_timeouts += job_timeouts;
+        self.lanes_reaped += lanes_reaped;
         self.local_pops += local_pops;
         self.queue_steals += queue_steals;
         self.affinity_hits += affinity_hits;
@@ -186,6 +197,14 @@ impl Metrics {
         } else {
             String::new()
         };
+        let timeouts = if self.job_timeouts + self.lanes_reaped > 0 {
+            format!(
+                " timeouts={} lanes-reaped={}",
+                self.job_timeouts, self.lanes_reaped
+            )
+        } else {
+            String::new()
+        };
         let replays = if self.cone_replays > 0 {
             format!(
                 " cone-replays={} replay-blocks={}",
@@ -206,7 +225,7 @@ impl Metrics {
             String::new()
         };
         format!(
-            "blocks={} updates={} wall={:.3}s (marshal {:.1}% execute {:.1}% writeback {:.1}%) buf-reuse {:.0}%{wave}{faults}{replays}{locality} {:.3} GCell/s",
+            "blocks={} updates={} wall={:.3}s (marshal {:.1}% execute {:.1}% writeback {:.1}%) buf-reuse {:.0}%{wave}{faults}{timeouts}{replays}{locality} {:.3} GCell/s",
             self.blocks,
             self.cell_updates,
             self.wall.as_secs_f64(),
@@ -270,6 +289,8 @@ mod tests {
             job_retries: 2,
             jobs_failed: 1,
             lane_restarts: 1,
+            job_timeouts: 1,
+            lanes_reaped: 1,
             local_pops: 40,
             queue_steals: 3,
             affinity_hits: 38,
@@ -290,6 +311,8 @@ mod tests {
         assert_eq!(a.job_retries, 3);
         assert_eq!(a.jobs_failed, 1);
         assert_eq!(a.lane_restarts, 1);
+        assert_eq!(a.job_timeouts, 1);
+        assert_eq!(a.lanes_reaped, 1);
         assert_eq!(a.local_pops, 40);
         assert_eq!(a.queue_steals, 3);
         assert_eq!(a.affinity_hits, 38);
@@ -322,6 +345,15 @@ mod tests {
         let faulty = Metrics { blocks: 1, job_retries: 2, ..Default::default() };
         assert!(faulty.summary().contains("retries=2 failed=0 lane-restarts=0"));
         assert!(!faulty.summary().contains("cone-replays="));
+        assert!(!faulty.summary().contains("timeouts="));
+        let timed_out = Metrics {
+            blocks: 1,
+            jobs_failed: 1,
+            job_timeouts: 1,
+            lanes_reaped: 1,
+            ..Default::default()
+        };
+        assert!(timed_out.summary().contains("timeouts=1 lanes-reaped=1"));
         let replayed = Metrics {
             blocks: 1,
             cone_replays: 1,

@@ -55,7 +55,7 @@ pub mod stencil_runner;
 
 pub use grid::{Boundary, Grid2D, Grid3D};
 pub use metrics::Metrics;
-pub use passdriver::PassMode;
+pub use passdriver::{PassMode, RunLimits};
 pub use session::{
     Chain, FaultReport, GridInput, RunReport, Session, SessionBuilder, Workload,
     WorkloadOutput, WorkloadStatus,

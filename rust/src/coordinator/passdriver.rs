@@ -92,6 +92,21 @@
 //! session layer can mark only the affected workloads failed.  Under
 //! `cfg(any(test, feature = "chaos"))` a deterministic [`FaultPlan`]
 //! can inject faults keyed by `(wave, block, attempt)`.
+//!
+//! # Time bounds
+//!
+//! [`RunLimits`] adds the wall-clock layer (PR 10): an optional
+//! per-job budget (each block job is submitted with it; a lane stuck
+//! past the budget is reaped by the pool watchdog and the block fails
+//! with [`FaultKind::Timeout`] — healing through the same cone
+//! cancel/replay path as any other terminal fault) and an optional
+//! run deadline (on expiry a watcher aborts the ready queue, fences
+//! still-queued jobs behind a fresh pool epoch, and the run reports
+//! the blocks that never completed in [`WaveOutcome::unfinished`]
+//! with [`WaveOutcome::deadline_exceeded`] set, instead of blocking
+//! in `wait_idle`).  Budgeted job bodies commit via
+//! [`crate::runtime::pool::commit_current_job`] before touching the
+//! grid, so a reaped straggler can never write into a replay round.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -104,7 +119,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::panic_text;
 use crate::runtime::pool::{lock, IdleGuard, JobStatus, RetryPolicy};
 use crate::runtime::{FaultKind, Runtime, RuntimePool, Tensor};
-use crate::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use crate::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use crate::sync::{Arc, Condvar, Mutex, PoisonError};
 
 /// Inter-pass scheduling regime.
@@ -588,6 +603,13 @@ pub struct WaveTable {
     offsets: Vec<usize>,
     /// Incomplete-predecessor counters, indexed by global block id.
     remaining: Vec<AtomicU32>,
+    /// Completion bitmap, indexed by global block id: set exactly when
+    /// [`WaveTable::complete`] records the block's write-back.  A
+    /// cancelled block's bit stays clear across replay rounds until a
+    /// round actually completes it, so after any drain the clear bits
+    /// are precisely the blocks whose output is missing — what a
+    /// deadline-cut run reports via [`WaveTable::unfinished`].
+    done: Vec<AtomicBool>,
     /// CSR successor lists (pipelined mode only; empty under barrier).
     succ_off: Vec<usize>,
     succs: Vec<u32>,
@@ -664,7 +686,8 @@ impl WaveTable {
                 remaining.push(AtomicU32::new(p));
             }
         }
-        WaveTable { offsets, remaining, succ_off, succs, barrier }
+        let done = (0..total).map(|_| AtomicBool::new(false)).collect();
+        WaveTable { offsets, remaining, done, succ_off, succs, barrier }
     }
 
     /// Total blocks across all waves.
@@ -742,6 +765,24 @@ impl WaveTable {
             }
         }
         cancelled
+    }
+
+    /// Has block `(w, i)`'s completion been recorded?  (Replay-heal
+    /// accounting: a deadline-cut round may end with a block neither
+    /// failed nor completed, which must not be reported as healed.)
+    fn completed(&self, w: usize, i: usize) -> bool {
+        self.done[self.offsets[w] + i].load(Ordering::Relaxed)
+    }
+
+    /// Every block whose completion was never recorded — after a
+    /// drained round these are exactly the blocks with no output:
+    /// terminally failed, cancelled, or (on a deadline cut) fenced
+    /// before running.  Call only while no block is in flight.
+    pub fn unfinished(&self) -> Vec<(usize, usize)> {
+        (0..self.total())
+            .filter(|&id| !self.done[id].load(Ordering::Relaxed))
+            .map(|id| self.coord(id))
+            .collect()
     }
 
     /// Re-arm a cancelled dependency cone for a replay round: reset
@@ -825,6 +866,9 @@ impl WaveTable {
     /// Record the completion (write-back done) of block `(w, i)`;
     /// appends every block this makes runnable to `ready`.
     pub fn complete(&self, w: usize, i: usize, ready: &mut Vec<(usize, usize)>) {
+        // Relaxed: the bitmap is only read after the round's drain
+        // (`unfinished`), never to synchronize block data.
+        self.done[self.offsets[w] + i].store(true, Ordering::Relaxed);
         // AcqRel, as in DepTable::complete: the RMW chain orders every
         // predecessor's write-back before the final decrement, whose
         // thread publishes the successor through the queue's mutex.
@@ -1204,6 +1248,45 @@ impl ReplayPolicy {
     }
 }
 
+/// Wall-clock bounds for one pooled wave drive (see the module docs
+/// § Time bounds).  `Default` is unbounded — exactly the pre-PR 10
+/// behaviour.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RunLimits {
+    /// Per-job budget: every block job is submitted with it, and a
+    /// lane stuck past the budget is reaped by the pool watchdog — the
+    /// block fails with [`FaultKind::Timeout`] and heals through cone
+    /// replay like any other terminal fault.  Must comfortably exceed
+    /// one block's execute+writeback; it bounds *hangs*, not slowness.
+    pub job_timeout: Option<Duration>,
+    /// Absolute run deadline.  On expiry the driver stops dispatching,
+    /// fences queued jobs behind a fresh pool epoch, cancels incomplete
+    /// cones and returns with [`WaveOutcome::deadline_exceeded`] set
+    /// (in-flight blocks are allowed [`DEADLINE_DRAIN_SLACK`] to
+    /// finish) instead of blocking in `wait_idle`.
+    pub deadline: Option<Instant>,
+}
+
+impl RunLimits {
+    pub fn with_job_timeout(mut self, budget: Duration) -> Self {
+        self.job_timeout = Some(budget);
+        self
+    }
+
+    pub fn with_deadline(mut self, at: Instant) -> Self {
+        self.deadline = Some(at);
+        self
+    }
+}
+
+/// How long past an expired [`RunLimits::deadline`] the driver waits
+/// for already-running block jobs to drain before giving up on the
+/// pool (queued jobs are epoch-fenced and complete `Skipped`
+/// immediately; only genuinely in-flight bodies consume slack).  A
+/// budgeted run is additionally bounded by the watchdog; an unbudgeted
+/// hung body past this slack surfaces as an infrastructure error.
+pub const DEADLINE_DRAIN_SLACK: Duration = Duration::from_secs(10);
+
 /// One *healed* block fault: the block failed terminally, its cone was
 /// re-armed under the run's [`ReplayPolicy`], and a later round ran it
 /// to completion — the output it feeds is whole, not partial.
@@ -1234,6 +1317,15 @@ pub struct WaveOutcome {
     /// Faults healed by cone replay ([`ReplayPolicy`]); empty when the
     /// run was fault-free or replay was off.
     pub replays: Vec<ConeReplay>,
+    /// Blocks with no output that are in neither `faults` nor
+    /// `cancelled`: the run's deadline expired before they could run
+    /// (fenced while queued, or never dispatched).  Always empty when
+    /// `deadline_exceeded` is false.
+    pub unfinished: Vec<(usize, usize)>,
+    /// True when [`RunLimits::deadline`] expired mid-run: dispatch
+    /// stopped, incomplete cones were cancelled, and the per-block
+    /// picture is partial (`faults`/`cancelled`/`unfinished`).
+    pub deadline_exceeded: bool,
 }
 
 /// Deterministic fault-injection plan for the chaos harness: faults
@@ -1250,6 +1342,42 @@ pub struct FaultPlan {
     /// Kill the executing lane thread at these keys (the job fails
     /// with `Panic`; the lane supervisor respawns the lane).
     pub lane_kill: Vec<(usize, usize, u32)>,
+    /// Park the job body on the plan's gate at these keys — a
+    /// deterministic hang, released only by
+    /// [`FaultPlan::release_hangs`].  With a [`RunLimits::job_timeout`]
+    /// the pool watchdog reaps the parked lane (`Timeout`); the woken
+    /// body then fails [`crate::runtime::pool::commit_current_job`]
+    /// and returns without touching the grid.
+    pub hang: Vec<(usize, usize, u32)>,
+    /// The gate hung jobs park on; cloned plans share it, so one
+    /// `release_hangs` releases every zombie before a test tears the
+    /// pool down.
+    gate: Arc<HangGate>,
+}
+
+/// Chaos gate for [`FaultPlan::hang`]: a latch that parked job bodies
+/// wait on.  Release is sticky — hangs injected after the release fall
+/// straight through (the test has moved on to tear-down).
+#[cfg(any(test, feature = "chaos"))]
+struct HangGate {
+    released: Mutex<bool>,
+    cv: Condvar,
+}
+
+// Explicit (not derived) so the struct still builds when the sync shim
+// swaps in loom's primitives, which don't guarantee `Default` impls.
+#[cfg(any(test, feature = "chaos"))]
+impl Default for HangGate {
+    fn default() -> Self {
+        HangGate { released: Mutex::new(false), cv: Condvar::new() }
+    }
+}
+
+#[cfg(any(test, feature = "chaos"))]
+impl std::fmt::Debug for HangGate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HangGate").field("released", &*lock(&self.released)).finish()
+    }
 }
 
 #[cfg(any(test, feature = "chaos"))]
@@ -1269,6 +1397,20 @@ impl FaultPlan {
         self
     }
 
+    pub fn hang_at(mut self, w: usize, i: usize, attempt: u32) -> Self {
+        self.hang.push((w, i, attempt));
+        self
+    }
+
+    /// Open the hang gate (sticky): wakes every job parked by a `hang`
+    /// injection, including reaped zombies — call before dropping the
+    /// pool so a zombie parked on the gate can exit and be joined or
+    /// detached cleanly.
+    pub fn release_hangs(&self) {
+        *lock(&self.gate.released) = true;
+        self.gate.cv.notify_all();
+    }
+
     /// Fire whatever is registered for this `(wave, block, attempt)`
     /// key, called from the job body before the block executes.
     fn fire(&self, w: usize, i: usize, attempt: u32) -> crate::Result<()> {
@@ -1277,6 +1419,20 @@ impl FaultPlan {
         }
         if self.panic.contains(&(w, i, attempt)) {
             panic!("injected panic at block ({w},{i}) attempt {attempt}");
+        }
+        if self.hang.contains(&(w, i, attempt)) {
+            // Deterministic hang: park until release_hangs.  No clock,
+            // no sleep — the watchdog (if the job is budgeted) reaps
+            // the lane while we sit here; on release the body resumes
+            // and the commit fence decides whether it may still write.
+            let mut released = lock(&self.gate.released);
+            while !*released {
+                released = self
+                    .gate
+                    .cv
+                    .wait(released)
+                    .unwrap_or_else(PoisonError::into_inner);
+            }
         }
         if self.transient.contains(&(w, i, attempt)) {
             return Err(crate::runtime::transient(format!(
@@ -1315,7 +1471,15 @@ pub fn drive_wave_pool<S: WaveSpace + 'static>(
     mode: PassMode,
     extractors: usize,
 ) -> crate::Result<WaveOutcome> {
-    drive_wave_pool_inner(pool, space, mode, extractors, ReplayPolicy::none(), Default::default())
+    drive_wave_pool_inner(
+        pool,
+        space,
+        mode,
+        extractors,
+        ReplayPolicy::none(),
+        RunLimits::default(),
+        Default::default(),
+    )
 }
 
 /// [`drive_wave_pool`] with cone checkpoint/replay: when a block fails
@@ -1330,7 +1494,30 @@ pub fn drive_wave_pool_replay<S: WaveSpace + 'static>(
     extractors: usize,
     replay: ReplayPolicy,
 ) -> crate::Result<WaveOutcome> {
-    drive_wave_pool_inner(pool, space, mode, extractors, replay, Default::default())
+    drive_wave_pool_inner(
+        pool,
+        space,
+        mode,
+        extractors,
+        replay,
+        RunLimits::default(),
+        Default::default(),
+    )
+}
+
+/// [`drive_wave_pool_replay`] under wall-clock bounds (see
+/// [`RunLimits`] and the module docs § Time bounds) — the public form
+/// of the limits-threading drive the session layer uses when a
+/// `deadline` or `job_timeout` is configured.
+pub fn drive_wave_pool_limits<S: WaveSpace + 'static>(
+    pool: &RuntimePool,
+    space: &Arc<S>,
+    mode: PassMode,
+    extractors: usize,
+    replay: ReplayPolicy,
+    limits: RunLimits,
+) -> crate::Result<WaveOutcome> {
+    drive_wave_pool_inner(pool, space, mode, extractors, replay, limits, Default::default())
 }
 
 /// [`drive_wave_pool_replay`] with a deterministic [`FaultPlan`] — the
@@ -1346,7 +1533,23 @@ pub fn drive_wave_pool_chaos<S: WaveSpace + 'static>(
     replay: ReplayPolicy,
     plan: Arc<FaultPlan>,
 ) -> crate::Result<WaveOutcome> {
-    drive_wave_pool_inner(pool, space, mode, extractors, replay, Some(plan))
+    drive_wave_pool_inner(pool, space, mode, extractors, replay, RunLimits::default(), Some(plan))
+}
+
+/// [`drive_wave_pool_chaos`] under wall-clock bounds — the harness for
+/// hang injections, which only resolve when a `job_timeout` lets the
+/// watchdog reap the parked lane.
+#[cfg(any(test, feature = "chaos"))]
+pub fn drive_wave_pool_chaos_limits<S: WaveSpace + 'static>(
+    pool: &RuntimePool,
+    space: &Arc<S>,
+    mode: PassMode,
+    extractors: usize,
+    replay: ReplayPolicy,
+    limits: RunLimits,
+    plan: Arc<FaultPlan>,
+) -> crate::Result<WaveOutcome> {
+    drive_wave_pool_inner(pool, space, mode, extractors, replay, limits, Some(plan))
 }
 
 /// Shared trackers one pooled drive hands to each of its replay
@@ -1373,12 +1576,14 @@ struct RoundCtx {
     attempt_base: Arc<Mutex<HashMap<(usize, usize), u32>>>,
 }
 
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
     pool: &RuntimePool,
     space: &Arc<S>,
     mode: PassMode,
     extractors: usize,
     replay: ReplayPolicy,
+    limits: RunLimits,
     _inject: Injection,
 ) -> crate::Result<WaveOutcome> {
     let stats0 = pool.stats();
@@ -1405,6 +1610,7 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
     let mut replay_blocks = 0u64;
     let mut faults: Vec<BlockFault> = Vec::new();
     let mut cancelled: Vec<(usize, usize)> = Vec::new();
+    let mut deadline_exceeded = false;
 
     if total > 0 {
         // Cumulative execution attempts and failed-round counts per
@@ -1420,7 +1626,8 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
             // from an earlier round completes Skipped without running.
             let epoch = pool.advance_epoch();
             let batch = std::mem::take(&mut seeds);
-            drive_round(pool, space, &ctx, batch, target, extractors, round, epoch, &_inject)?;
+            let deadline_hit =
+                drive_round(pool, space, &ctx, batch, target, extractors, round, epoch, &limits, &_inject)?;
 
             let round_faults = std::mem::take(&mut *lock(&ctx.faults));
             let round_cancelled = std::mem::take(&mut *lock(&ctx.cancelled));
@@ -1428,17 +1635,34 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
                 *attempts_spent.entry((f.wave, f.index)).or_insert(0) += f.attempts;
                 *failed_rounds.entry((f.wave, f.index)).or_insert(0) += 1;
             }
-            // A block that failed last round but not this one healed:
-            // the replay ran it (and its cone) to completion.
+            // A block that failed last round but not this one — and
+            // actually completed — healed: the replay ran it (and its
+            // cone) to completion.  The completion check matters on a
+            // deadline-cut round, which can end with a block neither
+            // failed nor completed.
             for f in &pending {
                 let k = (f.wave, f.index);
-                if !round_faults.iter().any(|g| (g.wave, g.index) == k) {
+                if !round_faults.iter().any(|g| (g.wave, g.index) == k)
+                    && table.completed(f.wave, f.index)
+                {
                     replays.push(ConeReplay {
                         wave: f.wave,
                         index: f.index,
                         rounds: failed_rounds.get(&k).copied().unwrap_or(1),
                     });
                 }
+            }
+            if deadline_hit {
+                // Out of time: surface whatever this round left behind
+                // — no further replay, the partial per-block picture
+                // (plus `unfinished`, computed below) is the report.
+                faults = round_faults;
+                for f in &mut faults {
+                    f.attempts = attempts_spent[&(f.wave, f.index)];
+                }
+                cancelled = round_cancelled;
+                deadline_exceeded = true;
+                break;
             }
             if round_faults.is_empty() {
                 break; // clean round — nothing left to replay
@@ -1468,6 +1692,20 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
             round += 1;
         }
     }
+
+    // Blocks the deadline cut left in limbo: never completed, but not
+    // failed or cone-cancelled either (they simply never got submitted
+    // — or were fenced mid-flight by the epoch advance).
+    let unfinished: Vec<(usize, usize)> = if deadline_exceeded {
+        let known: HashSet<(usize, usize)> = faults
+            .iter()
+            .map(|f| (f.wave, f.index))
+            .chain(cancelled.iter().copied())
+            .collect();
+        table.unfinished().into_iter().filter(|b| !known.contains(b)).collect()
+    } else {
+        Vec::new()
+    };
 
     let stats = pool.stats();
     let counters = pool.fault_counters();
@@ -1501,8 +1739,10 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
         pool_evictions: space.pool_evictions(),
         cone_replays,
         replay_blocks,
+        job_timeouts: counters.job_timeouts - counters0.job_timeouts,
+        lanes_reaped: counters.lanes_reaped - counters0.lanes_reaped,
     };
-    Ok(WaveOutcome { metrics, faults, cancelled, replays })
+    Ok(WaveOutcome { metrics, faults, cancelled, replays, unfinished, deadline_exceeded })
 }
 
 /// Drive one replay round: feed the `seeds` frontier (a batch of
@@ -1510,6 +1750,12 @@ pub(crate) fn drive_wave_pool_inner<S: WaveSpace + 'static>(
 /// drain the lanes completely before returning.  Faults and
 /// cancellations land in the `ctx` vectors; the caller harvests them
 /// to decide whether — and what — to replay.
+///
+/// Returns `Ok(true)` when the round was cut short by
+/// [`RunLimits::deadline`]: the watcher aborted the ready queue and
+/// advanced the pool epoch, so still-queued jobs completed `Skipped`
+/// without running and blocks left on the queue were simply never
+/// submitted.  The caller must not replay after a deadline cut.
 #[allow(clippy::too_many_arguments)]
 fn drive_round<S: WaveSpace + 'static>(
     pool: &RuntimePool,
@@ -1520,24 +1766,112 @@ fn drive_round<S: WaveSpace + 'static>(
     extractors: usize,
     round: u64,
     epoch: u64,
+    limits: &RunLimits,
     _inject: &Injection,
-) -> crate::Result<()> {
+) -> crate::Result<bool> {
     let lanes = pool.lanes();
     let queue = Arc::new(ReadyQueue::new(target, seeds));
     let workers = extractors.clamp(1, target);
     ctx.round_tag.store(round, Ordering::Release);
 
+    // Deadline watcher plumbing: `fired` records that the cut
+    // happened; the (flag, condvar) pair wakes the watcher early when
+    // the round drains before the deadline, so it never outlives the
+    // scope that spawned it.
+    let deadline_fired = AtomicBool::new(false);
+    let watcher_done: (Mutex<bool>, Condvar) = (Mutex::new(false), Condvar::new());
+
     // SAFETY-relevant: jobs reach the caller's buffers through raw
     // handles inside the space; the IdleGuard drains the lanes
     // before those buffers can be freed, even on an unwinding exit.
     let guard = IdleGuard::new(pool);
+    let idle = std::thread::scope(|sc| {
+        if let Some(deadline) = limits.deadline {
+            let queue = Arc::clone(&queue);
+            let fired = &deadline_fired;
+            let done_pair = &watcher_done;
+            sc.spawn(move || {
+                let (flag, cv) = done_pair;
+                let mut done = lock(flag);
+                loop {
+                    if *done {
+                        return; // round drained in time — nothing to cut
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    done = cv
+                        .wait_timeout(done, deadline - now)
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .0;
+                }
+                drop(done);
+                // Deadline expired: stop handing out blocks, then
+                // fence everything already queued in the pool — a
+                // stale-epoch job completes `Skipped` without running.
+                fired.store(true, Ordering::Release);
+                queue.abort();
+                pool.advance_epoch();
+            });
+        }
+        extract_and_submit(pool, space, ctx, &queue, workers, lanes, round, epoch, limits, _inject);
+        // Drain the lanes: one wait per round — still the only place
+        // infrastructure errors surface.  With a deadline set the wait
+        // is bounded: budget remaining plus a fixed drain slack (the
+        // epoch fence retires queued jobs quickly; only a genuinely
+        // hung unbudgeted lane can exhaust the slack).
+        let idle = match limits.deadline {
+            None => pool.wait_idle(),
+            Some(deadline) => {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                match pool.wait_idle_for(remaining + DEADLINE_DRAIN_SLACK) {
+                    Ok(true) => Ok(()),
+                    Ok(false) => Err(anyhow!(
+                        "pool failed to drain within {:?} past the run deadline \
+                         (a lane is hung with no job budget set)",
+                        DEADLINE_DRAIN_SLACK
+                    )),
+                    Err(e) => Err(e),
+                }
+            }
+        };
+        // Release the watcher before the scope joins it.
+        *lock(&watcher_done.0) = true;
+        watcher_done.1.notify_all();
+        idle
+    });
+    drop(guard);
+    idle?;
+    Ok(deadline_fired.load(Ordering::Acquire))
+}
+
+/// The extractor fan-out of one round: `workers` scoped threads pull
+/// ready blocks off `queue`, extract their tiles, and submit budgeted
+/// jobs to the pool.  Returns once the queue is exhausted (all blocks
+/// dispatched, cancelled, or the queue aborted) and every extractor
+/// has exited; submitted jobs may still be in flight.
+#[allow(clippy::too_many_arguments)]
+fn extract_and_submit<S: WaveSpace + 'static>(
+    pool: &RuntimePool,
+    space: &Arc<S>,
+    ctx: &RoundCtx,
+    queue: &Arc<ReadyQueue>,
+    workers: usize,
+    lanes: usize,
+    round: u64,
+    epoch: u64,
+    limits: &RunLimits,
+    _inject: &Injection,
+) {
     std::thread::scope(|sc| {
         for ex in 0..workers {
             // Move clones of the shared trackers into each
             // extractor (the closure must own them: `ex` forces a
             // `move` capture); `space` and `pool` are Copy borrows
             // that outlive the scope.
-            let queue = Arc::clone(&queue);
+            let queue = Arc::clone(queue);
+            let job_timeout = limits.job_timeout;
             let depth = Arc::clone(&ctx.depth);
             let table = Arc::clone(&ctx.table);
             let faults = Arc::clone(&ctx.faults);
@@ -1613,9 +1947,10 @@ fn drive_round<S: WaveSpace + 'static>(
                     #[cfg(any(test, feature = "chaos"))]
                     let mut chaos_attempt: u32 =
                         lock(&attempt_base).get(&(w, i)).copied().unwrap_or(0);
-                    pool.submit_tracked_scoped(
+                    pool.submit_tracked_budgeted(
                         Some(hint),
-                        epoch,
+                        Some(epoch),
+                        job_timeout,
                         move |_lane, rt| {
                             #[cfg(any(test, feature = "chaos"))]
                             {
@@ -1631,12 +1966,24 @@ fn drive_round<S: WaveSpace + 'static>(
                                 // Single-f32-output decompose fast
                                 // path (no Tensor wrapping).
                                 let out = rt.execute_f32(&artifact, tiles)?;
+                                // Commit fence: past here the watchdog
+                                // no longer reaps this job.  A claim
+                                // already lost means a replacement
+                                // lane owns the block — back out
+                                // before touching the grid.
+                                if !crate::runtime::commit_current_job() {
+                                    return Ok(());
+                                }
                                 t0 = Instant::now();
                                 // SAFETY: disjoint write targets
                                 // per the wave plan.
                                 unsafe { space_j.write_f32(w, i, &out) };
                             } else {
                                 let out = rt.execute(&artifact, tiles)?;
+                                // Commit fence — see the f32 branch.
+                                if !crate::runtime::commit_current_job() {
+                                    return Ok(());
+                                }
                                 t0 = Instant::now();
                                 // SAFETY: disjoint write targets
                                 // per the wave plan.
@@ -1713,11 +2060,6 @@ fn drive_round<S: WaveSpace + 'static>(
             });
         }
     });
-    // Drain the lanes: one wait_idle per round — still the only place
-    // infrastructure errors surface.
-    let idle = pool.wait_idle();
-    drop(guard);
-    idle
 }
 
 #[cfg(test)]

@@ -362,6 +362,14 @@ pub enum WorkloadStatus {
     /// upstream block's dependency cone and stayed cancelled after the
     /// replay budget; the stage's output is partial.
     Cancelled,
+    /// The run's wall-clock [`SessionBuilder::deadline`] expired
+    /// before every block of this stage completed: the driver aborted
+    /// the ready queue, fenced still-queued jobs behind a fresh pool
+    /// epoch, and returned with this stage's output partial.  A stage
+    /// that also owns a terminally failed block reports
+    /// [`WorkloadStatus::Failed`] instead (the fault is the more
+    /// specific diagnosis).
+    DeadlineExceeded,
 }
 
 impl WorkloadStatus {
@@ -405,6 +413,15 @@ pub struct RunReport {
     /// in global (fused wave, index) coordinates.  Empty on a
     /// fault-free run and when [`ReplayPolicy::none`] is in force.
     pub replays: Vec<ConeReplay>,
+    /// Blocks the run's [`SessionBuilder::deadline`] cut off before
+    /// they completed — neither faulted nor cone-cancelled, just never
+    /// run (or fenced mid-queue), in global (fused wave, index)
+    /// coordinates.  Always empty when the deadline did not fire.
+    pub unfinished: Vec<(usize, usize)>,
+    /// `true` when the run's wall-clock deadline fired and cut the
+    /// drive short — the per-stage statuses and `unfinished` describe
+    /// what the cut left behind.
+    pub deadline_exceeded: bool,
 }
 
 impl RunReport {
@@ -419,11 +436,11 @@ impl RunReport {
     }
 
     /// `true` when every stage ran strictly fault-free
-    /// ([`WorkloadStatus::Ok`]); a healed [`WorkloadStatus::Replayed`]
-    /// stage fails this check — use [`RunReport::completed`] to accept
-    /// both.
+    /// ([`WorkloadStatus::Ok`]) and no run deadline fired; a healed
+    /// [`WorkloadStatus::Replayed`] stage fails this check — use
+    /// [`RunReport::completed`] to accept both.
     pub fn ok(&self) -> bool {
-        self.statuses.iter().all(WorkloadStatus::is_ok)
+        !self.deadline_exceeded && self.statuses.iter().all(WorkloadStatus::is_ok)
     }
 
     /// `true` when every stage's output is whole — `Ok` or healed by
@@ -454,6 +471,8 @@ pub struct SessionBuilder {
     extractors: Option<usize>,
     pinning: Pinning,
     replay: ReplayPolicy,
+    deadline: Option<Duration>,
+    job_timeout: Option<Duration>,
 }
 
 impl Default for SessionBuilder {
@@ -465,6 +484,8 @@ impl Default for SessionBuilder {
             extractors: None,
             pinning: Pinning::None,
             replay: ReplayPolicy::default(),
+            deadline: None,
+            job_timeout: None,
         }
     }
 }
@@ -532,6 +553,26 @@ impl SessionBuilder {
         self
     }
 
+    /// Wall-clock budget for each [`Session::run`] call, measured from
+    /// run entry (default none).  On expiry the drive aborts: queued
+    /// blocks are fenced, incomplete cones cancelled, and the report
+    /// comes back with [`RunReport::deadline_exceeded`] set and
+    /// [`WorkloadStatus::DeadlineExceeded`] on the cut stages —
+    /// instead of blocking in `wait_idle`.
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Per-block-job wall-clock budget (default none).  A lane stuck
+    /// past the budget is reaped by the pool watchdog and the block
+    /// fails with [`FaultKind::Timeout`], healing through cone replay
+    /// like any other terminal fault.
+    pub fn job_timeout(mut self, budget: Duration) -> Self {
+        self.job_timeout = Some(budget);
+        self
+    }
+
     /// Open the artifact directory and spin up the lane pool.
     pub fn build(self) -> crate::Result<Session<'static>> {
         let lanes = clamp_lanes(self.lanes, self.pinning, available_cores());
@@ -544,6 +585,8 @@ impl SessionBuilder {
             mode: self.mode,
             extractors: self.extractors,
             replay: self.replay,
+            deadline: self.deadline,
+            job_timeout: self.job_timeout,
             totals: Mutex::new(Metrics::default()),
         })
     }
@@ -565,6 +608,8 @@ pub struct Session<'p> {
     mode: PassMode,
     extractors: Option<usize>,
     replay: ReplayPolicy,
+    deadline: Option<Duration>,
+    job_timeout: Option<Duration>,
     totals: Mutex<Metrics>,
 }
 
@@ -585,6 +630,8 @@ impl<'p> Session<'p> {
             mode: PassMode::Pipelined,
             extractors: None,
             replay: ReplayPolicy::default(),
+            deadline: None,
+            job_timeout: None,
             totals: Mutex::new(Metrics::default()),
         }
     }
@@ -604,6 +651,20 @@ impl<'p> Session<'p> {
     /// Override the cone-replay budget (default one replay round).
     pub fn with_replay(mut self, replay: ReplayPolicy) -> Self {
         self.replay = replay;
+        self
+    }
+
+    /// Override the per-run wall-clock deadline (default none); see
+    /// [`SessionBuilder::deadline`].
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Override the per-job budget (default none); see
+    /// [`SessionBuilder::job_timeout`].
+    pub fn with_job_timeout(mut self, budget: Duration) -> Self {
+        self.job_timeout = Some(budget);
         self
     }
 
@@ -666,6 +727,12 @@ impl<'p> Session<'p> {
     fn run_inner(&self, chain: Chain, inject: passdriver::Injection) -> crate::Result<RunReport> {
         let t0 = Instant::now();
         ensure!(!chain.stages.is_empty(), "cannot run an empty chain");
+        // Anchor the deadline at run entry, so lowering and artifact
+        // warmup spend from the same budget the drive does.
+        let limits = passdriver::RunLimits {
+            job_timeout: self.job_timeout,
+            deadline: self.deadline.map(|d| t0 + d),
+        };
         let pool = self.pool();
 
         let mut artifacts: Vec<String> = Vec::new();
@@ -702,12 +769,18 @@ impl<'p> Session<'p> {
             self.mode,
             extractors,
             self.replay,
+            limits,
             inject,
         )?;
         // The drive has quiesced every lane; copying outputs through
         // the raw handles is race-free now.
         let outputs = space.outputs();
-        let statuses = space.statuses(&outcome.faults, &outcome.cancelled, &outcome.replays);
+        let statuses = space.statuses(
+            &outcome.faults,
+            &outcome.cancelled,
+            &outcome.replays,
+            &outcome.unfinished,
+        );
         lock(&self.totals).merge(&outcome.metrics);
         Ok(RunReport {
             metrics: outcome.metrics,
@@ -716,6 +789,8 @@ impl<'p> Session<'p> {
             statuses,
             cancelled: outcome.cancelled,
             replays: outcome.replays,
+            unfinished: outcome.unfinished,
+            deadline_exceeded: outcome.deadline_exceeded,
         })
     }
 }
@@ -1633,19 +1708,22 @@ impl FusedSpace {
             .collect()
     }
 
-    /// Map the drive's per-block fault / cancellation / replay record
-    /// onto per-stage statuses: a stage owning a terminally failed
-    /// block is `Failed` (first fault wins), a stage whose only
-    /// casualties were cancelled cone members is `Cancelled`, a stage
-    /// whose faulted blocks were all healed by cone replay is
-    /// `Replayed` (worst replay-round count wins), everything else is
-    /// `Ok` — including stages whose blocks were merely re-driven as
-    /// healthy cone members.
+    /// Map the drive's per-block fault / cancellation / replay /
+    /// unfinished record onto per-stage statuses: a stage owning a
+    /// terminally failed block is `Failed` (first fault wins), a stage
+    /// the deadline cut off mid-flight is `DeadlineExceeded`, a stage
+    /// whose only casualties were cancelled cone members is
+    /// `Cancelled`, a stage whose faulted blocks were all healed by
+    /// cone replay is `Replayed` (worst replay-round count wins),
+    /// everything else is `Ok` — including stages whose blocks were
+    /// merely re-driven as healthy cone members.  Precedence:
+    /// `Failed > DeadlineExceeded > Cancelled > Replayed > Ok`.
     pub(crate) fn statuses(
         &self,
         faults: &[BlockFault],
         cancelled: &[(usize, usize)],
         replays: &[ConeReplay],
+        unfinished: &[(usize, usize)],
     ) -> Vec<WorkloadStatus> {
         let mut st = vec![WorkloadStatus::Ok; self.frags.len()];
         for r in replays {
@@ -1661,6 +1739,12 @@ impl FusedSpace {
             let (k, _) = self.locate(w);
             if st[k].completed() {
                 st[k] = WorkloadStatus::Cancelled;
+            }
+        }
+        for &(w, _) in unfinished {
+            let (k, _) = self.locate(w);
+            if !matches!(st[k], WorkloadStatus::Failed(_)) {
+                st[k] = WorkloadStatus::DeadlineExceeded;
             }
         }
         for f in faults {
@@ -2176,16 +2260,25 @@ mod tests {
             statuses: vec![WorkloadStatus::Ok, WorkloadStatus::Ok],
             cancelled: Vec::new(),
             replays: Vec::new(),
+            unfinished: Vec::new(),
+            deadline_exceeded: false,
         };
         assert_eq!(report.output(), &WorkloadOutput::Row(vec![1, 2]));
         assert!(report.ok());
         assert!(report.completed());
+        assert!(!report.deadline_exceeded);
         assert_eq!(report.first_fault(), None);
 
         // A healed stage is completed but not strictly ok.
         report.statuses[1] = WorkloadStatus::Replayed { attempts: 1 };
         assert!(!report.ok());
         assert!(report.completed());
+        assert_eq!(report.first_fault(), None);
+
+        // A deadline-cut stage is neither ok nor completed.
+        report.statuses[1] = WorkloadStatus::DeadlineExceeded;
+        assert!(!report.ok());
+        assert!(!report.completed());
         assert_eq!(report.first_fault(), None);
 
         report.statuses[1] = WorkloadStatus::Failed(fault.clone());
@@ -2207,7 +2300,7 @@ mod tests {
 
         // Fault-free record: everything Ok.
         assert_eq!(
-            fused.statuses(&[], &[], &[]),
+            fused.statuses(&[], &[], &[], &[]),
             vec![WorkloadStatus::Ok, WorkloadStatus::Ok]
         );
 
@@ -2220,7 +2313,7 @@ mod tests {
             attempts: 3,
             message: "injected".into(),
         };
-        let st = fused.statuses(&[fault.clone()], &[], &[]);
+        let st = fused.statuses(&[fault.clone()], &[], &[], &[]);
         assert_eq!(st[1], WorkloadStatus::Ok);
         match &st[0] {
             WorkloadStatus::Failed(f) => {
@@ -2233,7 +2326,7 @@ mod tests {
 
         // Cancellations land on the stage that owns the global wave,
         // and a stage's own fault outranks a cancellation mark.
-        let st = fused.statuses(&[fault], &[(1, 3), (3, 0)], &[]);
+        let st = fused.statuses(&[fault], &[(1, 3), (3, 0)], &[], &[]);
         assert!(matches!(st[0], WorkloadStatus::Failed(_)));
         assert_eq!(st[1], WorkloadStatus::Cancelled);
         assert!(!st[1].is_ok());
@@ -2253,7 +2346,7 @@ mod tests {
             ConeReplay { wave: 0, index: 1, rounds: 1 },
             ConeReplay { wave: 1, index: 0, rounds: 2 },
         ];
-        let st = fused.statuses(&[], &[], &replays);
+        let st = fused.statuses(&[], &[], &replays, &[]);
         assert_eq!(st[0], WorkloadStatus::Replayed { attempts: 2 });
         assert!(st[0].completed() && !st[0].is_ok());
         assert_eq!(st[1], WorkloadStatus::Ok);
@@ -2261,7 +2354,7 @@ mod tests {
         // A stage that still has cancelled blocks after the replay
         // budget is Cancelled even if another of its faults healed,
         // and a terminal fault outranks everything.
-        let st = fused.statuses(&[], &[(1, 3)], &replays);
+        let st = fused.statuses(&[], &[(1, 3)], &replays, &[]);
         assert_eq!(st[0], WorkloadStatus::Cancelled);
         let fault = BlockFault {
             wave: 0,
@@ -2270,7 +2363,38 @@ mod tests {
             attempts: 6,
             message: "injected".into(),
         };
-        let st = fused.statuses(&[fault], &[], &replays);
+        let st = fused.statuses(&[fault], &[], &replays, &[]);
+        assert!(matches!(st[0], WorkloadStatus::Failed(_)));
+    }
+
+    #[test]
+    fn statuses_map_unfinished_blocks_to_deadline_exceeded() {
+        let a = blur_frag(StencilInput::Own(rand_grid(8, 8, 25)), 2);
+        let b = blur_frag(StencilInput::Own(rand_grid(8, 8, 26)), 2);
+        let fused = FusedSpace::splice(vec![Box::new(a), Box::new(b)], vec![false, false]);
+
+        // Stage A was cut mid-flight (unfinished blocks in wave 1);
+        // stage B finished everything and stays Ok.
+        let st = fused.statuses(&[], &[], &[], &[(1, 0), (1, 3)]);
+        assert_eq!(st[0], WorkloadStatus::DeadlineExceeded);
+        assert!(!st[0].is_ok() && !st[0].completed());
+        assert_eq!(st[1], WorkloadStatus::Ok);
+
+        // The deadline mark outranks a cancelled-cone mark on the
+        // same stage...
+        let st = fused.statuses(&[], &[(1, 1)], &[], &[(1, 0)]);
+        assert_eq!(st[0], WorkloadStatus::DeadlineExceeded);
+
+        // ...but a terminal fault outranks the deadline mark: the
+        // fault is the more specific diagnosis.
+        let fault = BlockFault {
+            wave: 1,
+            index: 2,
+            kind: FaultKind::Timeout,
+            attempts: 1,
+            message: "lane reaped".into(),
+        };
+        let st = fused.statuses(&[fault], &[], &[], &[(1, 0)]);
         assert!(matches!(st[0], WorkloadStatus::Failed(_)));
     }
 

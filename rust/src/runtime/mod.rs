@@ -19,7 +19,8 @@ pub mod registry;
 pub mod topology;
 
 pub use pool::{
-    FaultCounters, JobStatus, LaneHint, PoolConfig, RetryPolicy, RuntimePool, SchedCounters,
+    commit_current_job, FaultCounters, JobStatus, LaneHint, PoolConfig, RetryPolicy, RuntimePool,
+    SchedCounters,
 };
 pub use registry::{ArtifactSpec, DType, Registry, TensorSpec};
 pub use topology::Pinning;
@@ -47,6 +48,11 @@ pub enum FaultKind {
     Fatal,
     /// The job body panicked.  Never retried.
     Panic,
+    /// The job overran its wall-clock budget and its lane was reaped
+    /// by the watchdog (see `README.md` § Deadlines & watchdog).  The
+    /// lane may still be stuck, so the same lane cannot retry; the
+    /// wave driver heals the block through cone replay instead.
+    Timeout,
 }
 
 impl FaultKind {
@@ -54,7 +60,19 @@ impl FaultKind {
     /// Errors that never got classified (manifest loading, driver
     /// internals) default to `Fatal` — retrying the unknown is never
     /// safe.
+    ///
+    /// A `Fault` can enter the chain two ways: as the root error
+    /// (`anyhow::Error::new(Fault { .. })`, possibly under any number
+    /// of `.context(..)` layers) or as a context *value*
+    /// (`.context(Fault { .. })`).  The whole-error `downcast_ref`
+    /// sees context values through anyhow's vtable; the chain walk
+    /// sees root errors at any wrapping depth.  Both probes are
+    /// needed — either alone misclassifies the other shape as
+    /// `Fatal`.
     pub fn of(err: &anyhow::Error) -> FaultKind {
+        if let Some(f) = err.downcast_ref::<Fault>() {
+            return f.kind;
+        }
         err.chain()
             .find_map(|c| c.downcast_ref::<Fault>())
             .map_or(FaultKind::Fatal, |f| f.kind)
@@ -67,6 +85,7 @@ impl std::fmt::Display for FaultKind {
             FaultKind::Transient => "transient",
             FaultKind::Fatal => "fatal",
             FaultKind::Panic => "panic",
+            FaultKind::Timeout => "timeout",
         })
     }
 }
@@ -401,5 +420,35 @@ mod tests {
         // classify as Fatal: retrying the unknown is never safe.
         let plain = anyhow!("unknown artifact 'nope'");
         assert_eq!(FaultKind::of(&plain), FaultKind::Fatal);
+    }
+
+    #[test]
+    fn fault_classification_survives_nested_contexts() {
+        // A tag buried under several `.context(..)` layers — the shape
+        // the wave driver produces when a block error crosses the
+        // extractor and the pool boundary — must keep its class.
+        let e = transient("execute hiccup".into())
+            .context("running block (1, 2)")
+            .context("wave 1 of 4")
+            .context("stage 'diffusion2d_r1'");
+        assert_eq!(FaultKind::of(&e), FaultKind::Transient);
+        // The full chain still renders outermost-first.
+        let rendered = format!("{e:#}");
+        assert!(rendered.starts_with("stage 'diffusion2d_r1'"));
+        assert!(rendered.contains("execute hiccup"));
+    }
+
+    #[test]
+    fn fault_attached_as_context_value_is_classified() {
+        // A `Fault` used as the context *value* (not the root error) is
+        // only visible to the whole-error downcast, not the per-element
+        // chain walk: `ContextError<Fault, _>` is the chain element and
+        // does not itself downcast to `Fault`.
+        let e = anyhow!("raw PJRT status")
+            .context(Fault { kind: FaultKind::Timeout, msg: "lane 3 reaped".into() });
+        assert_eq!(FaultKind::of(&e), FaultKind::Timeout);
+        // ... even under a further plain-text layer.
+        let e = e.context("collecting block (0, 0)");
+        assert_eq!(FaultKind::of(&e), FaultKind::Timeout);
     }
 }

@@ -62,12 +62,39 @@
 //! supervisor (re-)applies the lane's CPU affinity at the top of every
 //! supervision iteration, so a respawned lane lands back on its node
 //! before its fresh PJRT client allocates.
+//!
+//! ## Deadlines & watchdog (PR 10)
+//!
+//! Retry and respawn cover jobs that *fail*; neither covers a job that
+//! simply never returns — a hung `compile`/`execute` would park the
+//! closing `wait_idle` forever.  Tracked jobs may therefore carry a
+//! wall-clock **budget** ([`RuntimePool::submit_tracked_budgeted`]).
+//! Each lane owns a [`Heartbeat`] word (`(seq << 2) | state`, states
+//! IDLE/BUSY/COMMITTED/REAPED) stamped at job start; a **watchdog**
+//! thread sleeps until the nearest armed deadline and, on expiry, CASes
+//! the stuck lane's word `BUSY -> REAPED`.  Winning that CAS transfers
+//! ownership of the job: the watchdog fires the parked completion
+//! callback as `Failed` with [`FaultKind::Timeout`], releases the
+//! in-flight count, and spawns a replacement lane thread — the stuck
+//! thread becomes a *zombie* that, if it ever wakes, loses the same CAS
+//! at its job guard and exits without firing anything (the callback
+//! stays exactly-once; `tests/loom.rs` model-checks the handshake).
+//! A job body that writes results through raw pointers calls
+//! [`commit_current_job`] first: the `BUSY -> COMMITTED` transition
+//! closes the reap window, so a zombie can never write into buffers a
+//! replay round has re-driven.  When every lane has died for good
+//! (respawn failures, reaps with failed replacements),
+//! [`RuntimePool::wait_idle`] reports an error and completes the
+//! stranded queue as `Skipped` instead of deadlocking, and
+//! [`RuntimePool::wait_idle_for`] bounds the wait for run-level
+//! deadlines (see `coordinator::passdriver`).
 
+use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context};
 
@@ -96,6 +123,159 @@ pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 /// model (`tests/loom.rs`) checks exactly this property.
 pub(crate) fn epoch_stale(epoch: Option<u64>, current: &AtomicU64) -> bool {
     epoch.is_some_and(|e| e != current.load(Ordering::Acquire))
+}
+
+/// Heartbeat word states (low two bits of [`Heartbeat::word`]).
+const BEAT_IDLE: u64 = 0;
+const BEAT_BUSY: u64 = 1;
+const BEAT_COMMITTED: u64 = 2;
+const BEAT_REAPED: u64 = 3;
+
+fn beat_pack(seq: u64, state: u64) -> u64 {
+    (seq << 2) | state
+}
+
+/// One lane's heartbeat: the word a budgeted job stamps at start and
+/// reclaims at finish, and the watchdog inspects in between.  The word
+/// packs a monotonic per-lane sequence number with a state in the low
+/// two bits; every ownership transfer is a CAS on the exact packed
+/// value, so a zombie lane holding a stale sequence can never win a
+/// transition against its replacement (sequences only grow).  The
+/// parked completion callback travels in `done_slot`: whichever side
+/// wins the word — lane finish or watchdog reap — takes the callback
+/// out and fires it, which is what makes the handshake exactly-once
+/// (model-checked in `tests/loom.rs`).
+pub(crate) struct Heartbeat {
+    /// `(seq << 2) | state`; see [`beat_pack`] and the `BEAT_*` states.
+    word: AtomicU64,
+    /// Absolute budget expiry in µs since the pool's `t0`
+    /// (`u64::MAX` = unbudgeted, never reaped).  Stored before the
+    /// `BUSY` stamp's Release store, read after the watchdog's Acquire
+    /// load of the word, so the pair is always consistent.
+    deadline_us: AtomicU64,
+    /// The budgeted job's parked completion callback.
+    done_slot: Mutex<Option<DoneFn>>,
+    /// The stamping thread's id, recorded alongside every stamp: a
+    /// reaped thread's id moves to `Shared::zombies` so shutdown can
+    /// skip joining a thread that may never wake.
+    thread: Mutex<Option<std::thread::ThreadId>>,
+}
+
+impl Heartbeat {
+    fn new() -> Heartbeat {
+        Heartbeat {
+            word: AtomicU64::new(beat_pack(0, BEAT_IDLE)),
+            deadline_us: AtomicU64::new(u64::MAX),
+            done_slot: Mutex::new(None),
+            thread: Mutex::new(None),
+        }
+    }
+
+    /// Lane side, job start: stamp `BUSY` with the next sequence number
+    /// and the absolute deadline; returns the sequence the lane must
+    /// later claim back via [`Heartbeat::finish`].  Only the lane that
+    /// owns this beat stamps it (zombies never reach a stamp — they
+    /// exit at their job guard), so a plain load+store suffices.
+    fn stamp(&self, deadline_us: u64) -> u64 {
+        let seq = (self.word.load(Ordering::Relaxed) >> 2) + 1;
+        self.deadline_us.store(deadline_us, Ordering::Relaxed);
+        self.word.store(beat_pack(seq, BEAT_BUSY), Ordering::Release);
+        seq
+    }
+
+    /// Job-body side, pre-writeback commit fence: `BUSY -> COMMITTED`
+    /// closes the reap window.  Also true when `seq` is already
+    /// committed (a retry attempt after a committed one).
+    fn try_commit(&self, seq: u64) -> bool {
+        if self
+            .word
+            .compare_exchange(
+                beat_pack(seq, BEAT_BUSY),
+                beat_pack(seq, BEAT_COMMITTED),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok()
+        {
+            return true;
+        }
+        self.word.load(Ordering::Acquire) == beat_pack(seq, BEAT_COMMITTED)
+    }
+
+    /// Lane side, job end: reclaim the word (`BUSY|COMMITTED -> IDLE`).
+    /// `false` means the watchdog reaped this sequence first — the
+    /// caller is a zombie and must fire nothing.
+    fn finish(&self, seq: u64) -> bool {
+        for from in [BEAT_BUSY, BEAT_COMMITTED] {
+            if self
+                .word
+                .compare_exchange(
+                    beat_pack(seq, from),
+                    beat_pack(seq, BEAT_IDLE),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+                .is_ok()
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Watchdog side: `BUSY -> REAPED`.  `false` means the job finished
+    /// or committed between the deadline scan and this CAS — too late
+    /// to reap, the lane keeps ownership.
+    fn try_reap(&self, seq: u64) -> bool {
+        self.word
+            .compare_exchange(
+                beat_pack(seq, BEAT_BUSY),
+                beat_pack(seq, BEAT_REAPED),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok()
+    }
+
+    /// Has this claim been taken away?  (Post-wake zombie probe: skips
+    /// retries and fault double-accounting.)  While the owning job is
+    /// live the word is `BUSY`/`COMMITTED` at exactly `seq`; anything
+    /// else means the watchdog reaped it — including the case where the
+    /// replacement lane has already re-stamped the beat past `seq`.
+    /// Only call while the job that holds `seq` is still running (after
+    /// its own `finish` the word is legitimately `IDLE`).
+    fn is_reaped(&self, seq: u64) -> bool {
+        let word = self.word.load(Ordering::Acquire);
+        word != beat_pack(seq, BEAT_BUSY) && word != beat_pack(seq, BEAT_COMMITTED)
+    }
+}
+
+std::thread_local! {
+    /// Set when this lane thread discovers (via a failed finish claim)
+    /// that the watchdog reaped its job: the thread must exit without
+    /// respawning — the watchdog already spawned its replacement — and
+    /// without touching the live-lane count (the watchdog kept it).
+    static LANE_REAPED: Cell<bool> = const { Cell::new(false) };
+
+    /// The running budgeted job's heartbeat claim, visible to the job
+    /// body through [`commit_current_job`].
+    static CURRENT_CLAIM: RefCell<Option<(Arc<Heartbeat>, u64)>> = const { RefCell::new(None) };
+}
+
+/// Pre-writeback commit fence for budgeted jobs.  A job body that is
+/// about to write results through raw pointers (the wave driver's
+/// grid writers) calls this first: `true` means the job still owns its
+/// heartbeat (the `BUSY -> COMMITTED` transition closed the watchdog's
+/// reap window) and the writes are safe; `false` means the watchdog
+/// reaped the job while it was stuck — the caller is running on a
+/// zombie lane and must return *without* writing (its buffers may
+/// already be re-driven by a replay round).  Unbudgeted jobs have no
+/// claim and always commit.
+pub fn commit_current_job() -> bool {
+    CURRENT_CLAIM.with(|c| match c.borrow().as_ref() {
+        Some((beat, seq)) => beat.try_commit(*seq),
+        None => true,
+    })
 }
 
 /// A sticky lane preference for a submitted job (shard index modulo the
@@ -195,6 +375,13 @@ pub struct FaultCounters {
     pub jobs_failed: u64,
     /// Lane threads respawned after a panic escaped job isolation.
     pub lane_restarts: u64,
+    /// Budgeted jobs completed as [`FaultKind::Timeout`] by the
+    /// watchdog (also counted in `jobs_failed`).
+    pub job_timeouts: u64,
+    /// Lane threads reaped by the watchdog (each replaced by a fresh
+    /// lane; disjoint from `lane_restarts`, which counts panic
+    /// respawns).
+    pub lanes_reaped: u64,
 }
 
 /// Snapshot of the sharded scheduler's locality counters since open.
@@ -245,6 +432,13 @@ struct Job {
     /// back or double-fire into a re-armed wave table.  `None` (every
     /// unscoped submission) is never stale.
     epoch: Option<u64>,
+    /// Wall-clock budget for tracked jobs
+    /// ([`RuntimePool::submit_tracked_budgeted`]): the lane arms its
+    /// heartbeat with `now + budget` at job start, and the watchdog
+    /// reaps the lane — completing the job as [`FaultKind::Timeout`] —
+    /// if the body is still running past that deadline.  `None` (every
+    /// other submission) is never reaped.
+    budget: Option<Duration>,
 }
 
 /// One lane's run queue: a single-item LIFO slot for the newest hinted
@@ -272,6 +466,12 @@ struct QueueState {
     closed: bool,
     /// Round-robin cursor for unhinted jobs.
     rr: usize,
+    /// Lane threads currently able to pop work.  Starts at the lane
+    /// count; a permanent lane death (respawn failure, reap whose
+    /// replacement failed to spawn) decrements it.  At zero with work
+    /// still queued the pool is *dead*: `wait_idle` reports an error
+    /// and drains the queue as `Skipped` instead of parking forever.
+    alive: usize,
 }
 
 impl QueueState {
@@ -327,6 +527,21 @@ impl QueueState {
             }
         }
         None
+    }
+
+    /// Remove every queued job (dead-pool drain): no lane will ever
+    /// pop them, so the caller completes their callbacks as `Skipped`
+    /// outside the lock.
+    fn drain_all(&mut self) -> Vec<Job> {
+        let mut out = Vec::with_capacity(self.queued);
+        for shard in &mut self.shards {
+            if let Some(job) = shard.slot.take() {
+                out.push(job);
+            }
+            out.extend(shard.fifo.drain(..));
+        }
+        self.queued = 0;
+        out
     }
 }
 
@@ -415,6 +630,8 @@ struct Shared {
     job_retries: AtomicU64,
     jobs_failed: AtomicU64,
     lane_restarts: AtomicU64,
+    job_timeouts: AtomicU64,
+    lanes_reaped: AtomicU64,
     /// Current submission epoch for replay-scoped tracked jobs (see
     /// [`RuntimePool::advance_epoch`]).  Monotonic; never reset.
     epoch: AtomicU64,
@@ -423,6 +640,28 @@ struct Shared {
     plan: PinPlan,
     /// `true` when the pool runs >1 shard (locality accounting active).
     multi_shard: bool,
+    /// Per-lane heartbeat words, indexed by lane (see [`Heartbeat`]).
+    beats: Vec<Arc<Heartbeat>>,
+    /// Watchdog wake signal, paired with `state`: stamped deadlines
+    /// and shutdown both notify here.
+    watchdog_wake: Condvar,
+    /// Replacement lane threads spawned by the watchdog after a reap;
+    /// joined at shutdown.
+    extra_handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Thread ids of reaped (zombie) lane threads: they may be parked
+    /// in a hung body forever, so shutdown detaches instead of joining
+    /// them.
+    zombies: Mutex<Vec<std::thread::ThreadId>>,
+    /// Wall-clock origin for heartbeat deadlines.
+    t0: Instant,
+    /// Artifact directory + manifest for watchdog replacement spawns.
+    dir: PathBuf,
+    registry: Registry,
+    /// Chaos hook: make every lane *respawn* (not the initial spawn)
+    /// fail, so tests can kill lanes permanently and exercise the
+    /// dead-pool paths.
+    #[cfg(any(test, feature = "chaos"))]
+    fail_respawns: AtomicBool,
 }
 
 impl Shared {
@@ -430,12 +669,36 @@ impl Shared {
         self.poisoned.store(true, Ordering::Release);
         lock(&self.error).get_or_insert(e);
     }
+
+    /// A lane thread is gone for good (respawn failure, or a reap
+    /// whose replacement could not be spawned).  When the last lane
+    /// dies, wake everyone parked on the pool: `wait_idle` callers
+    /// must report a dead pool, blocked producers must stop waiting
+    /// for space that will never come.
+    fn lane_gone(&self) {
+        let mut st = lock(&self.state);
+        st.alive = st.alive.saturating_sub(1);
+        let dead = st.alive == 0;
+        drop(st);
+        if dead {
+            self.idle.notify_all();
+            self.space.notify_all();
+        }
+    }
+
+    /// µs since the pool opened (heartbeat deadline clock).
+    fn now_us(&self) -> u64 {
+        u64::try_from(self.t0.elapsed().as_micros()).unwrap_or(u64::MAX)
+    }
 }
 
 /// `N` lane threads, each with its own PJRT client and compile cache.
 pub struct RuntimePool {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
+    /// The deadline watchdog (see the module docs § Deadlines &
+    /// watchdog); joined after the lanes at shutdown.
+    watchdog: Option<JoinHandle<()>>,
     registry: Registry,
     lanes: usize,
 }
@@ -485,6 +748,7 @@ impl RuntimePool {
                 in_flight: 0,
                 closed: false,
                 rr: 0,
+                alive: lanes,
             }),
             job_ready: Condvar::new(),
             space: Condvar::new(),
@@ -496,10 +760,21 @@ impl RuntimePool {
             job_retries: AtomicU64::new(0),
             jobs_failed: AtomicU64::new(0),
             lane_restarts: AtomicU64::new(0),
+            job_timeouts: AtomicU64::new(0),
+            lanes_reaped: AtomicU64::new(0),
             epoch: AtomicU64::new(0),
             queue_cap: (lanes * 4).max(8),
             plan: PinPlan::new(config.pinning, lanes),
             multi_shard: nshards > 1,
+            beats: (0..lanes).map(|_| Arc::new(Heartbeat::new())).collect(),
+            watchdog_wake: Condvar::new(),
+            extra_handles: Mutex::new(Vec::new()),
+            zombies: Mutex::new(Vec::new()),
+            t0: Instant::now(),
+            dir: dir.clone(),
+            registry: registry.clone(),
+            #[cfg(any(test, feature = "chaos"))]
+            fail_respawns: AtomicBool::new(false),
         });
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<crate::Result<()>>();
         let mut handles = Vec::with_capacity(lanes);
@@ -508,13 +783,12 @@ impl RuntimePool {
             let reg = registry.clone();
             let sh = shared.clone();
             let tx = ready_tx.clone();
-            // The one sanctioned unscoped-spawn site in the crate (see
-            // clippy.toml): lanes are supervised, join on shutdown, and
-            // respawn on death.
+            // A sanctioned unscoped-spawn site (see clippy.toml): lanes
+            // are supervised, join on shutdown, and respawn on death.
             #[allow(clippy::disallowed_methods)]
             let handle = match std::thread::Builder::new()
                 .name(format!("rt-lane-{lane}"))
-                .spawn(move || lane_entry(lane, dir, reg, sh, tx))
+                .spawn(move || lane_entry(lane, dir, reg, sh, Some(tx)))
             {
                 Ok(h) => h,
                 Err(e) => {
@@ -530,7 +804,21 @@ impl RuntimePool {
             handles.push(handle);
         }
         drop(ready_tx);
-        let pool = RuntimePool { shared, handles, registry, lanes };
+        // The watchdog sleeps until the nearest armed job deadline (or
+        // a wake signal) — it costs nothing while no job is budgeted.
+        let wd_shared = shared.clone();
+        #[allow(clippy::disallowed_methods)]
+        let watchdog = std::thread::Builder::new()
+            .name("rt-watchdog".into())
+            .spawn(move || watchdog_entry(wd_shared))
+            .map(Some)
+            .unwrap_or_else(|e| {
+                // A pool without a watchdog still runs; budgeted jobs
+                // just lose their reaping. Surface it as a pool error.
+                shared.record_error(anyhow!("spawning the watchdog failed: {e}"));
+                None
+            });
+        let pool = RuntimePool { shared, handles, watchdog, registry, lanes };
         for _ in 0..lanes {
             ready_rx
                 .recv()
@@ -568,7 +856,25 @@ impl RuntimePool {
             job_retries: self.shared.job_retries.load(Ordering::Relaxed),
             jobs_failed: self.shared.jobs_failed.load(Ordering::Relaxed),
             lane_restarts: self.shared.lane_restarts.load(Ordering::Relaxed),
+            job_timeouts: self.shared.job_timeouts.load(Ordering::Relaxed),
+            lanes_reaped: self.shared.lanes_reaped.load(Ordering::Relaxed),
         }
+    }
+
+    /// Lane threads currently able to pop work.  Less than
+    /// [`RuntimePool::lanes`] only after a lane died for good (its
+    /// respawn or watchdog replacement failed); zero means the pool is
+    /// dead and [`RuntimePool::wait_idle`] will report it.
+    pub fn alive_lanes(&self) -> usize {
+        lock(&self.shared.state).alive
+    }
+
+    /// Chaos hook: make every lane *respawn* from here on fail, so a
+    /// chaos kill (or a watchdog reap) becomes a permanent lane death.
+    /// Exercises the dead-pool reporting paths.
+    #[cfg(any(test, feature = "chaos"))]
+    pub fn chaos_fail_respawns(&self) {
+        self.shared.fail_respawns.store(true, Ordering::Release);
     }
 
     /// Snapshot the sharded scheduler's locality counters since open.
@@ -621,6 +927,7 @@ impl RuntimePool {
             policy: RetryPolicy::none(),
             hint,
             epoch: None,
+            budget: None,
         });
     }
 
@@ -661,6 +968,7 @@ impl RuntimePool {
             policy,
             hint,
             epoch: None,
+            budget: None,
         });
     }
 
@@ -696,18 +1004,44 @@ impl RuntimePool {
         F: FnMut(usize, &Runtime) -> crate::Result<()> + Send + 'static,
         C: FnOnce(JobStatus) + Send + 'static,
     {
+        self.submit_tracked_budgeted(hint, Some(epoch), None, job, policy, on_done);
+    }
+
+    /// The fully-general tracked submission: an optional lane hint, an
+    /// optional submission `epoch` (see
+    /// [`RuntimePool::submit_tracked_scoped`]) and an optional
+    /// wall-clock `budget`.  A budgeted job still running past its
+    /// budget is reaped by the watchdog: its lane is replaced with a
+    /// fresh one and the callback fires exactly once with
+    /// [`JobStatus::Failed`] of kind [`FaultKind::Timeout`] (never
+    /// retried — the stuck lane cannot run a retry).  Budgeted bodies
+    /// that write results through raw pointers must gate the writes on
+    /// [`commit_current_job`].
+    pub fn submit_tracked_budgeted<F, C>(
+        &self,
+        hint: Option<LaneHint>,
+        epoch: Option<u64>,
+        budget: Option<Duration>,
+        job: F,
+        policy: RetryPolicy,
+        on_done: C,
+    ) where
+        F: FnMut(usize, &Runtime) -> crate::Result<()> + Send + 'static,
+        C: FnOnce(JobStatus) + Send + 'static,
+    {
         self.enqueue(Job {
             body: JobBody::Tracked(Box::new(job)),
             done: Some(Box::new(on_done)),
             policy,
             hint,
-            epoch: Some(epoch),
+            epoch,
+            budget,
         });
     }
 
     fn enqueue(&self, job: Job) {
         let mut st = lock(&self.shared.state);
-        while st.queued >= self.shared.queue_cap && !st.closed {
+        while st.queued >= self.shared.queue_cap && !st.closed && st.alive > 0 {
             st = self
                 .shared
                 .space
@@ -716,6 +1050,17 @@ impl RuntimePool {
         }
         if st.closed {
             return; // pool shutting down; job dropped
+        }
+        if st.alive == 0 {
+            drop(st);
+            // Dead pool: no lane will ever pop this job.  Complete the
+            // tracker as Skipped so the caller's accounting (the wave
+            // driver's cancel cone) still converges; the dead-pool
+            // error itself surfaces at wait_idle.
+            if let Some(done) = job.done {
+                let _ = catch_unwind(AssertUnwindSafe(|| done(JobStatus::Skipped)));
+            }
+            return;
         }
         st.push(job);
         drop(st);
@@ -726,20 +1071,83 @@ impl RuntimePool {
     /// first untracked error (if any) and clear the poison flag so the
     /// pool can be reused.  Tracked-job failures are reported through
     /// their completion callbacks instead and never show up here.
+    ///
+    /// A *dead* pool — every lane gone for good with work still
+    /// pending — returns an error instead of parking forever; the
+    /// stranded queue is drained with `Skipped` callbacks first.
     pub fn wait_idle(&self) -> crate::Result<()> {
+        self.wait_idle_until(None).map(|_| ())
+    }
+
+    /// [`RuntimePool::wait_idle`] with a wall-clock bound: `Ok(true)`
+    /// when the pool drained (error reporting as in `wait_idle`),
+    /// `Ok(false)` when `timeout` elapsed with work still pending —
+    /// the caller decides what to do with the stragglers (the wave
+    /// driver fences them with [`RuntimePool::advance_epoch`] and
+    /// reports `DeadlineExceeded`).
+    pub fn wait_idle_for(&self, timeout: Duration) -> crate::Result<bool> {
+        self.wait_idle_until(Some(Instant::now() + timeout))
+    }
+
+    fn wait_idle_until(&self, deadline: Option<Instant>) -> crate::Result<bool> {
         let mut st = lock(&self.shared.state);
-        while !(st.queued == 0 && st.in_flight == 0) {
-            st = self
-                .shared
-                .idle
-                .wait(st)
-                .unwrap_or_else(PoisonError::into_inner);
+        loop {
+            if st.queued == 0 && st.in_flight == 0 {
+                break;
+            }
+            if st.alive == 0 {
+                return Err(self.fail_dead_pool(st));
+            }
+            match deadline {
+                None => {
+                    st = self
+                        .shared
+                        .idle
+                        .wait(st)
+                        .unwrap_or_else(PoisonError::into_inner);
+                }
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Ok(false);
+                    }
+                    let (g, _) = self
+                        .shared
+                        .idle
+                        .wait_timeout(st, d - now)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    st = g;
+                }
+            }
         }
         drop(st);
         self.shared.poisoned.store(false, Ordering::Release);
         match lock(&self.shared.error).take() {
             Some(e) => Err(e),
-            None => Ok(()),
+            None => Ok(true),
+        }
+    }
+
+    /// Every lane is dead with work still pending: drain the queue
+    /// (callbacks fire `Skipped`), clear the poison, and compose the
+    /// error — chaining the root cause (the last respawn failure) when
+    /// one was recorded.
+    fn fail_dead_pool(&self, mut st: MutexGuard<'_, QueueState>) -> anyhow::Error {
+        let orphans = st.drain_all();
+        drop(st);
+        let n = orphans.len();
+        for job in orphans {
+            if let Some(done) = job.done {
+                let _ = catch_unwind(AssertUnwindSafe(|| done(JobStatus::Skipped)));
+            }
+        }
+        self.shared.space.notify_all();
+        self.shared.idle.notify_all();
+        self.shared.poisoned.store(false, Ordering::Release);
+        let msg = format!("every pool lane is dead; {n} queued job(s) completed as Skipped");
+        match lock(&self.shared.error).take() {
+            Some(e) => e.context(msg),
+            None => anyhow!("{msg}"),
         }
     }
 
@@ -824,7 +1232,19 @@ impl Drop for RuntimePool {
         }
         self.shared.job_ready.notify_all();
         self.shared.space.notify_all();
-        for h in self.handles.drain(..) {
+        self.shared.watchdog_wake.notify_all();
+        if let Some(h) = self.watchdog.take() {
+            let _ = h.join();
+        }
+        // Reaped (zombie) threads may be parked in a hung body forever:
+        // detach them instead of joining — they hold only Arc'd state.
+        // The watchdog has already joined, so the zombie list is final.
+        let zombies = lock(&self.shared.zombies).clone();
+        let extras: Vec<JoinHandle<()>> = lock(&self.shared.extra_handles).drain(..).collect();
+        for h in self.handles.drain(..).chain(extras) {
+            if zombies.contains(&h.thread().id()) {
+                continue;
+            }
             let _ = h.join();
         }
     }
@@ -863,16 +1283,27 @@ fn lane_entry(
     dir: PathBuf,
     registry: Registry,
     shared: Arc<Shared>,
-    ready_tx: std::sync::mpsc::Sender<crate::Result<()>>,
+    ready_tx: Option<std::sync::mpsc::Sender<crate::Result<()>>>,
 ) {
-    let mut ready = Some(ready_tx);
+    let mut ready = ready_tx;
     loop {
         if let Some(cpus) = shared.plan.lane_cpus(lane) {
             if pin_current_thread(cpus) {
                 shared.sched.pins_applied.fetch_add(1, Ordering::Relaxed);
             }
         }
-        let rt = match Runtime::with_registry(&dir, registry.clone()) {
+        // Chaos hook: a respawn (or watchdog replacement — both arrive
+        // here with the ready channel already consumed) can be forced
+        // to fail so tests can kill lanes for good.
+        #[cfg(any(test, feature = "chaos"))]
+        let construct = if ready.is_none() && shared.fail_respawns.load(Ordering::Acquire) {
+            Err(anyhow!("chaos: lane respawn disabled"))
+        } else {
+            Runtime::with_registry(&dir, registry.clone())
+        };
+        #[cfg(not(any(test, feature = "chaos")))]
+        let construct = Runtime::with_registry(&dir, registry.clone());
+        let rt = match construct {
             Ok(rt) => {
                 if let Some(tx) = ready.take() {
                     let _ = tx.send(Ok(()));
@@ -891,16 +1322,27 @@ fn lane_entry(
                         e.context(format!("respawning lane {lane} after a panic")),
                     ),
                 }
+                shared.lane_gone();
                 return;
             }
         };
         if catch_unwind(AssertUnwindSafe(|| lane_main(lane, &rt, &shared))).is_ok() {
-            return; // clean shutdown: the pool closed and the queue drained
+            if LANE_REAPED.with(Cell::get) {
+                return; // zombie exit: the watchdog owns the lane slot now
+            }
+            shared.lane_gone(); // clean shutdown: pool closed, queue drained
+            return;
         }
         // The in-flight job was already reported Failed (with
         // FaultKind::Panic) by its JobGuard during the unwind; all that
         // is lost is the dead Runtime's compile cache.
+        if LANE_REAPED.with(Cell::get) {
+            // The unwinding job had already been reaped: the watchdog
+            // replaced this lane, so respawning here would double it.
+            return;
+        }
         if lock(&shared.state).closed {
+            shared.lane_gone();
             return;
         }
         shared.lane_restarts.fetch_add(1, Ordering::Relaxed);
@@ -916,10 +1358,27 @@ struct JobGuard<'a> {
     lane: usize,
     done: Option<DoneFn>,
     status: Option<JobStatus>,
+    /// Budgeted jobs: the heartbeat sequence this guard must claim
+    /// back (`finish`) before firing the callback parked in the
+    /// beat's slot.  A failed claim means the watchdog reaped the job
+    /// — callback, fault accounting and the in-flight decrement all
+    /// happened on the watchdog thread, and this thread is a zombie.
+    claim: Option<u64>,
 }
 
 impl Drop for JobGuard<'_> {
     fn drop(&mut self) {
+        if let Some(seq) = self.claim {
+            let beat = &self.shared.beats[self.lane];
+            if !beat.finish(seq) {
+                // Lost the claim race: tell the supervisor to let this
+                // thread die quietly (its replacement is already up).
+                LANE_REAPED.with(|f| f.set(true));
+                return;
+            }
+            // Claimed: the callback comes back out of the park slot.
+            self.done = lock(&beat.done_slot).take();
+        }
         let status = self.status.take().unwrap_or_else(|| {
             // Only reachable when a panic is unwinding the lane:
             // account the terminal failure here.
@@ -949,15 +1408,39 @@ impl Drop for JobGuard<'_> {
     }
 }
 
+/// Park the callback, record the thread id and stamp `BUSY` for a
+/// budgeted tracked job (no-op otherwise).  Runs inside the pop
+/// critical section: the watchdog's deadline scan also runs under the
+/// state lock, so a stamp is either visible to the scan or its
+/// wake-notify lands after the scan enters its wait — the watchdog can
+/// never sleep through a freshly-armed deadline.
+fn arm_heartbeat(shared: &Shared, lane: usize, job: &mut Job) -> Option<u64> {
+    let budget = job.budget?;
+    if job.done.is_none() || !matches!(job.body, JobBody::Tracked(_)) {
+        return None;
+    }
+    let beat = &shared.beats[lane];
+    *lock(&beat.thread) = Some(std::thread::current().id());
+    *lock(&beat.done_slot) = job.done.take();
+    let budget_us = u64::try_from(budget.as_micros()).unwrap_or(u64::MAX);
+    Some(beat.stamp(shared.now_us().saturating_add(budget_us)))
+}
+
 fn lane_main(lane: usize, rt: &Runtime, shared: &Arc<Shared>) {
     let mut last = RuntimeStats::default();
     loop {
         let popped = {
             let mut st = lock(&shared.state);
             loop {
-                if let Some(p) = st.pop_for(lane) {
+                if let Some((mut job, pop)) = st.pop_for(lane) {
                     st.in_flight += 1;
-                    break Some(p);
+                    // Decide the skip *under the lock* so only jobs
+                    // that will actually run arm the watchdog.
+                    let skip = shared.poisoned.load(Ordering::Acquire)
+                        || epoch_stale(job.epoch, &shared.epoch);
+                    let claim =
+                        if skip { None } else { arm_heartbeat(shared, lane, &mut job) };
+                    break Some((job, pop, skip, claim));
                 }
                 if st.closed {
                     break None;
@@ -968,8 +1451,13 @@ fn lane_main(lane: usize, rt: &Runtime, shared: &Arc<Shared>) {
                     .unwrap_or_else(PoisonError::into_inner);
             }
         };
-        let Some((Job { body, done, policy, hint, epoch }, pop)) = popped else { return };
+        let Some((Job { body, done, policy, hint, .. }, pop, skip, claim)) = popped else {
+            return;
+        };
         shared.space.notify_one();
+        if claim.is_some() {
+            shared.watchdog_wake.notify_all();
+        }
         if shared.multi_shard {
             match pop {
                 Pop::Local => {
@@ -989,16 +1477,25 @@ fn lane_main(lane: usize, rt: &Runtime, shared: &Arc<Shared>) {
 
         // The guard owns the callback and the in-flight decrement: both
         // fire exactly once, on every exit path out of run_job —
-        // including the LaneKill re-raise.
-        let mut guard = JobGuard { shared, lane, done, status: None };
-        let stale = epoch_stale(epoch, &shared.epoch);
-        guard.status = Some(if shared.poisoned.load(Ordering::Acquire) || stale {
+        // including the LaneKill re-raise.  For a budgeted job the
+        // callback sits parked in the heartbeat slot and the guard
+        // holds the claim instead.
+        let mut guard = JobGuard { shared, lane, done, status: None, claim };
+        guard.status = Some(if skip {
             // Stale epoch: a replay round has already abandoned this
             // submission; running it would race the re-armed wave
             // table.  The callback still fires (Skipped) exactly once.
             JobStatus::Skipped
         } else {
-            run_job(lane, rt, shared, body, policy)
+            if let Some(seq) = claim {
+                let beat = shared.beats[lane].clone();
+                CURRENT_CLAIM.with(|c| *c.borrow_mut() = Some((beat, seq)));
+            }
+            let status = run_job(lane, rt, shared, body, policy, claim);
+            if claim.is_some() {
+                CURRENT_CLAIM.with(|c| *c.borrow_mut() = None);
+            }
+            status
         });
 
         // Fold this lane's stats delta into its own atomic cell (no
@@ -1008,6 +1505,12 @@ fn lane_main(lane: usize, rt: &Runtime, shared: &Arc<Shared>) {
         last = now;
 
         drop(guard); // fires done, decrements in_flight, notifies idle
+        if LANE_REAPED.with(Cell::get) {
+            // The guard lost its claim: this thread is a zombie — its
+            // replacement is already serving the lane slot.  Exit
+            // without touching the queue or the live-lane count.
+            return;
+        }
     }
 }
 
@@ -1020,7 +1523,15 @@ fn run_job(
     shared: &Shared,
     body: JobBody,
     policy: RetryPolicy,
+    claim: Option<u64>,
 ) -> JobStatus {
+    // Post-attempt zombie probe: once the watchdog has reaped this
+    // job, its terminal status was already delivered (Timeout) and its
+    // fault accounted — whatever the woken body just returned is moot,
+    // and retrying on a reaped lane would only burn a dead thread.
+    // The returned status is discarded anyway (the guard's claim
+    // fails), so `Skipped` is just a quiet placeholder.
+    let reaped = || claim.is_some_and(|seq| shared.beats[lane].is_reaped(seq));
     match body {
         JobBody::Once(run) => match catch_unwind(AssertUnwindSafe(|| run(lane, rt))) {
             Ok(Ok(())) => JobStatus::Ok { retries: 0 },
@@ -1054,6 +1565,9 @@ fn run_job(
                 match catch_unwind(AssertUnwindSafe(|| run(lane, rt))) {
                     Ok(Ok(())) => return JobStatus::Ok { retries: attempt - 1 },
                     Ok(Err(e)) => {
+                        if reaped() {
+                            return JobStatus::Skipped;
+                        }
                         let kind = FaultKind::of(&e);
                         if kind == FaultKind::Transient && attempt < max {
                             shared.job_retries.fetch_add(1, Ordering::Relaxed);
@@ -1076,6 +1590,9 @@ fn run_job(
                         if p.downcast_ref::<LaneKill>().is_some() {
                             std::panic::resume_unwind(p);
                         }
+                        if reaped() {
+                            return JobStatus::Skipped;
+                        }
                         shared.jobs_failed.fetch_add(1, Ordering::Relaxed);
                         return JobStatus::Failed {
                             kind: FaultKind::Panic,
@@ -1092,6 +1609,124 @@ fn run_job(
     }
 }
 
+/// The watchdog: sleeps until the nearest armed heartbeat deadline,
+/// reaps lanes stuck past their budget, and replaces them.  Scans run
+/// under the state lock — the same lock [`arm_heartbeat`] stamps under
+/// — so a fresh deadline is either visible to the scan or its
+/// `watchdog_wake` notify lands while the scan's wait is parked; the
+/// watchdog can never sleep through an armed budget.  With nothing
+/// budgeted it waits unbounded on the condvar and costs nothing.
+fn watchdog_entry(shared: Arc<Shared>) {
+    let mut st = lock(&shared.state);
+    loop {
+        if st.closed {
+            return;
+        }
+        let now = shared.now_us();
+        let mut nearest: Option<u64> = None; // µs until the next deadline
+        let mut overdue: Vec<(usize, u64)> = Vec::new();
+        for (lane, beat) in shared.beats.iter().enumerate() {
+            let word = beat.word.load(Ordering::Acquire);
+            if word & 3 != BEAT_BUSY {
+                continue;
+            }
+            let deadline = beat.deadline_us.load(Ordering::Relaxed);
+            if deadline == u64::MAX {
+                continue;
+            }
+            if now >= deadline {
+                overdue.push((lane, word >> 2));
+            } else {
+                let wait = deadline - now;
+                nearest = Some(nearest.map_or(wait, |n| n.min(wait)));
+            }
+        }
+        if !overdue.is_empty() {
+            drop(st);
+            for (lane, seq) in overdue {
+                reap_lane(&shared, lane, seq);
+            }
+            st = lock(&shared.state);
+            continue;
+        }
+        st = match nearest {
+            // Nothing armed: any new stamp notifies `watchdog_wake`.
+            None => shared
+                .watchdog_wake
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner),
+            Some(us) => {
+                let (g, _) = shared
+                    .watchdog_wake
+                    .wait_timeout(st, Duration::from_micros(us.saturating_add(1)))
+                    .unwrap_or_else(PoisonError::into_inner);
+                g
+            }
+        };
+    }
+}
+
+/// Reap one overdue lane: win the `BUSY -> REAPED` CAS (the job may
+/// finish or commit first — then the lane keeps ownership and nothing
+/// happens), take over the parked callback, spawn the replacement lane
+/// thread, fire the callback as a `Timeout` failure and release the
+/// in-flight slot.  Mirrors `JobGuard`'s ordering: callback before the
+/// in-flight decrement, so `wait_idle` still waits for every callback.
+fn reap_lane(shared: &Arc<Shared>, lane: usize, seq: u64) {
+    let beat = &shared.beats[lane];
+    if !beat.try_reap(seq) {
+        return; // finished or committed between scan and CAS
+    }
+    // The stuck thread is a zombie now: remember its id so shutdown
+    // detaches it instead of joining a thread that may never wake.
+    if let Some(id) = *lock(&beat.thread) {
+        lock(&shared.zombies).push(id);
+    }
+    let done = lock(&beat.done_slot).take();
+    shared.job_timeouts.fetch_add(1, Ordering::Relaxed);
+    shared.lanes_reaped.fetch_add(1, Ordering::Relaxed);
+    shared.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    // Replace the lane before completing the job: the callback may
+    // immediately release successor work that needs a live lane.
+    let dir = shared.dir.clone();
+    let reg = shared.registry.clone();
+    let sh = shared.clone();
+    // Sanctioned unscoped spawn (see clippy.toml): the replacement is
+    // supervised exactly like an original lane and joins on shutdown.
+    #[allow(clippy::disallowed_methods)]
+    let spawned = std::thread::Builder::new()
+        .name(format!("rt-lane-{lane}r"))
+        .spawn(move || lane_entry(lane, dir, reg, sh, None));
+    match spawned {
+        Ok(h) => lock(&shared.extra_handles).push(h),
+        Err(e) => {
+            // No replacement: the pool genuinely shrinks.
+            shared.record_error(anyhow!(
+                "spawning a replacement for reaped lane {lane} failed: {e}"
+            ));
+            shared.lane_gone();
+        }
+    }
+    if let Some(done) = done {
+        let status = JobStatus::Failed {
+            kind: FaultKind::Timeout,
+            attempts: 1,
+            message: format!("lane {lane} exceeded its job budget and was reaped"),
+        };
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| done(status))) {
+            shared.record_error(anyhow!(
+                "reaped lane {lane} completion callback panicked: {}",
+                crate::coordinator::scheduler::panic_text(p.as_ref())
+            ));
+        }
+    }
+    let mut st = lock(&shared.state);
+    st.in_flight -= 1;
+    if st.in_flight == 0 && st.queued == 0 {
+        shared.idle.notify_all();
+    }
+}
+
 /// Pure-logic probes over the pool's private queue/epoch machinery for
 /// the loom models in `tests/loom.rs`.  Compiled only under
 /// `--cfg loom`; nothing here spawns lanes or touches PJRT — the models
@@ -1100,7 +1735,7 @@ fn run_job(
 /// model-checked primitives underneath (via [`crate::sync`]).
 #[cfg(loom)]
 pub mod loom_model {
-    use super::{lock, Job, JobBody, Pop, QueueState, RetryPolicy, Shard};
+    use super::{lock, Heartbeat, Job, JobBody, JobStatus, Pop, QueueState, RetryPolicy, Shard};
     use crate::sync::atomic::AtomicU64;
     use crate::sync::Mutex;
 
@@ -1108,6 +1743,70 @@ pub mod loom_model {
     /// epoch-fence model checks the exact predicate `lane_main` runs.
     pub fn epoch_stale(epoch: Option<u64>, current: &AtomicU64) -> bool {
         super::epoch_stale(epoch, current)
+    }
+
+    /// A parked completion callback, as the heartbeat slot stores it.
+    pub type ProbeDone = Box<dyn FnOnce(JobStatus) + Send + 'static>;
+
+    /// One lane's [`Heartbeat`] driven through the *real* protocol ops
+    /// (`stamp` / `try_commit` / `finish` / `try_reap`) so the loom
+    /// model in `tests/loom.rs` explores the exact watchdog-vs-finish
+    /// handshake `JobGuard` and `reap_lane` run: whichever side wins
+    /// the word CAS gets the parked callback; the loser gets `None`.
+    pub struct ProbeBeat(Heartbeat);
+
+    impl Default for ProbeBeat {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl ProbeBeat {
+        pub fn new() -> ProbeBeat {
+            ProbeBeat(Heartbeat::new())
+        }
+
+        /// Lane side, job start ([`super::arm_heartbeat`]): park the
+        /// callback and stamp `BUSY`; returns the claim sequence.  The
+        /// deadline is immaterial to the model — the model *is* the
+        /// watchdog.
+        pub fn stamp(&self, done: ProbeDone) -> u64 {
+            *lock(&self.0.done_slot) = Some(done);
+            self.0.stamp(u64::MAX)
+        }
+
+        /// Body side: the pre-writeback commit fence
+        /// ([`super::commit_current_job`]).
+        pub fn try_commit(&self, seq: u64) -> bool {
+            self.0.try_commit(seq)
+        }
+
+        /// Lane side, job end (`JobGuard::drop`): claim the word back.
+        /// `Some` is the callback to fire; `None` means the watchdog
+        /// reaped first and this side must fire nothing.
+        pub fn finish(&self, seq: u64) -> Option<ProbeDone> {
+            if self.0.finish(seq) {
+                lock(&self.0.done_slot).take()
+            } else {
+                None
+            }
+        }
+
+        /// Watchdog side (`reap_lane`): `BUSY -> REAPED`.  `Some` is
+        /// the callback to fire as `Timeout`; `None` means the job
+        /// finished or committed first.
+        pub fn try_reap(&self, seq: u64) -> Option<ProbeDone> {
+            if self.0.try_reap(seq) {
+                lock(&self.0.done_slot).take()
+            } else {
+                None
+            }
+        }
+
+        /// Post-wake zombie probe (`run_job`'s accounting skip).
+        pub fn is_reaped(&self, seq: u64) -> bool {
+            self.0.is_reaped(seq)
+        }
     }
 
     /// The sharded run queue behind the same mutex discipline the lanes
@@ -1127,6 +1826,7 @@ pub mod loom_model {
                     in_flight: 0,
                     closed: false,
                     rr: 0,
+                    alive: shards,
                 }),
             }
         }
@@ -1141,6 +1841,7 @@ pub mod loom_model {
                 policy: RetryPolicy::default(),
                 hint,
                 epoch: Some(tag),
+                budget: None,
             });
         }
 
@@ -1506,6 +2207,7 @@ mod tests {
             in_flight: 0,
             closed: false,
             rr: 0,
+            alive: 2,
         }
     }
 
@@ -1518,6 +2220,7 @@ mod tests {
             policy: RetryPolicy::none(),
             hint: Some(h),
             epoch: None,
+            budget: None,
         }
     }
 
@@ -1597,5 +2300,198 @@ mod tests {
         assert_eq!(got, vec!["live:ok:0".to_string(), "stale:skipped".to_string()]);
         // Skipping is not a failure: the fault counters stay clean.
         assert_eq!(pool.fault_counters().jobs_failed, 0);
+    }
+
+    #[test]
+    fn watchdog_reaps_over_budget_job_as_timeout() {
+        // A budgeted job that blows its budget is reaped: the callback
+        // fires exactly once as Failed{Timeout, attempts: 1}, the stuck
+        // lane is replaced (lanes_reaped, not lane_restarts), and the
+        // pool keeps serving jobs on the replacement.  The zombie
+        // thread wakes later, loses the heartbeat CAS, and exits
+        // without firing anything or touching the counters.
+        let pool = test_pool(1);
+        let statuses = Arc::new(Mutex::new(Vec::<String>::new()));
+        let s = statuses.clone();
+        pool.submit_tracked_budgeted(
+            None,
+            None,
+            Some(Duration::from_millis(25)),
+            |_, _| {
+                std::thread::sleep(Duration::from_millis(400));
+                Ok(())
+            },
+            RetryPolicy::default(),
+            move |st| lock(&s).push(status_tag(&st)),
+        );
+        // wait_idle returns as soon as the watchdog completes the job —
+        // long before the zombie's 400ms sleep ends.
+        let t0 = Instant::now();
+        pool.wait_idle().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(350),
+            "the watchdog, not the hung body, must complete the job"
+        );
+        assert_eq!(*lock(&statuses), vec!["failed:timeout:1".to_string()]);
+        let c = pool.fault_counters();
+        assert_eq!(c.job_timeouts, 1);
+        assert_eq!(c.lanes_reaped, 1);
+        assert_eq!(c.jobs_failed, 1, "a timeout is also a failed job");
+        assert_eq!(c.lane_restarts, 0, "reaping is not the panic-respawn path");
+        // The replacement lane serves new work; the pool did not shrink.
+        assert_eq!(pool.alive_lanes(), 1);
+        let ran = Arc::new(AtomicU32::new(0));
+        let r = ran.clone();
+        pool.submit_tracked(
+            move |_, _| {
+                r.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            },
+            RetryPolicy::none(),
+            |st| assert!(st.is_ok()),
+        );
+        pool.wait_idle().unwrap();
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn within_budget_job_completes_ok() {
+        // A budget is an upper bound, not a cost: a job that finishes
+        // inside it completes Ok and no watchdog machinery fires.
+        let pool = test_pool(2);
+        let statuses = Arc::new(Mutex::new(Vec::<String>::new()));
+        for _ in 0..8 {
+            let s = statuses.clone();
+            pool.submit_tracked_budgeted(
+                None,
+                None,
+                Some(Duration::from_secs(30)),
+                |_, _| Ok(()),
+                RetryPolicy::default(),
+                move |st| lock(&s).push(status_tag(&st)),
+            );
+        }
+        pool.wait_idle().unwrap();
+        assert_eq!(*lock(&statuses), vec!["ok:0".to_string(); 8]);
+        let c = pool.fault_counters();
+        assert_eq!((c.job_timeouts, c.lanes_reaped), (0, 0));
+    }
+
+    #[test]
+    fn committed_job_outruns_its_budget_safely() {
+        // The pre-writeback fence: once a body calls
+        // commit_current_job() the reap window is closed — the watchdog
+        // leaves the lane alone even though the job runs far past its
+        // budget, and the job completes Ok on its own lane.
+        let pool = test_pool(1);
+        let statuses = Arc::new(Mutex::new(Vec::<String>::new()));
+        let s = statuses.clone();
+        pool.submit_tracked_budgeted(
+            None,
+            None,
+            Some(Duration::from_millis(25)),
+            |_, _| {
+                assert!(commit_current_job(), "nothing reaped us yet");
+                std::thread::sleep(Duration::from_millis(150));
+                Ok(())
+            },
+            RetryPolicy::default(),
+            move |st| lock(&s).push(status_tag(&st)),
+        );
+        pool.wait_idle().unwrap();
+        assert_eq!(*lock(&statuses), vec!["ok:0".to_string()]);
+        let c = pool.fault_counters();
+        assert_eq!((c.job_timeouts, c.lanes_reaped), (0, 0));
+        // An unbudgeted job never holds a claim: the fence reports
+        // "not reaped" trivially (there is nothing to commit).
+        pool.submit_tracked(
+            |_, _| {
+                assert!(commit_current_job());
+                Ok(())
+            },
+            RetryPolicy::none(),
+            |st| assert!(st.is_ok()),
+        );
+        pool.wait_idle().unwrap();
+    }
+
+    #[test]
+    fn wait_idle_for_reports_timeout_then_drains() {
+        let pool = test_pool(1);
+        // Nothing pending: an idle pool drains immediately.
+        assert!(pool.wait_idle_for(Duration::from_secs(5)).unwrap());
+
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        pool.submit_tracked(
+            move |_, _| {
+                let _ = rx.recv();
+                Ok(())
+            },
+            RetryPolicy::none(),
+            |st| assert!(st.is_ok()),
+        );
+        // The unbudgeted job is parked: the bounded wait expires
+        // without declaring the pool broken...
+        assert!(!pool.wait_idle_for(Duration::from_millis(50)).unwrap());
+        // ...and a later wait succeeds once the job is released.
+        tx.send(()).unwrap();
+        assert!(pool.wait_idle_for(Duration::from_secs(30)).unwrap());
+        assert_eq!(pool.fault_counters(), FaultCounters::default());
+    }
+
+    #[test]
+    fn dead_pool_errs_from_wait_idle_instead_of_deadlocking() {
+        // Satellite regression: every lane dead (LaneKill + respawn
+        // failure via the chaos hook) with work still queued must turn
+        // wait_idle into an Err — queued tracked jobs complete as
+        // Skipped — rather than a deadlock on the idle condvar.
+        let pool = test_pool(1);
+        pool.chaos_fail_respawns();
+        let statuses = Arc::new(Mutex::new(Vec::<String>::new()));
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        // Park the only lane so the kill and the probe queue up behind.
+        let s = statuses.clone();
+        pool.submit_tracked(
+            move |_, _| {
+                let _ = rx.recv();
+                Ok(())
+            },
+            RetryPolicy::none(),
+            move |st| lock(&s).push(status_tag(&st)),
+        );
+        let s = statuses.clone();
+        pool.submit_tracked(
+            |_, _| -> crate::Result<()> { std::panic::panic_any(LaneKill) },
+            RetryPolicy::default(),
+            move |st| lock(&s).push(status_tag(&st)),
+        );
+        let s = statuses.clone();
+        pool.submit_tracked(
+            |_, _| Ok(()),
+            RetryPolicy::none(),
+            move |st| lock(&s).push(status_tag(&st)),
+        );
+        tx.send(()).unwrap();
+
+        let err = pool.wait_idle().expect_err("a dead pool must surface, not hang");
+        assert!(
+            format!("{err}").contains("every pool lane is dead"),
+            "unexpected error: {err:#}"
+        );
+        assert_eq!(pool.alive_lanes(), 0);
+        assert_eq!(
+            *lock(&statuses),
+            vec!["ok:0".to_string(), "failed:panic:1".into(), "skipped".into()],
+            "the queued probe completes as Skipped, exactly once"
+        );
+        // Submitting into a dead pool is not a hang either: the
+        // tracked callback fires Skipped inline from enqueue.
+        let s = statuses.clone();
+        pool.submit_tracked(
+            |_, _| Ok(()),
+            RetryPolicy::none(),
+            move |st| lock(&s).push(status_tag(&st)),
+        );
+        assert_eq!(lock(&statuses).last().map(String::as_str), Some("skipped"));
     }
 }

@@ -14,7 +14,11 @@
 //!    `Failed`/`Cancelled` report while independent work in the same
 //!    fused graph completes `Ok`;
 //! 4. a killed lane is respawned by the pool supervisor — also
-//!    mid-replay — and the session keeps working.
+//!    mid-replay — and the session keeps working;
+//! 5. a deterministically *hung* job (parked on the plan's gate, no
+//!    clocks in the injection) is reaped by the pool watchdog under a
+//!    real short `job_timeout`, fails as `FaultKind::Timeout`, and
+//!    heals through cone replay bitwise-identically.
 //!
 //! Requires `artifacts/` and a native XLA backend, like
 //! `integration.rs`; every test skips via [`fpga_hpc::require_backend!`]
@@ -22,10 +26,13 @@
 //! `replay_heals_exhausted_cone_bitwise` doubles as the CI replay
 //! gate: it writes its counters to `CHAOS_replay.json` for the
 //! workflow to assert on (a missing file means the suite skipped).
+//! `hung_job_is_reaped_as_timeout_and_heals_bitwise` does the same for
+//! the CI hang gate via `CHAOS_hang.json`.
 
 #![cfg(feature = "chaos")]
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use fpga_hpc::coordinator::grid::Grid2D;
 use fpga_hpc::coordinator::passdriver::{ConeReplay, FaultPlan, ReplayPolicy};
@@ -296,4 +303,79 @@ fn killed_lane_during_a_replay_attempt_is_respawned_and_heals() {
     assert_eq!(after.metrics.lane_restarts, 0);
     let got = after.into_output().into_grid2d().unwrap();
     assert_eq!(got.data, want.data, "post-recovery run must be bitwise clean");
+}
+
+#[test]
+fn hung_job_is_reaped_as_timeout_and_heals_bitwise() {
+    fpga_hpc::require_backend!();
+    // The CI hang gate.  Park block (0,0)'s first attempt on the
+    // plan's gate — a deterministic hang, no clock in the injection
+    // itself — under a real 2s per-job budget (short enough to bound
+    // the test, generous enough that no healthy block job can trip it
+    // on a loaded CI box).  The pool watchdog must reap the stuck lane
+    // (`Timeout`), the cancelled cone must re-arm, and the replay
+    // round (attempt 2, no hang registered) must heal the stage to
+    // output bitwise identical to a clean run.
+    let grid = rand_grid2d(512, 512, 47, 0.0, 1.0);
+    let s = session(2).with_job_timeout(Duration::from_secs(2));
+    let clean = s.run(diffusion(&grid)).unwrap();
+    assert!(clean.ok());
+    assert_eq!(clean.metrics.job_timeouts, 0, "budget must not fire on healthy jobs");
+    assert_eq!(clean.metrics.lanes_reaped, 0);
+
+    let plan = Arc::new(FaultPlan::default().hang_at(0, 0, 1));
+    let t0 = Instant::now();
+    let report = s.run_with_faults(diffusion(&grid), plan.clone()).unwrap();
+    let elapsed = t0.elapsed();
+
+    assert!(!report.ok(), "a healed run is not strictly fault-free");
+    assert!(report.completed(), "the replay must heal the reaped block");
+    assert_eq!(report.statuses, vec![WorkloadStatus::Replayed { attempts: 1 }]);
+    assert!(report.first_fault().is_none(), "the timeout healed");
+    assert!(report.cancelled.is_empty(), "the replay un-cancelled the cone");
+    assert_eq!(
+        report.replays,
+        vec![ConeReplay { wave: 0, index: 0, rounds: 1 }]
+    );
+    assert_eq!(report.metrics.job_timeouts, 1, "the hang must be classified Timeout");
+    assert_eq!(report.metrics.lanes_reaped, 1, "the stuck lane must be reaped");
+    assert_eq!(report.metrics.jobs_failed, 1, "one terminal Timeout fault, then healed");
+    assert_eq!(report.metrics.cone_replays, 1);
+    assert_eq!(
+        report.metrics.lane_restarts, 0,
+        "a reap spawns a replacement without burning a supervisor restart"
+    );
+    assert_eq!(clean.metrics.blocks, report.metrics.blocks);
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "watchdog must bound the hang (took {elapsed:?})"
+    );
+
+    let job_timeouts = report.metrics.job_timeouts;
+    let lanes_reaped = report.metrics.lanes_reaped;
+    let cone_replays = report.metrics.cone_replays;
+    let jobs_failed = report.metrics.jobs_failed;
+    let want = clean.into_output().into_grid2d().unwrap();
+    let got = report.into_output().into_grid2d().unwrap();
+    let bitwise = want.data == got.data;
+    assert!(bitwise, "healed output must be bitwise identical");
+
+    // Wake the reaped zombie parked on the gate so it can exit before
+    // the pool tears down, then prove the session still works on the
+    // replacement lane.
+    plan.release_hangs();
+    let after = s.run(diffusion(&grid)).unwrap();
+    assert!(after.ok(), "session must keep working on the replacement lane");
+
+    // Artifact for the CI hang gate (parsed by .github/workflows):
+    // plain-std JSON, written into the crate directory cargo runs from.
+    std::fs::write(
+        "CHAOS_hang.json",
+        format!(
+            "{{\n  \"job_timeouts\": {job_timeouts},\n  \"lanes_reaped\": {lanes_reaped},\n  \
+             \"cone_replays\": {cone_replays},\n  \"jobs_failed\": {jobs_failed},\n  \
+             \"bitwise_identical\": {bitwise}\n}}\n"
+        ),
+    )
+    .expect("writing CHAOS_hang.json");
 }

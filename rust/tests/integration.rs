@@ -17,7 +17,11 @@
 //! reproduce it bit for bit.
 
 use fpga_hpc::coordinator::grid::{Grid2D, Grid3D};
-use fpga_hpc::coordinator::session::{Chain, GridInput, Session, Workload, WorkloadOutput};
+use std::time::{Duration, Instant};
+
+use fpga_hpc::coordinator::session::{
+    Chain, GridInput, Session, Workload, WorkloadOutput, WorkloadStatus,
+};
 use fpga_hpc::coordinator::{reference, PassMode};
 use fpga_hpc::runtime::{Pinning, PoolConfig, Runtime, RuntimePool, Tensor};
 use fpga_hpc::testutil::{assert_allclose, max_abs_diff, Rng};
@@ -1155,4 +1159,114 @@ fn property_streamed_equals_reference_random_geometry() {
         let err = max_abs_diff(&out.data, &want.data);
         assert!(err < 1e-5, "{ny}x{nx} steps={steps}: err {err}");
     });
+}
+
+#[test]
+fn expired_deadline_returns_deadline_exceeded_not_a_hang() {
+    fpga_hpc::require_backend!();
+    // Acceptance: a session whose deadline is already expired at run
+    // entry must come back within the drain slack with a
+    // DeadlineExceeded report — never a hang, never an Err.  The
+    // deadline is anchored when `run` is entered, so `Duration::ZERO`
+    // fires the watcher before the first round submits anything.
+    let grid = rand_grid2d(512, 512, 61, 0.0, 1.0);
+    let s = Session::builder()
+        .artifacts("artifacts")
+        .lanes(2)
+        .deadline(Duration::ZERO)
+        .build()
+        .unwrap();
+    let t0 = Instant::now();
+    let report = s
+        .run(Workload::stencil2d("diffusion2d_r1", grid, None, 8))
+        .unwrap();
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < fpga_hpc::coordinator::passdriver::DEADLINE_DRAIN_SLACK + Duration::from_secs(20),
+        "expired deadline must return within budget + slack, took {elapsed:?}"
+    );
+    assert!(report.deadline_exceeded, "zero deadline must mark the run cut");
+    assert!(!report.ok(), "a cut run is not ok");
+    assert!(
+        !report.unfinished.is_empty(),
+        "cutting at t=0 must leave never-completed blocks"
+    );
+    assert!(
+        report
+            .statuses
+            .iter()
+            .any(|st| matches!(st, WorkloadStatus::DeadlineExceeded)),
+        "per-stage statuses must surface the cut: {:?}",
+        report.statuses
+    );
+    // No job budget was set, so nothing was reaped: the cut is a
+    // deadline event, not a timeout fault.
+    assert_eq!(report.metrics.job_timeouts, 0);
+    assert_eq!(report.metrics.lanes_reaped, 0);
+    assert!(report.first_fault().is_none(), "deadline cut is not a fault");
+}
+
+#[test]
+fn generous_deadline_does_not_perturb_a_clean_run() {
+    fpga_hpc::require_backend!();
+    // Acceptance: deadlines and job budgets that never fire are
+    // invisible — same statuses, same bits as an unbounded session.
+    let grid = rand_grid2d(512, 512, 62, 0.0, 1.0);
+    let want = session(1)
+        .run(Workload::stencil2d("diffusion2d_r1", grid.clone(), None, 8))
+        .unwrap()
+        .into_output()
+        .into_grid2d()
+        .unwrap();
+    let s = Session::builder()
+        .artifacts("artifacts")
+        .lanes(2)
+        .deadline(Duration::from_secs(600))
+        .job_timeout(Duration::from_secs(600))
+        .build()
+        .unwrap();
+    let report = s
+        .run(Workload::stencil2d("diffusion2d_r1", grid, None, 8))
+        .unwrap();
+    assert!(report.ok(), "generous bounds must leave the run clean");
+    assert!(!report.deadline_exceeded);
+    assert!(report.unfinished.is_empty());
+    assert_eq!(report.metrics.job_timeouts, 0);
+    assert_eq!(report.metrics.lanes_reaped, 0);
+    let got = report.into_output().into_grid2d().unwrap();
+    assert_eq!(got.data, want.data, "bounded run differs from unbounded");
+}
+
+#[test]
+fn cli_expired_deadline_exits_nonzero_with_report() {
+    fpga_hpc::require_backend!();
+    // Smoke test for the `--deadline-ms` flag: an already-expired
+    // deadline must exit non-zero with a DeadlineExceeded report on
+    // the way out — the one thing it must never do is hang.  The test
+    // binary inherits the crate-root cwd, so `artifacts/` resolves
+    // exactly as it does for the in-process sessions above.
+    let t0 = Instant::now();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_fpga-hpc"))
+        .args(["run", "diffusion2d", "128", "4", "--lanes", "2", "--deadline-ms", "0"])
+        .output()
+        .expect("spawn fpga-hpc");
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(60),
+        "CLI with expired deadline must exit promptly, took {elapsed:?}"
+    );
+    assert!(
+        !out.status.success(),
+        "expired deadline must exit non-zero; stdout: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(
+        text.contains("DeadlineExceeded"),
+        "exit report must classify the cut, got:\n{text}"
+    );
 }

@@ -12,7 +12,7 @@
 //! shard-queue code — not re-implementations — through every
 //! interleaving loom's bounded-exhaustive explorer generates.
 //!
-//! Five protocols are modeled (see the runtime README § Verification
+//! Six protocols are modeled (see the runtime README § Verification
 //! for the protocol → model table):
 //!
 //! 1. dispatch: counter decrement → ready-queue publish
@@ -26,6 +26,9 @@
 //!    [`round_tag_visible_to_any_callback_that_sees_new_seeds`])
 //! 4. pool submit-epoch fence ([`epoch_fence_stale_job_must_skip`])
 //! 5. stash/deque stealing ([`stealing_delivers_every_job_exactly_once`])
+//! 6. heartbeat/reap handshake: watchdog reap vs. job finish is
+//!    exactly-once ([`heartbeat_finish_vs_reap_is_exactly_once`],
+//!    [`heartbeat_commit_fence_defeats_reap`])
 //!
 //! The straggler models deliberately encode the drain phasing the real
 //! driver enforces (`wait_idle` completes every callback before
@@ -39,7 +42,8 @@
 #![cfg(loom)]
 
 use fpga_hpc::coordinator::passdriver::{PassMode, ReadyQueue, WaveGraph, WaveTable};
-use fpga_hpc::runtime::pool::loom_model::{epoch_stale, ProbeQueue};
+use fpga_hpc::runtime::pool::loom_model::{epoch_stale, ProbeBeat, ProbeQueue};
+use fpga_hpc::runtime::pool::JobStatus;
 use fpga_hpc::sync::atomic::{AtomicU64, Ordering};
 use fpga_hpc::sync::{Arc, Mutex};
 use loom::cell::UnsafeCell;
@@ -444,5 +448,113 @@ fn stealing_delivers_every_job_exactly_once() {
 
         got.sort_unstable();
         assert_eq!(got, vec![1, 2, 3], "lost or duplicated job under stealing");
+    });
+}
+
+/// Protocol 6 — heartbeat/reap handshake, driven through the *real*
+/// `Heartbeat` CAS protocol ([`ProbeBeat`] wraps it and parks the
+/// tracked callback in the done-slot exactly like `arm_heartbeat`).
+/// A lane finishing its job races the watchdog reaping it: every
+/// transfer out of BUSY is a compare-exchange on the packed
+/// `(seq, state)` word, so under every interleaving exactly one side
+/// must win the callback — no double completion, no lost job — and
+/// the loser must observe that it lost (`is_reaped` for the lane, a
+/// `None` reap for the watchdog).
+#[test]
+fn heartbeat_finish_vs_reap_is_exactly_once() {
+    model(|| {
+        let beat = Arc::new(ProbeBeat::new());
+        let fired = Arc::new(Mutex::new(0u32));
+        let seq = beat.stamp({
+            let fired = fired.clone();
+            Box::new(move |_status| *fired.lock().unwrap() += 1)
+        });
+
+        let lane = {
+            let beat = beat.clone();
+            thread::spawn(move || match beat.finish(seq) {
+                Some(done) => {
+                    done(JobStatus::Ok { retries: 0 });
+                    true
+                }
+                None => {
+                    // Lost the claim: the watchdog owns the callback
+                    // and the lane must see its ownership is gone.
+                    assert!(beat.is_reaped(seq), "finish failed but claim not lost");
+                    false
+                }
+            })
+        };
+        let watchdog = {
+            let beat = beat.clone();
+            thread::spawn(move || match beat.try_reap(seq) {
+                Some(done) => {
+                    done(JobStatus::Skipped);
+                    true
+                }
+                None => false,
+            })
+        };
+
+        let lane_won = lane.join().unwrap();
+        let dog_won = watchdog.join().unwrap();
+        assert!(
+            lane_won ^ dog_won,
+            "exactly one side must own the job (lane {lane_won}, watchdog {dog_won})"
+        );
+        assert_eq!(*fired.lock().unwrap(), 1, "callback must fire exactly once");
+    });
+}
+
+/// Protocol 6 — the commit fence.  The lane commits
+/// (BUSY -> COMMITTED, the step `commit_current_job` performs before
+/// any grid write) and then finishes, while the watchdog races a
+/// reap.  If the commit succeeds the job is immune: the reap must
+/// return `None` and the lane must win the callback.  If the reap
+/// lands first the commit must fail and the lane must back out
+/// without finishing.  Either way the callback fires exactly once.
+#[test]
+fn heartbeat_commit_fence_defeats_reap() {
+    model(|| {
+        let beat = Arc::new(ProbeBeat::new());
+        let fired = Arc::new(Mutex::new(0u32));
+        let seq = beat.stamp({
+            let fired = fired.clone();
+            Box::new(move |_status| *fired.lock().unwrap() += 1)
+        });
+
+        let lane = {
+            let beat = beat.clone();
+            thread::spawn(move || {
+                if !beat.try_commit(seq) {
+                    // Reaped before the commit point: the job body
+                    // backs out before writing anything.
+                    assert!(beat.is_reaped(seq), "commit failed but claim not lost");
+                    return false;
+                }
+                // Committed: the write-back is now safe and the finish
+                // claim can no longer be contested.
+                let done = beat
+                    .finish(seq)
+                    .expect("a committed job must win the finish claim");
+                done(JobStatus::Ok { retries: 0 });
+                true
+            })
+        };
+        let watchdog = {
+            let beat = beat.clone();
+            thread::spawn(move || match beat.try_reap(seq) {
+                Some(done) => {
+                    done(JobStatus::Skipped);
+                    true
+                }
+                None => false,
+            })
+        };
+
+        let lane_won = lane.join().unwrap();
+        let dog_won = watchdog.join().unwrap();
+        assert!(lane_won ^ dog_won, "commit fence must keep ownership exclusive");
+        assert_eq!(*fired.lock().unwrap(), 1, "callback must fire exactly once");
     });
 }
